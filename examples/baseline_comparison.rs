@@ -1,0 +1,47 @@
+//! Compare every non-learning scheme under an identical budget — the
+//! Fig. 2-style motivation table.
+//!
+//! `cargo run --release --example baseline_comparison`
+
+use anyhow::Result;
+use arena::baselines;
+use arena::config::ExperimentConfig;
+use arena::hfl::HflEngine;
+
+fn main() -> Result<()> {
+    std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "2");
+    let mut cfg = ExperimentConfig::mnist();
+    cfg.topology.devices = 10;
+    cfg.hfl.threshold_time = 1000.0;
+    println!(
+        "scheme        final-acc  best-acc  energy/device  rounds"
+    );
+    let runs: Vec<(&str, Box<dyn Fn(&mut HflEngine) -> Result<_>>)> = vec![
+        ("vanilla-fl", Box::new(|e: &mut HflEngine| {
+            baselines::vanilla_fl(e, 0.6)
+        })),
+        ("vanilla-hfl", Box::new(baselines::vanilla_hfl)),
+        ("var-freq-a", Box::new(baselines::var_freq::var_freq_a)),
+        ("var-freq-b", Box::new(baselines::var_freq::var_freq_b)),
+        ("share", Box::new(baselines::share::share)),
+        ("favor", Box::new(|e: &mut HflEngine| {
+            baselines::favor::favor(
+                e,
+                &baselines::favor::FavorOptions::default(),
+            )
+        })),
+    ];
+    for (name, f) in runs {
+        let profiled = matches!(name, "var-freq-a" | "var-freq-b" | "share");
+        let mut engine = HflEngine::new(cfg.clone(), profiled)?;
+        let h = f(&mut engine)?;
+        println!(
+            "{name:<13} {:.3}      {:.3}     {:>8.1} mAh   {}",
+            h.final_accuracy(),
+            h.best_accuracy(),
+            h.total_energy() / cfg.topology.devices as f64,
+            h.rounds.len()
+        );
+    }
+    Ok(())
+}

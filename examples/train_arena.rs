@@ -1,0 +1,68 @@
+//! End-to-end driver (the EXPERIMENTS.md §E2E run): train the Arena PPO
+//! agent on the MNIST-shape HFL workload, then roll out the learned
+//! synchronization policy and compare it against Vanilla-HFL under the
+//! same budget. Exercises every layer: Pallas kernels inside the AOT
+//! artifacts, the PJRT runtime, the HFL engine, the profiling module and
+//! the DRL loop.
+//!
+//! `cargo run --release --example train_arena [-- episodes]`
+
+use anyhow::Result;
+use arena::agent::{train_arena, ArenaOptions};
+use arena::baselines;
+use arena::config::ExperimentConfig;
+use arena::hfl::HflEngine;
+
+fn main() -> Result<()> {
+    std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "2");
+    let episodes: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8);
+    let mut cfg = ExperimentConfig::mnist();
+    cfg.topology.devices = 10;
+    cfg.hfl.threshold_time = 1500.0;
+    cfg.agent.episodes = episodes;
+
+    println!("=== baseline: Vanilla-HFL ===");
+    let mut engine = HflEngine::new(cfg.clone(), true)?;
+    let base = baselines::vanilla_hfl(&mut engine)?;
+    for r in &base.rounds {
+        println!(
+            "  k={:<2} t={:>7.1}s acc={:.3} loss={:.3}",
+            r.k, r.sim_now, r.accuracy, r.train_loss
+        );
+    }
+
+    println!("=== training Arena ({episodes} episodes) ===");
+    let opts = ArenaOptions {
+        verbose: true,
+        ..ArenaOptions::arena(episodes)
+    };
+    let (agent, sb, logs) = train_arena(&mut engine, &opts)?;
+
+    println!("=== greedy rollout of the learned policy ===");
+    let hist =
+        arena::agent::arena::run_arena_policy(&mut engine, &agent, &sb, true)?;
+    for r in &hist.rounds {
+        println!(
+            "  k={:<2} t={:>7.1}s acc={:.3} g1={:?} g2={:?} E={:.1}mAh",
+            r.k, r.sim_now, r.accuracy, r.gamma1, r.gamma2, r.energy
+        );
+    }
+    let n = engine.cfg.topology.devices as f64;
+    println!("---------------------------------------------");
+    println!(
+        "vanilla-hfl: acc {:.3}, energy/device {:>7.1} mAh",
+        base.final_accuracy(),
+        base.total_energy() / n
+    );
+    println!(
+        "arena:       acc {:.3}, energy/device {:>7.1} mAh ({} episodes, final reward {:.2})",
+        hist.final_accuracy(),
+        hist.total_energy() / n,
+        logs.len(),
+        logs.last().map(|l| l.reward).unwrap_or(0.0)
+    );
+    Ok(())
+}

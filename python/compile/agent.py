@@ -1,0 +1,181 @@
+"""L2: Arena's PPO actor-critic (paper §3.3-3.6) as jax fwd/bwd.
+
+Network (paper §4.1: "2 convolutional layers and 3 fully connected layers
+for the DRL network"): the (M+1) x (n_pca+3) state matrix (Fig. 6) goes
+through two 3x3 SAME convolutions (1->8->16 channels), then fc->128->64,
+then two heads: the actor head emits 4M values interpreted as 2M Gaussian
+(mu, log_sigma) pairs — edge frequencies gamma_1^j and cloud frequencies
+gamma_2^j per edge (paper §3.3) — and the critic head emits the value.
+
+`ppo_update` is the clipped-surrogate PPO step (paper Eq. 13) with value
+loss + entropy bonus, optimized with the fused Adam Pallas kernel. GAE
+(Eq. 14) is computed on the rust side (scalar recursion over a trajectory)
+and fed in as advantages/returns.
+
+Dense layers go through the L1 tiled-matmul kernel; parameters are one
+flat f32 vector like the device models.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul, optim, ref
+
+CONV_CH = (8, 16)
+FC = (128, 64)
+
+
+def ppo_layout(m_edges, npca):
+    """[(name, shape, offset)] for the flat PPO parameter vector."""
+    rows, cols = m_edges + 1, npca + 3
+    flat_dim = rows * cols * CONV_CH[1]
+    n_act = 4 * m_edges
+    shapes = [
+        ("conv0_w", (3, 3, 1, CONV_CH[0])),
+        ("conv0_b", (CONV_CH[0],)),
+        ("conv1_w", (3, 3, CONV_CH[0], CONV_CH[1])),
+        ("conv1_b", (CONV_CH[1],)),
+        ("fc0_w", (flat_dim, FC[0])),
+        ("fc0_b", (FC[0],)),
+        ("fc1_w", (FC[0], FC[1])),
+        ("fc1_b", (FC[1],)),
+        ("actor_w", (FC[1], n_act)),
+        ("actor_b", (n_act,)),
+        ("critic_w", (FC[1], 1)),
+        ("critic_b", (1,)),
+    ]
+    layout, off = [], 0
+    for name, shape in shapes:
+        n = 1
+        for d in shape:
+            n *= d
+        layout.append((name, shape, off))
+        off += n
+    return layout
+
+
+def ppo_param_count(m_edges, npca):
+    layout = ppo_layout(m_edges, npca)
+    name, shape, off = layout[-1]
+    n = 1
+    for d in shape:
+        n *= d
+    return off + n
+
+
+def _unflatten(layout, flat):
+    out = {}
+    for name, shape, off in layout:
+        n = 1
+        for d in shape:
+            n *= d
+        out[name] = flat[off:off + n].reshape(shape)
+    return out
+
+
+def init_ppo_params(m_edges, npca, key):
+    """Orthogonal-ish (scaled normal) init, small actor head for stable mu."""
+    parts = []
+    for name, shape, _ in ppo_layout(m_edges, npca):
+        key, sub = jax.random.split(key)
+        if name.endswith("_b"):
+            parts.append(jnp.zeros(shape, jnp.float32).ravel())
+        else:
+            fan_in = 1
+            for d in shape[:-1]:
+                fan_in *= d
+            scale = 0.01 if name.startswith(("actor", "critic")) else 1.0
+            std = scale * jnp.sqrt(2.0 / fan_in)
+            parts.append((jax.random.normal(sub, shape) * std)
+                         .astype(jnp.float32).ravel())
+    return jnp.concatenate(parts)
+
+
+def _dense(x, w, b, act, use_pallas):
+    if use_pallas:
+        return matmul.dense(x, w, b, act)
+    return ref.matmul_bias_act(x, w, b, activation=act)
+
+
+def _conv3_same(x, w, b):
+    """Tiny 3x3 SAME conv on the state image; [B,H,W,C]."""
+    return jax.lax.conv_general_dilated(
+        x, w, (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    ) + b
+
+
+def forward(m_edges, npca, flat, states, use_pallas=True):
+    """states: [B, M+1, npca+3] -> (mu[B,2M], sigma[B,2M], value[B])."""
+    p = _unflatten(ppo_layout(m_edges, npca), flat)
+    h = states[..., None]  # [B, rows, cols, 1]
+    h = jnp.maximum(_conv3_same(h, p["conv0_w"], p["conv0_b"]), 0.0)
+    h = jnp.maximum(_conv3_same(h, p["conv1_w"], p["conv1_b"]), 0.0)
+    h = h.reshape(h.shape[0], -1)
+    h = _dense(h, p["fc0_w"], p["fc0_b"], "relu", use_pallas)
+    h = _dense(h, p["fc1_w"], p["fc1_b"], "relu", use_pallas)
+    a = _dense(h, p["actor_w"], p["actor_b"], "none", use_pallas)
+    v = _dense(h, p["critic_w"], p["critic_b"], "none", use_pallas)
+    n_act = 2 * m_edges
+    mu = a[:, :n_act]
+    log_sigma = jnp.clip(a[:, n_act:], -5.0, 2.0)
+    return mu, jnp.exp(log_sigma), v[:, 0]
+
+
+def _log_prob(mu, sigma, actions):
+    """Diagonal Gaussian log density, summed over action dims."""
+    z = (actions - mu) / sigma
+    return jnp.sum(
+        -0.5 * z * z - jnp.log(sigma) - 0.5 * jnp.log(2.0 * jnp.pi), axis=-1
+    )
+
+
+def _entropy(sigma):
+    return jnp.sum(jnp.log(sigma) + 0.5 * jnp.log(2.0 * jnp.pi * jnp.e),
+                   axis=-1)
+
+
+def actor_fwd(m_edges, npca, use_pallas=True):
+    """Returns f(theta, state[M+1,npca+3]) -> (mu[2M], sigma[2M], value[1])."""
+
+    def run(theta, state):
+        mu, sigma, v = forward(m_edges, npca, theta, state[None],
+                               use_pallas)
+        return mu[0], sigma[0], v
+
+    return run
+
+
+def ppo_update(m_edges, npca, lr=3e-4, clip_eps=0.2, vf_coef=0.5,
+               ent_coef=0.01, use_pallas=True):
+    """Returns the PPO/Adam step function over a padded trajectory batch.
+
+    f(theta, adam_m, adam_v, t[1],
+      states[B,M+1,npca+3], actions[B,2M], old_logp[B],
+      adv[B], ret[B], mask[B])
+      -> (theta', m', v', losses[3]=(policy, value, entropy))
+    """
+
+    def loss(theta, states, actions, old_logp, adv, ret, mask):
+        mu, sigma, values = forward(m_edges, npca, theta, states,
+                                    use_pallas)
+        logp = _log_prob(mu, sigma, actions)
+        ratio = jnp.exp(logp - old_logp)
+        clipped = jnp.clip(ratio, 1.0 - clip_eps, 1.0 + clip_eps)
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        pol = -jnp.sum(jnp.minimum(ratio * adv, clipped * adv) * mask) / denom
+        val = jnp.sum((values - ret) ** 2 * mask) / denom
+        ent = jnp.sum(_entropy(sigma) * mask) / denom
+        return pol + vf_coef * val - ent_coef * ent, (pol, val, ent)
+
+    def step(theta, m, v, t, states, actions, old_logp, adv, ret, mask):
+        (_, (pol, val, ent)), g = jax.value_and_grad(loss, has_aux=True)(
+            theta, states, actions, old_logp, adv, ret, mask
+        )
+        if use_pallas:
+            theta, m, v = optim.adam_step(theta, m, v, g, t[0], lr)
+        else:
+            theta, m, v = ref.adam_step(theta, m, v, g, t[0], lr)
+        return theta, m, v, jnp.stack([pol, val, ent])
+
+    return step

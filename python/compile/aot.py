@@ -1,0 +1,240 @@
+"""AOT compile path: lower every L2 entry point to HLO *text* artifacts.
+
+HLO text (NOT `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/load_hlo/.
+
+Outputs (under --out-dir, default ../artifacts):
+  <name>.hlo.txt            one per artifact (see DESIGN.md §7)
+  manifest.json             config constants + per-artifact I/O shapes +
+                            flat-parameter layouts (validated by rust)
+  init/<model>_params.bin   deterministic little-endian f32 initial params
+
+Run via `make artifacts`; python never runs after this point.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import agent as agent_mod
+from . import model as model_mod
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def lower(fn, specs):
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+class Builder:
+    def __init__(self, out_dir):
+        self.out_dir = out_dir
+        self.artifacts = {}
+        os.makedirs(out_dir, exist_ok=True)
+        os.makedirs(os.path.join(out_dir, "init"), exist_ok=True)
+
+    def emit(self, name, fn, in_specs, meta=None):
+        text = lower(fn, in_specs)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *in_specs)
+        flat_outs = jax.tree_util.tree_leaves(outs)
+        self.artifacts[name] = {
+            "file": fname,
+            "inputs": [
+                {"shape": list(s.shape), "dtype": str(s.dtype)}
+                for s in in_specs
+            ],
+            "outputs": [
+                {"shape": list(o.shape), "dtype": str(o.dtype)}
+                for o in flat_outs
+            ],
+            **(meta or {}),
+        }
+        print(f"  {fname}: {len(text)} chars, "
+              f"{len(in_specs)} in -> {len(flat_outs)} out")
+
+    def write_init(self, name, flat):
+        path = os.path.join(self.out_dir, "init", f"{name}_params.bin")
+        np.asarray(flat, dtype="<f4").tofile(path)
+        return f"init/{name}_params.bin"
+
+
+def build_dataset(b, ds, cfg, use_pallas, train_pallas):
+    arch = model_mod.ARCHS[ds]()
+    p = model_mod.param_count(arch)
+    h, w, c = arch["input"]
+    nb, bs, ts = cfg["nb"], cfg["batch"], cfg["test_size"]
+    lr = cfg["lr"][ds]
+    layout = [
+        {"name": n, "shape": list(s), "offset": o}
+        for n, s, o in model_mod.param_layout(arch)
+    ]
+
+    b.emit(
+        f"{ds}_train_epoch",
+        model_mod.train_epoch(arch, lr, train_pallas),
+        [spec([p]), spec([nb, bs, h, w, c]), spec([nb, bs], jnp.int32)],
+        {"params": p, "lr": lr, "layout": layout},
+    )
+    b.emit(
+        f"{ds}_eval",
+        model_mod.evaluate(arch, chunk=cfg["eval_chunk"],
+                           use_pallas=train_pallas),
+        [spec([p]), spec([ts, h, w, c]), spec([ts], jnp.int32)],
+        {"params": p},
+    )
+    b.emit(
+        f"{ds}_aggregate",
+        model_mod.aggregate(use_pallas),
+        [spec([cfg["nmax"], p]), spec([cfg["nmax"]])],
+        {"params": p},
+    )
+    b.emit(
+        f"{ds}_pca_project",
+        model_mod.pca_project(use_pallas),
+        [spec([cfg["m_edges"] + 1, p]), spec([p, cfg["npca"]])],
+        {"params": p},
+    )
+
+    key = jax.random.PRNGKey(cfg["seed"])
+    init = model_mod.init_params(arch, key)
+    assert init.shape[0] == p
+    b.write_init(ds, init)
+    return p
+
+
+def build_agent(b, cfg, use_pallas, npca=None, datasets=()):
+    """Emit the PPO artifacts (and the matching pca_project variants) for
+    one n_PCA value. npca=None uses the default (no name suffix); other
+    values get an `_npca<k>` suffix — the Fig. 12 state-dimension ablation.
+    """
+    m, bt = cfg["m_edges"], cfg["traj_batch"]
+    default = npca is None
+    npca = cfg["npca"] if default else npca
+    suffix = "" if default else f"_npca{npca}"
+    pp = agent_mod.ppo_param_count(m, npca)
+    rows, cols = m + 1, npca + 3
+
+    b.emit(
+        f"ppo_actor_fwd{suffix}",
+        agent_mod.actor_fwd(m, npca, use_pallas),
+        [spec([pp]), spec([rows, cols])],
+        {"params": pp, "npca": npca},
+    )
+    b.emit(
+        f"ppo_update{suffix}",
+        agent_mod.ppo_update(
+            m, npca, lr=cfg["ppo_lr"], clip_eps=cfg["clip_eps"],
+            use_pallas=use_pallas,
+        ),
+        [
+            spec([pp]), spec([pp]), spec([pp]), spec([1]),
+            spec([bt, rows, cols]), spec([bt, 2 * m]),
+            spec([bt]), spec([bt]), spec([bt]), spec([bt]),
+        ],
+        {"params": pp, "lr": cfg["ppo_lr"], "npca": npca},
+    )
+    for ds in datasets:
+        arch = model_mod.ARCHS[ds]()
+        p = model_mod.param_count(arch)
+        b.emit(
+            f"{ds}_pca_project{suffix}",
+            model_mod.pca_project(use_pallas),
+            [spec([m + 1, p]), spec([p, npca])],
+            {"params": p, "npca": npca},
+        )
+
+    key = jax.random.PRNGKey(cfg["seed"] + 1)
+    b.write_init(f"ppo{suffix}", agent_mod.init_ppo_params(m, npca, key))
+    return pp
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--datasets", default="mnist,cifar")
+    ap.add_argument(
+        "--kernels", choices=["pallas", "hybrid", "jnp"], default="hybrid",
+        help="L1 compute path. 'pallas' = kernels everywhere; 'hybrid' "
+             "(default) = Pallas for the synchronization hot path "
+             "(aggregate / pca_project / PPO) and the jnp oracle inside the "
+             "device CNN epochs — interpret-mode Pallas costs ~15x on the "
+             "1-core CI box (see EXPERIMENTS.md §Perf); 'jnp' = oracle "
+             "everywhere (A/B reference)")
+    ap.add_argument("--nb", type=int, default=2,
+                    help="minibatches per local epoch (fixed artifact shape)")
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--test-size", type=int, default=512)
+    ap.add_argument("--eval-chunk", type=int, default=128)
+    ap.add_argument("--m-edges", type=int, default=5)
+    ap.add_argument("--npca", type=int, default=6)
+    ap.add_argument("--nmax", type=int, default=16,
+                    help="max devices per aggregation (weight-0 padding)")
+    ap.add_argument("--traj-batch", type=int, default=32)
+    ap.add_argument("--npca-variants", default="2,10",
+                    help="extra n_PCA ablation variants (Fig. 12); '' = none")
+    ap.add_argument("--ppo-lr", type=float, default=3e-4)
+    ap.add_argument("--clip-eps", type=float, default=0.2)
+    ap.add_argument("--lr-mnist", type=float, default=0.003)
+    ap.add_argument("--lr-cifar", type=float, default=0.01)
+    ap.add_argument("--seed", type=int, default=42)
+    args = ap.parse_args()
+
+    cfg = {
+        "nb": args.nb, "batch": args.batch, "test_size": args.test_size,
+        "eval_chunk": args.eval_chunk, "m_edges": args.m_edges,
+        "npca": args.npca, "nmax": args.nmax, "traj_batch": args.traj_batch,
+        "ppo_lr": args.ppo_lr, "clip_eps": args.clip_eps,
+        "lr": {"mnist": args.lr_mnist, "cifar": args.lr_cifar},
+        "seed": args.seed, "kernels": args.kernels,
+    }
+    use_pallas = args.kernels != "jnp"
+    train_pallas = args.kernels == "pallas"
+    b = Builder(args.out)
+
+    datasets = [d for d in args.datasets.split(",") if d]
+    params = {}
+    for ds in datasets:
+        print(f"lowering {ds} artifacts...")
+        params[ds] = build_dataset(b, ds, cfg, use_pallas, train_pallas)
+    print("lowering agent artifacts...")
+    params["ppo"] = build_agent(b, cfg, use_pallas, datasets=())
+    for v in [v for v in args.npca_variants.split(",") if v]:
+        k = int(v)
+        print(f"lowering n_PCA={k} ablation artifacts...")
+        params[f"ppo_npca{k}"] = build_agent(
+            b, cfg, use_pallas, npca=k, datasets=datasets
+        )
+
+    manifest = {
+        "config": cfg,
+        "param_counts": params,
+        "init": {k: f"init/{k}_params.bin" for k in params},
+        "artifacts": b.artifacts,
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(b.artifacts)} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

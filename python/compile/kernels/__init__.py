@@ -1,0 +1,10 @@
+"""L1 Pallas kernels (interpret=True on CPU) + pure-jnp oracles.
+
+Every kernel here is the compute hot-spot of one piece of the Arena HFL
+stack and lowers into the same HLO module as the L2 jax function that calls
+it. Correctness is pinned against `ref.py` by `python/tests/test_kernels.py`
+(hypothesis sweeps shapes), and the lowered HLO is executed from rust via
+PJRT — python never runs on the request path.
+"""
+
+from . import fedavg, matmul, optim, ref  # noqa: F401

@@ -1,0 +1,125 @@
+"""Pallas kernel: tiled fused dense layer activation(x @ w + b).
+
+Used by the CNNs' fully-connected layers, the im2col-lowered convolutions,
+the PPO actor-critic heads, and PCA projection (bias-free, no activation).
+
+TPU mapping: classic (M,N,K)-tiled matmul. The grid iterates K innermost;
+the output tile is revisited across K steps and used as the accumulator
+(f32). Tiles default to 128x128x512, sized so x-tile + w-tile + o-tile
+stay ~<1.5 MiB VMEM with MXU-aligned 128-lane shapes. Bias add and the
+activation are fused into the last K step.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_M = 128
+BLOCK_N = 128
+BLOCK_K = 512
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, activation, k_steps):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += x_ref[...] @ w_ref[...]
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _finish():
+        out = o_ref[...] + b_ref[...]
+        if activation == "relu":
+            out = jnp.maximum(out, 0.0)
+        elif activation == "tanh":
+            out = jnp.tanh(out)
+        o_ref[...] = out
+
+
+@functools.partial(
+    jax.jit, static_argnames=("activation", "block_m", "block_n", "block_k")
+)
+def matmul_bias_act(
+    x,
+    w,
+    b,
+    activation="none",
+    block_m=BLOCK_M,
+    block_n=BLOCK_N,
+    block_k=BLOCK_K,
+):
+    """Fused activation(x @ w + b); x:[M,K] w:[K,N] b:[N] -> [M,N]."""
+    assert activation in ("none", "relu", "tanh"), activation
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and b.shape == (n,)
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    pm, pn, pk = (-m) % bm, (-n) % bn, (-k) % bk
+    if pm or pk:
+        x = jnp.pad(x, ((0, pm), (0, pk)))
+    if pk or pn:
+        w = jnp.pad(w, ((0, pk), (0, pn)))
+    if pn:
+        b = jnp.pad(b, ((0, pn),))
+    mp, np_, kp = m + pm, n + pn, k + pk
+    k_steps = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_kernel, activation=activation, k_steps=k_steps),
+        grid=(mp // bm, np_ // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+            pl.BlockSpec((bn,), lambda i, j, s: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=True,
+    )(x, w, b)
+    return out[:m, :n]
+
+
+# --------------------------------------------------------------------------
+# Differentiable fused dense layer.
+#
+# pallas_call has no autodiff rule, so `dense` pins a custom VJP whose
+# backward pass is ALSO two tiled-matmul kernel launches:
+#   dx = dy @ w.T   and   dw = x.T @ dy   (db = colsum dy)
+# keeping the entire fwd+bwd hot path on the L1 kernel.
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def dense(x, w, b, activation="none"):
+    """Differentiable activation(x @ w + b) on the Pallas matmul kernel."""
+    return matmul_bias_act(x, w, b, activation)
+
+
+def _dense_fwd(x, w, b, activation):
+    y = matmul_bias_act(x, w, b, activation)
+    return y, (x, w, y)
+
+
+def _dense_bwd(activation, res, dy):
+    x, w, y = res
+    if activation == "relu":
+        dy = dy * (y > 0.0).astype(dy.dtype)
+    elif activation == "tanh":
+        dy = dy * (1.0 - y * y)
+    zero_k = jnp.zeros((w.shape[0],), x.dtype)
+    zero_n = jnp.zeros((w.shape[1],), x.dtype)
+    dx = matmul_bias_act(dy, w.T, zero_k)
+    dw = matmul_bias_act(x.T, dy, zero_n)
+    db = jnp.sum(dy, axis=0)
+    return dx, dw, db
+
+
+dense.defvjp(_dense_fwd, _dense_bwd)
+
+
+def pca_project(models, loadings):
+    """PCA state projection (paper Eq. 6) as a bias-free tiled matmul."""
+    r, p = models.shape
+    npca = loadings.shape[1]
+    zero = jnp.zeros((npca,), models.dtype)
+    return matmul_bias_act(models, loadings, zero, activation="none")

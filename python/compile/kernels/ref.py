@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the ground truth the kernels are tested against, and are also
+selectable as the L2 compute path (`--kernels jnp` in aot.py) so kernel vs
+reference can be A/B'd end-to-end from the rust side.
+"""
+
+import jax.numpy as jnp
+
+
+def fedavg_reduce(models, weights):
+    """Weighted aggregation (paper Eq. 1/2): sum_i w_i m_i / sum_i w_i.
+
+    models: [N, P] stacked flattened models; weights: [N] (zeros = absent).
+    """
+    wsum = jnp.sum(weights)
+    return (weights @ models) / wsum
+
+
+def matmul_bias_act(x, w, b, activation="none"):
+    """Fused dense layer: activation(x @ w + b). x:[M,K] w:[K,N] b:[N]."""
+    out = x @ w + b
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif activation == "tanh":
+        out = jnp.tanh(out)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation}")
+    return out
+
+
+def sgd_step(w, g, lr):
+    """Plain SGD update on flat parameter vectors."""
+    return w - lr * g
+
+
+def adam_step(w, m, v, g, t, lr, b1=0.9, b2=0.999, eps=1e-8):
+    """Adam update on flat parameter vectors. t is the 1-based step count."""
+    m_new = b1 * m + (1.0 - b1) * g
+    v_new = b2 * v + (1.0 - b2) * g * g
+    mhat = m_new / (1.0 - b1**t)
+    vhat = v_new / (1.0 - b2**t)
+    w_new = w - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return w_new, m_new, v_new
+
+
+def pca_project(models, loadings):
+    """Project stacked flattened models onto PCA loading vectors.
+
+    models: [R, P]; loadings: [P, npca] -> [R, npca]. (State s1, paper Eq. 6.)
+    """
+    return models @ loadings

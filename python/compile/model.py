@@ -1,0 +1,276 @@
+"""L2: the paper's device-side models as jax fwd/bwd, calling L1 kernels.
+
+Two CNNs, matching the paper §4.1:
+  * MNIST-shape:  conv5x5x10 (VALID) -> pool -> conv5x5x20 (VALID) -> pool
+                  -> fc 320->50 -> fc 50->10        = 21,840 params (exact)
+  * CIFAR-shape:  conv5x5x32 (SAME) -> pool -> conv5x5x32 -> pool ->
+                  conv5x5x64 -> pool -> fc 1024->328 -> fc 328->113
+                  -> fc 113->10                     = 453,845 params
+                  (paper: 453,834; +11 from integer layer sizing — the
+                  closest 3conv+3fc factorization, see DESIGN.md)
+
+Parameters live as ONE flat f32 vector so the rust coordinator can
+aggregate / ship them as opaque buffers; the layout table (offsets+shapes)
+is exported into artifacts/manifest.json.
+
+Convolutions are lowered to im2col + the L1 tiled-matmul Pallas kernel, so
+the training hot loop is kernel work. `train_epoch` scans `nb` minibatch
+SGD steps in a single XLA program (one PJRT dispatch per local epoch).
+"""
+
+import functools
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul, optim, ref
+
+
+# --------------------------------------------------------------------------
+# Architectures
+# --------------------------------------------------------------------------
+
+class ConvSpec:
+    """conv k x k, cin -> cout, followed by 2x2 max pool."""
+
+    def __init__(self, k, cin, cout, padding):
+        self.k, self.cin, self.cout, self.padding = k, cin, cout, padding
+
+    def shapes(self):
+        return [((self.k, self.k, self.cin, self.cout), "w"),
+                ((self.cout,), "b")]
+
+
+class DenseSpec:
+    def __init__(self, din, dout, act):
+        self.din, self.dout, self.act = din, dout, act
+
+    def shapes(self):
+        return [((self.din, self.dout), "w"), ((self.dout,), "b")]
+
+
+def mnist_arch():
+    return {
+        "name": "mnist",
+        "input": (28, 28, 1),
+        "convs": [ConvSpec(5, 1, 10, "VALID"), ConvSpec(5, 10, 20, "VALID")],
+        "dense": [DenseSpec(320, 50, "relu"), DenseSpec(50, 10, "none")],
+        "classes": 10,
+    }
+
+
+def cifar_arch():
+    return {
+        "name": "cifar",
+        "input": (32, 32, 3),
+        "convs": [
+            ConvSpec(5, 3, 32, "SAME"),
+            ConvSpec(5, 32, 32, "SAME"),
+            ConvSpec(5, 32, 64, "SAME"),
+        ],
+        "dense": [
+            DenseSpec(1024, 328, "relu"),
+            DenseSpec(328, 113, "relu"),
+            DenseSpec(113, 10, "none"),
+        ],
+        "classes": 10,
+    }
+
+
+ARCHS = {"mnist": mnist_arch, "cifar": cifar_arch}
+
+
+def param_layout(arch) -> List[Tuple[str, Tuple[int, ...], int]]:
+    """[(name, shape, offset)] for the flat parameter vector."""
+    layout, off = [], 0
+    for i, c in enumerate(arch["convs"]):
+        for shape, kind in c.shapes():
+            n = 1
+            for d in shape:
+                n *= d
+            layout.append((f"conv{i}_{kind}", shape, off))
+            off += n
+    for i, d in enumerate(arch["dense"]):
+        for shape, kind in d.shapes():
+            n = 1
+            for s in shape:
+                n *= s
+            layout.append((f"fc{i}_{kind}", shape, off))
+            off += n
+    return layout
+
+
+def param_count(arch) -> int:
+    layout = param_layout(arch)
+    name, shape, off = layout[-1]
+    n = 1
+    for d in shape:
+        n *= d
+    return off + n
+
+
+def unflatten(arch, flat):
+    """Flat f32[P] -> list of parameter arrays in layout order."""
+    out = []
+    for _, shape, off in param_layout(arch):
+        n = 1
+        for d in shape:
+            n *= d
+        out.append(flat[off:off + n].reshape(shape))
+    return out
+
+
+def init_params(arch, key) -> jnp.ndarray:
+    """He-initialized flat parameter vector."""
+    parts = []
+    for name, shape, _ in param_layout(arch):
+        key, sub = jax.random.split(key)
+        if name.endswith("_b"):
+            parts.append(jnp.zeros(shape, jnp.float32).ravel())
+        else:
+            fan_in = 1
+            for d in shape[:-1]:
+                fan_in *= d
+            std = jnp.sqrt(2.0 / fan_in)
+            parts.append((jax.random.normal(sub, shape) * std)
+                         .astype(jnp.float32).ravel())
+    return jnp.concatenate(parts)
+
+
+# --------------------------------------------------------------------------
+# Forward pass
+# --------------------------------------------------------------------------
+
+def _dense(x, w, b, act, use_pallas):
+    if use_pallas:
+        return matmul.dense(x, w, b, act)
+    return ref.matmul_bias_act(x, w, b, activation=act)
+
+
+def _im2col(x, k, padding):
+    """[B,H,W,C] -> ([B*Ho*Wo, k*k*C], Ho, Wo) patch matrix (stride 1)."""
+    b, h, w, c = x.shape
+    if padding == "SAME":
+        p = k // 2
+        x = jnp.pad(x, ((0, 0), (p, p), (p, p), (0, 0)))
+        ho, wo = h, w
+    else:
+        ho, wo = h - k + 1, w - k + 1
+    # k*k static slices; stacks to [B,Ho,Wo,k*k,C] matching a row-major
+    # (ki, kj, c) flatten of the [k,k,C,OC] filter.
+    patches = jnp.stack(
+        [x[:, i:i + ho, j:j + wo, :] for i in range(k) for j in range(k)],
+        axis=3,
+    )
+    return patches.reshape(b * ho * wo, k * k * c), ho, wo
+
+
+def _conv(x, wf, bf, spec, use_pallas):
+    cols, ho, wo = _im2col(x, spec.k, spec.padding)
+    wmat = wf.reshape(spec.k * spec.k * spec.cin, spec.cout)
+    out = _dense(cols, wmat, bf, "relu", use_pallas)
+    return out.reshape(x.shape[0], ho, wo, spec.cout)
+
+
+def _maxpool2(x):
+    b, h, w, c = x.shape
+    return x.reshape(b, h // 2, 2, w // 2, 2, c).max(axis=(2, 4))
+
+
+def forward(arch, flat, x, use_pallas=True):
+    """Logits for a batch x: [B, H, W, C] -> [B, classes]."""
+    params = unflatten(arch, flat)
+    i = 0
+    h = x
+    for spec in arch["convs"]:
+        h = _conv(h, params[i], params[i + 1], spec, use_pallas)
+        h = _maxpool2(h)
+        i += 2
+    h = h.reshape(h.shape[0], -1)
+    for spec in arch["dense"]:
+        h = _dense(h, params[i], params[i + 1], spec.act, use_pallas)
+        i += 2
+    return h
+
+
+def loss_fn(arch, flat, x, y, use_pallas=True):
+    """Mean softmax cross-entropy. y: int32 [B]."""
+    logits = forward(arch, flat, x, use_pallas)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(y, arch["classes"], dtype=logits.dtype)
+    return -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+
+
+# --------------------------------------------------------------------------
+# AOT entry points
+# --------------------------------------------------------------------------
+
+def train_epoch(arch, lr, use_pallas=True):
+    """Returns f(w, X[nb,B,H,W,C], Y[nb,B]) -> (w', mean_loss).
+
+    One local-training epoch: lax.scan over nb minibatch SGD steps, each a
+    grad step through the Pallas-kernel forward plus the fused sgd_step
+    kernel. One PJRT dispatch per epoch on the rust side.
+    """
+    grad_fn = jax.value_and_grad(
+        lambda w, x, y: loss_fn(arch, w, x, y, use_pallas)
+    )
+
+    def step(w, batch):
+        x, y = batch
+        loss, g = grad_fn(w, x, y)
+        if use_pallas:
+            w = optim.sgd_step(w, g, lr)
+        else:
+            w = ref.sgd_step(w, g, lr)
+        return w, loss
+
+    def epoch(w, xs, ys):
+        w, losses = jax.lax.scan(step, w, (xs, ys))
+        return w, jnp.mean(losses)
+
+    return epoch
+
+
+def evaluate(arch, chunk=128, use_pallas=True):
+    """Returns f(w, Xt[T,H,W,C], Yt[T]) -> (correct_count, mean_loss).
+
+    Scans the test set in fixed chunks to bound live memory. T must be a
+    multiple of `chunk` (the aot config guarantees it).
+    """
+
+    def body(carry, batch):
+        x, y = batch
+        logits = forward(arch, carry["w"], x, use_pallas)
+        pred = jnp.argmax(logits, axis=-1)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        onehot = jax.nn.one_hot(y, arch["classes"], dtype=logits.dtype)
+        loss = -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+        correct = jnp.sum((pred == y).astype(jnp.float32))
+        return carry, (correct, loss)
+
+    def run(w, xt, yt):
+        t = xt.shape[0]
+        n = t // chunk
+        xs = xt.reshape((n, chunk) + xt.shape[1:])
+        ys = yt.reshape((n, chunk))
+        _, (cs, ls) = jax.lax.scan(body, {"w": w}, (xs, ys))
+        return jnp.sum(cs), jnp.mean(ls)
+
+    return run
+
+
+def aggregate(use_pallas=True):
+    """Returns f(models[Nmax,P], weights[Nmax]) -> w[P] (Eq. 1/2)."""
+    if use_pallas:
+        from .kernels import fedavg
+        return lambda m, w: fedavg.fedavg_reduce(m, w)
+    return lambda m, w: ref.fedavg_reduce(m, w)
+
+
+def pca_project(use_pallas=True):
+    """Returns f(models[R,P], loadings[P,npca]) -> [R,npca] (Eq. 6)."""
+    if use_pallas:
+        return lambda m, l: matmul.pca_project(m, l)
+    return lambda m, l: ref.pca_project(m, l)

@@ -1,0 +1,109 @@
+"""L1 performance analysis: VMEM footprint + MXU-utilization estimates per
+Pallas kernel configuration, and interpret-mode wallclock A/B against the
+pure-jnp oracle.
+
+interpret=True timings are CPU-numpy, NOT a TPU proxy — the optimization
+object for L1 is the *structure* (block shapes vs VMEM, MXU tile
+alignment); this tool makes that structure auditable, and the wallclock
+A/B quantifies what the hybrid AOT mode (aot.py --kernels) trades.
+
+Usage:  cd python && python -m compile.perf_report
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fedavg, matmul, optim, ref
+
+VMEM_BUDGET = 16 * 2**20  # ~16 MiB per TPU core
+MXU = (128, 128)  # systolic array tile
+
+
+def fmt_bytes(b):
+    return f"{b / 2**10:.0f} KiB" if b < 2**20 else f"{b / 2**20:.2f} MiB"
+
+
+def vmem_fedavg(nmax, block_p):
+    """Per-grid-step VMEM: one [Nmax, bp] model tile + weights + out tile."""
+    return 4 * (nmax * block_p + nmax + block_p)
+
+
+def vmem_matmul(bm, bn, bk):
+    """x-tile + w-tile + bias + out/accumulator tile."""
+    return 4 * (bm * bk + bk * bn + bn + bm * bn)
+
+
+def mxu_utilization(bm, bn, bk):
+    """Fraction of the 128x128 MXU covered by the tile shape."""
+    return min(bm / MXU[0], 1.0) * min(bn / MXU[1], 1.0)
+
+
+def timeit(f, *args, reps=5):
+    out = f(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def main():
+    print("== L1 structure: VMEM footprint / MXU estimates ==")
+    print(f"{'kernel':<28}{'tile':<20}{'VMEM/step':<12}{'MXU util':<10}ok?")
+    for p, name in [(21_840, "mnist"), (453_845, "cifar")]:
+        for bp in [1024, 4096, 8192, 16384]:
+            v = vmem_fedavg(16, bp)
+            print(f"fedavg_reduce/{name:<14}bp={bp:<15}{fmt_bytes(v):<12}"
+                  f"{'n/a (matvec)':<10}"
+                  f"{'yes' if v < VMEM_BUDGET else 'NO'}")
+    for (bm, bn, bk) in [(32, 32, 64), (128, 128, 512), (256, 256, 512),
+                         (512, 512, 1024)]:
+        v = vmem_matmul(bm, bn, bk)
+        u = mxu_utilization(bm, bn, bk)
+        mark = "yes" if v < VMEM_BUDGET else "NO"
+        print(f"{'matmul_bias_act':<28}{f'{bm}x{bn}x{bk}':<20}"
+              f"{fmt_bytes(v):<12}{u:<10.2f}{mark}")
+
+    print("\n== interpret-mode wallclock A/B (CPU; drives aot --kernels) ==")
+    key = jax.random.PRNGKey(0)
+    # fedavg at both model sizes
+    for p, name in [(21_840, "mnist"), (453_845, "cifar")]:
+        m = jax.random.normal(key, (16, p), dtype=jnp.float32)
+        w = jnp.ones((16,))
+        tp = timeit(jax.jit(fedavg.fedavg_reduce), m, w)
+        tr = timeit(jax.jit(ref.fedavg_reduce), m, w)
+        print(f"fedavg/{name}: pallas {tp * 1e3:8.2f} ms   "
+              f"jnp {tr * 1e3:8.2f} ms   ratio {tp / tr:5.1f}x")
+    # dense layer at CNN-ish shapes
+    for (m_, k_, n_) in [(1152, 250, 10), (32, 320, 50), (512, 1024, 328)]:
+        x = jax.random.normal(key, (m_, k_))
+        wm = jax.random.normal(key, (k_, n_))
+        b = jnp.zeros((n_,))
+        f_p = jax.jit(lambda x, w, b: matmul.matmul_bias_act(x, w, b, "relu"))
+        f_r = jax.jit(lambda x, w, b: ref.matmul_bias_act(x, w, b, "relu"))
+        tp = timeit(f_p, x, wm, b)
+        tr = timeit(f_r, x, wm, b)
+        print(f"dense/{m_}x{k_}x{n_}: pallas {tp * 1e3:8.2f} ms   "
+              f"jnp {tr * 1e3:8.2f} ms   ratio {tp / tr:5.1f}x")
+    # optimizer step
+    for p, name in [(21_840, "mnist"), (121_589, "ppo-adam")]:
+        w = jax.random.normal(key, (p,))
+        g = jax.random.normal(key, (p,))
+        if name == "ppo-adam":
+            m0 = jnp.zeros((p,))
+            f_p = jax.jit(lambda w, g: optim.adam_step(w, m0, m0, g, 1.0, 1e-3))
+            f_r = jax.jit(lambda w, g: ref.adam_step(w, m0, m0, g, 1.0, 1e-3))
+        else:
+            f_p = jax.jit(lambda w, g: optim.sgd_step(w, g, 0.01))
+            f_r = jax.jit(lambda w, g: ref.sgd_step(w, g, 0.01))
+        tp = timeit(f_p, w, g)
+        tr = timeit(f_r, w, g)
+        print(f"optim/{name}: pallas {tp * 1e3:8.2f} ms   "
+              f"jnp {tr * 1e3:8.2f} ms   ratio {tp / tr:5.1f}x")
+
+
+if __name__ == "__main__":
+    main()

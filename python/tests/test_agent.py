@@ -1,0 +1,120 @@
+"""PPO actor-critic checks: shapes, Gaussian math, update behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import agent as A
+
+M_EDGES, NPCA = 5, 6
+ROWS, COLS = M_EDGES + 1, NPCA + 3
+
+
+def theta(seed=0):
+    return A.init_ppo_params(M_EDGES, NPCA, jax.random.PRNGKey(seed))
+
+
+def test_param_count_matches_layout():
+    layout = A.ppo_layout(M_EDGES, NPCA)
+    total = sum(int(np.prod(s)) for _, s, _ in layout)
+    assert total == A.ppo_param_count(M_EDGES, NPCA)
+
+
+def test_actor_fwd_shapes_and_ranges():
+    th = theta()
+    mu, sigma, v = A.actor_fwd(M_EDGES, NPCA)(th, jnp.ones((ROWS, COLS)))
+    assert mu.shape == (2 * M_EDGES,)
+    assert sigma.shape == (2 * M_EDGES,)
+    assert v.shape == (1,)
+    assert np.all(np.asarray(sigma) > 0), "sigma must be positive"
+    # log_sigma clipped to [-5, 2]
+    assert np.all(np.asarray(sigma) <= np.exp(2.0) + 1e-5)
+
+
+def test_forward_batch_consistency():
+    th = theta(1)
+    states = jax.random.normal(jax.random.PRNGKey(2), (4, ROWS, COLS))
+    mu_b, sigma_b, v_b = A.forward(M_EDGES, NPCA, th, states)
+    for i in range(4):
+        mu_i, sigma_i, v_i = A.forward(M_EDGES, NPCA, th, states[i:i + 1])
+        np.testing.assert_allclose(mu_b[i], mu_i[0], rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(v_b[i], v_i[0], rtol=2e-4, atol=2e-4)
+
+
+def test_log_prob_matches_scipy_formula():
+    mu = jnp.zeros((1, 3))
+    sigma = jnp.ones((1, 3)) * 2.0
+    a = jnp.array([[1.0, -1.0, 0.5]])
+    lp = A._log_prob(mu, sigma, a)
+    want = np.sum(
+        -0.5 * (np.asarray(a[0]) / 2.0) ** 2
+        - np.log(2.0)
+        - 0.5 * np.log(2 * np.pi)
+    )
+    np.testing.assert_allclose(lp[0], want, rtol=1e-5)
+
+
+def test_entropy_increases_with_sigma():
+    e1 = A._entropy(jnp.ones((1, 4)))
+    e2 = A._entropy(2.0 * jnp.ones((1, 4)))
+    assert float(e2[0]) > float(e1[0])
+
+
+def _update_batch(B, seed=3):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 6)
+    states = jax.random.normal(ks[0], (B, ROWS, COLS))
+    actions = jax.random.normal(ks[1], (B, 2 * M_EDGES))
+    old_logp = jax.random.normal(ks[2], (B,)) - 5.0
+    adv = jax.random.normal(ks[3], (B,))
+    ret = jax.random.normal(ks[4], (B,))
+    mask = jnp.ones((B,))
+    return states, actions, old_logp, adv, ret, mask
+
+
+def test_ppo_update_changes_params_and_returns_losses():
+    th = theta(2)
+    B = 8
+    m = jnp.zeros_like(th)
+    v = jnp.zeros_like(th)
+    upd = jax.jit(A.ppo_update(M_EDGES, NPCA))
+    th2, m2, v2, losses = upd(th, m, v, jnp.ones((1,)), *_update_batch(B))
+    assert th2.shape == th.shape
+    assert not np.allclose(np.asarray(th2), np.asarray(th))
+    assert losses.shape == (3,)
+    assert np.all(np.isfinite(np.asarray(losses)))
+
+
+def test_ppo_update_respects_mask():
+    """Rows with mask 0 must not influence the update."""
+    th = theta(4)
+    m = jnp.zeros_like(th)
+    v = jnp.zeros_like(th)
+    upd = jax.jit(A.ppo_update(M_EDGES, NPCA))
+    states, actions, old_logp, adv, ret, _ = _update_batch(8, seed=5)
+    mask_half = jnp.array([1.0] * 4 + [0.0] * 4)
+    out_half = upd(th, m, v, jnp.ones((1,)), states, actions, old_logp,
+                   adv, ret, mask_half)
+    # Same update with garbage in the masked rows:
+    states2 = states.at[4:].set(999.0)
+    ret2 = ret.at[4:].set(-999.0)
+    out_garbage = upd(th, m, v, jnp.ones((1,)), states2, actions, old_logp,
+                      adv, ret2, mask_half)
+    np.testing.assert_allclose(np.asarray(out_half[0]),
+                               np.asarray(out_garbage[0]),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_value_loss_decreases_with_repeated_updates():
+    th = theta(6)
+    m = jnp.zeros_like(th)
+    v = jnp.zeros_like(th)
+    upd = jax.jit(A.ppo_update(M_EDGES, NPCA, lr=1e-3))
+    batch = _update_batch(16, seed=7)
+    first = None
+    for t in range(1, 40):
+        th, m, v, losses = upd(th, m, v, jnp.full((1,), float(t)), *batch)
+        if first is None:
+            first = float(losses[1])
+    assert float(losses[1]) < first, (float(losses[1]), first)

@@ -1,0 +1,80 @@
+"""AOT pipeline checks: HLO text is emitted, parses as HLO (sanity), and the
+manifest agrees with the lowered shapes. Uses a tiny config to stay fast."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+PYDIR = os.path.join(REPO, "python")
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    subprocess.run(
+        [
+            sys.executable, "-m", "compile.aot",
+            "--out", str(out),
+            "--datasets", "mnist",
+            "--nb", "2", "--batch", "8", "--test-size", "64",
+            "--eval-chunk", "32", "--traj-batch", "8",
+        ],
+        cwd=PYDIR,
+        check=True,
+        capture_output=True,
+    )
+    return out
+
+
+def test_emits_all_mnist_and_agent_artifacts(built):
+    names = {
+        "mnist_train_epoch", "mnist_eval", "mnist_aggregate",
+        "mnist_pca_project", "ppo_actor_fwd", "ppo_update",
+    }
+    for n in names:
+        path = built / f"{n}.hlo.txt"
+        assert path.exists(), n
+        text = path.read_text()
+        assert text.startswith("HloModule"), n
+        assert "ENTRY" in text, n
+
+
+def test_manifest_consistent(built):
+    man = json.loads((built / "manifest.json").read_text())
+    assert man["param_counts"]["mnist"] == 21840
+    arts = man["artifacts"]
+    te = arts["mnist_train_epoch"]
+    assert te["inputs"][0]["shape"] == [21840]
+    assert te["inputs"][1]["shape"] == [2, 8, 28, 28, 1]
+    assert te["inputs"][2]["dtype"] == "int32"
+    assert len(te["outputs"]) == 2
+    up = arts["ppo_update"]
+    assert len(up["inputs"]) == 10
+    assert up["inputs"][4]["shape"] == [8, 6, 9]
+
+
+def test_init_params_binary_sized(built):
+    man = json.loads((built / "manifest.json").read_text())
+    p = man["param_counts"]["mnist"]
+    size = (built / "init" / "mnist_params.bin").stat().st_size
+    assert size == 4 * p
+    pp = man["param_counts"]["ppo"]
+    size = (built / "init" / "ppo_params.bin").stat().st_size
+    assert size == 4 * pp
+
+
+def test_layout_in_manifest_covers_all_params(built):
+    man = json.loads((built / "manifest.json").read_text())
+    layout = man["artifacts"]["mnist_train_epoch"]["layout"]
+    total = 0
+    for entry in layout:
+        n = 1
+        for d in entry["shape"]:
+            n *= d
+        assert entry["offset"] == total
+        total += n
+    assert total == man["param_counts"]["mnist"]

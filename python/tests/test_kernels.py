@@ -1,0 +1,164 @@
+"""Kernel vs oracle: the CORE L1 correctness signal.
+
+hypothesis sweeps shapes/values; every Pallas kernel must match its pure-jnp
+reference to float32 tolerance, including the ragged (non-multiple-of-block)
+edges the wrappers pad away.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fedavg, matmul, optim, ref
+
+SET = dict(max_examples=25, deadline=None)
+
+
+def rand(key, shape, lo=-2.0, hi=2.0):
+    return jax.random.uniform(jax.random.PRNGKey(key), shape,
+                              minval=lo, maxval=hi, dtype=jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# fedavg_reduce
+# --------------------------------------------------------------------------
+
+@settings(**SET)
+@given(n=st.integers(1, 16), p=st.integers(1, 9000), seed=st.integers(0, 99))
+def test_fedavg_matches_ref(n, p, seed):
+    models = rand(seed, (n, p))
+    weights = rand(seed + 1, (n,), lo=0.0, hi=5.0) + 0.01
+    got = fedavg.fedavg_reduce(models, weights, block_p=2048)
+    want = ref.fedavg_reduce(models, weights)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_fedavg_zero_weight_models_are_ignored():
+    models = jnp.stack([jnp.ones(100), 5.0 * jnp.ones(100),
+                        999.0 * jnp.ones(100)])
+    weights = jnp.array([1.0, 3.0, 0.0])
+    got = fedavg.fedavg_reduce(models, weights)
+    np.testing.assert_allclose(got, jnp.full(100, 4.0), rtol=1e-6)
+
+
+def test_fedavg_single_model_identity():
+    m = rand(7, (1, 500))
+    got = fedavg.fedavg_reduce(m, jnp.ones((1,)))
+    np.testing.assert_allclose(got, m[0], rtol=1e-6)
+
+
+def test_fedavg_equal_weights_is_mean():
+    m = rand(8, (4, 300))
+    got = fedavg.fedavg_reduce(m, jnp.ones((4,)))
+    np.testing.assert_allclose(got, m.mean(axis=0), rtol=1e-5, atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# matmul_bias_act / dense
+# --------------------------------------------------------------------------
+
+@settings(**SET)
+@given(
+    m=st.integers(1, 100),
+    k=st.integers(1, 300),
+    n=st.integers(1, 80),
+    act=st.sampled_from(["none", "relu", "tanh"]),
+    seed=st.integers(0, 99),
+)
+def test_matmul_matches_ref(m, k, n, act, seed):
+    x = rand(seed, (m, k))
+    w = rand(seed + 1, (k, n))
+    b = rand(seed + 2, (n,))
+    got = matmul.matmul_bias_act(x, w, b, activation=act,
+                                 block_m=32, block_n=32, block_k=64)
+    want = ref.matmul_bias_act(x, w, b, activation=act)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_matmul_blocks_larger_than_problem():
+    x, w, b = rand(1, (3, 5)), rand(2, (5, 2)), rand(3, (2,))
+    got = matmul.matmul_bias_act(x, w, b)
+    np.testing.assert_allclose(got, ref.matmul_bias_act(x, w, b),
+                               rtol=1e-5, atol=1e-6)
+
+
+@settings(**SET)
+@given(
+    m=st.integers(2, 40),
+    k=st.integers(2, 60),
+    n=st.integers(1, 30),
+    act=st.sampled_from(["none", "relu", "tanh"]),
+    seed=st.integers(0, 99),
+)
+def test_dense_gradients_match_ref(m, k, n, act, seed):
+    """custom_vjp backward (Pallas both ways) == autodiff of the oracle."""
+    x = rand(seed, (m, k))
+    w = rand(seed + 1, (k, n))
+    b = rand(seed + 2, (n,))
+    dy = rand(seed + 3, (m, n))
+
+    def f_pallas(x, w, b):
+        return jnp.sum(matmul.dense(x, w, b, act) * dy)
+
+    def f_ref(x, w, b):
+        return jnp.sum(ref.matmul_bias_act(x, w, b, activation=act) * dy)
+
+    gp = jax.grad(f_pallas, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, e in zip(gp, gr):
+        np.testing.assert_allclose(a, e, rtol=5e-4, atol=5e-4)
+
+
+# --------------------------------------------------------------------------
+# optimizers
+# --------------------------------------------------------------------------
+
+@settings(**SET)
+@given(p=st.integers(1, 20000), seed=st.integers(0, 99))
+def test_sgd_matches_ref(p, seed):
+    w, g = rand(seed, (p,)), rand(seed + 1, (p,))
+    got = optim.sgd_step(w, g, 0.01, block=4096)
+    np.testing.assert_allclose(got, ref.sgd_step(w, g, 0.01),
+                               rtol=1e-6, atol=1e-7)
+
+
+@settings(**SET)
+@given(p=st.integers(1, 20000), t=st.integers(1, 100),
+       seed=st.integers(0, 99))
+def test_adam_matches_ref(p, t, seed):
+    w, g = rand(seed, (p,)), rand(seed + 1, (p,))
+    m = rand(seed + 2, (p,), lo=-0.5, hi=0.5)
+    v = rand(seed + 3, (p,), lo=0.0, hi=0.5)
+    got = optim.adam_step(w, m, v, g, float(t), 1e-3, block=4096)
+    want = ref.adam_step(w, m, v, g, float(t), 1e-3)
+    for a, e in zip(got, want):
+        np.testing.assert_allclose(a, e, rtol=2e-5, atol=2e-6)
+
+
+def test_adam_zero_grad_keeps_moments_decaying():
+    p = 64
+    w = rand(1, (p,))
+    m = jnp.ones((p,))
+    v = jnp.ones((p,))
+    g = jnp.zeros((p,))
+    w2, m2, v2 = optim.adam_step(w, m, v, g, 5.0, 1e-3)
+    np.testing.assert_allclose(m2, 0.9 * m, rtol=1e-6)
+    np.testing.assert_allclose(v2, 0.999 * v, rtol=1e-6)
+    assert not np.allclose(w2, w)  # nonzero moments still move w
+
+
+# --------------------------------------------------------------------------
+# pca projection
+# --------------------------------------------------------------------------
+
+@settings(**SET)
+@given(r=st.integers(1, 8), p=st.integers(1, 4000),
+       npca=st.integers(1, 10), seed=st.integers(0, 99))
+def test_pca_project_matches_ref(r, p, npca, seed):
+    models = rand(seed, (r, p))
+    loadings = rand(seed + 1, (p, npca))
+    got = matmul.pca_project(models, loadings)
+    want = ref.pca_project(models, loadings)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)

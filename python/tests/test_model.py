@@ -1,0 +1,128 @@
+"""L2 model checks: param counts (paper §4.1), shapes, learning signal,
+pallas-vs-jnp forward equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+def make_batch(arch, nb, bs, seed=0):
+    h, w, c = arch["input"]
+    key = jax.random.PRNGKey(seed)
+    kx, ky = jax.random.split(key)
+    x = jax.random.normal(kx, (nb, bs, h, w, c), dtype=jnp.float32)
+    y = jax.random.randint(ky, (nb, bs), 0, arch["classes"])
+    return x, y
+
+
+def test_mnist_param_count_matches_paper_exactly():
+    assert M.param_count(M.mnist_arch()) == 21840
+
+
+def test_cifar_param_count_close_to_paper():
+    # Paper: 453,834; closest 3conv+3fc integer factorization is +11.
+    got = M.param_count(M.cifar_arch())
+    assert abs(got - 453834) <= 16, got
+
+
+def test_layout_is_contiguous_and_ordered():
+    for name in ("mnist", "cifar"):
+        arch = M.ARCHS[name]()
+        off = 0
+        for pname, shape, offset in M.param_layout(arch):
+            assert offset == off, (pname, offset, off)
+            n = int(np.prod(shape))
+            off += n
+        assert off == M.param_count(arch)
+
+
+def test_unflatten_round_trips():
+    arch = M.mnist_arch()
+    flat = jnp.arange(M.param_count(arch), dtype=jnp.float32)
+    parts = M.unflatten(arch, flat)
+    re = jnp.concatenate([p.ravel() for p in parts])
+    np.testing.assert_array_equal(re, flat)
+
+
+def test_forward_shapes():
+    arch = M.mnist_arch()
+    w = M.init_params(arch, jax.random.PRNGKey(0))
+    x, _ = make_batch(arch, 1, 8)
+    logits = M.forward(arch, w, x[0])
+    assert logits.shape == (8, 10)
+
+
+def test_forward_pallas_matches_jnp_path():
+    arch = M.mnist_arch()
+    w = M.init_params(arch, jax.random.PRNGKey(1))
+    x, _ = make_batch(arch, 1, 4, seed=3)
+    lp = M.forward(arch, w, x[0], use_pallas=True)
+    lr = M.forward(arch, w, x[0], use_pallas=False)
+    np.testing.assert_allclose(lp, lr, rtol=2e-4, atol=2e-4)
+
+
+def test_train_epoch_reduces_loss():
+    arch = M.mnist_arch()
+    w = M.init_params(arch, jax.random.PRNGKey(2))
+    x, y = make_batch(arch, 2, 32, seed=5)
+    ep = jax.jit(M.train_epoch(arch, 0.01))
+    losses = []
+    for _ in range(4):
+        w, loss = ep(w, x, y)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+
+
+def test_train_epoch_pallas_matches_jnp_path():
+    arch = M.mnist_arch()
+    w = M.init_params(arch, jax.random.PRNGKey(4))
+    x, y = make_batch(arch, 2, 16, seed=6)
+    wp, lp = jax.jit(M.train_epoch(arch, 0.01, use_pallas=True))(w, x, y)
+    wr, lr = jax.jit(M.train_epoch(arch, 0.01, use_pallas=False))(w, x, y)
+    assert abs(float(lp) - float(lr)) < 1e-3
+    np.testing.assert_allclose(wp, wr, rtol=5e-3, atol=5e-4)
+
+
+def test_evaluate_counts_correct():
+    arch = M.mnist_arch()
+    w = M.init_params(arch, jax.random.PRNGKey(3))
+    h, wd, c = arch["input"]
+    xt = jax.random.normal(jax.random.PRNGKey(9), (128, h, wd, c))
+    ev = jax.jit(M.evaluate(arch, chunk=64))
+    # consistent with argmax of forward
+    logits = M.forward(arch, w, xt)
+    pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    correct, _ = ev(w, xt, pred)
+    assert float(correct) == 128.0
+    wrong = (pred + 1) % 10
+    correct, _ = ev(w, xt, wrong)
+    assert float(correct) == 0.0
+
+
+def test_aggregate_entry_point():
+    agg = M.aggregate(use_pallas=True)
+    models = jnp.stack([jnp.full(50, 2.0), jnp.full(50, 6.0)])
+    out = agg(models, jnp.array([1.0, 1.0]))
+    np.testing.assert_allclose(out, jnp.full(50, 4.0), rtol=1e-6)
+
+
+def test_overfits_tiny_learnable_dataset():
+    """End-to-end learnability: class-dependent means must become separable."""
+    arch = M.mnist_arch()
+    w = M.init_params(arch, jax.random.PRNGKey(7))
+    h, wd, c = arch["input"]
+    key = jax.random.PRNGKey(8)
+    y = jnp.tile(jnp.arange(4, dtype=jnp.int32), 8)  # 32 samples, 4 classes
+    protos = jax.random.normal(key, (10, h, wd, c)) * 2.0
+    x = protos[y] + 0.1 * jax.random.normal(key, (32, h, wd, c))
+    xs = x[None]
+    ys = y[None]
+    ep = jax.jit(M.train_epoch(arch, 0.05))
+    for _ in range(30):
+        w, loss = ep(w, xs, ys)
+    logits = M.forward(arch, w, x)
+    acc = float(jnp.mean((jnp.argmax(logits, -1) == y)))
+    assert acc > 0.9, f"acc={acc}, loss={float(loss)}"

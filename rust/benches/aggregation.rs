@@ -1,0 +1,62 @@
+//! Bench: the fedavg_reduce Pallas artifact vs a naive rust loop — the
+//! HFL synchronization hot path (paper Eq. 1/2).
+//! `cargo bench --bench aggregation`
+
+use arena::runtime::{HostTensor, Runtime};
+use arena::util::microbench::{bench, black_box};
+use arena::util::rng::Rng;
+
+fn main() {
+    std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "2");
+    let dir = std::env::var("ARENA_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".into());
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::load(&dir, &["mnist_aggregate", "cifar_aggregate"])
+        .expect("load artifacts");
+    let mut rng = Rng::new(1);
+    for ds in ["mnist", "cifar"] {
+        let p = rt.manifest.param_count(ds).unwrap();
+        let nmax = rt.manifest.config.nmax;
+        let n_models = 10;
+        let mut flat = vec![0.0f32; nmax * p];
+        for v in flat.iter_mut().take(n_models * p) {
+            *v = rng.normal() as f32;
+        }
+        let mut weights = vec![0.0f32; nmax];
+        for w in weights.iter_mut().take(n_models) {
+            *w = 1.0;
+        }
+
+        let art = format!("{ds}_aggregate");
+        let models_t = HostTensor::f32(vec![nmax, p], flat.clone());
+        let weights_t = HostTensor::f32(vec![nmax], weights.clone());
+        bench(&format!("aggregate/{ds}/pallas-artifact"), || {
+            let out = rt
+                .execute(&art, &[models_t.clone(), weights_t.clone()])
+                .unwrap();
+            black_box(out);
+        });
+
+        bench(&format!("aggregate/{ds}/naive-rust"), || {
+            let wsum: f32 = weights.iter().sum();
+            let mut out = vec![0.0f32; p];
+            for i in 0..nmax {
+                let w = weights[i];
+                if w == 0.0 {
+                    continue;
+                }
+                let row = &flat[i * p..(i + 1) * p];
+                for (o, &x) in out.iter_mut().zip(row) {
+                    *o += w * x;
+                }
+            }
+            for o in out.iter_mut() {
+                *o /= wsum;
+            }
+            black_box(out);
+        });
+    }
+}

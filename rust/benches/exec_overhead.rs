@@ -1,0 +1,38 @@
+//! Bench: PJRT dispatch overhead — the smallest artifact (ppo_actor_fwd)
+//! round trip, plus the literal conversion cost in isolation.
+//! `cargo bench --bench exec_overhead`
+
+use arena::runtime::{HostTensor, Runtime};
+use arena::util::microbench::{bench, black_box};
+
+fn main() {
+    std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "2");
+    let dir = std::env::var("ARENA_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".into());
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::load(&dir, &["ppo_actor_fwd"]).expect("load");
+    let pp = rt.manifest.param_count("ppo").unwrap();
+    let theta = rt.load_init_params("ppo").unwrap();
+    let c = &rt.manifest.config;
+    let state = vec![0.1f32; (c.m_edges + 1) * (c.npca + 3)];
+    let theta_t = HostTensor::f32(vec![pp], theta);
+    let state_t = HostTensor::f32(
+        vec![c.m_edges + 1, c.npca + 3],
+        state,
+    );
+
+    bench("exec/ppo_actor_fwd-roundtrip", || {
+        let out = rt
+            .execute("ppo_actor_fwd", &[theta_t.clone(), state_t.clone()])
+            .unwrap();
+        black_box(out);
+    });
+
+    bench("exec/literal-conversion-only", || {
+        let lit = theta_t.to_literal().unwrap();
+        black_box(lit);
+    });
+}

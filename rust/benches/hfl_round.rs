@@ -1,0 +1,30 @@
+//! Bench: one full HFL cloud round end-to-end (train + aggregate + eval),
+//! the Fig. 8/9 inner loop. `cargo bench --bench hfl_round`
+
+use arena::config::ExperimentConfig;
+use arena::hfl::HflEngine;
+use arena::util::microbench::bench;
+
+fn main() {
+    std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "2");
+    std::env::set_var("ARENA_BENCH_FAST", "1"); // rounds are seconds-scale
+    let dir = std::env::var("ARENA_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".into());
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mut cfg = ExperimentConfig::mnist();
+    cfg.topology.devices = 10;
+    cfg.hfl.threshold_time = 1e9; // never stop inside the bench
+    cfg.artifacts_dir = dir;
+    let mut engine = HflEngine::new(cfg, true).expect("engine");
+    let m = engine.edges();
+    for (g1, g2) in [(1usize, 1usize), (5, 1), (5, 4)] {
+        let g1v = vec![g1; m];
+        let g2v = vec![g2; m];
+        bench(&format!("hfl_round/g1={g1}/g2={g2}"), || {
+            engine.run_round(&g1v, &g2v, None).unwrap();
+        });
+    }
+}

@@ -1,0 +1,27 @@
+//! Bench: DRL state construction — PCA fit (Gram + Jacobi), artifact
+//! projection, and the full state assembly (paper §3.2).
+//! `cargo bench --bench state_build`
+
+use arena::pca::PcaModel;
+use arena::util::microbench::{bench, black_box};
+use arena::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(3);
+    for p in [21_840usize, 453_845] {
+        let models: Vec<Vec<f32>> = (0..6)
+            .map(|_| (0..p).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let refs: Vec<&[f32]> =
+            models.iter().map(|m| m.as_slice()).collect();
+        bench(&format!("pca/fit/p={p}"), || {
+            let pca = PcaModel::fit(&refs, 6);
+            black_box(pca);
+        });
+        let pca = PcaModel::fit(&refs, 6);
+        bench(&format!("pca/transform-cpu/p={p}"), || {
+            let scores = pca.transform_cpu(&refs);
+            black_box(scores);
+        });
+    }
+}

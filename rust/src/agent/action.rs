@@ -1,0 +1,257 @@
+//! Action head (paper §3.3 + §3.6 enhancement).
+//!
+//! The actor emits 2M Gaussian (mu, sigma) pairs. We sample a raw
+//! continuous action a ∈ R^{2M}, map each coordinate affinely into the
+//! frequency range, and then pick the *feasible integer solution nearest to
+//! the continuous point* (min ||ã - a||², paper §3.6) — feasibility being
+//! the box bounds plus the time-budget constraint "expected round time ≤
+//! remaining time". Hwamei (the conference version) used naive per-dim
+//! rounding; both are implemented for the Table 2 ablation.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct ActionConfig {
+    pub m: usize,
+    pub gamma1_max: usize,
+    pub gamma2_max: usize,
+    /// Enable the §3.6 nearest-feasible projection (false = Hwamei rounding).
+    pub nearest_solution: bool,
+}
+
+#[derive(Clone, Debug)]
+pub struct DecidedAction {
+    /// Raw Gaussian sample (what PPO's log-prob sees).
+    pub raw: Vec<f32>,
+    pub log_prob: f64,
+    pub value: f64,
+    pub gamma1: Vec<usize>,
+    pub gamma2: Vec<usize>,
+}
+
+/// Map a raw action coordinate into the continuous frequency space
+/// [1, gmax]: mid + a * half, clamped.
+pub fn to_continuous(a: f32, gmax: usize) -> f64 {
+    let mid = (1.0 + gmax as f64) / 2.0;
+    let half = (gmax as f64 - 1.0) / 2.0;
+    (mid + a as f64 * half).clamp(1.0, gmax as f64)
+}
+
+/// Sample raw ~ N(mu, sigma) and return (raw, log_prob).
+pub fn sample_gaussian(
+    mu: &[f32],
+    sigma: &[f32],
+    rng: &mut Rng,
+) -> (Vec<f32>, f64) {
+    let mut raw = Vec::with_capacity(mu.len());
+    let mut logp = 0.0;
+    for (&m, &s) in mu.iter().zip(sigma) {
+        let s = s.max(1e-4);
+        let z = rng.normal();
+        let a = m + s * z as f32;
+        raw.push(a);
+        let zz = ((a - m) / s) as f64;
+        logp += -0.5 * zz * zz
+            - (s as f64).ln()
+            - 0.5 * (2.0 * std::f64::consts::PI).ln();
+    }
+    (raw, logp)
+}
+
+/// Log-prob of an existing raw action under (mu, sigma) — PPO ratio input.
+pub fn log_prob(mu: &[f32], sigma: &[f32], raw: &[f32]) -> f64 {
+    let mut logp = 0.0;
+    for ((&m, &s), &a) in mu.iter().zip(sigma).zip(raw) {
+        let s = s.max(1e-4) as f64;
+        let z = (a - m) as f64 / s;
+        logp += -0.5 * z * z - s.ln() - 0.5 * (2.0 * std::f64::consts::PI).ln();
+    }
+    logp
+}
+
+/// Project the continuous per-edge targets onto the feasible integer grid.
+///
+/// `predict(g1, g2)` estimates the round duration if *this edge's*
+/// frequencies were (g1, g2) (other edges held at their own targets);
+/// `budget` is the remaining time T_re. Per edge we minimize the squared
+/// distance to the continuous target among in-budget pairs; if no pair
+/// fits the budget the minimum-duration pair is chosen (the round must
+/// still happen — matching the paper's "still trains, then episode ends").
+pub fn nearest_feasible(
+    cfg: &ActionConfig,
+    cont1: &[f64],
+    cont2: &[f64],
+    mut edge_time: impl FnMut(usize, usize, usize) -> f64,
+    budget: f64,
+) -> (Vec<usize>, Vec<usize>) {
+    let mut g1 = Vec::with_capacity(cfg.m);
+    let mut g2 = Vec::with_capacity(cfg.m);
+    for j in 0..cfg.m {
+        if !cfg.nearest_solution {
+            // Hwamei: naive rounding + clamping.
+            g1.push((cont1[j].round() as usize).clamp(1, cfg.gamma1_max));
+            g2.push((cont2[j].round() as usize).clamp(1, cfg.gamma2_max));
+            continue;
+        }
+        let mut best: Option<(f64, usize, usize)> = None;
+        let mut fastest: Option<(f64, usize, usize)> = None;
+        for c1 in 1..=cfg.gamma1_max {
+            for c2 in 1..=cfg.gamma2_max {
+                let t = edge_time(j, c1, c2);
+                let d = (c1 as f64 - cont1[j]).powi(2)
+                    + (c2 as f64 - cont2[j]).powi(2);
+                if fastest.map(|(ft, _, _)| t < ft).unwrap_or(true) {
+                    fastest = Some((t, c1, c2));
+                }
+                if t <= budget
+                    && best.map(|(bd, _, _)| d < bd).unwrap_or(true)
+                {
+                    best = Some((d, c1, c2));
+                }
+            }
+        }
+        let (c1, c2) = match best {
+            Some((_, c1, c2)) => (c1, c2),
+            None => {
+                let (_, c1, c2) = fastest.unwrap();
+                (c1, c2)
+            }
+        };
+        g1.push(c1);
+        g2.push(c2);
+    }
+    (g1, g2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{check, Gen};
+
+    fn cfg(nearest: bool) -> ActionConfig {
+        ActionConfig {
+            m: 3,
+            gamma1_max: 10,
+            gamma2_max: 5,
+            nearest_solution: nearest,
+        }
+    }
+
+    #[test]
+    fn continuous_mapping_centers_and_clamps() {
+        assert!((to_continuous(0.0, 10) - 5.5).abs() < 1e-9);
+        assert_eq!(to_continuous(10.0, 10), 10.0);
+        assert_eq!(to_continuous(-10.0, 10), 1.0);
+    }
+
+    #[test]
+    fn sampled_logprob_matches_recomputed() {
+        let mut rng = Rng::new(1);
+        let mu = vec![0.2f32, -0.5, 1.0];
+        let sigma = vec![0.5f32, 1.0, 0.2];
+        let (raw, lp) = sample_gaussian(&mu, &sigma, &mut rng);
+        let lp2 = log_prob(&mu, &sigma, &raw);
+        assert!((lp - lp2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unconstrained_projection_is_rounding() {
+        let c = cfg(true);
+        let cont1 = vec![3.4, 7.6, 9.9];
+        let cont2 = vec![1.2, 4.5, 2.5];
+        let (g1, g2) =
+            nearest_feasible(&c, &cont1, &cont2, |_, _, _| 0.0, 1e9);
+        assert_eq!(g1, vec![3, 8, 10]);
+        // 4.5 / 2.5 tie-break picks the first minimal (lower) candidate.
+        assert_eq!(g2[0], 1);
+        assert!(g2[1] == 4 || g2[1] == 5);
+    }
+
+    #[test]
+    fn budget_constraint_reduces_frequencies() {
+        let c = cfg(true);
+        let cont1 = vec![10.0; 3];
+        let cont2 = vec![5.0; 3];
+        // Time model: 1s per gamma1*gamma2 unit, budget 12s -> products
+        // must be <= 12.
+        let (g1, g2) = nearest_feasible(
+            &c,
+            &cont1,
+            &cont2,
+            |_, a, b| (a * b) as f64,
+            12.0,
+        );
+        for j in 0..3 {
+            assert!(g1[j] * g2[j] <= 12, "({}, {})", g1[j], g2[j]);
+        }
+    }
+
+    #[test]
+    fn impossible_budget_picks_fastest() {
+        let c = cfg(true);
+        let (g1, g2) = nearest_feasible(
+            &c,
+            &vec![8.0; 3],
+            &vec![4.0; 3],
+            |_, a, b| (a * b) as f64,
+            0.5, // nothing fits
+        );
+        assert_eq!(g1, vec![1; 3]);
+        assert_eq!(g2, vec![1; 3]);
+    }
+
+    #[test]
+    fn hwamei_mode_ignores_budget() {
+        let c = cfg(false);
+        let (g1, _) = nearest_feasible(
+            &c,
+            &vec![9.7; 3],
+            &vec![3.0; 3],
+            |_, a, b| (a * b) as f64,
+            0.5,
+        );
+        assert_eq!(g1, vec![10; 3]);
+    }
+
+    #[test]
+    fn prop_projection_always_in_bounds() {
+        check(
+            "action-bounds",
+            50,
+            |g| {
+                let m = g.usize_in(1, 6);
+                let cont1: Vec<f64> =
+                    (0..m).map(|_| g.f64_in(-5.0, 20.0)).collect();
+                let cont2: Vec<f64> =
+                    (0..m).map(|_| g.f64_in(-5.0, 20.0)).collect();
+                let budget = g.f64_in(0.0, 100.0);
+                let nearest = g.bool();
+                (m, cont1, cont2, budget, nearest)
+            },
+            |(m, cont1, cont2, budget, nearest)| {
+                let c = ActionConfig {
+                    m: *m,
+                    gamma1_max: 10,
+                    gamma2_max: 5,
+                    nearest_solution: *nearest,
+                };
+                let (g1, g2) = nearest_feasible(
+                    &c,
+                    cont1,
+                    cont2,
+                    |_, a, b| (a + b) as f64,
+                    *budget,
+                );
+                for j in 0..*m {
+                    if !(1..=10).contains(&g1[j]) {
+                        return Err(format!("g1[{j}]={}", g1[j]));
+                    }
+                    if !(1..=5).contains(&g2[j]) {
+                        return Err(format!("g2[{j}]={}", g2[j]));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

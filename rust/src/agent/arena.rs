@@ -1,0 +1,284 @@
+//! Algorithm 1: Arena's training loop, plus greedy policy rollout.
+//!
+//! The Hwamei ablation (paper Table 2) is the same loop with the §3.6
+//! enhancements off: plain discounted returns instead of GAE, naive
+//! rounding instead of the nearest-feasible-solution projection.
+
+use anyhow::Result;
+
+use crate::hfl::{HflEngine, RoundStats, RunHistory};
+use crate::runtime::Runtime;
+use crate::util::rng::Rng;
+
+use super::action::{nearest_feasible, to_continuous, ActionConfig};
+use super::gae::{discounted_returns, gae_advantages, normalize};
+use super::memory::{Trajectory, Transition};
+use super::ppo::PpoAgent;
+use super::state::StateBuilder;
+
+#[derive(Clone, Debug)]
+pub struct ArenaOptions {
+    pub episodes: usize,
+    /// §3.6 enhancements (both true = Arena, both false = Hwamei).
+    pub use_gae: bool,
+    pub nearest_solution: bool,
+    pub verbose: bool,
+}
+
+impl ArenaOptions {
+    pub fn arena(episodes: usize) -> Self {
+        ArenaOptions {
+            episodes,
+            use_gae: true,
+            nearest_solution: true,
+            verbose: false,
+        }
+    }
+
+    pub fn hwamei(episodes: usize) -> Self {
+        ArenaOptions {
+            episodes,
+            use_gae: false,
+            nearest_solution: false,
+            verbose: false,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct EpisodeLog {
+    pub episode: usize,
+    pub reward: f64,
+    pub final_accuracy: f64,
+    /// Average per-device energy over the episode, mAh.
+    pub avg_energy: f64,
+    pub rounds: usize,
+    pub policy_loss: f64,
+    pub value_loss: f64,
+    pub entropy: f64,
+}
+
+/// Paper Eq. (11): r(k) = Υ^{A(k)} − Υ^{A(k-1)} − ε·E(k),
+/// E(k) in average-per-device mAh.
+pub fn reward(
+    upsilon: f64,
+    epsilon: f64,
+    acc_now: f64,
+    acc_prev: f64,
+    avg_energy: f64,
+) -> f64 {
+    upsilon.powf(acc_now) - upsilon.powf(acc_prev) - epsilon * avg_energy
+}
+
+/// Train the PPO agent over `opts.episodes` episodes (Algorithm 1).
+/// Returns the trained agent, per-episode logs, and the state builder
+/// (holding the fitted PCA) for later greedy rollouts.
+pub fn train_arena(
+    engine: &mut HflEngine,
+    opts: &ArenaOptions,
+) -> Result<(PpoAgent, StateBuilder, Vec<EpisodeLog>)> {
+    let mut agent_rt = Runtime::load(&engine.cfg.artifacts_dir, &[])?;
+    let mut agent =
+        PpoAgent::new_variant(&agent_rt, engine.cfg.agent.npca)?;
+    let (fwd_art, upd_art) = agent.artifact_names();
+    agent_rt.compile(&fwd_art)?;
+    agent_rt.compile(&upd_art)?;
+    let m = engine.edges();
+    let cfg = engine.cfg.clone();
+    let mut sb = StateBuilder::new(m, cfg.agent.npca, cfg.hfl.threshold_time);
+    let acfg = ActionConfig {
+        m,
+        gamma1_max: cfg.hfl.gamma1_max,
+        gamma2_max: cfg.hfl.gamma2_max,
+        nearest_solution: opts.nearest_solution,
+    };
+    let mut rng = Rng::new(cfg.seed ^ 0xa6e47);
+    let mut logs = Vec::with_capacity(opts.episodes);
+    let n_dev = cfg.topology.devices as f64;
+
+    for ep in 0..opts.episodes {
+        engine.reset();
+        // Line 3: first cloud aggregation at the configured frequencies.
+        let mut last = engine.run_round(
+            &vec![cfg.hfl.gamma1; m],
+            &vec![cfg.hfl.gamma2; m],
+            None,
+        )?;
+        // Line 4: fit the PCA module once, on the first episode's models.
+        if !sb.pca_ready() {
+            sb.fit_pca(engine);
+        }
+        let mut traj = Trajectory::default();
+        let mut ep_energy = last.energy;
+        // Lines 7-17: interact until the time budget runs out.
+        while engine.remaining_time() > 0.0 && traj.len() < agent.batch() {
+            let state = sb.build(engine, &last)?;
+            let (raw, logp, value) = agent.act(&agent_rt, &state, &mut rng)?;
+            let cont1: Vec<f64> = (0..m)
+                .map(|j| to_continuous(raw[j], acfg.gamma1_max))
+                .collect();
+            let cont2: Vec<f64> = (0..m)
+                .map(|j| to_continuous(raw[m + j], acfg.gamma2_max))
+                .collect();
+            let budget = engine.remaining_time();
+            let (g1, g2) = nearest_feasible(
+                &acfg,
+                &cont1,
+                &cont2,
+                |j, a, b| engine.predict_edge_time(j, a, b),
+                budget,
+            );
+            let stats = engine.run_round(&g1, &g2, None)?;
+            let r = reward(
+                cfg.agent.upsilon,
+                cfg.agent.epsilon,
+                stats.accuracy,
+                last.accuracy,
+                stats.energy / n_dev,
+            );
+            traj.push(Transition {
+                state,
+                raw_action: raw,
+                log_prob: logp,
+                value,
+                reward: r,
+            });
+            ep_energy += stats.energy;
+            last = stats;
+        }
+        // Lines 19: update the agent from the episode's trajectory.
+        let rewards = traj.rewards();
+        let values = traj.values();
+        let (mut adv, ret) = if opts.use_gae {
+            gae_advantages(&rewards, &values, cfg.agent.xi, cfg.agent.lambda)
+        } else {
+            let ret = discounted_returns(&rewards, cfg.agent.xi);
+            let adv: Vec<f64> =
+                ret.iter().zip(&values).map(|(r, v)| r - v).collect();
+            (adv, ret)
+        };
+        normalize(&mut adv);
+        let batch = traj.to_batch(
+            &adv,
+            &ret,
+            agent.batch(),
+            agent.state_len(),
+            agent.act_len(),
+        );
+        let mut losses = super::ppo::UpdateLosses {
+            policy: 0.0,
+            value: 0.0,
+            entropy: 0.0,
+        };
+        if !traj.is_empty() {
+            for _ in 0..cfg.agent.update_epochs {
+                losses = agent.update(&agent_rt, &batch)?;
+            }
+        }
+        let log = EpisodeLog {
+            episode: ep,
+            reward: rewards.iter().sum(),
+            final_accuracy: last.accuracy,
+            avg_energy: ep_energy / n_dev,
+            rounds: traj.len() + 1,
+            policy_loss: losses.policy,
+            value_loss: losses.value,
+            entropy: losses.entropy,
+        };
+        if opts.verbose {
+            println!(
+                "episode {:>4}: reward {:>8.3}  acc {:.3}  energy/dev {:>7.1} mAh  rounds {}",
+                log.episode,
+                log.reward,
+                log.final_accuracy,
+                log.avg_energy,
+                log.rounds
+            );
+        }
+        logs.push(log);
+    }
+    Ok((agent, sb, logs))
+}
+
+/// Greedy (mean-action) rollout of a trained policy; returns the round
+/// history for time-to-accuracy / threshold-time figures.
+pub fn run_arena_policy(
+    engine: &mut HflEngine,
+    agent: &PpoAgent,
+    sb: &StateBuilder,
+    nearest_solution: bool,
+) -> Result<RunHistory> {
+    let mut agent_rt = Runtime::load(&engine.cfg.artifacts_dir, &[])?;
+    let (fwd_art, _) = agent.artifact_names();
+    agent_rt.compile(&fwd_art)?;
+    let cfg = engine.cfg.clone();
+    let m = engine.edges();
+    let acfg = ActionConfig {
+        m,
+        gamma1_max: cfg.hfl.gamma1_max,
+        gamma2_max: cfg.hfl.gamma2_max,
+        nearest_solution,
+    };
+    engine.reset();
+    let mut hist = RunHistory::default();
+    let mut last: RoundStats = engine.run_round(
+        &vec![cfg.hfl.gamma1; m],
+        &vec![cfg.hfl.gamma2; m],
+        None,
+    )?;
+    hist.push(last.clone());
+    while engine.remaining_time() > 0.0 {
+        let state = sb.build(engine, &last)?;
+        let (mu, _) = agent.act_mean(&agent_rt, &state)?;
+        let cont1: Vec<f64> = (0..m)
+            .map(|j| to_continuous(mu[j], acfg.gamma1_max))
+            .collect();
+        let cont2: Vec<f64> = (0..m)
+            .map(|j| to_continuous(mu[m + j], acfg.gamma2_max))
+            .collect();
+        let budget = engine.remaining_time();
+        let (g1, g2) = nearest_feasible(
+            &acfg,
+            &cont1,
+            &cont2,
+            |j, a, b| engine.predict_edge_time(j, a, b),
+            budget,
+        );
+        last = engine.run_round(&g1, &g2, None)?;
+        hist.push(last.clone());
+    }
+    Ok(hist)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reward_tracks_accuracy_and_energy() {
+        // Accuracy gain pays, energy costs.
+        let up = reward(64.0, 0.002, 0.72, 0.70, 10.0);
+        let flat = reward(64.0, 0.002, 0.70, 0.70, 10.0);
+        assert!(up > flat);
+        assert!(flat < 0.0); // pure energy cost
+        let expensive = reward(64.0, 0.002, 0.72, 0.70, 500.0);
+        assert!(up > expensive);
+    }
+
+    #[test]
+    fn reward_amplifies_late_gains() {
+        // Υ^A growth: the same +0.02 accuracy is worth more at 0.9 than 0.3
+        // (paper: "capture the small model improvement near the end").
+        let early = reward(64.0, 0.0, 0.32, 0.30, 0.0);
+        let late = reward(64.0, 0.0, 0.92, 0.90, 0.0);
+        assert!(late > 2.0 * early, "late {late} early {early}");
+    }
+
+    #[test]
+    fn options_presets_differ() {
+        let a = ArenaOptions::arena(10);
+        let h = ArenaOptions::hwamei(10);
+        assert!(a.use_gae && a.nearest_solution);
+        assert!(!h.use_gae && !h.nearest_solution);
+    }
+}

@@ -1,0 +1,109 @@
+//! Theorem 1 (paper Eq. 16): per-cloud-round convergence bound of the
+//! varying-frequency synchronization scheme, plus the Eq. 29 feasibility
+//! condition on the step size. Computable diagnostics reported by the
+//! Fig. 7 harness next to the measured loss descent.
+
+/// Inputs to the bound.
+#[derive(Clone, Copy, Debug)]
+pub struct BoundParams {
+    /// Max edge / cloud aggregation frequencies γ̃1, γ̃2 this round.
+    pub gamma1_max: f64,
+    pub gamma2_max: f64,
+    pub m_edges: f64,
+    pub n_devices: f64,
+    /// Learning rate η, smoothness L, gradient-variance bound σ².
+    pub eta: f64,
+    pub smooth_l: f64,
+    pub sigma2: f64,
+    /// E‖∇f(w(k))‖² estimate.
+    pub grad_norm2: f64,
+}
+
+/// RHS of Eq. (16): expected one-round decrease bound
+/// E[f(w(k+1))] − E[f(w(k))] ≤ bound(...). Negative = guaranteed descent.
+pub fn convergence_bound(p: &BoundParams) -> f64 {
+    let g1 = p.gamma1_max;
+    let g2 = p.gamma2_max;
+    let l = p.smooth_l;
+    let eta = p.eta;
+    let term1 = l * l * eta.powi(3) / 4.0
+        * g1
+        * g2
+        * ((g1 - 1.0) + p.m_edges / p.n_devices * g1 * (g2 - 1.0))
+        * p.sigma2;
+    let term2 = l * eta * eta / 2.0 / p.n_devices * g1 * g2 * p.sigma2;
+    let term3 = -eta / 2.0 * g1 * g2 * p.grad_norm2;
+    term1 + term2 + term3
+}
+
+/// Eq. (29): step-size feasibility for a given edge's (γ1ʲ, γ2ʲ).
+pub fn step_size_feasible(
+    p: &BoundParams,
+    gamma1_j: f64,
+    gamma2_j: f64,
+) -> bool {
+    let l = p.smooth_l;
+    let eta = p.eta;
+    let g1t = p.gamma1_max;
+    1.0 - l * l
+        * eta
+        * eta
+        * (gamma1_j * (gamma1_j - 1.0) / 2.0
+            + g1t * g1t * gamma2_j * (gamma2_j - 1.0) / 2.0)
+        - l * eta * gamma1_j * gamma2_j
+        >= 0.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> BoundParams {
+        BoundParams {
+            gamma1_max: 5.0,
+            gamma2_max: 4.0,
+            m_edges: 5.0,
+            n_devices: 50.0,
+            eta: 0.003,
+            smooth_l: 1.0,
+            sigma2: 1.0,
+            grad_norm2: 1.0,
+        }
+    }
+
+    #[test]
+    fn small_eta_guarantees_descent() {
+        // With η small the −(η/2)γ̃1γ̃2‖∇f‖² term dominates.
+        let b = convergence_bound(&base());
+        assert!(b < 0.0, "bound {b} should be negative (descent)");
+    }
+
+    #[test]
+    fn bound_monotone_in_sigma2() {
+        let mut p = base();
+        let b1 = convergence_bound(&p);
+        p.sigma2 = 10.0;
+        let b2 = convergence_bound(&p);
+        assert!(b2 > b1, "more gradient noise must weaken the bound");
+    }
+
+    #[test]
+    fn variance_terms_grow_with_frequencies() {
+        // Compare only the positive (noise) part by zeroing grad_norm2.
+        let mut p = base();
+        p.grad_norm2 = 0.0;
+        let b1 = convergence_bound(&p);
+        p.gamma1_max = 10.0;
+        p.gamma2_max = 5.0;
+        let b2 = convergence_bound(&p);
+        assert!(b2 > b1);
+    }
+
+    #[test]
+    fn feasibility_fails_for_huge_eta() {
+        let mut p = base();
+        assert!(step_size_feasible(&p, 5.0, 4.0));
+        p.eta = 10.0;
+        assert!(!step_size_feasible(&p, 5.0, 4.0));
+    }
+}

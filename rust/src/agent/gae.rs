@@ -1,0 +1,102 @@
+//! Generalized advantage estimation (paper Eq. 14) and discounted returns.
+//!
+//! Rust-side scalar recursion over a finished trajectory: the PPO update
+//! artifact receives pre-computed advantages + value targets.
+
+/// GAE advantages and bootstrapped returns.
+///
+/// rewards[t], values[t] for t = 0..T-1, terminal value 0 (episodes end at
+/// the time threshold). xi = discount ξ, lambda = GAE λ.
+pub fn gae_advantages(
+    rewards: &[f64],
+    values: &[f64],
+    xi: f64,
+    lambda: f64,
+) -> (Vec<f64>, Vec<f64>) {
+    let t_len = rewards.len();
+    assert_eq!(values.len(), t_len);
+    let mut adv = vec![0.0; t_len];
+    let mut gae = 0.0;
+    for t in (0..t_len).rev() {
+        let next_v = if t + 1 < t_len { values[t + 1] } else { 0.0 };
+        let delta = rewards[t] + xi * next_v - values[t];
+        gae = delta + xi * lambda * gae;
+        adv[t] = gae;
+    }
+    let returns: Vec<f64> =
+        adv.iter().zip(values).map(|(a, v)| a + v).collect();
+    (adv, returns)
+}
+
+/// Plain discounted returns (the Hwamei ablation: no GAE).
+pub fn discounted_returns(rewards: &[f64], xi: f64) -> Vec<f64> {
+    let mut out = vec![0.0; rewards.len()];
+    let mut acc = 0.0;
+    for t in (0..rewards.len()).rev() {
+        acc = rewards[t] + xi * acc;
+        out[t] = acc;
+    }
+    out
+}
+
+/// Normalize advantages to zero mean / unit std (standard PPO practice).
+pub fn normalize(adv: &mut [f64]) {
+    if adv.len() < 2 {
+        return;
+    }
+    let m = crate::util::stats::mean(adv);
+    let s = crate::util::stats::std(adv).max(1e-8);
+    for a in adv.iter_mut() {
+        *a = (*a - m) / s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_step_is_td_error() {
+        let (adv, ret) = gae_advantages(&[1.0], &[0.5], 0.9, 0.9);
+        assert!((adv[0] - 0.5).abs() < 1e-12); // 1.0 + 0 - 0.5
+        assert!((ret[0] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lambda_one_is_discounted_return_minus_value() {
+        let rewards = [1.0, 2.0, 3.0];
+        let values = [0.3, 0.2, 0.1];
+        let (adv, _) = gae_advantages(&rewards, &values, 0.9, 1.0);
+        let returns = discounted_returns(&rewards, 0.9);
+        for t in 0..3 {
+            assert!(
+                (adv[t] - (returns[t] - values[t])).abs() < 1e-10,
+                "t={t}"
+            );
+        }
+    }
+
+    #[test]
+    fn lambda_zero_is_one_step_td() {
+        let rewards = [1.0, 2.0];
+        let values = [0.5, 0.4];
+        let (adv, _) = gae_advantages(&rewards, &values, 0.9, 0.0);
+        assert!((adv[0] - (1.0 + 0.9 * 0.4 - 0.5)).abs() < 1e-12);
+        assert!((adv[1] - (2.0 - 0.4)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn discounted_returns_basic() {
+        let r = discounted_returns(&[1.0, 1.0, 1.0], 0.5);
+        assert!((r[0] - 1.75).abs() < 1e-12);
+        assert!((r[2] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn normalize_zero_mean_unit_std() {
+        let mut a = vec![1.0, 2.0, 3.0, 4.0];
+        normalize(&mut a);
+        assert!(crate::util::stats::mean(&a).abs() < 1e-12);
+        assert!((crate::util::stats::std(&a) - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,131 @@
+//! Trajectory memory (paper Algorithm 1, line 12: "push (s, a, r, s') to
+//! agent memory"). Collected per episode, padded to the ppo_update
+//! artifact's fixed batch length with a zero mask.
+
+#[derive(Clone, Debug)]
+pub struct Transition {
+    pub state: Vec<f32>,
+    pub raw_action: Vec<f32>,
+    pub log_prob: f64,
+    pub value: f64,
+    pub reward: f64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Trajectory {
+    pub steps: Vec<Transition>,
+}
+
+impl Trajectory {
+    pub fn push(&mut self, t: Transition) {
+        self.steps.push(t);
+    }
+
+    pub fn len(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+
+    pub fn rewards(&self) -> Vec<f64> {
+        self.steps.iter().map(|t| t.reward).collect()
+    }
+
+    pub fn values(&self) -> Vec<f64> {
+        self.steps.iter().map(|t| t.value).collect()
+    }
+
+    /// Flatten into the ppo_update batch layout, truncating/padding to
+    /// `batch` rows. Returns (states, actions, old_logp, adv, ret, mask).
+    pub fn to_batch(
+        &self,
+        adv: &[f64],
+        ret: &[f64],
+        batch: usize,
+        state_len: usize,
+        act_len: usize,
+    ) -> PpoBatch {
+        assert_eq!(adv.len(), self.len());
+        assert_eq!(ret.len(), self.len());
+        let n = self.len().min(batch);
+        let mut states = vec![0.0f32; batch * state_len];
+        let mut actions = vec![0.0f32; batch * act_len];
+        let mut old_logp = vec![0.0f32; batch];
+        let mut advantages = vec![0.0f32; batch];
+        let mut returns = vec![0.0f32; batch];
+        let mut mask = vec![0.0f32; batch];
+        for (i, t) in self.steps.iter().take(n).enumerate() {
+            assert_eq!(t.state.len(), state_len);
+            assert_eq!(t.raw_action.len(), act_len);
+            states[i * state_len..(i + 1) * state_len]
+                .copy_from_slice(&t.state);
+            actions[i * act_len..(i + 1) * act_len]
+                .copy_from_slice(&t.raw_action);
+            old_logp[i] = t.log_prob as f32;
+            advantages[i] = adv[i] as f32;
+            returns[i] = ret[i] as f32;
+            mask[i] = 1.0;
+        }
+        PpoBatch {
+            states,
+            actions,
+            old_logp,
+            advantages,
+            returns,
+            mask,
+        }
+    }
+}
+
+pub struct PpoBatch {
+    pub states: Vec<f32>,
+    pub actions: Vec<f32>,
+    pub old_logp: Vec<f32>,
+    pub advantages: Vec<f32>,
+    pub returns: Vec<f32>,
+    pub mask: Vec<f32>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn step(r: f64) -> Transition {
+        Transition {
+            state: vec![1.0; 6],
+            raw_action: vec![0.5; 4],
+            log_prob: -2.0,
+            value: 0.3,
+            reward: r,
+        }
+    }
+
+    #[test]
+    fn batch_pads_with_zero_mask() {
+        let mut t = Trajectory::default();
+        t.push(step(1.0));
+        t.push(step(2.0));
+        let adv = vec![0.1, 0.2];
+        let ret = vec![1.0, 2.0];
+        let b = t.to_batch(&adv, &ret, 4, 6, 4);
+        assert_eq!(b.mask, vec![1.0, 1.0, 0.0, 0.0]);
+        assert_eq!(b.states.len(), 4 * 6);
+        assert_eq!(b.actions[0], 0.5);
+        assert_eq!(b.returns[1], 2.0);
+        assert_eq!(b.returns[2], 0.0);
+    }
+
+    #[test]
+    fn batch_truncates_long_trajectories() {
+        let mut t = Trajectory::default();
+        for i in 0..10 {
+            t.push(step(i as f64));
+        }
+        let adv = vec![0.0; 10];
+        let ret = vec![0.0; 10];
+        let b = t.to_batch(&adv, &ret, 4, 6, 4);
+        assert_eq!(b.mask, vec![1.0; 4]);
+    }
+}

@@ -1,0 +1,19 @@
+//! The Arena DRL agent (paper §3.2-3.6): state construction, Gaussian
+//! action heads with feasible-solution projection, GAE, PPO updates via the
+//! AOT artifacts, and the Algorithm 1 training loop.
+
+pub mod action;
+pub mod arena;
+pub mod bound;
+pub mod gae;
+pub mod memory;
+pub mod ppo;
+pub mod state;
+
+pub use action::{nearest_feasible, ActionConfig, DecidedAction};
+pub use arena::{train_arena, ArenaOptions, EpisodeLog};
+pub use bound::convergence_bound;
+pub use gae::gae_advantages;
+pub use memory::{Trajectory, Transition};
+pub use ppo::PpoAgent;
+pub use state::StateBuilder;

@@ -1,0 +1,203 @@
+//! PPO agent driver: holds the flat actor-critic parameters + Adam state
+//! and runs `ppo_actor_fwd` / `ppo_update` through the runtime.
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{HostTensor, Runtime};
+use crate::util::rng::Rng;
+
+use super::action::{log_prob, sample_gaussian};
+use super::memory::PpoBatch;
+
+pub struct PpoAgent {
+    pub theta: Vec<f32>,
+    adam_m: Vec<f32>,
+    adam_v: Vec<f32>,
+    step_t: f64,
+    pub m: usize,
+    pub npca: usize,
+    state_len: usize,
+    act_len: usize,
+    batch: usize,
+    /// Artifact-name suffix ("" for the default n_PCA, "_npca<k>" for the
+    /// Fig. 12 ablation variants).
+    suffix: String,
+}
+
+/// Artifact suffix for a given n_PCA relative to the manifest default.
+pub fn npca_suffix(default_npca: usize, npca: usize) -> String {
+    if npca == default_npca {
+        String::new()
+    } else {
+        format!("_npca{npca}")
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct UpdateLosses {
+    pub policy: f64,
+    pub value: f64,
+    pub entropy: f64,
+}
+
+impl PpoAgent {
+    /// Load initial parameters from the artifact init binaries.
+    pub fn new(rt: &Runtime) -> Result<Self> {
+        let npca = rt.manifest.config.npca;
+        Self::new_variant(rt, npca)
+    }
+
+    /// Variant with a non-default n_PCA (requires the matching
+    /// `_npca<k>` artifacts — see aot.py --npca-variants).
+    pub fn new_variant(rt: &Runtime, npca: usize) -> Result<Self> {
+        let c = &rt.manifest.config;
+        let suffix = npca_suffix(c.npca, npca);
+        let theta = rt.load_init_params(&format!("ppo{suffix}"))?;
+        let n = theta.len();
+        Ok(PpoAgent {
+            theta,
+            adam_m: vec![0.0; n],
+            adam_v: vec![0.0; n],
+            step_t: 0.0,
+            m: c.m_edges,
+            npca,
+            state_len: (c.m_edges + 1) * (npca + 3),
+            act_len: 2 * c.m_edges,
+            batch: c.traj_batch,
+            suffix,
+        })
+    }
+
+    /// Artifact names this agent executes (for Runtime::load).
+    pub fn artifact_names(&self) -> (String, String) {
+        (
+            format!("ppo_actor_fwd{}", self.suffix),
+            format!("ppo_update{}", self.suffix),
+        )
+    }
+
+    pub fn state_len(&self) -> usize {
+        self.state_len
+    }
+
+    pub fn act_len(&self) -> usize {
+        self.act_len
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Policy forward: (mu, sigma, value) for one state.
+    pub fn forward(
+        &self,
+        rt: &Runtime,
+        state: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>, f64)> {
+        anyhow::ensure!(state.len() == self.state_len, "state length");
+        let rows = self.m + 1;
+        let cols = self.npca + 3;
+        let out = rt.execute(
+            &format!("ppo_actor_fwd{}", self.suffix),
+            &[
+                HostTensor::f32(vec![self.theta.len()], self.theta.clone()),
+                HostTensor::f32(vec![rows, cols], state.to_vec()),
+            ],
+        )?;
+        let mu = out[0].as_f32()?.to_vec();
+        let sigma = out[1].as_f32()?.to_vec();
+        let value = out[2].scalar()?;
+        Ok((mu, sigma, value))
+    }
+
+    /// Sample a raw action; returns (raw, log_prob, value).
+    pub fn act(
+        &self,
+        rt: &Runtime,
+        state: &[f32],
+        rng: &mut Rng,
+    ) -> Result<(Vec<f32>, f64, f64)> {
+        let (mu, sigma, value) = self.forward(rt, state)?;
+        let (raw, lp) = sample_gaussian(&mu, &sigma, rng);
+        debug_assert!((log_prob(&mu, &sigma, &raw) - lp).abs() < 1e-6);
+        Ok((raw, lp, value))
+    }
+
+    /// Deterministic (mean) action — evaluation mode.
+    pub fn act_mean(
+        &self,
+        rt: &Runtime,
+        state: &[f32],
+    ) -> Result<(Vec<f32>, f64)> {
+        let (mu, _, value) = self.forward(rt, state)?;
+        Ok((mu, value))
+    }
+
+    /// Persist the policy parameters (little-endian f32) for reuse across
+    /// experiment harnesses.
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut bytes = Vec::with_capacity(self.theta.len() * 4);
+        for v in &self.theta {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(path, bytes)?;
+        Ok(())
+    }
+
+    /// Restore policy parameters saved by `save`.
+    pub fn restore(&mut self, path: &std::path::Path) -> Result<()> {
+        let bytes = std::fs::read(path)?;
+        anyhow::ensure!(
+            bytes.len() == self.theta.len() * 4,
+            "saved policy size mismatch: {} bytes vs {} params",
+            bytes.len(),
+            self.theta.len()
+        );
+        self.theta = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(())
+    }
+
+    /// One PPO/Adam gradient step over a padded batch.
+    pub fn update(
+        &mut self,
+        rt: &Runtime,
+        batch: &PpoBatch,
+    ) -> Result<UpdateLosses> {
+        let rows = self.m + 1;
+        let cols = self.npca + 3;
+        let b = self.batch;
+        self.step_t += 1.0;
+        let n = self.theta.len();
+        let out = rt.execute(
+            &format!("ppo_update{}", self.suffix),
+            &[
+                HostTensor::f32(vec![n], self.theta.clone()),
+                HostTensor::f32(vec![n], self.adam_m.clone()),
+                HostTensor::f32(vec![n], self.adam_v.clone()),
+                HostTensor::f32(vec![1], vec![self.step_t as f32]),
+                HostTensor::f32(vec![b, rows, cols], batch.states.clone()),
+                HostTensor::f32(vec![b, self.act_len], batch.actions.clone()),
+                HostTensor::f32(vec![b], batch.old_logp.clone()),
+                HostTensor::f32(vec![b], batch.advantages.clone()),
+                HostTensor::f32(vec![b], batch.returns.clone()),
+                HostTensor::f32(vec![b], batch.mask.clone()),
+            ],
+        )?;
+        let mut it = out.into_iter();
+        self.theta = it.next().context("theta")?.into_f32()?;
+        self.adam_m = it.next().context("m")?.into_f32()?;
+        self.adam_v = it.next().context("v")?.into_f32()?;
+        let losses = it.next().context("losses")?.into_f32()?;
+        Ok(UpdateLosses {
+            policy: losses[0] as f64,
+            value: losses[1] as f64,
+            entropy: losses[2] as f64,
+        })
+    }
+}

@@ -1,0 +1,134 @@
+//! DRL state construction (paper §3.2, Fig. 6).
+//!
+//! s(k) is an (M+1) x (n_pca + 3) matrix:
+//!   row 0:      [ PCA(cloud model)  |  k, T_re(k), A_test(k-1) ]
+//!   row j=1..M: [ PCA(edge_j model) |  T_j^SGD,  T_j^ec,  E_j  ]
+//! The PCA loading vectors are fit once after the first cloud aggregation
+//! (on the cloud, Gram trick — see pca/) and reused; the projection itself
+//! runs through the pca_project Pallas artifact.
+
+use anyhow::Result;
+
+use crate::hfl::{HflEngine, RoundStats};
+use crate::pca::PcaModel;
+
+/// Normalization scales so every state entry is O(1) for the CNN trunk.
+#[derive(Clone, Debug)]
+pub struct StateScales {
+    pub round: f64,
+    pub time: f64,
+    pub sgd_time: f64,
+    pub comm_time: f64,
+    pub energy: f64,
+    pub pca: f64,
+}
+
+impl Default for StateScales {
+    fn default() -> Self {
+        StateScales {
+            round: 10.0,
+            time: 3000.0,
+            sgd_time: 200.0,
+            comm_time: 60.0,
+            energy: 50.0,
+            pca: 10.0,
+        }
+    }
+}
+
+pub struct StateBuilder {
+    pub npca: usize,
+    pub m: usize,
+    pub scales: StateScales,
+    pca: Option<PcaModel>,
+}
+
+impl StateBuilder {
+    pub fn new(m: usize, npca: usize, threshold_time: f64) -> Self {
+        let scales = StateScales {
+            time: threshold_time,
+            ..Default::default()
+        };
+        StateBuilder {
+            npca,
+            m,
+            scales,
+            pca: None,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.m + 1
+    }
+
+    pub fn cols(&self) -> usize {
+        self.npca + 3
+    }
+
+    pub fn pca_ready(&self) -> bool {
+        self.pca.is_some()
+    }
+
+    /// Fit the PCA loadings from the engine's current [cloud; edges] models
+    /// (paper: after the first cloud aggregation).
+    pub fn fit_pca(&mut self, engine: &HflEngine) {
+        let stack = engine.model_stack();
+        self.pca = Some(PcaModel::fit(&stack, self.npca));
+    }
+
+    /// Build the flattened state matrix for round k.
+    pub fn build(
+        &self,
+        engine: &HflEngine,
+        last: &RoundStats,
+    ) -> Result<Vec<f32>> {
+        let pca = self
+            .pca
+            .as_ref()
+            .expect("fit_pca must run after the first cloud aggregation");
+        let scores = engine.pca_scores(pca)?;
+        let rows = self.rows();
+        let cols = self.cols();
+        let mut s = vec![0.0f32; rows * cols];
+        let sc = &self.scales;
+        // Row 0: cloud PCA + global parameters (Eq. 9).
+        for (c, &v) in scores[0].iter().take(self.npca).enumerate() {
+            s[c] = v / sc.pca as f32;
+        }
+        s[self.npca] = last.k as f32 / sc.round as f32;
+        s[self.npca + 1] =
+            (engine.remaining_time() / sc.time) as f32;
+        s[self.npca + 2] = last.accuracy as f32;
+        // Rows 1..=M: edge PCA + h_j (Eq. 7).
+        for j in 0..self.m {
+            let base = (j + 1) * cols;
+            for (c, &v) in scores[j + 1].iter().take(self.npca).enumerate() {
+                s[base + c] = v / sc.pca as f32;
+            }
+            let e = &last.per_edge[j];
+            s[base + self.npca] = (e.t_sgd_slowest / sc.sgd_time) as f32;
+            s[base + self.npca + 1] = (e.t_ec / sc.comm_time) as f32;
+            s[base + self.npca + 2] = (e.energy / sc.energy) as f32;
+        }
+        Ok(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scales_default_sane() {
+        let s = StateScales::default();
+        assert!(s.time > 0.0 && s.energy > 0.0);
+    }
+
+    #[test]
+    fn dims() {
+        let b = StateBuilder::new(5, 6, 3000.0);
+        assert_eq!(b.rows(), 6);
+        assert_eq!(b.cols(), 9);
+        assert!(!b.pca_ready());
+    }
+}

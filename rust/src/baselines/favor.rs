@@ -1,0 +1,168 @@
+//! Favor (Wang et al., INFOCOM'20): FedAvg + DQN device selection.
+//!
+//! The original observes PCA-compressed *device models* to pick which
+//! devices join each round. Our cloud does not retain per-device models
+//! after aggregation (privacy-preserving state, §3.2), so the Q-network
+//! observes the per-device telemetry the cloud does hold — last training
+//! loss, profiled speed/energy, selection recency — plus global accuracy.
+//! This keeps Favor's structure (per-device Q values, ε-greedy top-K,
+//! accuracy-gain reward, target-network DQN) on available signals; see
+//! DESIGN.md §3 for the substitution note.
+
+use anyhow::Result;
+
+use crate::hfl::{HflEngine, RunHistory};
+use crate::nn::Mlp;
+use crate::util::rng::Rng;
+
+const FEATURES: usize = 6;
+
+pub struct FavorOptions {
+    /// Fraction of devices selected per round.
+    pub frac: f64,
+    pub eps_start: f64,
+    pub eps_end: f64,
+    pub lr: f32,
+    /// Target-network sync period (rounds).
+    pub target_sync: usize,
+}
+
+impl Default for FavorOptions {
+    fn default() -> Self {
+        FavorOptions {
+            frac: 0.6,
+            eps_start: 0.5,
+            eps_end: 0.05,
+            lr: 0.01,
+            target_sync: 5,
+        }
+    }
+}
+
+struct DeviceFeat {
+    last_loss: f64,
+    speed: f64,
+    energy_rate: f64,
+    rounds_since_selected: f64,
+}
+
+fn features(f: &DeviceFeat, acc: f64) -> Vec<f32> {
+    vec![
+        f.last_loss as f32,
+        f.speed as f32,
+        f.energy_rate as f32,
+        (f.rounds_since_selected / 10.0) as f32,
+        acc as f32,
+        1.0,
+    ]
+}
+
+pub fn favor(
+    engine: &mut HflEngine,
+    opts: &FavorOptions,
+) -> Result<RunHistory> {
+    let n = engine.cfg.topology.devices;
+    let m = engine.edges();
+    let gamma1 = engine.cfg.hfl.gamma1 * engine.cfg.hfl.gamma2;
+    let g1 = vec![gamma1; m];
+    let g2 = vec![1usize; m]; // FL mode: cloud sync every edge aggregation
+    let mut rng = Rng::new(engine.cfg.seed ^ 0xfa40);
+    let mut qnet = Mlp::new(&[FEATURES, 32, 16, 1], &mut rng);
+    let mut target = qnet.clone();
+    let k_sel = ((n as f64 * opts.frac).round() as usize).clamp(1, n);
+
+    let mut feats: Vec<DeviceFeat> = (0..n)
+        .map(|i| {
+            let c = &engine.topo.cpus[i];
+            DeviceFeat {
+                last_loss: 2.3,
+                speed: c.base_time * c.slowdown(),
+                energy_rate: c.slowdown(),
+                rounds_since_selected: 0.0,
+            }
+        })
+        .collect();
+
+    engine.reset();
+    let mut hist = RunHistory::default();
+    let mut prev_acc = 0.1;
+    let mut round = 0usize;
+    while engine.remaining_time() > 0.0 {
+        let eps = opts.eps_start
+            + (opts.eps_end - opts.eps_start)
+                * (round as f64 / 20.0).min(1.0);
+        // Q-scores per device; ε-greedy top-K selection.
+        let mut scored: Vec<(f64, usize)> = (0..n)
+            .map(|i| {
+                let q = qnet.forward(&features(&feats[i], prev_acc))[0] as f64;
+                let noise = if rng.uniform() < eps {
+                    rng.normal() * 2.0
+                } else {
+                    0.0
+                };
+                (q + noise, i)
+            })
+            .collect();
+        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        let mut mask = vec![false; n];
+        for &(_, i) in scored.iter().take(k_sel) {
+            mask[i] = true;
+        }
+        let stats = engine.run_round(&g1, &g2, Some(&mask))?;
+        // DQN update: reward = accuracy gain shared by selected devices.
+        let r = stats.accuracy - prev_acc;
+        let max_next = scored
+            .iter()
+            .take(k_sel)
+            .map(|&(_, i)| {
+                target.forward(&features(&feats[i], stats.accuracy))[0] as f64
+            })
+            .fold(f64::NEG_INFINITY, f64::max);
+        let target_q = (r * 10.0 + 0.9 * max_next) as f32;
+        for &(_, i) in scored.iter().take(k_sel) {
+            let x = features(&feats[i], prev_acc);
+            qnet.train_step(&x, &[target_q], &[1.0], opts.lr);
+        }
+        // Telemetry updates.
+        for (dev, loss) in &stats.device_losses {
+            feats[*dev].last_loss = *loss;
+        }
+        for (i, f) in feats.iter_mut().enumerate() {
+            if mask[i] {
+                f.rounds_since_selected = 0.0;
+            } else {
+                f.rounds_since_selected += 1.0;
+            }
+        }
+        prev_acc = stats.accuracy;
+        hist.push(stats);
+        round += 1;
+        if round % opts.target_sync == 0 {
+            target.copy_from(&qnet);
+        }
+    }
+    Ok(hist)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn feature_vector_shape() {
+        let f = DeviceFeat {
+            last_loss: 1.0,
+            speed: 2.0,
+            energy_rate: 1.5,
+            rounds_since_selected: 3.0,
+        };
+        assert_eq!(features(&f, 0.5).len(), FEATURES);
+    }
+
+    #[test]
+    fn default_options_sane() {
+        let o = FavorOptions::default();
+        assert!(o.frac > 0.0 && o.frac <= 1.0);
+        assert!(o.eps_start >= o.eps_end);
+    }
+}

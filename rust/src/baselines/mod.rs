@@ -1,0 +1,86 @@
+//! The paper's comparison schemes (§4.1):
+//!  * Vanilla-FL  [1]  — FedAvg: devices↔cloud directly (γ2 ≡ 1), random
+//!    device participation per round.
+//!  * Vanilla-HFL [8]  — fixed γ1/γ2 everywhere.
+//!  * Var-Freq A/B     — the §2.2 motivation schemes: per-edge frequencies
+//!    equalizing round times (A), then energy-tuned (B).
+//!  * Favor       [5]  — DQN-based device selection (FedAvg + RL).
+//!  * Share       [9]  — data-distribution-aware device→edge re-assignment.
+//!  * Hwamei      [15] — Arena minus the §3.6 enhancements (see agent/).
+
+pub mod favor;
+pub mod share;
+pub mod var_freq;
+
+use anyhow::Result;
+
+use crate::hfl::{HflEngine, RunHistory};
+
+/// Run a fixed-frequency scheme to the time threshold.
+pub fn run_fixed(
+    engine: &mut HflEngine,
+    gamma1: usize,
+    gamma2: usize,
+    participation_frac: f64,
+) -> Result<RunHistory> {
+    let m = engine.edges();
+    let g1 = vec![gamma1; m];
+    let g2 = vec![gamma2; m];
+    engine.reset();
+    let mut hist = RunHistory::default();
+    let mut rng = crate::util::rng::Rng::new(engine.cfg.seed ^ 0xf1de);
+    let n = engine.cfg.topology.devices;
+    while engine.remaining_time() > 0.0 {
+        let mask = participation_mask(n, participation_frac, &mut rng);
+        let stats = engine.run_round(&g1, &g2, mask.as_deref())?;
+        hist.push(stats);
+    }
+    Ok(hist)
+}
+
+/// Vanilla-FL: flat FedAvg (γ2 = 1 turns every edge into a relay; with the
+/// paper's setting γ1·γ2 matched to Vanilla-HFL) with fractional random
+/// device selection.
+pub fn vanilla_fl(engine: &mut HflEngine, frac: f64) -> Result<RunHistory> {
+    let g = engine.cfg.hfl.gamma1 * engine.cfg.hfl.gamma2;
+    run_fixed(engine, g, 1, frac)
+}
+
+/// Vanilla-HFL: the configured fixed frequencies, full participation.
+pub fn vanilla_hfl(engine: &mut HflEngine) -> Result<RunHistory> {
+    let (g1, g2) = (engine.cfg.hfl.gamma1, engine.cfg.hfl.gamma2);
+    run_fixed(engine, g1, g2, 1.0)
+}
+
+pub(crate) fn participation_mask(
+    n: usize,
+    frac: f64,
+    rng: &mut crate::util::rng::Rng,
+) -> Option<Vec<bool>> {
+    if frac >= 1.0 {
+        return None;
+    }
+    let k = ((n as f64 * frac).round() as usize).clamp(1, n);
+    let chosen = rng.sample_indices(n, k);
+    let mut mask = vec![false; n];
+    for c in chosen {
+        mask[c] = true;
+    }
+    Some(mask)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn participation_mask_counts() {
+        let mut rng = Rng::new(1);
+        let mask = participation_mask(50, 0.6, &mut rng).unwrap();
+        assert_eq!(mask.iter().filter(|&&b| b).count(), 30);
+        assert!(participation_mask(50, 1.0, &mut rng).is_none());
+        let one = participation_mask(50, 0.001, &mut rng).unwrap();
+        assert_eq!(one.iter().filter(|&&b| b).count(), 1);
+    }
+}

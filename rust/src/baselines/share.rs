@@ -1,0 +1,138 @@
+//! Share (Deng et al., ICDCS'21): shape the data distribution *at the
+//! edge* by re-assigning devices to edges so each cluster's aggregate
+//! label distribution approaches the global one (low inter-edge drift),
+//! subject to the region constraint and balanced cluster sizes; then run
+//! fixed-frequency HFL on the reshaped topology.
+//!
+//! Implemented as greedy same-region swap descent on the summed KL
+//! divergence between per-edge label distributions and the global one.
+
+use anyhow::Result;
+
+use crate::hfl::{HflEngine, RunHistory};
+
+/// KL(p || q) with add-one smoothing over counts.
+fn kl(p_counts: &[usize], q_counts: &[usize]) -> f64 {
+    let ps: f64 = p_counts.iter().map(|&c| c as f64 + 1.0).sum();
+    let qs: f64 = q_counts.iter().map(|&c| c as f64 + 1.0).sum();
+    p_counts
+        .iter()
+        .zip(q_counts)
+        .map(|(&pc, &qc)| {
+            let p = (pc as f64 + 1.0) / ps;
+            let q = (qc as f64 + 1.0) / qs;
+            p * (p / q).ln()
+        })
+        .sum()
+}
+
+/// Total divergence of an assignment.
+fn objective(
+    device_hists: &[Vec<usize>],
+    global: &[usize],
+    assignment: &[usize],
+    m: usize,
+    classes: usize,
+) -> f64 {
+    let mut edge_hists = vec![vec![0usize; classes]; m];
+    for (dev, &e) in assignment.iter().enumerate() {
+        for c in 0..classes {
+            edge_hists[e][c] += device_hists[dev][c];
+        }
+    }
+    edge_hists.iter().map(|h| kl(h, global)).sum()
+}
+
+/// Compute the Share re-assignment (returns device -> edge).
+pub fn share_assignment(engine: &HflEngine) -> Vec<usize> {
+    let classes = engine.topo.dataset.classes;
+    let n = engine.cfg.topology.devices;
+    let m = engine.edges();
+    let device_hists: Vec<Vec<usize>> = (0..n)
+        .map(|d| engine.topo.shards[d].class_histogram(classes))
+        .collect();
+    let mut global = vec![0usize; classes];
+    for h in &device_hists {
+        for c in 0..classes {
+            global[c] += h[c];
+        }
+    }
+    let mut assignment: Vec<usize> =
+        (0..n).map(|d| engine.topo.edge_of(d)).collect();
+    let regions: Vec<_> = (0..m)
+        .map(|j| engine.topo.edges[j].region)
+        .collect();
+    let dev_region =
+        |d: usize, a: &[usize]| regions[a[d]];
+    let mut best =
+        objective(&device_hists, &global, &assignment, m, classes);
+    // Greedy swap descent (same-region pairs keep sizes balanced and the
+    // communication structure intact).
+    let mut improved = true;
+    let mut iters = 0;
+    while improved && iters < 20 {
+        improved = false;
+        iters += 1;
+        for a in 0..n {
+            for b in (a + 1)..n {
+                if assignment[a] == assignment[b] {
+                    continue;
+                }
+                if dev_region(a, &assignment) != dev_region(b, &assignment) {
+                    continue;
+                }
+                assignment.swap(a, b);
+                let obj =
+                    objective(&device_hists, &global, &assignment, m, classes);
+                if obj + 1e-12 < best {
+                    best = obj;
+                    improved = true;
+                } else {
+                    assignment.swap(a, b);
+                }
+            }
+        }
+    }
+    assignment
+}
+
+/// Run Share: reshape the topology, then fixed-frequency HFL.
+pub fn share(engine: &mut HflEngine) -> Result<RunHistory> {
+    let assignment = share_assignment(engine);
+    engine.topo.set_assignment(&assignment);
+    super::vanilla_hfl(engine)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kl_zero_for_identical() {
+        let p = vec![10, 20, 30];
+        assert!(kl(&p, &p).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kl_positive_for_different() {
+        assert!(kl(&[100, 0, 0], &[33, 33, 34]) > 0.1);
+    }
+
+    #[test]
+    fn objective_prefers_mixed_edges() {
+        // 4 devices, 2 classes, 2 edges: pairing unlike devices beats
+        // pairing like devices.
+        let hists = vec![
+            vec![10, 0],
+            vec![0, 10],
+            vec![10, 0],
+            vec![0, 10],
+        ];
+        let global = vec![20, 20];
+        let mixed = vec![0, 0, 1, 1]; // edge0 = {A,B}, edge1 = {A,B}
+        let skewed = vec![0, 1, 0, 1]; // edge0 = {A,A}, edge1 = {B,B}
+        let om = objective(&hists, &global, &mixed, 2, 2);
+        let os = objective(&hists, &global, &skewed, 2, 2);
+        assert!(om < os, "mixed {om} skewed {os}");
+    }
+}

@@ -1,0 +1,285 @@
+//! Command-line interface (hand-rolled; clap is unavailable offline).
+//!
+//! Subcommands:
+//!   run         one scheme to the time threshold, printing the round log
+//!   train-agent PPO training (Algorithm 1), saving episode logs
+//!   experiment  regenerate a paper table/figure (see `list`)
+//!   profile     run the profiling module and print the clustering
+//!   list        show artifacts, experiments and presets
+
+use anyhow::{bail, Context, Result};
+
+use crate::agent::{train_arena, ArenaOptions};
+use crate::baselines;
+use crate::config::ExperimentConfig;
+use crate::exp;
+use crate::hfl::HflEngine;
+
+const USAGE: &str = "\
+arena — learning-based synchronization for hierarchical federated learning
+
+USAGE:
+  arena run [--preset mnist|cifar] [--scheme NAME] [--set key=value ...]
+  arena train-agent [--preset ...] [--episodes N] [--hwamei] [--set ...]
+  arena experiment <ID> [--preset ...] [--set ...]    (fig2..fig12, table1, table2, all)
+  arena profile [--preset ...] [--set ...]
+  arena list
+
+SCHEMES: vanilla-fl vanilla-hfl var-freq-a var-freq-b favor share arena hwamei
+";
+
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: std::collections::BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub sets: Vec<(String, String)>,
+}
+
+pub fn parse_args(argv: &[String]) -> Result<Args> {
+    let mut a = Args {
+        positional: vec![],
+        flags: Default::default(),
+        switches: vec![],
+        sets: vec![],
+    };
+    let mut i = 0;
+    while i < argv.len() {
+        let arg = &argv[i];
+        if arg == "--set" {
+            let kv = argv
+                .get(i + 1)
+                .context("--set needs key=value")?;
+            let (k, v) = kv
+                .split_once('=')
+                .context("--set needs key=value")?;
+            a.sets.push((k.to_string(), v.to_string()));
+            i += 2;
+        } else if let Some(name) = arg.strip_prefix("--") {
+            // Value-taking flag if next token isn't a flag; else a switch.
+            match argv.get(i + 1) {
+                Some(v) if !v.starts_with("--") => {
+                    a.flags.insert(name.to_string(), v.clone());
+                    i += 2;
+                }
+                _ => {
+                    a.switches.push(name.to_string());
+                    i += 1;
+                }
+            }
+        } else {
+            a.positional.push(arg.clone());
+            i += 1;
+        }
+    }
+    Ok(a)
+}
+
+pub fn config_from(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = if let Some(path) = args.flags.get("config") {
+        ExperimentConfig::load(path)?
+    } else {
+        let preset = args
+            .flags
+            .get("preset")
+            .map(|s| s.as_str())
+            .unwrap_or("mnist");
+        ExperimentConfig::preset(preset)?
+    };
+    for (k, v) in &args.sets {
+        cfg.apply_override(k, v)?;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+pub fn run(argv: Vec<String>) -> Result<()> {
+    let Some(cmd) = argv.first().cloned() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let args = parse_args(&argv[1..])?;
+    match cmd.as_str() {
+        "run" => cmd_run(&args),
+        "train-agent" => cmd_train_agent(&args),
+        "experiment" => cmd_experiment(&args),
+        "profile" => cmd_profile(&args),
+        "list" => cmd_list(),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let scheme = args
+        .flags
+        .get("scheme")
+        .map(|s| s.as_str())
+        .unwrap_or("vanilla-hfl");
+    let mut engine = HflEngine::new(cfg.clone(), true)?;
+    println!(
+        "running {scheme} on {} (T={}s, {} devices / {} edges)",
+        cfg.hfl.dataset.name(),
+        cfg.hfl.threshold_time,
+        cfg.topology.devices,
+        cfg.topology.edges
+    );
+    let hist = match scheme {
+        "vanilla-fl" => baselines::vanilla_fl(&mut engine, 0.6)?,
+        "vanilla-hfl" => baselines::vanilla_hfl(&mut engine)?,
+        "var-freq-a" => baselines::var_freq::var_freq_a(&mut engine)?,
+        "var-freq-b" => baselines::var_freq::var_freq_b(&mut engine)?,
+        "favor" => baselines::favor::favor(
+            &mut engine,
+            &baselines::favor::FavorOptions::default(),
+        )?,
+        "share" => baselines::share::share(&mut engine)?,
+        "arena" | "hwamei" => {
+            let opts = if scheme == "arena" {
+                ArenaOptions {
+                    verbose: true,
+                    ..ArenaOptions::arena(cfg.agent.episodes)
+                }
+            } else {
+                ArenaOptions {
+                    verbose: true,
+                    ..ArenaOptions::hwamei(cfg.agent.episodes)
+                }
+            };
+            let (agent, sb, _) = train_arena(&mut engine, &opts)?;
+            crate::agent::arena::run_arena_policy(
+                &mut engine,
+                &agent,
+                &sb,
+                opts.nearest_solution,
+            )?
+        }
+        other => bail!("unknown scheme '{other}'"),
+    };
+    for r in &hist.rounds {
+        println!(
+            "k={:<3} t={:>8.1}s acc={:.3} loss={:.3} E={:>8.2}mAh g1={:?} g2={:?}",
+            r.k, r.sim_now, r.accuracy, r.train_loss, r.energy,
+            r.gamma1, r.gamma2
+        );
+    }
+    println!(
+        "final: acc {:.3}, total energy {:.1} mAh ({:.1}/device)",
+        hist.final_accuracy(),
+        hist.total_energy(),
+        hist.total_energy() / cfg.topology.devices as f64
+    );
+    Ok(())
+}
+
+fn cmd_train_agent(args: &Args) -> Result<()> {
+    let mut cfg = config_from(args)?;
+    if let Some(ep) = args.flags.get("episodes") {
+        cfg.agent.episodes = ep.parse()?;
+    }
+    let hwamei = args.switches.iter().any(|s| s == "hwamei");
+    let mut opts = if hwamei {
+        ArenaOptions::hwamei(cfg.agent.episodes)
+    } else {
+        ArenaOptions::arena(cfg.agent.episodes)
+    };
+    opts.verbose = true;
+    let mut engine = HflEngine::new(cfg, true)?;
+    let (_, _, logs) = train_arena(&mut engine, &opts)?;
+    let avg_last: f64 = logs
+        .iter()
+        .rev()
+        .take(5)
+        .map(|l| l.reward)
+        .sum::<f64>()
+        / logs.len().min(5) as f64;
+    println!("done: {} episodes, mean reward of last 5 = {avg_last:.3}", logs.len());
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .first()
+        .context("experiment id required (fig2..fig12, table1, table2, all)")?;
+    let cfg = config_from(args)?;
+    if id == "all" {
+        for name in exp::EXPERIMENTS {
+            println!("=== {name} ===");
+            exp::run_experiment(name, &cfg)?;
+        }
+        Ok(())
+    } else {
+        exp::run_experiment(id, &cfg)
+    }
+}
+
+fn cmd_profile(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let mut rng = crate::util::rng::Rng::new(cfg.seed);
+    let topo = crate::hfl::build_topology(&cfg, true, &mut rng)?;
+    println!("profiling-module clustering ({} devices -> {} edges):",
+             cfg.topology.devices, cfg.topology.edges);
+    for e in &topo.edges {
+        let usages: Vec<f64> = e
+            .members
+            .iter()
+            .map(|&d| topo.cpus[d].base_usage)
+            .collect();
+        println!(
+            "  edge {} [{}]: {} devices, mean interference {:.2}, spread {:.3}",
+            e.id,
+            e.region.name(),
+            e.members.len(),
+            crate::util::stats::mean(&usages),
+            crate::util::stats::std(&usages),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_list() -> Result<()> {
+    println!("presets: mnist cifar");
+    println!("schemes: vanilla-fl vanilla-hfl var-freq-a var-freq-b favor share arena hwamei");
+    println!("experiments:");
+    for e in exp::EXPERIMENTS {
+        println!("  {e}");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_flags_switches_sets() {
+        let argv: Vec<String> = [
+            "--preset", "cifar", "--hwamei", "--set", "seed=7",
+            "fig8", "--episodes", "3",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let a = parse_args(&argv).unwrap();
+        assert_eq!(a.flags.get("preset").unwrap(), "cifar");
+        assert_eq!(a.flags.get("episodes").unwrap(), "3");
+        assert!(a.switches.contains(&"hwamei".to_string()));
+        assert_eq!(a.sets, vec![("seed".to_string(), "7".to_string())]);
+        assert_eq!(a.positional, vec!["fig8"]);
+    }
+
+    #[test]
+    fn config_from_applies_sets() {
+        let argv: Vec<String> = ["--preset", "mnist", "--set", "hfl.gamma1=7"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let a = parse_args(&argv).unwrap();
+        let cfg = config_from(&a).unwrap();
+        assert_eq!(cfg.hfl.gamma1, 7);
+    }
+}

@@ -1,0 +1,129 @@
+//! AFK-MC² seeding (Assumption-Free K-MC², Bachem et al. 2016).
+//!
+//! k-means++ needs a full pass over the data per seed; AFK-MC² replaces
+//! that with a Markov chain over a proposal distribution built from the
+//! first (uniform) seed:  q(x) = 0.5 · d(x,c1)² / Σd² + 0.5 / n,
+//! then runs an m-step Metropolis–Hastings chain per additional seed.
+
+use crate::linalg::dist2;
+use crate::util::rng::Rng;
+
+/// Pick k seed indices from `points` with an m-step chain.
+pub fn afkmc2_seeds(
+    points: &[Vec<f64>],
+    k: usize,
+    chain_len: usize,
+    rng: &mut Rng,
+) -> Vec<usize> {
+    let n = points.len();
+    assert!(k >= 1 && n >= k, "need at least k points");
+    let mut seeds = Vec::with_capacity(k);
+    // First seed: uniform.
+    let c1 = rng.below(n);
+    seeds.push(c1);
+    if k == 1 {
+        return seeds;
+    }
+    // Proposal distribution q.
+    let d1: Vec<f64> = points
+        .iter()
+        .map(|p| dist2(p, &points[c1]))
+        .collect();
+    let sum_d1: f64 = d1.iter().sum();
+    let q: Vec<f64> = if sum_d1 > 0.0 {
+        d1.iter()
+            .map(|&d| 0.5 * d / sum_d1 + 0.5 / n as f64)
+            .collect()
+    } else {
+        vec![1.0 / n as f64; n]
+    };
+
+    // Distance to the nearest chosen seed, updated incrementally.
+    let mut dmin = d1;
+
+    for _ in 1..k {
+        // Metropolis–Hastings chain targeting p(x) ∝ dmin(x).
+        let mut x = rng.weighted(&q);
+        let mut dx = dmin[x];
+        for _ in 1..chain_len {
+            let y = rng.weighted(&q);
+            let dy = dmin[y];
+            let accept = if dx * q[y] <= 0.0 {
+                true
+            } else {
+                (dy * q[x]) / (dx * q[y]) > rng.uniform()
+            };
+            if accept {
+                x = y;
+                dx = dy;
+            }
+        }
+        seeds.push(x);
+        for (i, p) in points.iter().enumerate() {
+            let d = dist2(p, &points[x]);
+            if d < dmin[i] {
+                dmin[i] = d;
+            }
+        }
+    }
+    seeds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blob(cx: f64, cy: f64, n: usize, rng: &mut Rng) -> Vec<Vec<f64>> {
+        (0..n)
+            .map(|_| vec![cx + 0.1 * rng.normal(), cy + 0.1 * rng.normal()])
+            .collect()
+    }
+
+    #[test]
+    fn seeds_are_distinct_and_in_range() {
+        let mut rng = Rng::new(1);
+        let mut pts = blob(0.0, 0.0, 30, &mut rng);
+        pts.extend(blob(10.0, 0.0, 30, &mut rng));
+        pts.extend(blob(0.0, 10.0, 30, &mut rng));
+        let seeds = afkmc2_seeds(&pts, 3, 50, &mut rng);
+        assert_eq!(seeds.len(), 3);
+        assert!(seeds.iter().all(|&s| s < pts.len()));
+    }
+
+    #[test]
+    fn seeds_cover_separated_blobs() {
+        // With well-separated blobs, the 3 seeds should land in 3
+        // different blobs nearly always.
+        let mut hits = 0;
+        for trial in 0..20 {
+            let mut rng = Rng::new(100 + trial);
+            let mut pts = blob(0.0, 0.0, 40, &mut rng);
+            pts.extend(blob(50.0, 0.0, 40, &mut rng));
+            pts.extend(blob(0.0, 50.0, 40, &mut rng));
+            let seeds = afkmc2_seeds(&pts, 3, 100, &mut rng);
+            let mut blobs: Vec<usize> =
+                seeds.iter().map(|&s| s / 40).collect();
+            blobs.sort_unstable();
+            blobs.dedup();
+            if blobs.len() == 3 {
+                hits += 1;
+            }
+        }
+        assert!(hits >= 17, "only {hits}/20 trials covered all blobs");
+    }
+
+    #[test]
+    fn single_seed_works() {
+        let mut rng = Rng::new(2);
+        let pts = blob(0.0, 0.0, 5, &mut rng);
+        assert_eq!(afkmc2_seeds(&pts, 1, 10, &mut rng).len(), 1);
+    }
+
+    #[test]
+    fn identical_points_dont_panic() {
+        let mut rng = Rng::new(3);
+        let pts = vec![vec![1.0, 1.0]; 10];
+        let seeds = afkmc2_seeds(&pts, 3, 20, &mut rng);
+        assert_eq!(seeds.len(), 3);
+    }
+}

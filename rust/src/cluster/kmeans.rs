@@ -1,0 +1,210 @@
+//! Size-balanced k-means (the paper's "K-cluster algorithm ... minimizes
+//! the mean square error and balances the cluster size").
+//!
+//! Assignment step: all (point, centroid) pairs sorted by distance, points
+//! greedily assigned while respecting a per-cluster capacity of ⌈n/k⌉ —
+//! this keeps clusters equal-sized (each edge must serve the same number
+//! of devices so the HFL topology stays valid) while staying close to the
+//! unconstrained optimum.
+
+use crate::linalg::dist2;
+use crate::util::rng::Rng;
+
+use super::afkmc2::afkmc2_seeds;
+
+#[derive(Clone, Debug)]
+pub struct Clustering {
+    /// Cluster id per point.
+    pub assignment: Vec<usize>,
+    pub centroids: Vec<Vec<f64>>,
+    /// Final within-cluster mean squared error.
+    pub mse: f64,
+    pub iterations: usize,
+}
+
+impl Clustering {
+    pub fn members(&self, cluster: usize) -> Vec<usize> {
+        self.assignment
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c == cluster)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn sizes(&self, k: usize) -> Vec<usize> {
+        let mut s = vec![0usize; k];
+        for &c in &self.assignment {
+            s[c] += 1;
+        }
+        s
+    }
+}
+
+/// Balanced Lloyd iterations from AFK-MC² seeds.
+pub fn balanced_kmeans(
+    points: &[Vec<f64>],
+    k: usize,
+    max_iters: usize,
+    rng: &mut Rng,
+) -> Clustering {
+    let n = points.len();
+    assert!(k >= 1 && n >= k);
+    let cap = n.div_ceil(k);
+    let seeds = afkmc2_seeds(points, k, (2 * n).max(30), rng);
+    let mut centroids: Vec<Vec<f64>> =
+        seeds.iter().map(|&s| points[s].clone()).collect();
+    let mut assignment = vec![usize::MAX; n];
+    let mut iterations = 0;
+
+    for it in 0..max_iters {
+        iterations = it + 1;
+        // --- balanced assignment ---
+        let mut pairs: Vec<(f64, usize, usize)> = Vec::with_capacity(n * k);
+        for (i, p) in points.iter().enumerate() {
+            for (c, cent) in centroids.iter().enumerate() {
+                pairs.push((dist2(p, cent), i, c));
+            }
+        }
+        pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut new_assignment = vec![usize::MAX; n];
+        let mut counts = vec![0usize; k];
+        let mut assigned = 0;
+        for &(_, i, c) in &pairs {
+            if new_assignment[i] == usize::MAX && counts[c] < cap {
+                new_assignment[i] = c;
+                counts[c] += 1;
+                assigned += 1;
+                if assigned == n {
+                    break;
+                }
+            }
+        }
+        let converged = new_assignment == assignment;
+        assignment = new_assignment;
+        // --- centroid update ---
+        let dim = points[0].len();
+        let mut sums = vec![vec![0.0; dim]; k];
+        let mut cnts = vec![0usize; k];
+        for (i, &c) in assignment.iter().enumerate() {
+            for (d, v) in points[i].iter().enumerate() {
+                sums[c][d] += v;
+            }
+            cnts[c] += 1;
+        }
+        for c in 0..k {
+            if cnts[c] > 0 {
+                for d in 0..dim {
+                    sums[c][d] /= cnts[c] as f64;
+                }
+                centroids[c] = sums[c].clone();
+            }
+        }
+        if converged {
+            break;
+        }
+    }
+
+    let mse = points
+        .iter()
+        .zip(&assignment)
+        .map(|(p, &c)| dist2(p, &centroids[c]))
+        .sum::<f64>()
+        / n as f64;
+    Clustering {
+        assignment,
+        centroids,
+        mse,
+        iterations,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::check;
+
+    fn blobs(
+        centers: &[(f64, f64)],
+        per: usize,
+        spread: f64,
+        rng: &mut Rng,
+    ) -> Vec<Vec<f64>> {
+        let mut pts = Vec::new();
+        for &(cx, cy) in centers {
+            for _ in 0..per {
+                pts.push(vec![
+                    cx + spread * rng.normal(),
+                    cy + spread * rng.normal(),
+                ]);
+            }
+        }
+        pts
+    }
+
+    #[test]
+    fn recovers_separated_blobs() {
+        let mut rng = Rng::new(1);
+        let pts =
+            blobs(&[(0.0, 0.0), (20.0, 0.0), (0.0, 20.0)], 20, 0.5, &mut rng);
+        let c = balanced_kmeans(&pts, 3, 50, &mut rng);
+        // Points from the same blob share a cluster.
+        for b in 0..3 {
+            let first = c.assignment[b * 20];
+            for i in 0..20 {
+                assert_eq!(c.assignment[b * 20 + i], first, "blob {b}");
+            }
+        }
+        assert!(c.mse < 1.0, "mse {}", c.mse);
+    }
+
+    #[test]
+    fn prop_clusters_are_balanced() {
+        check(
+            "kmeans-balance",
+            25,
+            |g| {
+                let k = g.usize_in(1, 6);
+                let n = k * g.usize_in(2, 12);
+                let seed = g.rng.next_u64();
+                (n, k, seed)
+            },
+            |&(n, k, seed)| {
+                let mut rng = Rng::new(seed);
+                let pts: Vec<Vec<f64>> = (0..n)
+                    .map(|_| vec![rng.range(-5.0, 5.0), rng.range(-5.0, 5.0)])
+                    .collect();
+                let c = balanced_kmeans(&pts, k, 30, &mut rng);
+                let cap = n.div_ceil(k);
+                let sizes = c.sizes(k);
+                if sizes.iter().sum::<usize>() != n {
+                    return Err("not all points assigned".into());
+                }
+                if sizes.iter().any(|&s| s > cap) {
+                    return Err(format!("cap {cap} violated: {sizes:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn exact_balance_when_divisible() {
+        let mut rng = Rng::new(5);
+        let pts: Vec<Vec<f64>> = (0..50)
+            .map(|_| vec![rng.range(0.0, 1.0), rng.range(0.0, 1.0)])
+            .collect();
+        let c = balanced_kmeans(&pts, 5, 50, &mut rng);
+        assert_eq!(c.sizes(5), vec![10; 5]);
+    }
+
+    #[test]
+    fn k_equals_one() {
+        let mut rng = Rng::new(6);
+        let pts: Vec<Vec<f64>> =
+            (0..10).map(|i| vec![i as f64]).collect();
+        let c = balanced_kmeans(&pts, 1, 10, &mut rng);
+        assert!(c.assignment.iter().all(|&a| a == 0));
+        assert!((c.centroids[0][0] - 4.5).abs() < 1e-9);
+    }
+}

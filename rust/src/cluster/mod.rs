@@ -1,0 +1,19 @@
+//! Profiling module (paper §3.1): characterize devices, then cluster them
+//! so each edge serves devices of similar capability (straggler removal).
+//!
+//! * `afkmc2` — AFK-MC² seeding (Bachem et al., NeurIPS'16), the paper's
+//!   choice for fast, provably good k-means++ style seeds.
+//! * `kmeans` — size-balanced Lloyd iterations ("minimizes the mean square
+//!   error and balances the cluster size").
+//! * `profiling` — runs the profiling task, builds the V_i feature vectors
+//!   [T_pro, E_pro, Fl_pro, Fr_pro, Ut_pro], z-scores them, and assigns
+//!   devices to edges (region-constrained, as in §3.1 "divide edges and
+//!   devices into multiple groups by region").
+
+pub mod afkmc2;
+pub mod kmeans;
+pub mod profiling;
+
+pub use afkmc2::afkmc2_seeds;
+pub use kmeans::{balanced_kmeans, Clustering};
+pub use profiling::{profile_devices, ProfilingOutcome};

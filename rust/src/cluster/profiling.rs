@@ -1,0 +1,218 @@
+//! The profiling module (paper §3.1 / Fig. 5 left).
+//!
+//! Every device runs the same short profiling task; the cloud records the
+//! characteristic V_i = [T_pro, E_pro, Fl_pro, Fr_pro, Ut_pro]
+//! (configuration time, energy, attainable FLOPS, governor frequency,
+//! CPU utilization), z-scores the features, and clusters devices with
+//! AFK-MC²-seeded balanced k-means — region-constrained, so devices only
+//! join edges in their own region ("divide edges and devices into multiple
+//! groups by region, then cluster devices under each group").
+
+use crate::sim::{CpuModel, EnergyModel, Region};
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+use super::kmeans::balanced_kmeans;
+
+/// One device's profiling characteristic V_i.
+#[derive(Clone, Debug)]
+pub struct DeviceProfile {
+    pub t_pro: f64,
+    pub e_pro: f64,
+    pub fl_pro: f64,
+    pub fr_pro: f64,
+    pub ut_pro: f64,
+}
+
+impl DeviceProfile {
+    pub fn as_vec(&self) -> Vec<f64> {
+        vec![self.t_pro, self.e_pro, self.fl_pro, self.fr_pro, self.ut_pro]
+    }
+}
+
+/// Run the profiling task (a fixed number of SGD batches) on one device.
+pub fn profile_device(
+    cpu: &mut CpuModel,
+    energy: &EnergyModel,
+    epochs: usize,
+) -> DeviceProfile {
+    let mut t_total = 0.0;
+    let mut e_total = 0.0;
+    for _ in 0..epochs {
+        cpu.step_usage();
+        let t = cpu.sgd_time();
+        t_total += t;
+        e_total += energy.sgd_energy(cpu, t);
+    }
+    DeviceProfile {
+        t_pro: t_total,
+        e_pro: e_total,
+        fl_pro: cpu.available_gflops(),
+        fr_pro: cpu.frequency_ghz(),
+        ut_pro: cpu.usage,
+    }
+}
+
+/// Output: device -> edge assignment plus diagnostics.
+#[derive(Clone, Debug)]
+pub struct ProfilingOutcome {
+    /// edge id per device.
+    pub assignment: Vec<usize>,
+    pub profiles: Vec<DeviceProfile>,
+    /// Within-cluster MSE of the (normalized) features per region.
+    pub mse: f64,
+}
+
+/// Cluster `profiles` into edges, respecting regions: devices with region
+/// r may only be assigned to edges with region r. `edge_regions[j]` gives
+/// edge j's region; `device_regions[i]` gives device i's.
+pub fn profile_devices(
+    profiles: Vec<DeviceProfile>,
+    device_regions: &[Region],
+    edge_regions: &[Region],
+    rng: &mut Rng,
+) -> ProfilingOutcome {
+    let n = profiles.len();
+    assert_eq!(device_regions.len(), n);
+    let features: Vec<Vec<f64>> =
+        profiles.iter().map(|p| p.as_vec()).collect();
+    let norm = zscore(&features);
+
+    let mut assignment = vec![usize::MAX; n];
+    let mut total_mse = 0.0;
+    for &region in &[Region::Cn, Region::Us] {
+        let edges: Vec<usize> = (0..edge_regions.len())
+            .filter(|&j| edge_regions[j] == region)
+            .collect();
+        let devices: Vec<usize> = (0..n)
+            .filter(|&i| device_regions[i] == region)
+            .collect();
+        if edges.is_empty() {
+            assert!(
+                devices.is_empty(),
+                "devices in region {region:?} but no edges there"
+            );
+            continue;
+        }
+        if devices.is_empty() {
+            continue;
+        }
+        let pts: Vec<Vec<f64>> =
+            devices.iter().map(|&i| norm[i].clone()).collect();
+        let clustering =
+            balanced_kmeans(&pts, edges.len(), 50, rng);
+        for (local, &dev) in devices.iter().enumerate() {
+            assignment[dev] = edges[clustering.assignment[local]];
+        }
+        total_mse += clustering.mse * devices.len() as f64;
+    }
+    let mse = total_mse / n as f64;
+    ProfilingOutcome {
+        assignment,
+        profiles,
+        mse,
+    }
+}
+
+fn zscore(features: &[Vec<f64>]) -> Vec<Vec<f64>> {
+    let dims = features[0].len();
+    let mut out = vec![vec![0.0; dims]; features.len()];
+    for d in 0..dims {
+        let col: Vec<f64> = features.iter().map(|f| f[d]).collect();
+        let m = stats::mean(&col);
+        let s = stats::std(&col).max(1e-9);
+        for (i, f) in features.iter().enumerate() {
+            out[i][d] = (f[d] - m) / s;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn make_cpu(u: f64, seed: u64) -> CpuModel {
+        CpuModel::new(u, 2.0, 1.2, 0.18, Rng::new(seed))
+    }
+
+    #[test]
+    fn profile_reflects_interference() {
+        let e = EnergyModel::new(2.2, 6.2);
+        let mut fast = make_cpu(0.1, 1);
+        let mut slow = make_cpu(0.8, 2);
+        let pf = profile_device(&mut fast, &e, 20);
+        let ps = profile_device(&mut slow, &e, 20);
+        assert!(ps.t_pro > pf.t_pro);
+        assert!(ps.e_pro > pf.e_pro);
+        assert!(ps.fl_pro < pf.fl_pro);
+    }
+
+    #[test]
+    fn clustering_groups_similar_devices() {
+        // 2 regions x (fast + slow) devices; check that within each region
+        // fast devices dominate one edge and slow the other.
+        let e = EnergyModel::new(2.2, 6.2);
+        let mut profiles = Vec::new();
+        let mut device_regions = Vec::new();
+        for i in 0..20 {
+            let u = if i % 2 == 0 { 0.12 } else { 0.75 };
+            let mut cpu = make_cpu(u, 100 + i as u64);
+            profiles.push(profile_device(&mut cpu, &e, 30));
+            device_regions
+                .push(if i < 10 { Region::Cn } else { Region::Us });
+        }
+        let edge_regions =
+            vec![Region::Cn, Region::Cn, Region::Us, Region::Us];
+        let mut rng = Rng::new(7);
+        let out = profile_devices(
+            profiles,
+            &device_regions,
+            &edge_regions,
+            &mut rng,
+        );
+        // Region constraint respected.
+        for (i, &edge) in out.assignment.iter().enumerate() {
+            assert_eq!(edge_regions[edge], device_regions[i], "device {i}");
+        }
+        // Within region cn (devices 0..10): fast devices (even idx) should
+        // mostly share an edge.
+        let fast_edges: Vec<usize> =
+            (0..10).step_by(2).map(|i| out.assignment[i]).collect();
+        let same = fast_edges
+            .iter()
+            .filter(|&&e| e == fast_edges[0])
+            .count();
+        assert!(same >= 4, "fast cn devices split: {fast_edges:?}");
+    }
+
+    #[test]
+    fn balanced_sizes_per_region() {
+        let e = EnergyModel::new(2.2, 6.2);
+        let mut profiles = Vec::new();
+        let mut device_regions = Vec::new();
+        for i in 0..30 {
+            let mut cpu = make_cpu(0.1 + 0.1 * (i % 5) as f64, i as u64);
+            profiles.push(profile_device(&mut cpu, &e, 10));
+            device_regions
+                .push(if i < 18 { Region::Cn } else { Region::Us });
+        }
+        let edge_regions =
+            vec![Region::Cn, Region::Cn, Region::Cn, Region::Us, Region::Us];
+        let mut rng = Rng::new(8);
+        let out = profile_devices(
+            profiles,
+            &device_regions,
+            &edge_regions,
+            &mut rng,
+        );
+        let mut sizes = vec![0usize; 5];
+        for &e in &out.assignment {
+            sizes[e] += 1;
+        }
+        assert_eq!(sizes[..3].iter().sum::<usize>(), 18);
+        assert_eq!(sizes[3..].iter().sum::<usize>(), 12);
+        assert!(sizes[..3].iter().all(|&s| s == 6), "{sizes:?}");
+        assert!(sizes[3..].iter().all(|&s| s == 6), "{sizes:?}");
+    }
+}

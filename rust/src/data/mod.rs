@@ -1,0 +1,15 @@
+//! Synthetic datasets + non-IID partitioners.
+//!
+//! The build environment is offline, so MNIST/CIFAR-10 are replaced by
+//! deterministic class-conditional synthetic sets with identical tensor
+//! shapes (see DESIGN.md §3). Samples are `prototype[class] + noise`, with
+//! smoothed random-field prototypes — learnable by the paper's CNNs but far
+//! from trivially separable, so accuracy climbs over training exactly like
+//! the real sets (relative scheme orderings are preserved, absolute
+//! accuracies differ).
+
+pub mod partition;
+pub mod synthetic;
+
+pub use partition::{partition_labels, DeviceLabels};
+pub use synthetic::SyntheticDataset;

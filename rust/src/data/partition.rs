@@ -1,0 +1,227 @@
+//! Non-IID partitioners (paper §4.1 and §4.5 / Fig. 10).
+//!
+//! Produces per-device label multisets under three regimes:
+//!  * IID — uniform class mixture everywhere;
+//!  * label-skew — each device holds k distinct classes (paper default
+//!    k = 2, "each device has 2 classes with an equal amount of data");
+//!  * Dirichlet(alpha) — per-device class mixture drawn from a Dirichlet.
+
+use crate::config::Partition;
+use crate::util::rng::Rng;
+
+/// The labels each device will hold (length = samples_per_device).
+pub type DeviceLabels = Vec<Vec<usize>>;
+
+pub fn partition_labels(
+    scheme: Partition,
+    devices: usize,
+    samples_per_device: usize,
+    classes: usize,
+    rng: &mut Rng,
+) -> DeviceLabels {
+    match scheme {
+        Partition::Iid => iid(devices, samples_per_device, classes, rng),
+        Partition::LabelSkew { labels } => {
+            label_skew(devices, samples_per_device, classes, labels, rng)
+        }
+        Partition::Dirichlet { alpha } => {
+            dirichlet(devices, samples_per_device, classes, alpha, rng)
+        }
+    }
+}
+
+fn iid(
+    devices: usize,
+    spd: usize,
+    classes: usize,
+    rng: &mut Rng,
+) -> DeviceLabels {
+    (0..devices)
+        .map(|_| (0..spd).map(|_| rng.below(classes)).collect())
+        .collect()
+}
+
+fn label_skew(
+    devices: usize,
+    spd: usize,
+    classes: usize,
+    k: usize,
+    rng: &mut Rng,
+) -> DeviceLabels {
+    let k = k.clamp(1, classes);
+    (0..devices)
+        .map(|_| {
+            let own = rng.sample_indices(classes, k);
+            let per = spd / k;
+            let mut labels = Vec::with_capacity(spd);
+            for (j, &cls) in own.iter().enumerate() {
+                let cnt = if j == k - 1 { spd - per * (k - 1) } else { per };
+                labels.extend(std::iter::repeat(cls).take(cnt));
+            }
+            rng.shuffle(&mut labels);
+            labels
+        })
+        .collect()
+}
+
+fn dirichlet(
+    devices: usize,
+    spd: usize,
+    classes: usize,
+    alpha: f64,
+    rng: &mut Rng,
+) -> DeviceLabels {
+    (0..devices)
+        .map(|_| {
+            let mix = rng.dirichlet(alpha, classes);
+            let mut labels: Vec<usize> =
+                (0..spd).map(|_| rng.weighted(&mix)).collect();
+            rng.shuffle(&mut labels);
+            labels
+        })
+        .collect()
+}
+
+/// Device x class count matrix (Fig. 10 visualization / Share baseline).
+pub fn distribution_matrix(
+    parts: &DeviceLabels,
+    classes: usize,
+) -> Vec<Vec<usize>> {
+    parts
+        .iter()
+        .map(|labels| {
+            let mut h = vec![0usize; classes];
+            for &l in labels {
+                h[l] += 1;
+            }
+            h
+        })
+        .collect()
+}
+
+/// Mean per-device label entropy in bits — a scalar non-IID'ness measure
+/// (IID -> log2(classes); 1-label devices -> 0).
+pub fn mean_label_entropy(parts: &DeviceLabels, classes: usize) -> f64 {
+    let mat = distribution_matrix(parts, classes);
+    let mut total = 0.0;
+    for row in &mat {
+        let n: usize = row.iter().sum();
+        if n == 0 {
+            continue;
+        }
+        let mut h = 0.0;
+        for &c in row {
+            if c > 0 {
+                let p = c as f64 / n as f64;
+                h -= p * p.log2();
+            }
+        }
+        total += h;
+    }
+    total / parts.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{check, Gen};
+
+    fn scheme_of(g: &mut Gen) -> Partition {
+        match g.usize_in(0, 2) {
+            0 => Partition::Iid,
+            1 => Partition::LabelSkew {
+                labels: g.usize_in(1, 5),
+            },
+            _ => Partition::Dirichlet {
+                alpha: g.f64_in(0.1, 5.0),
+            },
+        }
+    }
+
+    #[test]
+    fn prop_every_scheme_yields_full_shards() {
+        check(
+            "partition-shapes",
+            60,
+            |g| {
+                let devices = g.usize_in(1, 30);
+                let spd = g.usize_in(1, 64);
+                (scheme_of(g), devices, spd, g.rng.next_u64())
+            },
+            |&(scheme, devices, spd, seed)| {
+                let mut rng = Rng::new(seed);
+                let parts =
+                    partition_labels(scheme, devices, spd, 10, &mut rng);
+                if parts.len() != devices {
+                    return Err("wrong device count".into());
+                }
+                for p in &parts {
+                    if p.len() != spd {
+                        return Err("wrong shard size".into());
+                    }
+                    if p.iter().any(|&l| l >= 10) {
+                        return Err("label out of range".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn label_skew_has_exactly_k_classes() {
+        let mut rng = Rng::new(3);
+        let parts = partition_labels(
+            Partition::LabelSkew { labels: 2 },
+            50,
+            120,
+            10,
+            &mut rng,
+        );
+        for p in &parts {
+            let mut classes: Vec<usize> = p.clone();
+            classes.sort_unstable();
+            classes.dedup();
+            assert_eq!(classes.len(), 2);
+        }
+    }
+
+    #[test]
+    fn entropy_ordering_iid_gt_dirichlet_gt_label2() {
+        let mut rng = Rng::new(4);
+        let iid = partition_labels(Partition::Iid, 50, 200, 10, &mut rng);
+        let dir = partition_labels(
+            Partition::Dirichlet { alpha: 0.5 },
+            50,
+            200,
+            10,
+            &mut rng,
+        );
+        let lab = partition_labels(
+            Partition::LabelSkew { labels: 2 },
+            50,
+            200,
+            10,
+            &mut rng,
+        );
+        let (ei, ed, el) = (
+            mean_label_entropy(&iid, 10),
+            mean_label_entropy(&dir, 10),
+            mean_label_entropy(&lab, 10),
+        );
+        assert!(ei > ed, "iid {ei} <= dirichlet {ed}");
+        assert!(ed > el, "dirichlet {ed} <= label2 {el}");
+        assert!(ei > 3.2, "iid entropy should approach log2(10)={ei}");
+        assert!(el <= 1.0 + 1e-9, "2-label entropy must be <= 1 bit: {el}");
+    }
+
+    #[test]
+    fn distribution_matrix_row_sums() {
+        let mut rng = Rng::new(5);
+        let parts = partition_labels(Partition::Iid, 10, 40, 10, &mut rng);
+        let mat = distribution_matrix(&parts, 10);
+        for row in mat {
+            assert_eq!(row.iter().sum::<usize>(), 40);
+        }
+    }
+}

@@ -1,0 +1,281 @@
+//! Class-conditional synthetic image generator.
+
+use crate::config::Dataset;
+use crate::util::rng::Rng;
+
+/// A generated dataset: per-class prototypes plus sampling machinery.
+pub struct SyntheticDataset {
+    pub dataset: Dataset,
+    pub classes: usize,
+    shape: [usize; 3],
+    /// classes x (H*W*C) smoothed prototype images.
+    prototypes: Vec<Vec<f32>>,
+    /// Noise scale relative to prototype energy. CIFAR-shape gets noisier
+    /// (harder task, mirroring the real difficulty gap).
+    noise: f32,
+}
+
+impl SyntheticDataset {
+    pub fn new(dataset: Dataset, seed: u64) -> Self {
+        let shape = dataset.input_shape();
+        let classes = dataset.classes();
+        let mut rng = Rng::new(seed ^ 0xda7a_5e7);
+        let noise = match dataset {
+            Dataset::Mnist => 0.9,
+            Dataset::Cifar => 1.4,
+        };
+        let prototypes = (0..classes)
+            .map(|c| Self::make_prototype(&mut rng.fork(c as u64), shape))
+            .collect();
+        SyntheticDataset {
+            dataset,
+            classes,
+            shape,
+            prototypes,
+            noise,
+        }
+    }
+
+    pub fn sample_len(&self) -> usize {
+        self.shape[0] * self.shape[1] * self.shape[2]
+    }
+
+    pub fn shape(&self) -> [usize; 3] {
+        self.shape
+    }
+
+    /// Smoothed random field: white noise box-blurred twice, normalized.
+    fn make_prototype(rng: &mut Rng, shape: [usize; 3]) -> Vec<f32> {
+        let [h, w, c] = shape;
+        let mut img: Vec<f32> =
+            (0..h * w * c).map(|_| rng.normal() as f32).collect();
+        for _ in 0..2 {
+            img = box_blur(&img, h, w, c);
+        }
+        // Normalize to unit std so noise scale is comparable across shapes.
+        let mean = img.iter().sum::<f32>() / img.len() as f32;
+        let var = img
+            .iter()
+            .map(|x| (x - mean) * (x - mean))
+            .sum::<f32>()
+            / img.len() as f32;
+        let s = var.sqrt().max(1e-6);
+        for x in img.iter_mut() {
+            *x = (*x - mean) / s;
+        }
+        img
+    }
+
+    /// One sample of class `label`, written into `out` (len = sample_len).
+    pub fn sample_into(&self, label: usize, rng: &mut Rng, out: &mut [f32]) {
+        let proto = &self.prototypes[label];
+        debug_assert_eq!(out.len(), proto.len());
+        // Small random translation (±2 px) + additive noise.
+        let [h, w, c] = self.shape;
+        let dy = rng.below(5) as isize - 2;
+        let dx = rng.below(5) as isize - 2;
+        for y in 0..h {
+            for x in 0..w {
+                let sy = (y as isize + dy).clamp(0, h as isize - 1) as usize;
+                let sx = (x as isize + dx).clamp(0, w as isize - 1) as usize;
+                for ch in 0..c {
+                    let v = proto[(sy * w + sx) * c + ch]
+                        + self.noise * rng.normal() as f32;
+                    out[(y * w + x) * c + ch] = v;
+                }
+            }
+        }
+    }
+
+    /// Generate `n` samples with the given labels; returns flat [n, H*W*C].
+    pub fn generate(&self, labels: &[usize], rng: &mut Rng) -> Vec<f32> {
+        let sl = self.sample_len();
+        let mut out = vec![0.0f32; labels.len() * sl];
+        for (i, &lab) in labels.iter().enumerate() {
+            self.sample_into(lab, rng, &mut out[i * sl..(i + 1) * sl]);
+        }
+        out
+    }
+
+    /// Uniform-label test set: (flat images, labels).
+    pub fn test_set(&self, n: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
+        let mut rng = Rng::new(seed ^ 0x7e57_5e7);
+        let labels: Vec<usize> =
+            (0..n).map(|i| i % self.classes).collect();
+        let x = self.generate(&labels, &mut rng);
+        (x, labels.iter().map(|&l| l as i32).collect())
+    }
+}
+
+fn box_blur(img: &[f32], h: usize, w: usize, c: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; img.len()];
+    for y in 0..h {
+        for x in 0..w {
+            for ch in 0..c {
+                let mut acc = 0.0;
+                let mut cnt = 0.0;
+                for dy in -1isize..=1 {
+                    for dx in -1isize..=1 {
+                        let sy = y as isize + dy;
+                        let sx = x as isize + dx;
+                        if sy >= 0
+                            && sy < h as isize
+                            && sx >= 0
+                            && sx < w as isize
+                        {
+                            acc += img
+                                [(sy as usize * w + sx as usize) * c + ch];
+                            cnt += 1.0;
+                        }
+                    }
+                }
+                out[(y * w + x) * c + ch] = acc / cnt;
+            }
+        }
+    }
+    out
+}
+
+/// Per-device training shard, laid out for the `train_epoch` artifact.
+pub struct DeviceShard {
+    /// All samples, flat [n, sample_len].
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub n: usize,
+    pub sample_len: usize,
+}
+
+impl DeviceShard {
+    pub fn build(
+        ds: &SyntheticDataset,
+        labels: &[usize],
+        rng: &mut Rng,
+    ) -> Self {
+        DeviceShard {
+            x: ds.generate(labels, rng),
+            y: labels.iter().map(|&l| l as i32).collect(),
+            n: labels.len(),
+            sample_len: ds.sample_len(),
+        }
+    }
+
+    /// Epoch tensor pair ([nb*batch*sample_len], [nb*batch]) with a fresh
+    /// shuffle of the shard each call (order: scan batches).
+    pub fn epoch_tensors(
+        &self,
+        nb: usize,
+        batch: usize,
+        rng: &mut Rng,
+    ) -> (Vec<f32>, Vec<i32>) {
+        let need = nb * batch;
+        let mut order: Vec<usize> = (0..self.n).collect();
+        rng.shuffle(&mut order);
+        // If the shard is smaller than an epoch's worth, wrap around.
+        let mut x = Vec::with_capacity(need * self.sample_len);
+        let mut y = Vec::with_capacity(need);
+        for k in 0..need {
+            let i = order[k % self.n];
+            x.extend_from_slice(
+                &self.x[i * self.sample_len..(i + 1) * self.sample_len],
+            );
+            y.push(self.y[i]);
+        }
+        (x, y)
+    }
+
+    /// Class histogram (for Fig. 10 and the Share baseline).
+    pub fn class_histogram(&self, classes: usize) -> Vec<usize> {
+        let mut h = vec![0usize; classes];
+        for &l in &self.y {
+            h[l as usize] += 1;
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let a = SyntheticDataset::new(Dataset::Mnist, 1);
+        let b = SyntheticDataset::new(Dataset::Mnist, 1);
+        let mut ra = Rng::new(2);
+        let mut rb = Rng::new(2);
+        let xa = a.generate(&[0, 5, 9], &mut ra);
+        let xb = b.generate(&[0, 5, 9], &mut rb);
+        assert_eq!(xa, xb);
+    }
+
+    #[test]
+    fn shapes_match_dataset() {
+        let m = SyntheticDataset::new(Dataset::Mnist, 3);
+        assert_eq!(m.sample_len(), 28 * 28);
+        let c = SyntheticDataset::new(Dataset::Cifar, 3);
+        assert_eq!(c.sample_len(), 32 * 32 * 3);
+    }
+
+    #[test]
+    fn classes_are_distinguishable() {
+        // Mean inter-class L2 distance must exceed intra-class sample noise
+        // spread by a visible margin (the learnability precondition).
+        let ds = SyntheticDataset::new(Dataset::Mnist, 7);
+        let mut rng = Rng::new(11);
+        let sl = ds.sample_len();
+        let a = ds.generate(&vec![0; 32], &mut rng);
+        let b = ds.generate(&vec![1; 32], &mut rng);
+        let mean = |v: &[f32]| -> Vec<f32> {
+            let n = v.len() / sl;
+            let mut m = vec![0.0f32; sl];
+            for i in 0..n {
+                for j in 0..sl {
+                    m[j] += v[i * sl + j] / n as f32;
+                }
+            }
+            m
+        };
+        let ma = mean(&a);
+        let mb = mean(&b);
+        let inter: f32 = ma
+            .iter()
+            .zip(&mb)
+            .map(|(x, y)| (x - y) * (x - y))
+            .sum::<f32>()
+            .sqrt();
+        assert!(inter > 5.0, "inter-class distance too small: {inter}");
+    }
+
+    #[test]
+    fn shard_epoch_tensors_sized_and_wrapping() {
+        let ds = SyntheticDataset::new(Dataset::Mnist, 5);
+        let mut rng = Rng::new(6);
+        let shard = DeviceShard::build(&ds, &[1, 2, 3], &mut rng);
+        let (x, y) = shard.epoch_tensors(2, 4, &mut rng); // needs 8 > 3
+        assert_eq!(x.len(), 8 * ds.sample_len());
+        assert_eq!(y.len(), 8);
+        for lab in y {
+            assert!([1, 2, 3].contains(&lab));
+        }
+    }
+
+    #[test]
+    fn test_set_label_coverage() {
+        let ds = SyntheticDataset::new(Dataset::Mnist, 5);
+        let (_, y) = ds.test_set(100, 1);
+        for cls in 0..10 {
+            assert!(y.iter().filter(|&&l| l == cls).count() == 10);
+        }
+    }
+
+    #[test]
+    fn histogram_counts_labels() {
+        let ds = SyntheticDataset::new(Dataset::Mnist, 5);
+        let mut rng = Rng::new(6);
+        let shard = DeviceShard::build(&ds, &[0, 0, 1, 9], &mut rng);
+        let h = shard.class_histogram(10);
+        assert_eq!(h[0], 2);
+        assert_eq!(h[1], 1);
+        assert_eq!(h[9], 1);
+    }
+}

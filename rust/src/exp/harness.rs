@@ -1,0 +1,646 @@
+//! Experiment harnesses: one per paper table/figure (DESIGN.md §5).
+//!
+//! Each harness prints the rows/series the paper reports and writes CSVs
+//! under `results/<id>/`. Default scales are reduced for the 1-core CI box
+//! (fewer devices, shorter simulated budgets, fewer DRL episodes) —
+//! EXPERIMENTS.md records the per-experiment scaling; `--set` overrides
+//! restore paper scale. Trained policies are cached under
+//! `results/agents/` so figures sharing an agent don't retrain.
+
+use anyhow::{bail, Result};
+
+use crate::agent::{
+    arena::run_arena_policy, train_arena, ArenaOptions, PpoAgent,
+    StateBuilder,
+};
+use crate::baselines::{self, favor::FavorOptions};
+use crate::config::{Dataset, ExperimentConfig, Partition};
+use crate::hfl::{HflEngine, RunHistory};
+use crate::runtime::Runtime;
+use crate::sim::{CpuModel, EnergyModel, NetworkModel, Region};
+use crate::util::csv::CsvWriter;
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+pub const EXPERIMENTS: &[&str] = &[
+    "fig2", "fig3", "fig4", "fig7", "fig8", "fig9", "fig10", "fig11",
+    "fig12", "table1", "table2",
+];
+
+pub fn run_experiment(name: &str, cfg: &ExperimentConfig) -> Result<()> {
+    match name {
+        "fig2" => fig2(cfg),
+        "fig3" => fig3(cfg),
+        "fig4" => fig4(cfg),
+        "fig7" => fig7(cfg),
+        "fig8" => fig8(cfg),
+        "fig9" => fig9(cfg),
+        "fig10" => fig10(cfg),
+        "fig11" => fig11(cfg),
+        "fig12" => fig12(cfg),
+        "table1" => table1(cfg),
+        "table2" => table2(cfg),
+        other => bail!("unknown experiment '{other}' (try `arena list`)"),
+    }
+}
+
+/// Harness default scale: 10 devices / half the simulated budget unless the
+/// user overrode topology or ARENA_SCALE=paper is set.
+fn scaled(cfg: &ExperimentConfig) -> ExperimentConfig {
+    let mut c = cfg.clone();
+    if std::env::var("ARENA_SCALE").as_deref() == Ok("paper") {
+        c.topology.devices = 50;
+        return c;
+    }
+    if c.topology.devices == 20 {
+        // untouched preset -> shrink for wall-clock
+        c.topology.devices = 10;
+        c.hfl.threshold_time *= 0.5;
+        c.agent.episodes = c.agent.episodes.min(6);
+    }
+    c
+}
+
+fn out_dir(id: &str) -> String {
+    format!("results/{id}")
+}
+
+// ---------------------------------------------------------------------
+// Agent cache
+// ---------------------------------------------------------------------
+
+struct TrainedAgent {
+    agent: PpoAgent,
+    sb: StateBuilder,
+    logs: Vec<crate::agent::EpisodeLog>,
+}
+
+/// Train (or restore) an agent for this engine's config. The cache key
+/// covers everything that changes the learned policy.
+fn trained_agent(
+    engine: &mut HflEngine,
+    opts: &ArenaOptions,
+    tag: &str,
+) -> Result<TrainedAgent> {
+    let cfg = engine.cfg.clone();
+    let key = format!(
+        "{}_{}_{}_d{}_t{}_np{}_{}{}",
+        tag,
+        cfg.hfl.dataset.name(),
+        cfg.hfl.partition.describe(),
+        cfg.topology.devices,
+        cfg.hfl.threshold_time as u64,
+        cfg.agent.npca,
+        if opts.use_gae { "arena" } else { "hwamei" },
+        if engine.topo.profiled { "" } else { "_noprof" },
+    );
+    let path = std::path::PathBuf::from(format!("results/agents/{key}.bin"));
+    if path.exists() {
+        // Policy restore still needs a fitted PCA: run the first fixed
+        // round and fit, then load weights.
+        let rt = Runtime::load(&cfg.artifacts_dir, &[])?;
+        let mut agent = PpoAgent::new_variant(&rt, cfg.agent.npca)?;
+        let m = engine.edges();
+        let mut sb = StateBuilder::new(
+            m,
+            cfg.agent.npca,
+            cfg.hfl.threshold_time,
+        );
+        engine.reset();
+        let g1 = vec![cfg.hfl.gamma1; m];
+        let g2 = vec![cfg.hfl.gamma2; m];
+        engine.run_round(&g1, &g2, None)?;
+        sb.fit_pca(engine);
+        agent.restore(&path)?;
+        println!("  [agent cache hit: {key}]");
+        return Ok(TrainedAgent {
+            agent,
+            sb,
+            logs: vec![],
+        });
+    }
+    let (agent, sb, logs) = train_arena(engine, opts)?;
+    agent.save(&path)?;
+    Ok(TrainedAgent { agent, sb, logs })
+}
+
+fn scheme_history(
+    name: &str,
+    cfg: &ExperimentConfig,
+) -> Result<RunHistory> {
+    match name {
+        "vanilla-fl" => {
+            let mut e = HflEngine::new(cfg.clone(), false)?;
+            baselines::vanilla_fl(&mut e, 0.6)
+        }
+        "vanilla-hfl" => {
+            let mut e = HflEngine::new(cfg.clone(), false)?;
+            baselines::vanilla_hfl(&mut e)
+        }
+        "var-freq-a" => {
+            let mut e = HflEngine::new(cfg.clone(), true)?;
+            baselines::var_freq::var_freq_a(&mut e)
+        }
+        "var-freq-b" => {
+            let mut e = HflEngine::new(cfg.clone(), true)?;
+            baselines::var_freq::var_freq_b(&mut e)
+        }
+        "favor" => {
+            let mut e = HflEngine::new(cfg.clone(), false)?;
+            baselines::favor::favor(&mut e, &FavorOptions::default())
+        }
+        "share" => {
+            let mut e = HflEngine::new(cfg.clone(), true)?;
+            baselines::share::share(&mut e)
+        }
+        "arena" | "hwamei" => {
+            let opts = if name == "arena" {
+                ArenaOptions::arena(cfg.agent.episodes)
+            } else {
+                ArenaOptions::hwamei(cfg.agent.episodes)
+            };
+            let mut e = HflEngine::new(cfg.clone(), true)?;
+            let t = trained_agent(&mut e, &opts, "shared")?;
+            run_arena_policy(&mut e, &t.agent, &t.sb, opts.nearest_solution)
+        }
+        other => bail!("unknown scheme {other}"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fig. 2 — motivation: accuracy & energy across schemes
+// ---------------------------------------------------------------------
+
+fn fig2(cfg: &ExperimentConfig) -> Result<()> {
+    let cfg = scaled(cfg);
+    let dir = out_dir("fig2");
+    let mut w = CsvWriter::create(
+        format!("{dir}/{}.csv", cfg.hfl.dataset.name()),
+        &["scheme", "accuracy", "energy_per_device_mah"],
+    )?;
+    println!(
+        "Fig.2 ({}, T={}s): termination accuracy and per-device energy",
+        cfg.hfl.dataset.name(),
+        cfg.hfl.threshold_time
+    );
+    for scheme in ["vanilla-fl", "vanilla-hfl", "var-freq-a", "var-freq-b"] {
+        let h = scheme_history(scheme, &cfg)?;
+        let e_dev = h.total_energy() / cfg.topology.devices as f64;
+        println!(
+            "  {scheme:<12} acc {:.3}  energy/device {:.1} mAh",
+            h.final_accuracy(),
+            e_dev
+        );
+        w.row_mixed(scheme, &[h.final_accuracy(), e_dev])?;
+        h.write_csv(&format!("{dir}/{scheme}_history.csv"), scheme)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Fig. 3 — SGD time/energy vs CPU usage (pure simulation sweep)
+// ---------------------------------------------------------------------
+
+fn fig3(cfg: &ExperimentConfig) -> Result<()> {
+    let dir = out_dir("fig3");
+    let mut w = CsvWriter::create(
+        format!("{dir}/sweep.csv"),
+        &["cpu_usage", "time_mean_s", "time_std_s", "energy_mean_mah",
+          "energy_std_mah"],
+    )?;
+    let energy = EnergyModel::new(cfg.sim.power_idle, cfg.sim.power_max);
+    println!("Fig.3: single-SGD time/energy vs available-CPU interference");
+    let mut u = 0.05;
+    while u <= 0.951 {
+        let mut cpu = CpuModel::new(
+            u,
+            cfg.sim.sgd_base_time,
+            cfg.sim.cpu_kappa,
+            cfg.sim.time_jitter,
+            Rng::new(1234 + (u * 100.0) as u64),
+        );
+        let mut ts = Vec::new();
+        let mut es = Vec::new();
+        for _ in 0..200 {
+            cpu.step_usage();
+            let t = cpu.sgd_time();
+            ts.push(t);
+            es.push(energy.sgd_energy(&cpu, t));
+        }
+        println!(
+            "  u={u:.2}: time {:.2}±{:.2}s  energy {:.3}±{:.3} mAh",
+            stats::mean(&ts),
+            stats::std(&ts),
+            stats::mean(&es),
+            stats::std(&es)
+        );
+        w.row_mixed(
+            &format!("{u:.2}"),
+            &[stats::mean(&ts), stats::std(&ts), stats::mean(&es),
+              stats::std(&es)],
+        )?;
+        u += 0.10;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Fig. 4 — edge-to-cloud communication time vs model size & region
+// ---------------------------------------------------------------------
+
+fn fig4(cfg: &ExperimentConfig) -> Result<()> {
+    let dir = out_dir("fig4");
+    let mut w = CsvWriter::create(
+        format!("{dir}/comm.csv"),
+        &["params", "region", "mean_s", "std_s"],
+    )?;
+    let net = NetworkModel::from_config(&cfg.sim);
+    let mut rng = Rng::new(99);
+    println!("Fig.4: edge->cloud round-trip time");
+    for &params in &[21_840usize, 100_000, 453_845, 1_000_000] {
+        for region in [Region::Cn, Region::Us] {
+            let bytes = crate::sim::network::model_bytes(params);
+            let xs: Vec<f64> = (0..200)
+                .map(|_| net.comm_time(region, bytes, &mut rng))
+                .collect();
+            println!(
+                "  {params:>8} params  {:<2}  {:.2}±{:.2}s",
+                region.name(),
+                stats::mean(&xs),
+                stats::std(&xs)
+            );
+            w.row(&[
+                params.to_string(),
+                region.name().to_string(),
+                format!("{:.4}", stats::mean(&xs)),
+                format!("{:.4}", stats::std(&xs)),
+            ])?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Fig. 7 — DRL training curves (+ Theorem 1 diagnostics)
+// ---------------------------------------------------------------------
+
+fn fig7(cfg: &ExperimentConfig) -> Result<()> {
+    let cfg = scaled(cfg);
+    let dir = out_dir("fig7");
+    let mut engine = HflEngine::new(cfg.clone(), true)?;
+    let opts = ArenaOptions {
+        verbose: true,
+        ..ArenaOptions::arena(cfg.agent.episodes)
+    };
+    let (agent, _sb, logs) = train_arena(&mut engine, &opts)?;
+    agent.save(&std::path::PathBuf::from(format!(
+        "results/agents/shared_{}_{}_d{}_t{}_np{}_arena.bin",
+        cfg.hfl.dataset.name(),
+        cfg.hfl.partition.describe(),
+        cfg.topology.devices,
+        cfg.hfl.threshold_time as u64,
+        cfg.agent.npca,
+    )))?;
+    let mut w = CsvWriter::create(
+        format!("{dir}/{}.csv", cfg.hfl.dataset.name()),
+        &["episode", "reward", "accuracy", "energy_per_device_mah",
+          "rounds", "policy_loss", "value_loss", "entropy"],
+    )?;
+    for l in &logs {
+        w.row_mixed(
+            &l.episode.to_string(),
+            &[l.reward, l.final_accuracy, l.avg_energy,
+              l.rounds as f64, l.policy_loss, l.value_loss, l.entropy],
+        )?;
+    }
+    w.flush()?;
+    let rewards: Vec<f64> = logs.iter().map(|l| l.reward).collect();
+    let accs: Vec<f64> = logs.iter().map(|l| l.final_accuracy).collect();
+    println!(
+        "Fig.7 summary ({}): reward first->last {:.2} -> {:.2} (ema), acc {:.3} -> {:.3}",
+        cfg.hfl.dataset.name(),
+        rewards.first().copied().unwrap_or(0.0),
+        stats::ema(&rewards, 0.3).last().copied().unwrap_or(0.0),
+        accs.first().copied().unwrap_or(0.0),
+        accs.last().copied().unwrap_or(0.0),
+    );
+    // Theorem 1 diagnostic: bound of the executed frequency extremes.
+    let b = crate::agent::convergence_bound(&crate::agent::bound::BoundParams {
+        gamma1_max: cfg.hfl.gamma1_max as f64,
+        gamma2_max: cfg.hfl.gamma2_max as f64,
+        m_edges: cfg.topology.edges as f64,
+        n_devices: cfg.topology.devices as f64,
+        eta: 0.003,
+        smooth_l: 1.0,
+        sigma2: 1.0,
+        grad_norm2: 1.0,
+    });
+    println!("  Theorem-1 one-round bound at (γ̃1,γ̃2)=({},{}): {b:.5} (<0 ⇒ descent)",
+             cfg.hfl.gamma1_max, cfg.hfl.gamma2_max);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Fig. 8 — time-to-accuracy across all schemes
+// ---------------------------------------------------------------------
+
+const FIG8_SCHEMES: &[&str] = &[
+    "vanilla-fl", "vanilla-hfl", "favor", "share", "hwamei", "arena",
+];
+
+fn fig8(cfg: &ExperimentConfig) -> Result<()> {
+    let cfg = scaled(cfg);
+    let dir = out_dir("fig8");
+    println!(
+        "Fig.8 ({}): time-accuracy curves, T={}s",
+        cfg.hfl.dataset.name(),
+        cfg.hfl.threshold_time
+    );
+    let mut results = Vec::new();
+    for scheme in FIG8_SCHEMES {
+        let h = scheme_history(scheme, &cfg)?;
+        h.write_csv(&format!("{dir}/{scheme}.csv"), scheme)?;
+        println!(
+            "  {scheme:<12} final acc {:.3} at t={:.0}s",
+            h.final_accuracy(),
+            h.total_time()
+        );
+        results.push((scheme.to_string(), h));
+    }
+    // Time-to-target: target = 95% of Arena's best accuracy.
+    let arena_best = results
+        .iter()
+        .find(|(s, _)| s == "arena")
+        .map(|(_, h)| h.best_accuracy())
+        .unwrap_or(0.5);
+    let target = 0.95 * arena_best;
+    println!("  time to reach {target:.3} accuracy:");
+    let arena_t = results
+        .iter()
+        .find(|(s, _)| s == "arena")
+        .and_then(|(_, h)| h.time_to_accuracy(target));
+    for (s, h) in &results {
+        match h.time_to_accuracy(target) {
+            Some(t) => {
+                let saving = arena_t
+                    .map(|at| format!(" (arena saves {:.1}%)",
+                                      100.0 * (1.0 - at / t)))
+                    .unwrap_or_default();
+                println!("    {s:<12} {t:>8.0}s{saving}");
+            }
+            None => println!("    {s:<12} never"),
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Fig. 9 — accuracy & energy at different threshold times
+// ---------------------------------------------------------------------
+
+fn fig9(cfg: &ExperimentConfig) -> Result<()> {
+    let cfg = scaled(cfg);
+    let dir = out_dir("fig9");
+    let fracs = [0.7, 0.8, 0.9, 1.0];
+    let mut w = CsvWriter::create(
+        format!("{dir}/{}.csv", cfg.hfl.dataset.name()),
+        &["scheme", "threshold_s", "accuracy", "energy_per_device_mah"],
+    )?;
+    println!(
+        "Fig.9 ({}): accuracy/energy at threshold times",
+        cfg.hfl.dataset.name()
+    );
+    for scheme in FIG8_SCHEMES {
+        let h = scheme_history(scheme, &cfg)?;
+        for &f in &fracs {
+            let t = f * cfg.hfl.threshold_time;
+            let (acc, energy) = h.at_time(t);
+            let e_dev = energy / cfg.topology.devices as f64;
+            println!(
+                "  {scheme:<12} T={t:>6.0}s  acc {acc:.3}  energy/dev {e_dev:.1} mAh"
+            );
+            w.row(&[
+                scheme.to_string(),
+                format!("{t:.0}"),
+                format!("{acc:.4}"),
+                format!("{e_dev:.2}"),
+            ])?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Fig. 10 — non-IID distribution visualizations
+// ---------------------------------------------------------------------
+
+fn fig10(cfg: &ExperimentConfig) -> Result<()> {
+    let dir = out_dir("fig10");
+    let mut rng = Rng::new(cfg.seed);
+    println!("Fig.10: per-device class distributions");
+    for (name, scheme) in [
+        ("label2", Partition::LabelSkew { labels: 2 }),
+        ("label5", Partition::LabelSkew { labels: 5 }),
+        ("dirichlet0.5", Partition::Dirichlet { alpha: 0.5 }),
+        ("iid", Partition::Iid),
+    ] {
+        let parts = crate::data::partition_labels(
+            scheme,
+            cfg.topology.devices,
+            cfg.hfl.samples_per_device,
+            10,
+            &mut rng,
+        );
+        let mat = crate::data::partition::distribution_matrix(&parts, 10);
+        let mut w = CsvWriter::create(
+            format!("{dir}/{name}.csv"),
+            &["device", "c0", "c1", "c2", "c3", "c4", "c5", "c6", "c7",
+              "c8", "c9"],
+        )?;
+        for (d, row) in mat.iter().enumerate() {
+            let nums: Vec<f64> = row.iter().map(|&c| c as f64).collect();
+            w.row_mixed(&d.to_string(), &nums)?;
+        }
+        w.flush()?;
+        let ent = crate::data::partition::mean_label_entropy(&parts, 10);
+        println!("  {name:<13} mean label entropy {ent:.2} bits");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Fig. 11 — accuracy & energy under different non-IID levels
+// ---------------------------------------------------------------------
+
+fn fig11(cfg: &ExperimentConfig) -> Result<()> {
+    let base = scaled(cfg);
+    let dir = out_dir("fig11");
+    let mut w = CsvWriter::create(
+        format!("{dir}/{}.csv", base.hfl.dataset.name()),
+        &["partition", "scheme", "accuracy", "energy_per_device_mah"],
+    )?;
+    println!(
+        "Fig.11 ({}): schemes under IID / label / Dirichlet non-IID",
+        base.hfl.dataset.name()
+    );
+    for (pname, part) in [
+        ("iid", Partition::Iid),
+        ("label2", Partition::LabelSkew { labels: 2 }),
+        ("dirichlet0.5", Partition::Dirichlet { alpha: 0.5 }),
+    ] {
+        let mut cfg = base.clone();
+        cfg.hfl.partition = part;
+        for scheme in ["vanilla-fl", "vanilla-hfl", "share", "arena"] {
+            let h = scheme_history(scheme, &cfg)?;
+            let e_dev = h.total_energy() / cfg.topology.devices as f64;
+            println!(
+                "  {pname:<13} {scheme:<12} acc {:.3}  energy/dev {e_dev:.1} mAh",
+                h.final_accuracy()
+            );
+            w.row(&[
+                pname.to_string(),
+                scheme.to_string(),
+                format!("{:.4}", h.final_accuracy()),
+                format!("{e_dev:.2}"),
+            ])?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Fig. 12 — impact of the PCA state dimension
+// ---------------------------------------------------------------------
+
+fn fig12(cfg: &ExperimentConfig) -> Result<()> {
+    let base = scaled(cfg);
+    let dir = out_dir("fig12");
+    let mut w = CsvWriter::create(
+        format!("{dir}/{}.csv", base.hfl.dataset.name()),
+        &["npca", "accuracy", "energy_per_device_mah"],
+    )?;
+    println!(
+        "Fig.12 ({}): Arena accuracy vs n_PCA",
+        base.hfl.dataset.name()
+    );
+    for npca in [2usize, 6, 10] {
+        let mut cfg = base.clone();
+        cfg.agent.npca = npca;
+        let mut e = HflEngine::new(cfg.clone(), true)?;
+        let t = trained_agent(
+            &mut e,
+            &ArenaOptions::arena(cfg.agent.episodes),
+            "shared",
+        )?;
+        let h = run_arena_policy(&mut e, &t.agent, &t.sb, true)?;
+        let e_dev = h.total_energy() / cfg.topology.devices as f64;
+        println!(
+            "  n_PCA={npca:<3} acc {:.3}  energy/dev {e_dev:.1} mAh",
+            h.final_accuracy()
+        );
+        w.row_mixed(&npca.to_string(), &[h.final_accuracy(), e_dev])?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Table 1 — profiling module (cluster vs non-cluster)
+// ---------------------------------------------------------------------
+
+fn table1(cfg: &ExperimentConfig) -> Result<()> {
+    let cfg = scaled(cfg);
+    let dir = out_dir("table1");
+    let fracs = [0.7, 0.8, 0.9, 1.0];
+    let mut w = CsvWriter::create(
+        format!("{dir}/{}.csv", cfg.hfl.dataset.name()),
+        &["variant", "threshold_s", "accuracy", "energy_per_device_mah"],
+    )?;
+    println!(
+        "Table 1 ({}): Arena with vs without the profiling module",
+        cfg.hfl.dataset.name()
+    );
+    for (variant, profiled) in [("cluster", true), ("non-cluster", false)] {
+        let mut e = HflEngine::new(cfg.clone(), profiled)?;
+        let t = trained_agent(
+            &mut e,
+            &ArenaOptions::arena(cfg.agent.episodes),
+            "shared", // profiling flag is part of the cache key
+        )?;
+        let h = run_arena_policy(&mut e, &t.agent, &t.sb, true)?;
+        for &f in &fracs {
+            let tt = f * cfg.hfl.threshold_time;
+            let (acc, energy) = h.at_time(tt);
+            let e_dev = energy / cfg.topology.devices as f64;
+            println!(
+                "  {variant:<12} T={tt:>6.0}s  acc {acc:.3}  energy/dev {e_dev:.1} mAh"
+            );
+            w.row(&[
+                variant.to_string(),
+                format!("{tt:.0}"),
+                format!("{acc:.4}"),
+                format!("{e_dev:.2}"),
+            ])?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Table 2 — impact of the §3.6 enhancements (Arena vs Hwamei)
+// ---------------------------------------------------------------------
+
+fn table2(cfg: &ExperimentConfig) -> Result<()> {
+    let cfg = scaled(cfg);
+    let dir = out_dir("table2");
+    let mut w = CsvWriter::create(
+        format!("{dir}/{}.csv", cfg.hfl.dataset.name()),
+        &["variant", "accuracy", "energy_per_device_mah",
+          "episodes_to_converge"],
+    )?;
+    println!(
+        "Table 2 ({}): Arena vs Hwamei (enhancement ablation)",
+        cfg.hfl.dataset.name()
+    );
+    for (variant, opts) in [
+        ("arena", ArenaOptions::arena(cfg.agent.episodes)),
+        ("hwamei", ArenaOptions::hwamei(cfg.agent.episodes)),
+    ] {
+        let mut e = HflEngine::new(cfg.clone(), true)?;
+        let t = trained_agent(&mut e, &opts, "shared")?;
+        let h =
+            run_arena_policy(&mut e, &t.agent, &t.sb, opts.nearest_solution)?;
+        let e_dev = h.total_energy() / cfg.topology.devices as f64;
+        // Convergence episode: first episode whose reward EMA reaches 90%
+        // of the final EMA (n/a when the policy came from cache).
+        let conv = if t.logs.is_empty() {
+            "cached".to_string()
+        } else {
+            let rewards: Vec<f64> = t.logs.iter().map(|l| l.reward).collect();
+            let ema = stats::ema(&rewards, 0.3);
+            let last = ema.last().copied().unwrap_or(0.0);
+            ema.iter()
+                .position(|&r| (r - last).abs() <= 0.1 * last.abs().max(1e-9))
+                .unwrap_or(ema.len().saturating_sub(1))
+                .to_string()
+        };
+        println!(
+            "  {variant:<8} acc {:.3}  energy/dev {e_dev:.1} mAh  converged by episode {conv}",
+            h.final_accuracy()
+        );
+        w.row(&[
+            variant.to_string(),
+            format!("{:.4}", h.final_accuracy()),
+            format!("{e_dev:.2}"),
+            conv,
+        ])?;
+    }
+    w.flush()?;
+    Ok(())
+}

@@ -1,0 +1,4 @@
+//! Experiment harnesses: one per paper table/figure (see DESIGN.md §5).
+pub mod harness;
+
+pub use harness::{run_experiment, EXPERIMENTS};

@@ -1,0 +1,503 @@
+//! The HFL synchronization executor.
+
+use anyhow::{Context, Result};
+
+use crate::config::ExperimentConfig;
+use crate::pca::PcaModel;
+use crate::runtime::{pool::TrainJob, DevicePool, HostTensor, Runtime};
+use crate::sim::{EnergyModel, MobilityModel, NetworkModel, SimClock};
+use crate::util::rng::Rng;
+
+use super::metrics::{EdgeStats, RoundStats};
+use super::topology::{build_topology, Topology};
+
+pub struct HflEngine {
+    pub cfg: ExperimentConfig,
+    /// Main-thread runtime: eval / aggregate / pca_project artifacts.
+    pub rt: Runtime,
+    pool: DevicePool,
+    pub topo: Topology,
+    pub clock: SimClock,
+    pub energy_model: EnergyModel,
+    pub net: NetworkModel,
+    pub mobility: MobilityModel,
+    rng: Rng,
+    /// Flat model parameter count.
+    pub p: usize,
+    pub cloud_w: Vec<f32>,
+    pub edge_w: Vec<Vec<f32>>,
+    pub device_w: Vec<Vec<f32>>,
+    init_w: Vec<f32>,
+    test_x: HostTensor,
+    test_y: HostTensor,
+    pub round: usize,
+    pub total_energy: f64,
+    pub last_round: Option<RoundStats>,
+}
+
+impl HflEngine {
+    pub fn new(cfg: ExperimentConfig, use_profiling: bool) -> Result<Self> {
+        let mut rng = Rng::new(cfg.seed);
+        let ds = cfg.hfl.dataset.name();
+        let eval_art = format!("{ds}_eval");
+        let agg_art = format!("{ds}_aggregate");
+        let pca_art = format!("{ds}_pca_project");
+        let mut rt = Runtime::load(
+            &cfg.artifacts_dir,
+            &[eval_art.as_str(), agg_art.as_str(), pca_art.as_str()],
+        )?;
+        // Pre-compile any n_PCA ablation variants present in the manifest
+        // (pca_scores is &self and cannot compile lazily).
+        let variants: Vec<String> = rt
+            .manifest
+            .artifacts
+            .keys()
+            .filter(|k| k.starts_with(&format!("{pca_art}_npca")))
+            .cloned()
+            .collect();
+        for v in &variants {
+            rt.compile(v)?;
+        }
+        rt.manifest.validate_config(&cfg)?;
+        let topo = build_topology(&cfg, use_profiling, &mut rng)?;
+        let pool = DevicePool::new(
+            cfg.workers,
+            &cfg.artifacts_dir,
+            ds,
+            topo.shards.clone(),
+        )?;
+        let p = rt.manifest.param_count(ds)?;
+        let init_w = rt.load_init_params(ds)?;
+        // Test set, shaped for the eval artifact.
+        let ts = rt.manifest.config.test_size;
+        let (tx, ty) = topo.dataset.test_set(ts, cfg.seed ^ 0x7e57);
+        let [h, w_, c] = topo.dataset.shape();
+        let test_x = HostTensor::f32(vec![ts, h, w_, c], tx);
+        let test_y = HostTensor::i32(vec![ts], ty);
+        let m = cfg.topology.edges;
+        let n = cfg.topology.devices;
+        let energy_model =
+            EnergyModel::new(cfg.sim.power_idle, cfg.sim.power_max);
+        let net = NetworkModel::from_config(&cfg.sim);
+        let mobility = MobilityModel::disabled(n);
+        Ok(HflEngine {
+            p,
+            cloud_w: init_w.clone(),
+            edge_w: vec![init_w.clone(); m],
+            device_w: vec![init_w.clone(); n],
+            init_w,
+            test_x,
+            test_y,
+            rt,
+            pool,
+            topo,
+            clock: SimClock::new(),
+            energy_model,
+            net,
+            mobility,
+            rng,
+            round: 0,
+            total_energy: 0.0,
+            last_round: None,
+            cfg,
+        })
+    }
+
+    /// Reset models/clock/energy for a fresh run (new DRL episode or new
+    /// scheme comparison) while keeping data, clusters and CPU states.
+    pub fn reset(&mut self) {
+        self.cloud_w = self.init_w.clone();
+        for e in self.edge_w.iter_mut() {
+            e.clone_from(&self.init_w);
+        }
+        for d in self.device_w.iter_mut() {
+            d.clone_from(&self.init_w);
+        }
+        self.clock.reset();
+        self.round = 0;
+        self.total_energy = 0.0;
+        self.last_round = None;
+    }
+
+    pub fn edges(&self) -> usize {
+        self.cfg.topology.edges
+    }
+
+    pub fn remaining_time(&self) -> f64 {
+        self.cfg.hfl.threshold_time - self.clock.now()
+    }
+
+    /// Weighted aggregation (Eq. 1/2): through the fedavg_reduce Pallas
+    /// artifact by default, or natively in rust when
+    /// `cfg.native_aggregation` is set (§Perf: interpret-mode Pallas is
+    /// emulated on CPU; the native loop is the roofline there).
+    pub fn aggregate(
+        &self,
+        models: &[&[f32]],
+        weights: &[f32],
+    ) -> Result<Vec<f32>> {
+        if self.cfg.native_aggregation {
+            return Ok(aggregate_native(models, weights, self.p));
+        }
+        let nmax = self.rt.manifest.config.nmax;
+        anyhow::ensure!(
+            models.len() <= nmax && models.len() == weights.len(),
+            "aggregate: {} models vs nmax {nmax}",
+            models.len()
+        );
+        let mut flat = vec![0.0f32; nmax * self.p];
+        for (i, m) in models.iter().enumerate() {
+            anyhow::ensure!(m.len() == self.p, "model {i} wrong size");
+            flat[i * self.p..(i + 1) * self.p].copy_from_slice(m);
+        }
+        let mut w = vec![0.0f32; nmax];
+        w[..weights.len()].copy_from_slice(weights);
+        let art = format!("{}_aggregate", self.cfg.hfl.dataset.name());
+        let out = self.rt.execute(
+            &art,
+            &[
+                HostTensor::f32(vec![nmax, self.p], flat),
+                HostTensor::f32(vec![nmax], w),
+            ],
+        )?;
+        out.into_iter()
+            .next()
+            .context("aggregate produced no output")?
+            .into_f32()
+    }
+
+    /// Evaluate the cloud model on the held-out test set -> (acc, loss).
+    pub fn evaluate(&self) -> Result<(f64, f64)> {
+        self.evaluate_model(&self.cloud_w)
+    }
+
+    pub fn evaluate_model(&self, w: &[f32]) -> Result<(f64, f64)> {
+        let art = format!("{}_eval", self.cfg.hfl.dataset.name());
+        let out = self.rt.execute(
+            &art,
+            &[
+                HostTensor::f32(vec![self.p], w.to_vec()),
+                self.test_x.clone(),
+                self.test_y.clone(),
+            ],
+        )?;
+        let correct = out[0].scalar()?;
+        let loss = out[1].scalar()?;
+        let acc = correct / self.test_x.shape[0] as f64;
+        Ok((acc, loss))
+    }
+
+    /// Project [cloud; edges] models onto PCA loadings via the artifact.
+    pub fn pca_scores(&self, pca: &PcaModel) -> Result<Vec<Vec<f32>>> {
+        let m = self.edges();
+        let rows = m + 1;
+        let mut flat = Vec::with_capacity(rows * self.p);
+        flat.extend_from_slice(&self.cloud_w);
+        for e in &self.edge_w {
+            flat.extend_from_slice(e);
+        }
+        let npca = pca.npca;
+        let suffix = crate::agent::ppo::npca_suffix(
+            self.rt.manifest.config.npca,
+            npca,
+        );
+        let art =
+            format!("{}_pca_project{suffix}", self.cfg.hfl.dataset.name());
+        let out = self.rt.execute(
+            &art,
+            &[
+                HostTensor::f32(vec![rows, self.p], flat),
+                HostTensor::f32(vec![self.p, npca], pca.loadings.clone()),
+            ],
+        )?;
+        let scores = out
+            .into_iter()
+            .next()
+            .context("pca_project produced no output")?
+            .into_f32()?;
+        Ok(scores.chunks(npca).map(|c| c.to_vec()).collect())
+    }
+
+    /// Stack of current [cloud; edge] models (PCA fitting).
+    pub fn model_stack(&self) -> Vec<&[f32]> {
+        let mut v: Vec<&[f32]> = vec![&self.cloud_w];
+        v.extend(self.edge_w.iter().map(|e| e.as_slice()));
+        v
+    }
+
+    /// Execute one cloud round under per-edge frequencies.
+    /// `participation`: per-device mask (None = all mobility-active devices
+    /// train). Devices that skip keep their model and spend nothing.
+    pub fn run_round(
+        &mut self,
+        gamma1: &[usize],
+        gamma2: &[usize],
+        participation: Option<&[bool]>,
+    ) -> Result<RoundStats> {
+        let m = self.edges();
+        anyhow::ensure!(
+            gamma1.len() == m && gamma2.len() == m,
+            "need {m} per-edge frequencies"
+        );
+        let nb = self.rt.manifest.config.nb;
+        let mut per_edge = vec![EdgeStats::default(); m];
+        let mut round_energy = 0.0;
+        let mut train_loss_acc = 0.0;
+        let mut train_loss_n = 0.0;
+        let mut device_losses: Vec<(usize, f64)> = Vec::new();
+
+        let max_gamma2 = gamma2.iter().copied().max().unwrap_or(1).max(1);
+        let mut edge_sub_time = vec![0.0f64; m];
+
+        // Edge sub-rounds: all edges advance their own gamma2 schedule in
+        // parallel simulated time; real compute batches across edges per
+        // sub-round index to keep the worker pool full.
+        for sub in 0..max_gamma2 {
+            // Gather jobs for all edges still running sub-rounds.
+            let mut jobs = Vec::new();
+            let mut job_edges = Vec::new();
+            for (j, edge) in self.topo.edges.iter().enumerate() {
+                if sub >= gamma2[j] {
+                    continue;
+                }
+                for &dev in &edge.members {
+                    if !self.mobility.is_active(dev) {
+                        continue;
+                    }
+                    if let Some(mask) = participation {
+                        if !mask[dev] {
+                            continue;
+                        }
+                    }
+                    jobs.push(TrainJob {
+                        device: dev,
+                        w: self.device_w[dev].clone(),
+                        epochs: gamma1[j],
+                        seed: self
+                            .rng
+                            .fork(((self.round as u64) << 20) ^ dev as u64)
+                            .next_u64(),
+                    });
+                    job_edges.push(j);
+                }
+            }
+            if jobs.is_empty() {
+                continue;
+            }
+            // Real compute: parallel local training.
+            let results = self.pool.train(jobs)?;
+            // Simulated time/energy per device + apply new weights.
+            let mut sub_slowest = vec![0.0f64; m];
+            for (res, &j) in results.iter().zip(&job_edges) {
+                let dev = res.device;
+                let cpu = &mut self.topo.cpus[dev];
+                let mut t_dev = 0.0;
+                let mut e_dev = 0.0;
+                for _ in 0..res.losses.len() {
+                    cpu.step_usage();
+                    for _ in 0..nb {
+                        let t = cpu.sgd_time();
+                        t_dev += t;
+                        e_dev += self.energy_model.sgd_energy(cpu, t);
+                    }
+                }
+                per_edge[j].energy += e_dev;
+                round_energy += e_dev;
+                per_edge[j].active += 1;
+                if t_dev > sub_slowest[j] {
+                    sub_slowest[j] = t_dev;
+                }
+                if t_dev > per_edge[j].t_sgd_slowest {
+                    per_edge[j].t_sgd_slowest = t_dev;
+                }
+                if let Some(&loss) = res.losses.last() {
+                    train_loss_acc += loss;
+                    train_loss_n += 1.0;
+                    device_losses.push((dev, loss));
+                }
+            }
+            for res in results {
+                self.device_w[res.device] = res.w;
+            }
+            // Edge aggregations for the edges that trained this sub-round.
+            for j in 0..m {
+                if sub >= gamma2[j] || per_edge[j].active == 0 {
+                    continue;
+                }
+                let members = &self.topo.edges[j].members;
+                let mut models = Vec::new();
+                let mut weights = Vec::new();
+                for &dev in members {
+                    let trained = self.mobility.is_active(dev)
+                        && participation.map(|p| p[dev]).unwrap_or(true);
+                    if trained {
+                        models.push(self.device_w[dev].as_slice());
+                        weights.push(self.topo.shards[dev].n as f32);
+                    }
+                }
+                if models.is_empty() {
+                    continue;
+                }
+                let agg = self.aggregate(&models, &weights)?;
+                // Broadcast back to the cluster's devices.
+                for &dev in members {
+                    self.device_w[dev].clone_from(&agg);
+                }
+                self.edge_w[j] = agg;
+                edge_sub_time[j] += sub_slowest[j];
+            }
+        }
+
+        // Edge -> cloud communication (straggler path per edge).
+        let pbytes = crate::sim::network::model_bytes(self.p);
+        for (j, edge) in self.topo.edges.iter().enumerate() {
+            let t_ec = self.net.comm_time(edge.region, pbytes, &mut self.rng);
+            per_edge[j].t_ec = t_ec;
+            per_edge[j].total_time = edge_sub_time[j] + t_ec;
+        }
+
+        // Cloud aggregation over edge models, weighted by cluster data.
+        let mut models = Vec::new();
+        let mut weights = Vec::new();
+        for (j, edge) in self.topo.edges.iter().enumerate() {
+            if per_edge[j].active == 0 {
+                continue;
+            }
+            models.push(self.edge_w[j].as_slice());
+            weights.push(
+                edge.members
+                    .iter()
+                    .map(|&d| self.topo.shards[d].n as f32)
+                    .sum(),
+            );
+            let _ = edge;
+        }
+        if !models.is_empty() {
+            self.cloud_w = self.aggregate(&models, &weights)?;
+        }
+        // Broadcast global model everywhere (next round starts from w(k+1)).
+        for e in self.edge_w.iter_mut() {
+            e.clone_from(&self.cloud_w);
+        }
+        for d in self.device_w.iter_mut() {
+            d.clone_from(&self.cloud_w);
+        }
+
+        let round_time = per_edge
+            .iter()
+            .map(|e| e.total_time)
+            .fold(0.0, f64::max);
+        self.clock.advance(round_time);
+        self.round += 1;
+        self.total_energy += round_energy;
+        self.mobility.step();
+
+        let (accuracy, test_loss) = self.evaluate()?;
+        let stats = RoundStats {
+            k: self.round,
+            accuracy,
+            test_loss,
+            train_loss: if train_loss_n > 0.0 {
+                train_loss_acc / train_loss_n
+            } else {
+                0.0
+            },
+            round_time,
+            sim_now: self.clock.now(),
+            per_edge,
+            energy: round_energy,
+            gamma1: gamma1.to_vec(),
+            gamma2: gamma2.to_vec(),
+            device_losses,
+        };
+        self.last_round = Some(stats.clone());
+        Ok(stats)
+    }
+
+    /// Native weighted aggregation — the CPU roofline reference for the
+    /// fedavg_reduce kernel (A/B'd in benches/aggregation.rs).
+    pub fn aggregate_native_ref(
+        &self,
+        models: &[&[f32]],
+        weights: &[f32],
+    ) -> Vec<f32> {
+        aggregate_native(models, weights, self.p)
+    }
+
+    /// Expected duration of edge `j`'s part of a round under (γ1, γ2) —
+    /// the time model behind the agent's feasible-action projection (§3.6).
+    pub fn predict_edge_time(
+        &self,
+        j: usize,
+        gamma1: usize,
+        gamma2: usize,
+    ) -> f64 {
+        let nb = self.rt.manifest.config.nb;
+        let pbytes = crate::sim::network::model_bytes(self.p);
+        let edge = &self.topo.edges[j];
+        // Slowest member's expected per-batch time.
+        let slow = edge
+            .members
+            .iter()
+            .map(|&d| {
+                let c = &self.topo.cpus[d];
+                c.base_time * c.slowdown()
+            })
+            .fold(0.0, f64::max);
+        slow * (nb * gamma1 * gamma2) as f64
+            + 2.0 * self.net.mean_comm_time(edge.region, pbytes)
+    }
+
+    /// Expected duration of a whole round (straggler edge).
+    pub fn predict_round_time(
+        &self,
+        gamma1: &[usize],
+        gamma2: &[usize],
+    ) -> f64 {
+        (0..self.edges())
+            .map(|j| self.predict_edge_time(j, gamma1[j], gamma2[j]))
+            .fold(0.0, f64::max)
+    }
+}
+
+/// sum_i w_i m_i / sum_i w_i over flat models, native rust.
+fn aggregate_native(models: &[&[f32]], weights: &[f32], p: usize) -> Vec<f32> {
+    let wsum: f32 = weights.iter().sum();
+    let mut out = vec![0.0f32; p];
+    for (m, &w) in models.iter().zip(weights) {
+        if w == 0.0 {
+            continue;
+        }
+        for (o, &x) in out.iter_mut().zip(*m) {
+            *o += w * x;
+        }
+    }
+    let inv = 1.0 / wsum;
+    for o in out.iter_mut() {
+        *o *= inv;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn native_aggregation_matches_formula() {
+        let a = vec![1.0f32; 8];
+        let b = vec![5.0f32; 8];
+        let out = super::aggregate_native(&[&a, &b], &[1.0, 3.0], 8);
+        for v in out {
+            assert!((v - 4.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn native_aggregation_skips_zero_weights() {
+        let a = vec![2.0f32; 4];
+        let b = vec![999.0f32; 4];
+        let out = super::aggregate_native(&[&a, &b], &[2.0, 0.0], 4);
+        for v in out {
+            assert!((v - 2.0).abs() < 1e-6);
+        }
+    }
+}

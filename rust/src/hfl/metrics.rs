@@ -1,0 +1,188 @@
+//! Round/run metrics: everything the DRL state (paper Eq. 7-9), the reward
+//! (Eq. 11) and the experiment harnesses need.
+
+use crate::util::csv::CsvWriter;
+use crate::util::json::Json;
+
+/// Per-edge observables h_j(k) of paper Eq. (7), plus bookkeeping.
+#[derive(Clone, Debug, Default)]
+pub struct EdgeStats {
+    /// Local SGD time of the slowest device under this edge (T_j^SGD).
+    pub t_sgd_slowest: f64,
+    /// Edge→cloud communication time (T_j^ec).
+    pub t_ec: f64,
+    /// Device energy consumed under this edge this round, mAh (E_j).
+    pub energy: f64,
+    /// Active devices that trained this round.
+    pub active: usize,
+    /// Wall (simulated) time this edge needed for the whole round.
+    pub total_time: f64,
+}
+
+/// One cloud-aggregation round.
+#[derive(Clone, Debug)]
+pub struct RoundStats {
+    pub k: usize,
+    /// Test accuracy after the round's cloud aggregation (A_test(k)).
+    pub accuracy: f64,
+    pub test_loss: f64,
+    pub train_loss: f64,
+    /// Straggler-path simulated duration of the round (T_use(k)).
+    pub round_time: f64,
+    /// Simulated clock after the round.
+    pub sim_now: f64,
+    pub per_edge: Vec<EdgeStats>,
+    /// Total device energy this round, mAh (E(k)).
+    pub energy: f64,
+    /// Frequencies that were executed.
+    pub gamma1: Vec<usize>,
+    pub gamma2: Vec<usize>,
+    /// (device, last-epoch mean loss) for every device that trained.
+    pub device_losses: Vec<(usize, f64)>,
+}
+
+impl RoundStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("k", Json::num(self.k as f64)),
+            ("accuracy", Json::num(self.accuracy)),
+            ("test_loss", Json::num(self.test_loss)),
+            ("train_loss", Json::num(self.train_loss)),
+            ("round_time", Json::num(self.round_time)),
+            ("sim_now", Json::num(self.sim_now)),
+            ("energy", Json::num(self.energy)),
+            (
+                "gamma1",
+                Json::arr_f64(
+                    &self.gamma1.iter().map(|&g| g as f64).collect::<Vec<_>>(),
+                ),
+            ),
+            (
+                "gamma2",
+                Json::arr_f64(
+                    &self.gamma2.iter().map(|&g| g as f64).collect::<Vec<_>>(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// A whole training run (one scheme, one threshold time).
+#[derive(Clone, Debug, Default)]
+pub struct RunHistory {
+    pub rounds: Vec<RoundStats>,
+}
+
+impl RunHistory {
+    pub fn push(&mut self, r: RoundStats) {
+        self.rounds.push(r);
+    }
+
+    pub fn final_accuracy(&self) -> f64 {
+        self.rounds.last().map(|r| r.accuracy).unwrap_or(0.0)
+    }
+
+    pub fn best_accuracy(&self) -> f64 {
+        self.rounds
+            .iter()
+            .map(|r| r.accuracy)
+            .fold(0.0, f64::max)
+    }
+
+    pub fn total_energy(&self) -> f64 {
+        self.rounds.iter().map(|r| r.energy).sum()
+    }
+
+    pub fn total_time(&self) -> f64 {
+        self.rounds.last().map(|r| r.sim_now).unwrap_or(0.0)
+    }
+
+    /// Accuracy and cumulative energy at simulated time `t` (the state at
+    /// the last round completing before `t`). Lets one long run serve every
+    /// threshold-time column of Fig. 9 / Table 1.
+    pub fn at_time(&self, t: f64) -> (f64, f64) {
+        let mut acc = 0.0;
+        let mut energy = 0.0;
+        for r in &self.rounds {
+            if r.sim_now > t {
+                break;
+            }
+            acc = r.accuracy;
+            energy += r.energy;
+        }
+        (acc, energy)
+    }
+
+    /// First simulated time at which accuracy reached `target` (None if
+    /// never).
+    pub fn time_to_accuracy(&self, target: f64) -> Option<f64> {
+        self.rounds
+            .iter()
+            .find(|r| r.accuracy >= target)
+            .map(|r| r.sim_now)
+    }
+
+    /// Write the (time, accuracy, energy) series to CSV.
+    pub fn write_csv(&self, path: &str, label: &str) -> std::io::Result<()> {
+        let mut w = CsvWriter::create(
+            path,
+            &["scheme", "k", "sim_time", "accuracy", "round_energy",
+              "cum_energy", "train_loss"],
+        )?;
+        let mut cum = 0.0;
+        for r in &self.rounds {
+            cum += r.energy;
+            w.row(&[
+                label.to_string(),
+                r.k.to_string(),
+                format!("{:.2}", r.sim_now),
+                format!("{:.4}", r.accuracy),
+                format!("{:.3}", r.energy),
+                format!("{cum:.3}"),
+                format!("{:.4}", r.train_loss),
+            ])?;
+        }
+        w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round(k: usize, acc: f64, t: f64, e: f64) -> RoundStats {
+        RoundStats {
+            k,
+            accuracy: acc,
+            test_loss: 1.0,
+            train_loss: 1.0,
+            round_time: t,
+            sim_now: t * k as f64,
+            per_edge: vec![],
+            energy: e,
+            gamma1: vec![5],
+            gamma2: vec![4],
+            device_losses: vec![],
+        }
+    }
+
+    #[test]
+    fn history_aggregates() {
+        let mut h = RunHistory::default();
+        h.push(round(1, 0.3, 100.0, 10.0));
+        h.push(round(2, 0.6, 100.0, 12.0));
+        h.push(round(3, 0.55, 100.0, 9.0));
+        assert_eq!(h.final_accuracy(), 0.55);
+        assert_eq!(h.best_accuracy(), 0.6);
+        assert!((h.total_energy() - 31.0).abs() < 1e-12);
+        assert_eq!(h.time_to_accuracy(0.5), Some(200.0));
+        assert_eq!(h.time_to_accuracy(0.9), None);
+    }
+
+    #[test]
+    fn round_json_has_fields() {
+        let j = round(2, 0.5, 10.0, 1.0).to_json();
+        assert_eq!(j.get("k").unwrap().as_usize().unwrap(), 2);
+        assert!(j.get("gamma1").unwrap().as_arr().is_some());
+    }
+}

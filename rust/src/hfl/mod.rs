@@ -1,0 +1,18 @@
+//! The HFL core: cloud/edge/device hierarchy and the synchronization
+//! executor (paper §2.1 Eqs. 1-2, §3.5 workflow).
+//!
+//! `HflEngine::run_round(gamma1, gamma2, participation)` executes one cloud
+//! aggregation round under per-edge frequencies: every active device runs
+//! γ1ʲ real local epochs (through the AOT train_epoch artifact, fanned over
+//! the worker pool), the edge aggregates after each (fedavg_reduce Pallas
+//! kernel), γ2ʲ edge aggregations later the cloud aggregates all edges and
+//! evaluates. Simulated time advances by the straggler path; energy is
+//! accounted per device from the Fig. 3-calibrated models.
+
+pub mod engine;
+pub mod metrics;
+pub mod topology;
+
+pub use engine::HflEngine;
+pub use metrics::{EdgeStats, RoundStats, RunHistory};
+pub use topology::{build_topology, Edge, Topology};

@@ -1,0 +1,255 @@
+//! Topology construction: regions, CPU heterogeneity classes, data shards,
+//! and the device→edge map (profiled/clustered or naive round-robin for
+//! the Table 1 ablation).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::cluster::{profile_devices, profiling::profile_device};
+use crate::config::ExperimentConfig;
+use crate::data::{partition_labels, synthetic::DeviceShard, SyntheticDataset};
+use crate::sim::{CpuModel, EnergyModel, Region};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Edge {
+    pub id: usize,
+    pub region: Region,
+    pub members: Vec<usize>,
+}
+
+pub struct Topology {
+    pub edges: Vec<Edge>,
+    pub device_regions: Vec<Region>,
+    pub cpus: Vec<CpuModel>,
+    pub shards: Arc<Vec<DeviceShard>>,
+    pub dataset: SyntheticDataset,
+    /// Whether the profiling module (clustering) was used.
+    pub profiled: bool,
+}
+
+impl Topology {
+    pub fn edge_of(&self, device: usize) -> usize {
+        self.edges
+            .iter()
+            .position(|e| e.members.contains(&device))
+            .expect("device not in any edge")
+    }
+
+    /// Re-assign `device -> edge` mapping (used by Share and re-clustering).
+    pub fn set_assignment(&mut self, assignment: &[usize]) {
+        for e in self.edges.iter_mut() {
+            e.members.clear();
+        }
+        for (dev, &edge) in assignment.iter().enumerate() {
+            self.edges[edge].members.push(dev);
+        }
+    }
+}
+
+/// Build the full device population per the experiment config.
+/// `use_profiling = false` keeps the naive (round-robin within region)
+/// assignment — the Table 1 "non-Cluster" ablation.
+pub fn build_topology(
+    cfg: &ExperimentConfig,
+    use_profiling: bool,
+    rng: &mut Rng,
+) -> Result<Topology> {
+    let n = cfg.topology.devices;
+    let m = cfg.topology.edges;
+    let n_cn_edges =
+        ((m as f64) * cfg.topology.cn_fraction).round() as usize;
+    let edge_regions: Vec<Region> = (0..m)
+        .map(|j| if j < n_cn_edges { Region::Cn } else { Region::Us })
+        .collect();
+    // Devices proportionally split by region, preserving equal edge sizes.
+    let per_edge = n / m;
+    let mut device_regions = Vec::with_capacity(n);
+    for j in 0..m {
+        for _ in 0..per_edge {
+            device_regions.push(edge_regions[j]);
+        }
+    }
+
+    // CPU heterogeneity: paper classes 10%..50%, n/5 devices per class,
+    // placed randomly across the population (shuffled so class membership
+    // is independent of region / naive edge striping).
+    let energy = EnergyModel::new(cfg.sim.power_idle, cfg.sim.power_max);
+    let mut classes: Vec<usize> = (0..n).map(|i| i % 5).collect();
+    rng.shuffle(&mut classes);
+    let mut cpus: Vec<CpuModel> = (0..n)
+        .map(|i| {
+            CpuModel::new(
+                CpuModel::paper_class(classes[i]),
+                cfg.sim.sgd_base_time,
+                cfg.sim.cpu_kappa,
+                cfg.sim.time_jitter,
+                rng.fork(0x0c9 + i as u64),
+            )
+        })
+        .collect();
+
+    // Data shards.
+    let dataset = SyntheticDataset::new(cfg.hfl.dataset, cfg.seed);
+    let parts = partition_labels(
+        cfg.hfl.partition,
+        n,
+        cfg.hfl.samples_per_device,
+        dataset.classes,
+        rng,
+    );
+    let shards: Vec<DeviceShard> = parts
+        .iter()
+        .enumerate()
+        .map(|(i, labels)| {
+            DeviceShard::build(&dataset, labels, &mut rng.fork(0xda7a + i as u64))
+        })
+        .collect();
+
+    // Device -> edge assignment.
+    let assignment: Vec<usize> = if use_profiling {
+        let profiles: Vec<_> = cpus
+            .iter_mut()
+            .map(|c| profile_device(c, &energy, 30))
+            .collect();
+        let out =
+            profile_devices(profiles, &device_regions, &edge_regions, rng);
+        out.assignment
+    } else {
+        // Naive: round-robin across the region's edges.
+        let mut next: std::collections::HashMap<Region, usize> =
+            Default::default();
+        (0..n)
+            .map(|i| {
+                let r = device_regions[i];
+                let region_edges: Vec<usize> = (0..m)
+                    .filter(|&j| edge_regions[j] == r)
+                    .collect();
+                let k = next.entry(r).or_insert(0);
+                let e = region_edges[*k % region_edges.len()];
+                *k += 1;
+                e
+            })
+            .collect()
+    };
+
+    let mut edges: Vec<Edge> = (0..m)
+        .map(|j| Edge {
+            id: j,
+            region: edge_regions[j],
+            members: Vec::new(),
+        })
+        .collect();
+    for (dev, &e) in assignment.iter().enumerate() {
+        edges[e].members.push(dev);
+    }
+    for e in &edges {
+        anyhow::ensure!(
+            !e.members.is_empty(),
+            "edge {} ended up empty",
+            e.id
+        );
+        anyhow::ensure!(
+            e.members.len() <= cfg.topology.nmax,
+            "edge {} has {} members > nmax {}",
+            e.id,
+            e.members.len(),
+            cfg.topology.nmax
+        );
+    }
+
+    Ok(Topology {
+        edges,
+        device_regions,
+        cpus,
+        shards: Arc::new(shards),
+        dataset,
+        profiled: use_profiling,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::mnist();
+        cfg.topology.devices = 20;
+        cfg.topology.edges = 5;
+        cfg.hfl.samples_per_device = 16;
+        cfg
+    }
+
+    #[test]
+    fn builds_valid_topology_with_profiling() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(1);
+        let t = build_topology(&cfg, true, &mut rng).unwrap();
+        let total: usize = t.edges.iter().map(|e| e.members.len()).sum();
+        assert_eq!(total, 20);
+        // Region constraint: every member's region matches its edge's.
+        for e in &t.edges {
+            for &d in &e.members {
+                assert_eq!(t.device_regions[d], e.region);
+            }
+        }
+    }
+
+    #[test]
+    fn builds_valid_topology_naive() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(2);
+        let t = build_topology(&cfg, false, &mut rng).unwrap();
+        for e in &t.edges {
+            assert_eq!(e.members.len(), 4); // perfectly balanced
+        }
+    }
+
+    #[test]
+    fn profiled_clusters_group_similar_speeds() {
+        // With 5 interference classes and 5 same-region edges, profiling
+        // should produce edges with lower within-edge usage spread than the
+        // naive striping (which mixes all classes into every edge).
+        let mut cfg = tiny_cfg();
+        cfg.topology.devices = 50;
+        cfg.topology.edges = 5;
+        cfg.topology.cn_fraction = 1.0; // single region isolates clustering
+        let mut rng = Rng::new(3);
+        let spread = |t: &Topology| -> f64 {
+            t.edges
+                .iter()
+                .map(|e| {
+                    let us: Vec<f64> = e
+                        .members
+                        .iter()
+                        .map(|&d| t.cpus[d].base_usage)
+                        .collect();
+                    crate::util::stats::std(&us)
+                })
+                .sum::<f64>()
+                / t.edges.len() as f64
+        };
+        let prof = build_topology(&cfg, true, &mut rng).unwrap();
+        let naive = build_topology(&cfg, false, &mut rng).unwrap();
+        assert!(
+            spread(&prof) < spread(&naive) * 0.8,
+            "profiled {} vs naive {}",
+            spread(&prof),
+            spread(&naive)
+        );
+    }
+
+    #[test]
+    fn set_assignment_moves_devices() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(4);
+        let mut t = build_topology(&cfg, false, &mut rng).unwrap();
+        let n = cfg.topology.devices;
+        let assignment: Vec<usize> = (0..n).map(|i| i % 5).collect();
+        t.set_assignment(&assignment);
+        for (dev, &e) in assignment.iter().enumerate() {
+            assert!(t.edges[e].members.contains(&dev));
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! # Arena: learning-based synchronization for hierarchical federated learning
+//!
+//! A rust + JAX + Pallas reproduction of *"Arena: A Learning-based
+//! Synchronization Scheme for Hierarchical Federated Learning"* (Qi et al.,
+//! cs.DC 2023). The rust coordinator owns the HFL hierarchy, the testbed
+//! simulation and the PPO control loop; all tensor compute (device SGD,
+//! aggregation, PCA projection, PPO updates) runs through AOT-lowered
+//! XLA artifacts built once by `python/compile/aot.py` and executed via
+//! PJRT — python is never on the hot path.
+//!
+//! See DESIGN.md for the full module map and per-figure experiment index.
+
+pub mod baselines;
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod data;
+pub mod exp;
+pub mod hfl;
+pub mod linalg;
+pub mod nn;
+pub mod pca;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+pub mod agent;
+
+pub use config::ExperimentConfig;

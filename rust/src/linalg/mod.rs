@@ -1,0 +1,266 @@
+//! Small dense linear algebra: just enough for the Gram-trick PCA fit
+//! (R x R symmetric eigenproblem with R = M+1 ≈ 6) and the clustering
+//! distance math. Deliberately simple — all heavy lifting at scale P runs
+//! through the Pallas artifacts.
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f64>>) -> Self {
+        let r = rows.len();
+        let c = if r == 0 { 0 } else { rows[0].len() };
+        let mut data = Vec::with_capacity(r * c);
+        for row in &rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Mat { rows: r, cols: c, data }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// self * other.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows);
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..other.cols {
+                    out[(i, j)] += a * other[(k, j)];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    /// Gram matrix self * self^T (rows x rows).
+    pub fn gram(&self) -> Mat {
+        let mut g = Mat::zeros(self.rows, self.rows);
+        for i in 0..self.rows {
+            for j in i..self.rows {
+                let mut acc = 0.0;
+                let (ri, rj) = (self.row(i), self.row(j));
+                for k in 0..self.cols {
+                    acc += ri[k] * rj[k];
+                }
+                g[(i, j)] = acc;
+                g[(j, i)] = acc;
+            }
+        }
+        g
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Eigen-decomposition of a symmetric matrix by the cyclic Jacobi method.
+/// Returns (eigenvalues desc, eigenvectors as columns, in matching order).
+pub fn jacobi_eigen(a: &Mat, max_sweeps: usize) -> (Vec<f64>, Mat) {
+    assert_eq!(a.rows, a.cols, "jacobi needs a square matrix");
+    let n = a.rows;
+    let mut m = a.clone();
+    let mut v = Mat::identity(n);
+    for _ in 0..max_sweeps {
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        if off.sqrt() < 1e-12 {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                if apq.abs() < 1e-15 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                let theta = 0.5 * (aqq - app) / apq;
+                let t = theta.signum()
+                    / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Rotate rows/cols p and q.
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    let mut pairs: Vec<(f64, usize)> =
+        (0..n).map(|i| (m[(i, i)], i)).collect();
+    pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let vals: Vec<f64> = pairs.iter().map(|&(val, _)| val).collect();
+    let mut vecs = Mat::zeros(n, n);
+    for (new_col, &(_, old_col)) in pairs.iter().enumerate() {
+        for r in 0..n {
+            vecs[(r, new_col)] = v[(r, old_col)];
+        }
+    }
+    (vals, vecs)
+}
+
+/// Squared Euclidean distance between two points.
+pub fn dist2(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Mat::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let i = Mat::identity(2);
+        assert_eq!(a.matmul(&i), a);
+    }
+
+    #[test]
+    fn jacobi_on_known_matrix() {
+        // [[2,1],[1,2]] has eigenvalues 3 and 1.
+        let a = Mat::from_rows(vec![vec![2.0, 1.0], vec![1.0, 2.0]]);
+        let (vals, vecs) = jacobi_eigen(&a, 50);
+        assert!((vals[0] - 3.0).abs() < 1e-10);
+        assert!((vals[1] - 1.0).abs() < 1e-10);
+        // eigenvector of 3 is (1,1)/sqrt(2) up to sign
+        let ratio = vecs[(0, 0)] / vecs[(1, 0)];
+        assert!((ratio - 1.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn prop_jacobi_reconstructs_symmetric_matrices() {
+        check(
+            "jacobi-reconstruction",
+            30,
+            |g| {
+                let n = g.usize_in(2, 8);
+                let mut rng = Rng::new(g.rng.next_u64());
+                let mut a = Mat::zeros(n, n);
+                for i in 0..n {
+                    for j in i..n {
+                        let x = rng.range(-3.0, 3.0);
+                        a[(i, j)] = x;
+                        a[(j, i)] = x;
+                    }
+                }
+                a
+            },
+            |a| {
+                let n = a.rows;
+                let (vals, vecs) = jacobi_eigen(a, 100);
+                // Check A v_k = lambda_k v_k for each column.
+                for k in 0..n {
+                    for i in 0..n {
+                        let mut av = 0.0;
+                        for j in 0..n {
+                            av += a[(i, j)] * vecs[(j, k)];
+                        }
+                        let want = vals[k] * vecs[(i, k)];
+                        if (av - want).abs() > 1e-7 {
+                            return Err(format!(
+                                "Av != lambda v at ({i},{k}): {av} vs {want}"
+                            ));
+                        }
+                    }
+                }
+                // Orthonormal columns.
+                for k1 in 0..n {
+                    for k2 in 0..n {
+                        let mut dot = 0.0;
+                        for i in 0..n {
+                            dot += vecs[(i, k1)] * vecs[(i, k2)];
+                        }
+                        let want = if k1 == k2 { 1.0 } else { 0.0 };
+                        if (dot - want).abs() > 1e-8 {
+                            return Err("eigvecs not orthonormal".into());
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn gram_is_symmetric_psd_diagonal() {
+        let a = Mat::from_rows(vec![
+            vec![1.0, 2.0, 3.0],
+            vec![-1.0, 0.5, 2.0],
+        ]);
+        let g = a.gram();
+        assert_eq!(g.rows, 2);
+        assert!((g[(0, 1)] - g[(1, 0)]).abs() < 1e-12);
+        assert!(g[(0, 0)] >= 0.0 && g[(1, 1)] >= 0.0);
+    }
+}

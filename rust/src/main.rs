@@ -1,0 +1,11 @@
+//! `arena` CLI: the L3 coordinator launcher.
+
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    // Silence TfrtCpuClient created/destroyed chatter unless asked for.
+    if std::env::var("TF_CPP_MIN_LOG_LEVEL").is_err() {
+        std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "2");
+    }
+    arena::cli::run(std::env::args().skip(1).collect())
+}

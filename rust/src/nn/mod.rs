@@ -1,0 +1,203 @@
+//! Tiny pure-rust MLP with manual backprop.
+//!
+//! Used for the Favor baseline's DQN Q-network (the baseline's compute is
+//! deliberately not part of the paper's AOT hot path) and as an in-crate
+//! sanity mirror of the L2 dense math.
+
+use crate::util::rng::Rng;
+
+/// Fully-connected network with ReLU hidden layers and linear output.
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    /// Layer weight matrices, row-major [in, out].
+    ws: Vec<Vec<f32>>,
+    bs: Vec<Vec<f32>>,
+    dims: Vec<usize>,
+}
+
+impl Mlp {
+    pub fn new(dims: &[usize], rng: &mut Rng) -> Self {
+        assert!(dims.len() >= 2);
+        let mut ws = Vec::new();
+        let mut bs = Vec::new();
+        for win in dims.windows(2) {
+            let (i, o) = (win[0], win[1]);
+            let std = (2.0 / i as f64).sqrt();
+            ws.push(
+                (0..i * o)
+                    .map(|_| (rng.normal() * std) as f32)
+                    .collect(),
+            );
+            bs.push(vec![0.0; o]);
+        }
+        Mlp {
+            ws,
+            bs,
+            dims: dims.to_vec(),
+        }
+    }
+
+    pub fn output_dim(&self) -> usize {
+        *self.dims.last().unwrap()
+    }
+
+    /// Forward pass; returns activations per layer (input included).
+    fn forward_full(&self, x: &[f32]) -> Vec<Vec<f32>> {
+        assert_eq!(x.len(), self.dims[0]);
+        let mut acts = vec![x.to_vec()];
+        for (l, (w, b)) in self.ws.iter().zip(&self.bs).enumerate() {
+            let (i, o) = (self.dims[l], self.dims[l + 1]);
+            let prev = &acts[l];
+            let mut out = b.clone();
+            for r in 0..i {
+                let a = prev[r];
+                if a == 0.0 {
+                    continue;
+                }
+                let row = &w[r * o..(r + 1) * o];
+                for c in 0..o {
+                    out[c] += a * row[c];
+                }
+            }
+            if l + 1 < self.ws.len() {
+                for v in out.iter_mut() {
+                    *v = v.max(0.0);
+                }
+            }
+            acts.push(out);
+        }
+        acts
+    }
+
+    pub fn forward(&self, x: &[f32]) -> Vec<f32> {
+        self.forward_full(x).pop().unwrap()
+    }
+
+    /// One SGD step on 0.5·||y_pred - y_target||² (only `mask`ed outputs
+    /// contribute, as DQN updates a single action's Q). Returns the loss.
+    pub fn train_step(
+        &mut self,
+        x: &[f32],
+        target: &[f32],
+        mask: &[f32],
+        lr: f32,
+    ) -> f32 {
+        let acts = self.forward_full(x);
+        let out = acts.last().unwrap();
+        let o_dim = self.output_dim();
+        assert_eq!(target.len(), o_dim);
+        assert_eq!(mask.len(), o_dim);
+        let mut delta: Vec<f32> = (0..o_dim)
+            .map(|c| (out[c] - target[c]) * mask[c])
+            .collect();
+        let loss: f32 = delta.iter().map(|d| 0.5 * d * d).sum();
+        // Backprop through layers.
+        for l in (0..self.ws.len()).rev() {
+            let (i, o) = (self.dims[l], self.dims[l + 1]);
+            let prev = &acts[l];
+            // Grad wrt prev activations (before applying relu grad).
+            let mut dprev = vec![0.0f32; i];
+            {
+                let w = &self.ws[l];
+                for r in 0..i {
+                    let row = &w[r * o..(r + 1) * o];
+                    let mut acc = 0.0;
+                    for c in 0..o {
+                        acc += row[c] * delta[c];
+                    }
+                    dprev[r] = acc;
+                }
+            }
+            // Parameter update.
+            let w = &mut self.ws[l];
+            for r in 0..i {
+                let a = prev[r];
+                if a != 0.0 {
+                    let row = &mut w[r * o..(r + 1) * o];
+                    for c in 0..o {
+                        row[c] -= lr * a * delta[c];
+                    }
+                }
+            }
+            let b = &mut self.bs[l];
+            for c in 0..o {
+                b[c] -= lr * delta[c];
+            }
+            // ReLU grad for the next (earlier) layer.
+            if l > 0 {
+                for r in 0..i {
+                    if acts[l][r] <= 0.0 {
+                        dprev[r] = 0.0;
+                    }
+                }
+            }
+            delta = dprev;
+        }
+        loss
+    }
+
+    /// Copy parameters from another network (DQN target sync).
+    pub fn copy_from(&mut self, other: &Mlp) {
+        assert_eq!(self.dims, other.dims);
+        self.ws.clone_from(&other.ws);
+        self.bs.clone_from(&other.bs);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_shapes() {
+        let mut rng = Rng::new(1);
+        let net = Mlp::new(&[4, 8, 3], &mut rng);
+        assert_eq!(net.forward(&[0.1, -0.2, 0.3, 0.4]).len(), 3);
+    }
+
+    #[test]
+    fn learns_a_linear_map() {
+        let mut rng = Rng::new(2);
+        let mut net = Mlp::new(&[2, 16, 1], &mut rng);
+        let f = |x: f64, y: f64| (2.0 * x - y) as f32;
+        let mask = [1.0];
+        let mut last = f32::INFINITY;
+        for it in 0..4000 {
+            let x = rng.range(-1.0, 1.0);
+            let y = rng.range(-1.0, 1.0);
+            last = net.train_step(
+                &[x as f32, y as f32],
+                &[f(x, y)],
+                &mask,
+                0.02,
+            );
+            let _ = it;
+        }
+        assert!(last < 0.02, "final loss {last}");
+        let pred = net.forward(&[0.5, 0.5])[0];
+        assert!((pred - 0.5).abs() < 0.25, "pred {pred}");
+    }
+
+    #[test]
+    fn masked_outputs_do_not_update() {
+        let mut rng = Rng::new(3);
+        let mut net = Mlp::new(&[2, 4, 2], &mut rng);
+        let before = net.forward(&[0.3, 0.7]);
+        // Train only output 0; output 1's prediction on the same input
+        // can shift through shared hidden weights, but the loss must only
+        // count output 0.
+        let loss = net.train_step(&[0.3, 0.7], &[before[0], 999.0],
+                                  &[1.0, 0.0], 0.1);
+        assert_eq!(loss, 0.0); // target == prediction on the masked dim
+    }
+
+    #[test]
+    fn copy_from_syncs() {
+        let mut rng = Rng::new(4);
+        let a = Mlp::new(&[3, 5, 2], &mut rng);
+        let mut b = Mlp::new(&[3, 5, 2], &mut rng);
+        b.copy_from(&a);
+        let x = [0.1, 0.2, 0.3];
+        assert_eq!(a.forward(&x), b.forward(&x));
+    }
+}

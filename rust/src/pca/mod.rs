@@ -1,0 +1,182 @@
+//! PCA compression of cloud/edge models for the DRL state (paper §3.2).
+//!
+//! The paper fits PCA once on the models of the first cloud aggregation
+//! and reuses the loading vectors afterwards. With only R = M+1 model rows
+//! and P parameters (R ≪ P), we fit through the R x R Gram matrix:
+//!     G = X Xᵀ,  G u_k = λ_k u_k,  loading_k = Xᵀ u_k / sqrt(λ_k)
+//! (uncentered PCA, so up to R non-zero components are available — the
+//! paper's n_PCA = 6 equals M+1 = 6; requesting more yields zero columns,
+//! which is exactly the Fig. 12 ablation behaviour at n_PCA = 10).
+//!
+//! The *transform* of later rounds (models @ loadings) is executed through
+//! the `pca_project` Pallas artifact on the request path; `transform_cpu`
+//! is the rust fallback used by tests and the Favor baseline.
+
+use crate::linalg::{jacobi_eigen, Mat};
+
+pub struct PcaModel {
+    /// P x npca loading matrix, column-major-by-component, flattened f32
+    /// in the artifact's expected [P, npca] row-major layout.
+    pub loadings: Vec<f32>,
+    pub p: usize,
+    pub npca: usize,
+    /// Explained variance per component (diagnostics).
+    pub eigenvalues: Vec<f64>,
+}
+
+impl PcaModel {
+    /// Fit from R stacked flat models (each length P).
+    pub fn fit(models: &[&[f32]], npca: usize) -> PcaModel {
+        let r = models.len();
+        assert!(r > 0, "need at least one model row");
+        let p = models[0].len();
+        let x = Mat::from_rows(
+            models
+                .iter()
+                .map(|m| m.iter().map(|&v| v as f64).collect())
+                .collect(),
+        );
+        let g = x.gram();
+        let (vals, vecs) = jacobi_eigen(&g, 100);
+        let mut loadings = vec![0.0f32; p * npca];
+        let mut eigenvalues = Vec::with_capacity(npca);
+        for k in 0..npca {
+            if k < r && vals[k] > 1e-9 {
+                let scale = 1.0 / vals[k].sqrt();
+                // loading_k[j] = sum_i X[i][j] * u[i][k] / sqrt(lambda_k)
+                for i in 0..r {
+                    let w = vecs[(i, k)] * scale;
+                    if w == 0.0 {
+                        continue;
+                    }
+                    let row = models[i];
+                    for j in 0..p {
+                        loadings[j * npca + k] += (row[j] as f64 * w) as f32;
+                    }
+                }
+                eigenvalues.push(vals[k]);
+            } else {
+                eigenvalues.push(0.0); // zero column (rank-deficient ask)
+            }
+        }
+        PcaModel {
+            loadings,
+            p,
+            npca,
+            eigenvalues,
+        }
+    }
+
+    /// CPU projection of stacked models -> [R, npca] scores.
+    pub fn transform_cpu(&self, models: &[&[f32]]) -> Vec<Vec<f32>> {
+        models
+            .iter()
+            .map(|m| {
+                assert_eq!(m.len(), self.p);
+                let mut out = vec![0.0f32; self.npca];
+                for (j, &v) in m.iter().enumerate() {
+                    if v == 0.0 {
+                        continue;
+                    }
+                    let base = j * self.npca;
+                    for k in 0..self.npca {
+                        out[k] += v * self.loadings[base + k];
+                    }
+                }
+                out
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_models(r: usize, p: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..r)
+            .map(|_| (0..p).map(|_| rng.normal() as f32).collect())
+            .collect()
+    }
+
+    #[test]
+    fn scores_are_orthogonal_with_unit_scale() {
+        // Scores of the fitted rows themselves: S = X L = X Xᵀ U Λ^{-1/2}
+        // = U Λ^{1/2}; columns of S are orthogonal with norm sqrt(λ_k).
+        let models = rand_models(6, 500, 3);
+        let refs: Vec<&[f32]> = models.iter().map(|m| m.as_slice()).collect();
+        let pca = PcaModel::fit(&refs, 6);
+        let scores = pca.transform_cpu(&refs);
+        for k1 in 0..6 {
+            for k2 in 0..6 {
+                let dot: f64 = (0..6)
+                    .map(|i| scores[i][k1] as f64 * scores[i][k2] as f64)
+                    .sum();
+                let want = if k1 == k2 { pca.eigenvalues[k1] } else { 0.0 };
+                assert!(
+                    (dot - want).abs() < 1e-2 * want.abs().max(1.0),
+                    "score gram ({k1},{k2}) = {dot}, want {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rank_deficient_request_zero_pads() {
+        let models = rand_models(3, 100, 4);
+        let refs: Vec<&[f32]> = models.iter().map(|m| m.as_slice()).collect();
+        let pca = PcaModel::fit(&refs, 6);
+        // components beyond the rank (3 rows) must be zero
+        for k in 3..6 {
+            assert_eq!(pca.eigenvalues[k], 0.0);
+            let col_norm: f32 = (0..pca.p)
+                .map(|j| pca.loadings[j * 6 + k].powi(2))
+                .sum();
+            assert_eq!(col_norm, 0.0);
+        }
+    }
+
+    #[test]
+    fn separates_distinct_model_clusters() {
+        // Two groups of similar models must land far apart in score space.
+        let mut rng = Rng::new(9);
+        let p = 400;
+        let base_a: Vec<f32> = (0..p).map(|_| rng.normal() as f32).collect();
+        let base_b: Vec<f32> = (0..p).map(|_| rng.normal() as f32).collect();
+        let mut models = Vec::new();
+        for g in 0..6 {
+            let base = if g < 3 { &base_a } else { &base_b };
+            models.push(
+                base.iter()
+                    .map(|&v| v + 0.01 * rng.normal() as f32)
+                    .collect::<Vec<f32>>(),
+            );
+        }
+        let refs: Vec<&[f32]> = models.iter().map(|m| m.as_slice()).collect();
+        let pca = PcaModel::fit(&refs, 2);
+        let s = pca.transform_cpu(&refs);
+        let d_within = crate::linalg::dist2(
+            &[s[0][0] as f64, s[0][1] as f64],
+            &[s[1][0] as f64, s[1][1] as f64],
+        );
+        let d_across = crate::linalg::dist2(
+            &[s[0][0] as f64, s[0][1] as f64],
+            &[s[4][0] as f64, s[4][1] as f64],
+        );
+        assert!(
+            d_across > 100.0 * d_within.max(1e-12),
+            "within {d_within} across {d_across}"
+        );
+    }
+
+    #[test]
+    fn loadings_layout_matches_artifact() {
+        // [P, npca] row-major: element (j, k) at j*npca + k.
+        let models = rand_models(2, 10, 5);
+        let refs: Vec<&[f32]> = models.iter().map(|m| m.as_slice()).collect();
+        let pca = PcaModel::fit(&refs, 3);
+        assert_eq!(pca.loadings.len(), 10 * 3);
+    }
+}

@@ -1,0 +1,274 @@
+//! Typed view of `artifacts/manifest.json` (written by python/compile/aot.py).
+//! The rust side validates every experiment config against this at startup,
+//! so a stale artifact set fails fast instead of mis-executing.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Flat-parameter layout if this artifact carries one (train_epoch).
+    pub layout: Vec<(String, Vec<usize>, usize)>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ManifestConfig {
+    pub nb: usize,
+    pub batch: usize,
+    pub test_size: usize,
+    pub m_edges: usize,
+    pub npca: usize,
+    pub nmax: usize,
+    pub traj_batch: usize,
+    pub kernels: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub config: ManifestConfig,
+    pub param_counts: BTreeMap<String, usize>,
+    pub init: BTreeMap<String, String>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn tensor_specs(j: &Json) -> Result<Vec<TensorSpec>> {
+    j.as_arr()
+        .context("expected array of tensor specs")?
+        .iter()
+        .map(|s| {
+            Ok(TensorSpec {
+                shape: s
+                    .get("shape")
+                    .and_then(|x| x.as_arr())
+                    .context("spec.shape")?
+                    .iter()
+                    .map(|d| d.as_usize().context("shape dim"))
+                    .collect::<Result<_>>()?,
+                dtype: s
+                    .get("dtype")
+                    .and_then(|x| x.as_str())
+                    .context("spec.dtype")?
+                    .to_string(),
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref()).with_context(|| {
+            format!(
+                "reading {} (run `make artifacts` first)",
+                path.as_ref().display()
+            )
+        })?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text)?;
+        let c = j.get("config").context("manifest.config")?;
+        let get = |k: &str| -> Result<usize> {
+            c.get(k)
+                .and_then(|v| v.as_usize())
+                .with_context(|| format!("config.{k}"))
+        };
+        let config = ManifestConfig {
+            nb: get("nb")?,
+            batch: get("batch")?,
+            test_size: get("test_size")?,
+            m_edges: get("m_edges")?,
+            npca: get("npca")?,
+            nmax: get("nmax")?,
+            traj_batch: get("traj_batch")?,
+            kernels: c
+                .get("kernels")
+                .and_then(|v| v.as_str())
+                .unwrap_or("pallas")
+                .to_string(),
+        };
+        let mut param_counts = BTreeMap::new();
+        for (k, v) in j
+            .get("param_counts")
+            .and_then(|v| v.as_obj())
+            .context("manifest.param_counts")?
+        {
+            param_counts.insert(k.clone(), v.as_usize().context("count")?);
+        }
+        let mut init = BTreeMap::new();
+        if let Some(obj) = j.get("init").and_then(|v| v.as_obj()) {
+            for (k, v) in obj {
+                init.insert(
+                    k.clone(),
+                    v.as_str().context("init path")?.to_string(),
+                );
+            }
+        }
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in j
+            .get("artifacts")
+            .and_then(|v| v.as_obj())
+            .context("manifest.artifacts")?
+        {
+            let mut layout = Vec::new();
+            if let Some(entries) = a.get("layout").and_then(|l| l.as_arr()) {
+                for e in entries {
+                    layout.push((
+                        e.get("name")
+                            .and_then(|x| x.as_str())
+                            .context("layout.name")?
+                            .to_string(),
+                        e.get("shape")
+                            .and_then(|x| x.as_arr())
+                            .context("layout.shape")?
+                            .iter()
+                            .map(|d| d.as_usize().context("dim"))
+                            .collect::<Result<_>>()?,
+                        e.get("offset")
+                            .and_then(|x| x.as_usize())
+                            .context("layout.offset")?,
+                    ));
+                }
+            }
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    file: a
+                        .get("file")
+                        .and_then(|x| x.as_str())
+                        .context("artifact.file")?
+                        .to_string(),
+                    inputs: tensor_specs(a.get("inputs").context("inputs")?)?,
+                    outputs: tensor_specs(
+                        a.get("outputs").context("outputs")?,
+                    )?,
+                    layout,
+                },
+            );
+        }
+        Ok(Manifest {
+            config,
+            param_counts,
+            init,
+            artifacts,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.get(name)
+    }
+
+    pub fn param_count(&self, model: &str) -> Result<usize> {
+        self.param_counts
+            .get(model)
+            .copied()
+            .with_context(|| format!("no param count for '{model}'"))
+    }
+
+    /// Validate that an experiment config is compatible with these
+    /// artifacts (shapes were baked at AOT time).
+    pub fn validate_config(
+        &self,
+        cfg: &crate::config::ExperimentConfig,
+    ) -> Result<()> {
+        let c = &self.config;
+        anyhow::ensure!(
+            cfg.topology.edges == c.m_edges,
+            "config has {} edges but artifacts were built for {}",
+            cfg.topology.edges,
+            c.m_edges
+        );
+        anyhow::ensure!(
+            cfg.topology.nmax == c.nmax,
+            "config nmax {} != artifact nmax {}",
+            cfg.topology.nmax,
+            c.nmax
+        );
+        if cfg.agent.npca != c.npca {
+            let variant = format!("ppo_actor_fwd_npca{}", cfg.agent.npca);
+            anyhow::ensure!(
+                self.artifacts.contains_key(&variant),
+                "config npca {} != artifact default {} and no '{variant}' \
+                 variant was built (see aot.py --npca-variants)",
+                cfg.agent.npca,
+                c.npca
+            );
+        }
+        anyhow::ensure!(
+            cfg.agent.traj_max == c.traj_batch,
+            "config traj_max {} != artifact traj_batch {}",
+            cfg.agent.traj_max,
+            c.traj_batch
+        );
+        anyhow::ensure!(
+            cfg.hfl.samples_per_device >= c.nb * c.batch,
+            "samples_per_device {} < one epoch's nb*batch = {}",
+            cfg.hfl.samples_per_device,
+            c.nb * c.batch
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "config": {"nb": 4, "batch": 32, "test_size": 512, "eval_chunk": 128,
+                 "m_edges": 5, "npca": 6, "nmax": 16, "traj_batch": 32,
+                 "ppo_lr": 0.0003, "clip_eps": 0.2,
+                 "lr": {"mnist": 0.003}, "seed": 42, "kernels": "pallas"},
+      "param_counts": {"mnist": 21840, "ppo": 121589},
+      "init": {"mnist": "init/mnist_params.bin"},
+      "artifacts": {
+        "mnist_eval": {
+          "file": "mnist_eval.hlo.txt",
+          "inputs": [{"shape": [21840], "dtype": "float32"},
+                      {"shape": [512, 28, 28, 1], "dtype": "float32"},
+                      {"shape": [512], "dtype": "int32"}],
+          "outputs": [{"shape": [], "dtype": "float32"},
+                       {"shape": [], "dtype": "float32"}]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.config.m_edges, 5);
+        assert_eq!(m.param_count("mnist").unwrap(), 21840);
+        let a = m.artifact("mnist_eval").unwrap();
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.inputs[1].shape, vec![512, 28, 28, 1]);
+        assert_eq!(a.outputs[0].dtype, "float32");
+    }
+
+    #[test]
+    fn validates_config_compat() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let mut cfg = crate::config::ExperimentConfig::mnist();
+        cfg.hfl.samples_per_device = 128;
+        m.validate_config(&cfg).unwrap();
+        cfg.topology.edges = 4;
+        assert!(m.validate_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        assert!(Manifest::parse(r#"{"config": {}}"#).is_err());
+    }
+}

@@ -1,0 +1,155 @@
+//! PJRT runtime: load the AOT HLO-text artifacts and execute them.
+//!
+//! `Runtime` wraps one `PjRtClient::cpu()` plus a compile-once executable
+//! cache; `DevicePool` fans device training across worker threads, each
+//! owning its *own* client + executables (the xla crate's handles are not
+//! `Send`). Tensors cross threads as plain `HostTensor` buffers.
+
+pub mod manifest;
+pub mod pool;
+pub mod tensor;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+pub use manifest::Manifest;
+pub use pool::DevicePool;
+pub use tensor::HostTensor;
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    pub manifest: Manifest,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a runtime over `dir` (must contain manifest.json) and
+    /// pre-compile the named artifacts.
+    pub fn load(dir: impl AsRef<Path>, names: &[&str]) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
+        let mut rt = Runtime {
+            client,
+            exes: HashMap::new(),
+            manifest,
+            dir,
+        };
+        for name in names {
+            rt.compile(name)?;
+        }
+        Ok(rt)
+    }
+
+    /// Compile (and cache) one artifact by manifest name.
+    pub fn compile(&mut self, name: &str) -> Result<()> {
+        if self.exes.contains_key(name) {
+            return Ok(());
+        }
+        let art = self
+            .manifest
+            .artifact(name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))?;
+        let path = self.dir.join(&art.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact with host tensors; validates shapes against the
+    /// manifest and returns the flattened output tuple.
+    pub fn execute(
+        &self,
+        name: &str,
+        inputs: &[HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        let art = self
+            .manifest
+            .artifact(name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))?;
+        if inputs.len() != art.inputs.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                art.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, spec)) in inputs.iter().zip(&art.inputs).enumerate() {
+            if t.shape != spec.shape {
+                bail!(
+                    "{name} input {i}: shape {:?} != manifest {:?}",
+                    t.shape,
+                    spec.shape
+                );
+            }
+            if t.dtype_name() != spec.dtype {
+                bail!(
+                    "{name} input {i}: dtype {} != manifest {}",
+                    t.dtype_name(),
+                    spec.dtype
+                );
+            }
+        }
+        let exe = self
+            .exes
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not compiled"))?;
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("executing {name}: {e:?}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching {name} output: {e:?}"))?;
+        let parts = out
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling {name}: {e:?}"))?;
+        let mut tensors = Vec::with_capacity(parts.len());
+        for (i, lit) in parts.into_iter().enumerate() {
+            let spec = art.outputs.get(i).with_context(|| {
+                format!("{name}: more outputs than manifest lists")
+            })?;
+            tensors.push(HostTensor::from_literal(lit, &spec.shape, &spec.dtype)?);
+        }
+        Ok(tensors)
+    }
+
+    /// Read an initial-parameter binary (little-endian f32) from init/.
+    pub fn load_init_params(&self, model: &str) -> Result<Vec<f32>> {
+        let rel = self
+            .manifest
+            .init
+            .get(model)
+            .with_context(|| format!("no init params for '{model}'"))?;
+        let bytes = std::fs::read(self.dir.join(rel))?;
+        if bytes.len() % 4 != 0 {
+            bail!("init params for {model}: size not a multiple of 4");
+        }
+        let expect = self.manifest.param_count(model)?;
+        let n = bytes.len() / 4;
+        if n != expect {
+            bail!("init params for {model}: {n} floats, manifest says {expect}");
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}

@@ -1,0 +1,143 @@
+//! Parallel device-training pool.
+//!
+//! The HFL engine trains 10-50 simulated devices per synchronization
+//! barrier; each device's local epochs are independent, so they fan out
+//! over worker threads. Every worker owns its own PJRT client and
+//! `<dataset>_train_epoch` executable (compile-once at pool startup), plus
+//! a shared `Arc` of the immutable device shards — jobs carry only the
+//! model vector and a shuffle seed, not the training data.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::tensor::HostTensor;
+use super::Runtime;
+use crate::data::synthetic::DeviceShard;
+use crate::util::rng::Rng;
+use crate::util::threadpool::Pool;
+
+/// One device's local-training job: `epochs` sequential local epochs
+/// starting from `w`, data drawn from the worker-shared shard table.
+pub struct TrainJob {
+    pub device: usize,
+    pub w: Vec<f32>,
+    pub epochs: usize,
+    /// Seed for the per-epoch shard shuffles (deterministic per job).
+    pub seed: u64,
+}
+
+pub struct TrainResult {
+    pub device: usize,
+    pub w: Vec<f32>,
+    /// Mean loss per epoch.
+    pub losses: Vec<f64>,
+}
+
+struct WorkerState {
+    rt: Runtime,
+    shards: Arc<Vec<DeviceShard>>,
+    art: String,
+    nb: usize,
+    batch: usize,
+    p: usize,
+    x_shape: Vec<usize>,
+    y_shape: Vec<usize>,
+}
+
+pub struct DevicePool {
+    inner: Pool<TrainJob, Result<TrainResult>>,
+    workers: usize,
+}
+
+impl DevicePool {
+    /// `dataset` is "mnist" or "cifar"; shapes come from the manifest.
+    pub fn new(
+        workers: usize,
+        artifacts_dir: &str,
+        dataset: &str,
+        shards: Arc<Vec<DeviceShard>>,
+    ) -> Result<Self> {
+        let workers = if workers == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+                .clamp(1, 8)
+        } else {
+            workers
+        };
+        let dir = artifacts_dir.to_string();
+        let art = format!("{dataset}_train_epoch");
+        // Fail fast on the main thread if the artifact can't load at all.
+        Runtime::load(&dir, &[art.as_str()])?;
+        let art_init = art.clone();
+        let inner = Pool::new(
+            workers,
+            move |_idx| {
+                let rt = Runtime::load(&dir, &[art_init.as_str()])
+                    .expect("worker failed to load artifacts");
+                let spec = rt
+                    .manifest
+                    .artifact(&art_init)
+                    .expect("artifact vanished from manifest");
+                WorkerState {
+                    nb: rt.manifest.config.nb,
+                    batch: rt.manifest.config.batch,
+                    p: spec.inputs[0].shape[0],
+                    x_shape: spec.inputs[1].shape.clone(),
+                    y_shape: spec.inputs[2].shape.clone(),
+                    art: art_init.clone(),
+                    shards: shards.clone(),
+                    rt,
+                }
+            },
+            move |st: &mut WorkerState, job: TrainJob| run_job(st, job),
+        );
+        Ok(DevicePool { inner, workers })
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Train all jobs in parallel; results in job order.
+    pub fn train(&mut self, jobs: Vec<TrainJob>) -> Result<Vec<TrainResult>> {
+        self.inner.map(jobs).into_iter().collect()
+    }
+}
+
+fn run_job(st: &mut WorkerState, job: TrainJob) -> Result<TrainResult> {
+    let shard = &st.shards[job.device];
+    let mut rng = Rng::new(job.seed);
+    let mut w = job.w;
+    anyhow::ensure!(
+        w.len() == st.p,
+        "param size {} != artifact {}",
+        w.len(),
+        st.p
+    );
+    let mut losses = Vec::with_capacity(job.epochs);
+    for _ in 0..job.epochs {
+        let (x, y) = shard.epoch_tensors(st.nb, st.batch, &mut rng);
+        let inputs = vec![
+            HostTensor::f32(vec![st.p], w),
+            HostTensor::f32(st.x_shape.clone(), x),
+            HostTensor::i32(st.y_shape.clone(), y),
+        ];
+        let mut out = st.rt.execute(&st.art, &inputs)?;
+        let loss = out[1].scalar()?;
+        w = std::mem::take(&mut out[0]).into_f32()?;
+        losses.push(loss);
+    }
+    Ok(TrainResult {
+        device: job.device,
+        w,
+        losses,
+    })
+}
+
+impl Default for HostTensor {
+    fn default() -> Self {
+        HostTensor::f32(vec![0], vec![])
+    }
+}

@@ -1,0 +1,163 @@
+//! Host-side tensors: the plain-`Send` interchange between the coordinator
+//! logic, the worker pool, and PJRT literals.
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape/data mismatch"
+        );
+        HostTensor {
+            shape,
+            data: TensorData::F32(data),
+        }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape/data mismatch"
+        );
+        HostTensor {
+            shape,
+            data: TensorData::I32(data),
+        }
+    }
+
+    pub fn scalar_f32(x: f32) -> Self {
+        HostTensor::f32(vec![], vec![x])
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype_name(&self) -> &'static str {
+        match self.data {
+            TensorData::F32(_) => "float32",
+            TensorData::I32(_) => "int32",
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    /// First element as f64 (for scalar outputs like loss / correct count).
+    pub fn scalar(&self) -> Result<f64> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v[0] as f64),
+            TensorData::I32(v) => Ok(v[0] as f64),
+        }
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            TensorData::F32(v) => xla::Literal::vec1(v),
+            TensorData::I32(v) => xla::Literal::vec1(v),
+        };
+        lit.reshape(&dims)
+            .map_err(|e| anyhow::anyhow!("reshape to {dims:?}: {e:?}"))
+    }
+
+    pub fn from_literal(
+        lit: xla::Literal,
+        shape: &[usize],
+        dtype: &str,
+    ) -> Result<Self> {
+        let data = match dtype {
+            "float32" => TensorData::F32(
+                lit.to_vec::<f32>()
+                    .map_err(|e| anyhow::anyhow!("literal to f32: {e:?}"))?,
+            ),
+            "int32" => TensorData::I32(
+                lit.to_vec::<i32>()
+                    .map_err(|e| anyhow::anyhow!("literal to i32: {e:?}"))?,
+            ),
+            other => bail!("unsupported dtype {other}"),
+        };
+        let t = HostTensor {
+            shape: shape.to_vec(),
+            data,
+        };
+        if t.len()
+            != match &t.data {
+                TensorData::F32(v) => v.len(),
+                TensorData::I32(v) => v.len(),
+            }
+        {
+            bail!("literal size does not match manifest shape {shape:?}");
+        }
+        Ok(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = HostTensor::f32(vec![2, 3], (0..6).map(|x| x as f32).collect());
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(lit, &[2, 3], "float32").unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let t = HostTensor::i32(vec![4], vec![1, -2, 3, -4]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(lit, &[4], "int32").unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn shape_mismatch_panics() {
+        HostTensor::f32(vec![2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn scalar_access() {
+        assert_eq!(HostTensor::scalar_f32(2.5).scalar().unwrap(), 2.5);
+    }
+}

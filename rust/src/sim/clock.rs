@@ -1,0 +1,49 @@
+//! Simulated wall clock. All durations produced by the cpu/network models
+//! are accumulated here; the HFL engine advances it by the *straggler*
+//! (max) path per synchronization barrier, matching how the paper's
+//! testbed experiences time.
+
+#[derive(Clone, Debug, Default)]
+pub struct SimClock {
+    now: f64,
+}
+
+impl SimClock {
+    pub fn new() -> Self {
+        SimClock { now: 0.0 }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub fn advance(&mut self, dt: f64) {
+        assert!(dt >= 0.0, "time cannot go backwards (dt={dt})");
+        self.now += dt;
+    }
+
+    pub fn reset(&mut self) {
+        self.now = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn advances_monotonically() {
+        let mut c = SimClock::new();
+        c.advance(1.5);
+        c.advance(0.0);
+        c.advance(2.5);
+        assert!((c.now() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "time cannot go backwards")]
+    fn rejects_negative() {
+        let mut c = SimClock::new();
+        c.advance(-1.0);
+    }
+}

@@ -1,0 +1,160 @@
+//! Per-device compute model (paper Fig. 3).
+//!
+//! Each device carries an interference level u ∈ [0.05, 0.95] — the CPU
+//! share consumed by co-running programs (stress-ng in the paper's
+//! profiling). Per-SGD-batch time follows
+//!     t = base · (1 + κ · u/(1-u)) · LogNormal(0, σ)
+//! which reproduces Fig. 3's two observations: training time grows
+//! super-linearly with CPU usage, and fluctuation grows with it too (the
+//! governor + interference noise). The level itself random-walks (AR(1))
+//! around the device's base — the "dynamic available CPU resources" of
+//! §2.3.
+//!
+//! The paper's population: 5 interference classes from 10% to 50%, 10
+//! devices per class (§4.1).
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct CpuModel {
+    /// Device's long-run interference level.
+    pub base_usage: f64,
+    /// Current (wandering) level.
+    pub usage: f64,
+    /// Base per-batch seconds at zero interference.
+    pub base_time: f64,
+    /// Sensitivity κ.
+    pub kappa: f64,
+    /// Log-normal jitter σ.
+    pub jitter: f64,
+    /// Conservative-governor frequency band, GHz (paper: 0.6–1.5 GHz).
+    pub freq_min: f64,
+    pub freq_max: f64,
+    rng: Rng,
+}
+
+impl CpuModel {
+    pub fn new(
+        base_usage: f64,
+        base_time: f64,
+        kappa: f64,
+        jitter: f64,
+        rng: Rng,
+    ) -> Self {
+        CpuModel {
+            base_usage,
+            usage: base_usage,
+            base_time,
+            kappa,
+            jitter,
+            freq_min: 0.6,
+            freq_max: 1.5,
+            rng,
+        }
+    }
+
+    /// Paper §4.1 population: class c in 0..5 → 10%..50% interference.
+    pub fn paper_class(c: usize) -> f64 {
+        0.10 + 0.10 * (c % 5) as f64
+    }
+
+    /// AR(1) wander of the interference level (call once per epoch).
+    pub fn step_usage(&mut self) {
+        let noise = self.rng.normal() * 0.04;
+        self.usage = (0.9 * self.usage + 0.1 * self.base_usage + noise)
+            .clamp(0.05, 0.95);
+    }
+
+    /// Slowdown multiplier at the current usage.
+    pub fn slowdown(&self) -> f64 {
+        1.0 + self.kappa * self.usage / (1.0 - self.usage)
+    }
+
+    /// Seconds for one SGD minibatch right now (stochastic).
+    pub fn sgd_time(&mut self) -> f64 {
+        let jitter = self.rng.lognormal(0.0, self.jitter * (1.0 + self.usage));
+        self.base_time * self.slowdown() * jitter
+    }
+
+    /// Conservative-governor clock: interference pushes the governor up.
+    pub fn frequency_ghz(&self) -> f64 {
+        self.freq_min + (self.freq_max - self.freq_min) * self.usage
+    }
+
+    /// Effective GFLOPS available to the training task.
+    pub fn available_gflops(&self) -> f64 {
+        // 4-wide NEON-ish FLOPs/cycle on the free share of the CPU.
+        4.0 * self.frequency_ghz() * (1.0 - self.usage)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    fn model(u: f64, seed: u64) -> CpuModel {
+        CpuModel::new(u, 2.0, 1.2, 0.18, Rng::new(seed))
+    }
+
+    #[test]
+    fn time_grows_with_usage() {
+        // Fig. 3a shape: mean per-batch time monotone in interference.
+        let mut means = Vec::new();
+        for &u in &[0.1, 0.3, 0.5, 0.7, 0.9] {
+            let mut m = model(u, 42);
+            let xs: Vec<f64> = (0..2000).map(|_| m.sgd_time()).collect();
+            means.push(stats::mean(&xs));
+        }
+        for w in means.windows(2) {
+            assert!(w[1] > w[0], "not monotone: {means:?}");
+        }
+    }
+
+    #[test]
+    fn fluctuation_grows_with_usage() {
+        // Fig. 3 error bars: relative spread increases with usage.
+        let spread = |u: f64| {
+            let mut m = model(u, 7);
+            let xs: Vec<f64> = (0..4000).map(|_| m.sgd_time()).collect();
+            stats::std(&xs) / stats::mean(&xs)
+        };
+        assert!(spread(0.9) > 1.5 * spread(0.1));
+    }
+
+    #[test]
+    fn usage_stays_in_bounds_under_wander() {
+        let mut m = model(0.5, 9);
+        for _ in 0..10_000 {
+            m.step_usage();
+            assert!((0.05..=0.95).contains(&m.usage));
+        }
+    }
+
+    #[test]
+    fn wander_stays_near_base() {
+        let mut m = model(0.3, 11);
+        let mut xs = Vec::new();
+        for _ in 0..5_000 {
+            m.step_usage();
+            xs.push(m.usage);
+        }
+        let mean = stats::mean(&xs);
+        assert!((mean - 0.3).abs() < 0.05, "mean usage {mean}");
+    }
+
+    #[test]
+    fn paper_classes_cover_10_to_50_percent() {
+        let us: Vec<f64> = (0..5).map(CpuModel::paper_class).collect();
+        assert!((us[0] - 0.10).abs() < 1e-12);
+        assert!((us[4] - 0.50).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gflops_decreases_with_usage() {
+        assert!(
+            model(0.1, 1).available_gflops()
+                > model(0.8, 1).available_gflops()
+        );
+    }
+}

@@ -1,0 +1,97 @@
+//! Device energy model (paper Fig. 3b; measured with a Monsoon power
+//! monitor on the testbed, reported in mAh).
+//!
+//! Power is affine in the governor frequency/usage (DVFS-style):
+//!     P(u) = P_idle + (P_max - P_idle) · u_eff,
+//! where u_eff blends the training task's own load with interference.
+//! Energy for an activity = P · t, converted to mAh at the Pi's 5 V rail.
+
+use super::cpu::CpuModel;
+
+#[derive(Clone, Debug)]
+pub struct EnergyModel {
+    pub power_idle: f64,
+    pub power_max: f64,
+    /// Rail voltage for W·s → mAh conversion (Raspberry Pi: 5 V).
+    pub volts: f64,
+}
+
+impl EnergyModel {
+    pub fn new(power_idle: f64, power_max: f64) -> Self {
+        EnergyModel {
+            power_idle,
+            power_max,
+            volts: 5.0,
+        }
+    }
+
+    /// Instantaneous power while training under the given CPU state.
+    pub fn training_power(&self, cpu: &CpuModel) -> f64 {
+        // Training saturates the free share; interference keeps the rest
+        // busy too, so effective load ≈ 0.6 + 0.4·usage of full tilt.
+        let u_eff = 0.6 + 0.4 * cpu.usage;
+        self.power_idle + (self.power_max - self.power_idle) * u_eff
+    }
+
+    /// Radio/communication power (roughly constant).
+    pub fn comm_power(&self) -> f64 {
+        self.power_idle + 0.35 * (self.power_max - self.power_idle)
+    }
+
+    /// W over s → mAh at the rail voltage.
+    pub fn to_mah(&self, watts: f64, seconds: f64) -> f64 {
+        watts * seconds / self.volts / 3600.0 * 1000.0
+    }
+
+    /// Energy (mAh) for one SGD batch that took `t` seconds.
+    pub fn sgd_energy(&self, cpu: &CpuModel, t: f64) -> f64 {
+        self.to_mah(self.training_power(cpu), t)
+    }
+
+    /// Energy (mAh) for a communication activity of `t` seconds.
+    pub fn comm_energy(&self, t: f64) -> f64 {
+        self.to_mah(self.comm_power(), t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::stats;
+
+    fn cpu(u: f64) -> CpuModel {
+        CpuModel::new(u, 2.0, 1.2, 0.18, Rng::new(3))
+    }
+
+    #[test]
+    fn energy_grows_with_usage() {
+        // Fig. 3b: higher interference → more J per SGD (longer AND hotter).
+        let e = EnergyModel::new(2.2, 6.2);
+        let mut means = Vec::new();
+        for &u in &[0.1, 0.5, 0.9] {
+            let mut c = cpu(u);
+            let xs: Vec<f64> = (0..2000)
+                .map(|_| {
+                    let t = c.sgd_time();
+                    e.sgd_energy(&c, t)
+                })
+                .collect();
+            means.push(stats::mean(&xs));
+        }
+        assert!(means[0] < means[1] && means[1] < means[2], "{means:?}");
+    }
+
+    #[test]
+    fn mah_conversion() {
+        let e = EnergyModel::new(2.0, 6.0);
+        // 5 W for 3600 s at 5 V = 1000 mAh.
+        assert!((e.to_mah(5.0, 3600.0) - 1000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn comm_power_between_idle_and_max() {
+        let e = EnergyModel::new(2.0, 6.0);
+        assert!(e.comm_power() > 2.0 && e.comm_power() < 6.0);
+    }
+}

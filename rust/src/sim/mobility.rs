@@ -1,0 +1,98 @@
+//! Device mobility (paper §1: "some devices may join or leave HFL at any
+//! time"). A two-state Markov process per device: active devices leave
+//! with `leave_prob` per cloud round, departed ones return with
+//! `join_prob`. The profiling module re-clusters when the active set
+//! changes enough; the DRL state dimensions are unaffected (M fixed).
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct MobilityModel {
+    pub leave_prob: f64,
+    pub join_prob: f64,
+    active: Vec<bool>,
+    rng: Rng,
+}
+
+impl MobilityModel {
+    pub fn new(n: usize, leave_prob: f64, join_prob: f64, rng: Rng) -> Self {
+        MobilityModel {
+            leave_prob,
+            join_prob,
+            active: vec![true; n],
+            rng,
+        }
+    }
+
+    /// Immobile population (the default experiment setting).
+    pub fn disabled(n: usize) -> Self {
+        MobilityModel::new(n, 0.0, 1.0, Rng::new(0))
+    }
+
+    pub fn is_active(&self, device: usize) -> bool {
+        self.active[device]
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.active.iter().filter(|&&a| a).count()
+    }
+
+    pub fn active_set(&self) -> Vec<usize> {
+        (0..self.active.len()).filter(|&i| self.active[i]).collect()
+    }
+
+    /// Advance one cloud round; returns the number of state flips.
+    pub fn step(&mut self) -> usize {
+        let mut flips = 0;
+        for a in self.active.iter_mut() {
+            let p = if *a { self.leave_prob } else { self.join_prob };
+            if self.rng.uniform() < p {
+                *a = !*a;
+                flips += 1;
+            }
+        }
+        // Never let the system empty out entirely.
+        if self.active.iter().all(|&a| !a) {
+            self.active[0] = true;
+            flips += 1;
+        }
+        flips
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_never_changes() {
+        let mut m = MobilityModel::disabled(10);
+        for _ in 0..100 {
+            assert_eq!(m.step(), 0);
+            assert_eq!(m.active_count(), 10);
+        }
+    }
+
+    #[test]
+    fn stationary_fraction_matches_rates() {
+        // leave 0.1 / join 0.3 → stationary active ≈ 0.75.
+        let mut m = MobilityModel::new(200, 0.1, 0.3, Rng::new(5));
+        let mut counts = 0usize;
+        let rounds = 2000;
+        for _ in 0..rounds {
+            m.step();
+            counts += m.active_count();
+        }
+        let frac = counts as f64 / (rounds * 200) as f64;
+        assert!((frac - 0.75).abs() < 0.05, "stationary frac {frac}");
+    }
+
+    #[test]
+    fn never_fully_empty() {
+        let mut m = MobilityModel::new(5, 1.0, 0.0, Rng::new(6));
+        for _ in 0..50 {
+            m.step();
+            assert!(m.active_count() >= 1);
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! Testbed simulation substrates (paper §2.3 / §4.1 hardware, modeled).
+//!
+//! The paper measured Raspberry-Pi training under stress-ng interference
+//! (Fig. 3) and Beijing/US edge-to-cloud links to an Alibaba cloud in
+//! Silicon Valley (Fig. 4). These modules reproduce those measured shapes
+//! as calibrated stochastic models driving a simulated clock; the *learning*
+//! itself stays real (actual SGD through the AOT artifacts).
+
+pub mod clock;
+pub mod cpu;
+pub mod energy;
+pub mod mobility;
+pub mod network;
+
+pub use clock::SimClock;
+pub use cpu::CpuModel;
+pub use energy::EnergyModel;
+pub use mobility::MobilityModel;
+pub use network::{NetworkModel, Region};

@@ -1,0 +1,119 @@
+//! Edge-to-cloud communication model (paper Fig. 4).
+//!
+//! The paper's cloud sits in Silicon Valley; edges in Beijing (cn) see
+//! ~10x the latency and a fraction of the bandwidth of edges in
+//! Washington DC (us). Communication time grows linearly with model size
+//! plus a per-transfer latency floor, with log-normal jitter:
+//!     t = (latency + bytes/bandwidth) · LogNormal(0, σ)
+//! Device↔edge LAN transfers are millisecond-scale and ignored (§2.3).
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Region {
+    Cn,
+    Us,
+}
+
+impl Region {
+    pub fn name(self) -> &'static str {
+        match self {
+            Region::Cn => "cn",
+            Region::Us => "us",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct NetworkModel {
+    pub cn_latency: f64,
+    pub cn_bandwidth: f64,
+    pub us_latency: f64,
+    pub us_bandwidth: f64,
+    pub jitter: f64,
+}
+
+impl NetworkModel {
+    pub fn from_config(sim: &crate::config::SimConfig) -> Self {
+        NetworkModel {
+            cn_latency: sim.cn_latency,
+            cn_bandwidth: sim.cn_bandwidth,
+            us_latency: sim.us_latency,
+            us_bandwidth: sim.us_bandwidth,
+            jitter: sim.comm_jitter,
+        }
+    }
+
+    fn params(&self, region: Region) -> (f64, f64) {
+        match region {
+            Region::Cn => (self.cn_latency, self.cn_bandwidth),
+            Region::Us => (self.us_latency, self.us_bandwidth),
+        }
+    }
+
+    /// Mean edge→cloud time for a model of `bytes` (deterministic part).
+    pub fn mean_comm_time(&self, region: Region, bytes: usize) -> f64 {
+        let (lat, bw) = self.params(region);
+        lat + bytes as f64 / bw
+    }
+
+    /// Sampled round-trip (upload + download ≈ 2x one way).
+    pub fn comm_time(
+        &self,
+        region: Region,
+        bytes: usize,
+        rng: &mut Rng,
+    ) -> f64 {
+        2.0 * self.mean_comm_time(region, bytes)
+            * rng.lognormal(0.0, self.jitter)
+    }
+}
+
+/// Bytes on the wire for a model of `params` f32 parameters.
+pub fn model_bytes(params: usize) -> usize {
+    params * 4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::util::stats;
+
+    fn net() -> NetworkModel {
+        NetworkModel::from_config(&ExperimentConfig::mnist().sim)
+    }
+
+    #[test]
+    fn grows_with_model_size() {
+        // Fig. 4: comm time increases with parameter count.
+        let n = net();
+        let small = n.mean_comm_time(Region::Cn, model_bytes(21_840));
+        let big = n.mean_comm_time(Region::Cn, model_bytes(453_845));
+        assert!(big > small * 1.5, "small {small} big {big}");
+    }
+
+    #[test]
+    fn cn_slower_than_us() {
+        // Fig. 4: overseas (cn→SV) link dominates the domestic one.
+        let n = net();
+        for &p in &[21_840usize, 453_845] {
+            let cn = n.mean_comm_time(Region::Cn, model_bytes(p));
+            let us = n.mean_comm_time(Region::Us, model_bytes(p));
+            assert!(cn > 2.0 * us, "p={p}: cn {cn} us {us}");
+        }
+    }
+
+    #[test]
+    fn sampled_time_centers_on_mean() {
+        let n = net();
+        let mut rng = Rng::new(4);
+        let bytes = model_bytes(21_840);
+        let xs: Vec<f64> = (0..4000)
+            .map(|_| n.comm_time(Region::Cn, bytes, &mut rng))
+            .collect();
+        let want = 2.0 * n.mean_comm_time(Region::Cn, bytes);
+        let got = stats::mean(&xs);
+        assert!((got - want).abs() / want < 0.1, "got {got} want {want}");
+    }
+}

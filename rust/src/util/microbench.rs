@@ -1,0 +1,108 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Used by `rust/benches/*.rs` (built with `harness = false`) and by the
+//! §Perf pass: warmup, fixed-duration sampling, and a summary line with
+//! mean / p50 / p99 per iteration. Set `ARENA_BENCH_FAST=1` to shrink
+//! sample time (CI smoke mode).
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "bench {:<40} {:>10} iters  mean {:>12}  p50 {:>12}  p99 {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns)
+        );
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+fn budget() -> (Duration, Duration) {
+    if std::env::var("ARENA_BENCH_FAST").is_ok() {
+        (Duration::from_millis(50), Duration::from_millis(200))
+    } else {
+        (Duration::from_millis(300), Duration::from_secs(2))
+    }
+}
+
+/// Benchmark `f`, returning per-iteration timing statistics.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    let (warmup, sample) = budget();
+    // Warmup.
+    let start = Instant::now();
+    let mut warm_iters = 0u64;
+    while start.elapsed() < warmup || warm_iters == 0 {
+        f();
+        warm_iters += 1;
+    }
+    // Estimate batch size so each timed sample is ~1ms.
+    let per = warmup.as_nanos() as f64 / warm_iters as f64;
+    let batch = ((1e6 / per).ceil() as u64).max(1);
+    let mut samples = Vec::new();
+    let mut iters = 0u64;
+    let start = Instant::now();
+    while start.elapsed() < sample || samples.is_empty() {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        samples.push(t0.elapsed().as_nanos() as f64 / batch as f64);
+        iters += batch;
+    }
+    let res = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: stats::mean(&samples),
+        p50_ns: stats::percentile(&samples, 50.0),
+        p99_ns: stats::percentile(&samples, 99.0),
+    };
+    res.report();
+    res
+}
+
+/// Prevent the optimizer from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_numbers() {
+        std::env::set_var("ARENA_BENCH_FAST", "1");
+        let r = bench("noop-ish", || {
+            black_box((0..100u64).sum::<u64>());
+        });
+        assert!(r.iters > 0);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p99_ns >= r.p50_ns * 0.5);
+    }
+}

@@ -1,0 +1,11 @@
+//! Self-contained substrate utilities (the build environment is offline, so
+//! PRNG, JSON, CSV, stats, thread pool, property testing and micro-bench
+//! harness are implemented in-crate rather than pulled from crates.io).
+
+pub mod csv;
+pub mod json;
+pub mod microbench;
+pub mod propcheck;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,118 @@
+//! Minimal property-based testing harness (proptest is unavailable in the
+//! offline build environment).
+//!
+//! `check(name, cases, gen, prop)` runs `prop` on `cases` inputs produced
+//! by `gen` from independent deterministic seeds; on failure it retries the
+//! failing input with progressively "smaller" regenerations (shrink-lite:
+//! the generator receives a shrink level it can use to reduce sizes) and
+//! panics with the reproducing seed.
+
+use super::rng::Rng;
+
+pub struct Gen<'a> {
+    pub rng: &'a mut Rng,
+    /// 0 = full size; higher values ask the generator to produce smaller
+    /// inputs (used when re-generating around a failure).
+    pub shrink: u32,
+}
+
+impl<'a> Gen<'a> {
+    /// Size helper: scales `max` down with the shrink level (never below 1).
+    pub fn size(&mut self, max: usize) -> usize {
+        let cap = (max >> self.shrink).max(1);
+        1 + self.rng.below(cap)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range(lo, hi)
+    }
+
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.rng.range(lo, hi)).collect()
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+}
+
+/// Run a property over `cases` generated inputs. Panics on first failure
+/// with the seed that reproduces it.
+pub fn check<T, G, P>(name: &str, cases: u64, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Gen) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let base = 0xa5e1_0000u64;
+    for case in 0..cases {
+        let seed = base ^ case.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        let mut rng = Rng::new(seed);
+        let mut g = Gen {
+            rng: &mut rng,
+            shrink: 0,
+        };
+        let input = gen(&mut g);
+        if let Err(msg) = prop(&input) {
+            // shrink-lite: regenerate from the same seed at higher shrink
+            // levels; report the smallest still-failing level.
+            let mut level = 0;
+            for s in 1..=4u32 {
+                let mut rng = Rng::new(seed);
+                let mut g = Gen {
+                    rng: &mut rng,
+                    shrink: s,
+                };
+                let smaller = gen(&mut g);
+                if prop(&smaller).is_err() {
+                    level = s;
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x}, \
+                 min failing shrink level {level}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            "reverse-twice",
+            100,
+            |g| {
+                let n = g.size(64);
+                g.vec_f64(n, -1.0, 1.0)
+            },
+            |v| {
+                let mut r = v.clone();
+                r.reverse();
+                r.reverse();
+                if r == *v {
+                    Ok(())
+                } else {
+                    Err("reverse^2 != id".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_reports_seed() {
+        check(
+            "always-fails",
+            10,
+            |g| g.usize_in(0, 10),
+            |_| Err("nope".into()),
+        );
+    }
+}

@@ -1,0 +1,119 @@
+//! Fixed-size worker pool with thread-local worker state.
+//!
+//! The xla crate's PJRT handles are not `Send`, so the pool is built around
+//! *worker-owned* state: each worker thread constructs its own state (its
+//! own `PjRtClient` + compiled executables) via an `init` closure, and jobs
+//! are plain `Send` data mapped to plain `Send` results. Results are
+//! returned in submission order.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+pub struct Pool<J: Send + 'static, R: Send + 'static> {
+    job_tx: Vec<mpsc::Sender<(usize, J)>>,
+    res_rx: mpsc::Receiver<(usize, R)>,
+    handles: Vec<JoinHandle<()>>,
+    next_worker: usize,
+}
+
+impl<J: Send + 'static, R: Send + 'static> Pool<J, R> {
+    /// Spawn `n` workers. `init(worker_idx)` builds the thread-local state;
+    /// `work(&mut state, job)` maps a job to a result.
+    pub fn new<S, I, W>(n: usize, init: I, work: W) -> Self
+    where
+        S: 'static,
+        I: Fn(usize) -> S + Send + Sync + Clone + 'static,
+        W: Fn(&mut S, J) -> R + Send + Sync + Clone + 'static,
+    {
+        assert!(n > 0);
+        let (res_tx, res_rx) = mpsc::channel::<(usize, R)>();
+        let mut job_tx = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for w in 0..n {
+            let (tx, rx) = mpsc::channel::<(usize, J)>();
+            job_tx.push(tx);
+            let res_tx = res_tx.clone();
+            let init = init.clone();
+            let work = work.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut state = init(w);
+                while let Ok((id, job)) = rx.recv() {
+                    let r = work(&mut state, job);
+                    if res_tx.send((id, r)).is_err() {
+                        break;
+                    }
+                }
+            }));
+        }
+        Pool {
+            job_tx,
+            res_rx,
+            handles,
+            next_worker: 0,
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.job_tx.len()
+    }
+
+    /// Run all jobs across the pool; returns results in job order.
+    pub fn map(&mut self, jobs: Vec<J>) -> Vec<R> {
+        let n = jobs.len();
+        for (id, job) in jobs.into_iter().enumerate() {
+            let w = self.next_worker;
+            self.next_worker = (self.next_worker + 1) % self.job_tx.len();
+            self.job_tx[w]
+                .send((id, job))
+                .expect("worker thread died");
+        }
+        let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (id, r) = self.res_rx.recv().expect("worker thread died");
+            slots[id] = Some(r);
+        }
+        slots.into_iter().map(|s| s.unwrap()).collect()
+    }
+}
+
+impl<J: Send + 'static, R: Send + 'static> Drop for Pool<J, R> {
+    fn drop(&mut self) {
+        self.job_tx.clear(); // closes channels, workers exit
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let mut pool: Pool<u64, u64> =
+            Pool::new(4, |_| (), |_, x| x * x);
+        let out = pool.map((0..100).collect());
+        assert_eq!(out, (0..100).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn worker_state_is_threadlocal() {
+        // Each worker counts its own jobs; total must equal job count.
+        let mut pool: Pool<(), usize> = Pool::new(3, |_| 0usize, |c, _| {
+            *c += 1;
+            *c
+        });
+        let res = pool.map(vec![(); 30]);
+        // per-worker counters never exceed the job count and are >= 1
+        assert!(res.iter().all(|&c| (1..=30).contains(&c)));
+        let total: usize = res.iter().filter(|&&c| c == 1).count();
+        assert_eq!(total, 3); // each worker saw a first job
+    }
+
+    #[test]
+    fn empty_job_list() {
+        let mut pool: Pool<u32, u32> = Pool::new(2, |_| (), |_, x| x);
+        assert!(pool.map(vec![]).is_empty());
+    }
+}

@@ -1,0 +1,374 @@
+//! Integration tests over the real AOT artifacts (requires `make artifacts`).
+//!
+//! These exercise the full rust↔PJRT path: artifact loading, execution,
+//! numerics against CPU references, and whole HFL rounds.
+
+use arena::config::ExperimentConfig;
+use arena::hfl::HflEngine;
+use arena::runtime::{HostTensor, Runtime};
+use arena::util::rng::Rng;
+
+fn artifacts_dir() -> String {
+    std::env::var("ARENA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
+}
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(&artifacts_dir())
+        .join("manifest.json")
+        .exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+fn small_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::mnist();
+    cfg.topology.devices = 10;
+    cfg.topology.edges = 5;
+    cfg.hfl.samples_per_device = 128;
+    cfg.hfl.threshold_time = 400.0;
+    cfg.workers = 2;
+    cfg.artifacts_dir = artifacts_dir();
+    cfg
+}
+
+#[test]
+fn aggregate_artifact_matches_cpu_reference() {
+    require_artifacts!();
+    let rt = Runtime::load(artifacts_dir(), &["mnist_aggregate"]).unwrap();
+    let p = rt.manifest.param_count("mnist").unwrap();
+    let nmax = rt.manifest.config.nmax;
+    let mut rng = Rng::new(1);
+    let mut models = vec![0.0f32; nmax * p];
+    let mut weights = vec![0.0f32; nmax];
+    for i in 0..3 {
+        for j in 0..p {
+            models[i * p + j] = rng.normal() as f32;
+        }
+        weights[i] = (i + 1) as f32;
+    }
+    let out = rt
+        .execute(
+            "mnist_aggregate",
+            &[
+                HostTensor::f32(vec![nmax, p], models.clone()),
+                HostTensor::f32(vec![nmax], weights.clone()),
+            ],
+        )
+        .unwrap();
+    let got = out[0].as_f32().unwrap();
+    let wsum: f32 = weights.iter().sum();
+    for j in (0..p).step_by(997) {
+        let want: f32 = (0..3)
+            .map(|i| weights[i] * models[i * p + j])
+            .sum::<f32>()
+            / wsum;
+        assert!(
+            (got[j] - want).abs() < 1e-4,
+            "j={j}: {} vs {want}",
+            got[j]
+        );
+    }
+}
+
+#[test]
+fn eval_artifact_shapes_and_range() {
+    require_artifacts!();
+    let rt = Runtime::load(artifacts_dir(), &["mnist_eval"]).unwrap();
+    let p = rt.manifest.param_count("mnist").unwrap();
+    let w = rt.load_init_params("mnist").unwrap();
+    assert_eq!(w.len(), p);
+    let ts = rt.manifest.config.test_size;
+    let mut rng = Rng::new(2);
+    let x: Vec<f32> = (0..ts * 28 * 28).map(|_| rng.normal() as f32).collect();
+    let y: Vec<i32> = (0..ts).map(|i| (i % 10) as i32).collect();
+    let out = rt
+        .execute(
+            "mnist_eval",
+            &[
+                HostTensor::f32(vec![p], w),
+                HostTensor::f32(vec![ts, 28, 28, 1], x),
+                HostTensor::i32(vec![ts], y),
+            ],
+        )
+        .unwrap();
+    let correct = out[0].scalar().unwrap();
+    assert!((0.0..=ts as f64).contains(&correct), "correct={correct}");
+    assert!(out[1].scalar().unwrap() > 0.0, "loss must be positive");
+}
+
+#[test]
+fn shape_mismatch_is_rejected() {
+    require_artifacts!();
+    let rt = Runtime::load(artifacts_dir(), &["mnist_aggregate"]).unwrap();
+    let bad = rt.execute(
+        "mnist_aggregate",
+        &[
+            HostTensor::f32(vec![2, 3], vec![0.0; 6]),
+            HostTensor::f32(vec![2], vec![1.0; 2]),
+        ],
+    );
+    assert!(bad.is_err());
+}
+
+#[test]
+fn ppo_artifacts_roundtrip() {
+    require_artifacts!();
+    let rt =
+        Runtime::load(artifacts_dir(), &["ppo_actor_fwd", "ppo_update"])
+            .unwrap();
+    let agent = arena::agent::PpoAgent::new(&rt).unwrap();
+    let state = vec![0.1f32; agent.state_len()];
+    let mut rng = Rng::new(3);
+    let (raw, logp, value) = agent.act(&rt, &state, &mut rng).unwrap();
+    assert_eq!(raw.len(), agent.act_len());
+    assert!(logp.is_finite() && value.is_finite());
+
+    // A PPO update with a tiny synthetic batch must change parameters.
+    let mut agent = agent;
+    let b = agent.batch();
+    let traj = {
+        let mut t = arena::agent::Trajectory::default();
+        for i in 0..4 {
+            t.push(arena::agent::Transition {
+                state: state.clone(),
+                raw_action: raw.clone(),
+                log_prob: logp,
+                value,
+                reward: i as f64,
+            });
+        }
+        t
+    };
+    let (adv, ret) =
+        arena::agent::gae_advantages(&traj.rewards(), &traj.values(), 0.9, 0.9);
+    let batch =
+        traj.to_batch(&adv, &ret, b, agent.state_len(), agent.act_len());
+    let before = agent.theta.clone();
+    let losses = agent.update(&rt, &batch).unwrap();
+    assert!(losses.policy.is_finite());
+    assert!(agent.theta != before, "update must move parameters");
+}
+
+#[test]
+fn engine_round_trains_and_accounts() {
+    require_artifacts!();
+    let cfg = small_cfg();
+    let mut engine = HflEngine::new(cfg, true).unwrap();
+    let m = engine.edges();
+    let (acc0, _) = engine.evaluate().unwrap();
+    let stats = engine
+        .run_round(&vec![2; m], &vec![1; m], None)
+        .unwrap();
+    assert_eq!(stats.k, 1);
+    assert!(stats.round_time > 0.0);
+    assert!(stats.energy > 0.0);
+    assert!(stats.accuracy >= 0.0 && stats.accuracy <= 1.0);
+    assert_eq!(stats.per_edge.len(), m);
+    for e in &stats.per_edge {
+        assert!(e.active > 0);
+        assert!(e.t_ec > 0.0);
+        assert!(e.t_sgd_slowest > 0.0);
+    }
+    // Training from synthetic-learnable data should beat random-init acc
+    // within a few rounds.
+    let mut acc = stats.accuracy;
+    for _ in 0..3 {
+        acc = engine
+            .run_round(&vec![2; m], &vec![1; m], None)
+            .unwrap()
+            .accuracy;
+    }
+    assert!(
+        acc > acc0 + 0.1,
+        "no learning signal: init {acc0}, after 4 rounds {acc}"
+    );
+}
+
+#[test]
+fn engine_reset_restores_initial_state() {
+    require_artifacts!();
+    let cfg = small_cfg();
+    let mut engine = HflEngine::new(cfg, false).unwrap();
+    let w0 = engine.cloud_w.clone();
+    let m = engine.edges();
+    engine.run_round(&vec![1; m], &vec![1; m], None).unwrap();
+    assert!(engine.cloud_w != w0);
+    engine.reset();
+    assert_eq!(engine.cloud_w, w0);
+    assert_eq!(engine.round, 0);
+    assert_eq!(engine.clock.now(), 0.0);
+}
+
+#[test]
+fn participation_mask_limits_training() {
+    require_artifacts!();
+    let cfg = small_cfg();
+    let mut engine = HflEngine::new(cfg.clone(), false).unwrap();
+    let m = engine.edges();
+    let n = cfg.topology.devices;
+    let mut mask = vec![false; n];
+    for (i, b) in mask.iter_mut().enumerate() {
+        *b = i % 2 == 0;
+    }
+    let stats = engine
+        .run_round(&vec![1; m], &vec![1; m], Some(&mask))
+        .unwrap();
+    let active: usize = stats.per_edge.iter().map(|e| e.active).sum();
+    assert_eq!(active, n / 2);
+    assert_eq!(stats.device_losses.len(), n / 2);
+    for (dev, _) in &stats.device_losses {
+        assert!(mask[*dev]);
+    }
+}
+
+#[test]
+fn cifar_engine_round_works() {
+    require_artifacts!();
+    let mut cfg = small_cfg();
+    cfg.hfl.dataset = arena::config::Dataset::Cifar;
+    cfg.sim.sgd_base_time = 8.0;
+    let mut engine = HflEngine::new(cfg, false).unwrap();
+    let m = engine.edges();
+    let stats = engine.run_round(&vec![1; m], &vec![1; m], None).unwrap();
+    assert!(stats.accuracy >= 0.0 && stats.accuracy <= 1.0);
+    assert!(stats.round_time > 0.0);
+    // CIFAR-shape rounds must be slower than MNIST-shape in simulated time
+    // (4x per-batch base cost).
+    assert!(stats.round_time > 10.0);
+}
+
+#[test]
+fn npca_variant_agents_load_and_act() {
+    require_artifacts!();
+    let mut rt = Runtime::load(artifacts_dir(), &[]).unwrap();
+    for npca in [2usize, 10] {
+        let agent =
+            arena::agent::PpoAgent::new_variant(&rt, npca).unwrap();
+        let (fwd, _) = agent.artifact_names();
+        rt.compile(&fwd).unwrap();
+        let state = vec![0.05f32; agent.state_len()];
+        let mut rng = Rng::new(9);
+        let (raw, logp, _) = agent.act(&rt, &state, &mut rng).unwrap();
+        assert_eq!(raw.len(), agent.act_len());
+        assert!(logp.is_finite(), "npca={npca}");
+    }
+}
+
+#[test]
+fn share_reassignment_keeps_regions_and_balance() {
+    require_artifacts!();
+    let cfg = small_cfg();
+    let engine = HflEngine::new(cfg.clone(), false).unwrap();
+    let assignment = arena::baselines::share::share_assignment(&engine);
+    assert_eq!(assignment.len(), cfg.topology.devices);
+    // Same cluster sizes as before (swap-only search).
+    let mut sizes = vec![0usize; cfg.topology.edges];
+    for &e in &assignment {
+        sizes[e] += 1;
+    }
+    for (j, edge) in engine.topo.edges.iter().enumerate() {
+        assert_eq!(sizes[j], edge.members.len(), "size changed at edge {j}");
+    }
+    // Region constraint respected.
+    for (dev, &e) in assignment.iter().enumerate() {
+        assert_eq!(
+            engine.topo.edges[e].region,
+            engine.topo.device_regions[dev],
+            "device {dev} crossed regions"
+        );
+    }
+}
+
+#[test]
+fn var_freq_frequencies_within_bounds() {
+    require_artifacts!();
+    let cfg = small_cfg();
+    let engine = HflEngine::new(cfg.clone(), true).unwrap();
+    for (g1, g2) in [
+        arena::baselines::var_freq::var_freq_a_frequencies(&engine),
+        arena::baselines::var_freq::var_freq_b_frequencies(&engine),
+    ] {
+        assert_eq!(g1.len(), cfg.topology.edges);
+        for j in 0..g1.len() {
+            assert!((1..=cfg.hfl.gamma1_max).contains(&g1[j]));
+            assert!((1..=cfg.hfl.gamma2_max).contains(&g2[j]));
+        }
+    }
+    // A gives the fastest edge at least as much work as the slowest edge.
+    let (g1, _) = arena::baselines::var_freq::var_freq_a_frequencies(&engine);
+    let times: Vec<f64> = (0..engine.edges())
+        .map(|j| engine.predict_edge_time(j, 1, 1))
+        .collect();
+    let fastest = times
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0;
+    let slowest = times
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0;
+    assert!(g1[fastest] >= g1[slowest], "g1={g1:?}, times={times:?}");
+}
+
+#[test]
+fn predict_edge_time_monotone_in_frequencies() {
+    require_artifacts!();
+    let engine = HflEngine::new(small_cfg(), false).unwrap();
+    for j in 0..engine.edges() {
+        let t11 = engine.predict_edge_time(j, 1, 1);
+        let t51 = engine.predict_edge_time(j, 5, 1);
+        let t54 = engine.predict_edge_time(j, 5, 4);
+        assert!(t11 < t51 && t51 < t54, "edge {j}: {t11} {t51} {t54}");
+    }
+}
+
+#[test]
+fn mobility_limits_participants() {
+    require_artifacts!();
+    let cfg = small_cfg();
+    let mut engine = HflEngine::new(cfg.clone(), false).unwrap();
+    engine.mobility = arena::sim::MobilityModel::new(
+        cfg.topology.devices,
+        1.0, // everyone leaves after round 1
+        0.0,
+        Rng::new(5),
+    );
+    let m = engine.edges();
+    let s1 = engine.run_round(&vec![1; m], &vec![1; m], None).unwrap();
+    let a1: usize = s1.per_edge.iter().map(|e| e.active).sum();
+    assert_eq!(a1, cfg.topology.devices);
+    let s2 = engine.run_round(&vec![1; m], &vec![1; m], None).unwrap();
+    let a2: usize = s2.per_edge.iter().map(|e| e.active).sum();
+    assert!(a2 <= 1, "after mass departure only the keep-alive remains");
+}
+
+#[test]
+fn pca_scores_via_artifact_match_cpu() {
+    require_artifacts!();
+    let cfg = small_cfg();
+    let mut engine = HflEngine::new(cfg, false).unwrap();
+    let m = engine.edges();
+    engine.run_round(&vec![1; m], &vec![1; m], None).unwrap();
+    let stack = engine.model_stack();
+    let pca = arena::pca::PcaModel::fit(&stack, 6);
+    let via_artifact = engine.pca_scores(&pca).unwrap();
+    let stack = engine.model_stack();
+    let via_cpu = pca.transform_cpu(&stack);
+    for (a, c) in via_artifact.iter().zip(&via_cpu) {
+        for (x, y) in a.iter().zip(c) {
+            let tol = 1e-2f32.max(y.abs() * 1e-3);
+            assert!((x - y).abs() < tol, "{x} vs {y}");
+        }
+    }
+}
