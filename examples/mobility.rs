@@ -7,18 +7,17 @@
 use anyhow::Result;
 use arena::config::ExperimentConfig;
 use arena::hfl::HflEngine;
-use arena::sim::MobilityModel;
-use arena::util::rng::Rng;
 
 fn main() -> Result<()> {
     std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "2");
     let mut cfg = ExperimentConfig::mnist();
     cfg.topology.devices = 10;
     cfg.hfl.threshold_time = 800.0;
+    // 15% leave / 50% rejoin per round — plain config knobs now (the CLI
+    // equivalent: --set sim.leave_prob=0.15 --set sim.join_prob=0.5).
+    cfg.sim.leave_prob = 0.15;
+    cfg.sim.join_prob = 0.5;
     let mut engine = HflEngine::new(cfg.clone(), true)?;
-    // 15% leave / 50% rejoin per round.
-    engine.mobility =
-        MobilityModel::new(cfg.topology.devices, 0.15, 0.5, Rng::new(7));
     let m = engine.edges();
     while engine.remaining_time() > 0.0 {
         let active_before = engine.mobility.active_count();

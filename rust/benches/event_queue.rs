@@ -1,0 +1,55 @@
+//! Bench: the discrete-event scheduler under asynchronous-HFL load —
+//! ≥10k device events scheduled and drained per iteration (the target is
+//! that the queue never shows up in an async-run profile next to real
+//! training). Coarse timestamps force heavy tie-break traffic, the worst
+//! case for the seeded ordering. No artifacts needed.
+//! `cargo bench --bench event_queue`
+
+use arena::sim::{Event, EventQueue};
+use arena::util::microbench::{bench, black_box};
+
+fn main() {
+    for &n in &[10_000usize, 100_000] {
+        bench(&format!("event_queue/schedule+drain/{n}"), || {
+            let mut q = EventQueue::new(42);
+            for i in 0..n {
+                // ~500 distinct timestamps -> ~n/500 ties per slot.
+                let t = ((i * 7919) % 500) as f64 * 0.25;
+                q.schedule(
+                    t,
+                    Event::DeviceTrainDone {
+                        device: i % 10_000,
+                        edge: i % 8,
+                    },
+                );
+            }
+            let mut last = -1.0f64;
+            while let Some((t, ev)) = q.pop() {
+                debug_assert!(t >= last);
+                last = t;
+                black_box(ev);
+            }
+            black_box(last);
+        });
+
+        // Steady-state churn: the queue holds n events while each pop
+        // reschedules one — the async engine's actual access pattern.
+        bench(&format!("event_queue/steady_state/{n}"), || {
+            let mut q = EventQueue::new(7);
+            for i in 0..n {
+                q.schedule(
+                    (i % 500) as f64,
+                    Event::DeviceTrainDone {
+                        device: i,
+                        edge: i % 8,
+                    },
+                );
+            }
+            for _ in 0..n {
+                let (t, ev) = q.pop().unwrap();
+                q.schedule(t + 500.0, ev);
+            }
+            black_box(q.len());
+        });
+    }
+}

@@ -1,0 +1,38 @@
+//! Async-Greedy: a baseline exercising the fully asynchronous engine.
+//!
+//! Device-side policy in the spirit of the async-FL scheduling literature
+//! (arXiv:2107.11415): since nobody waits for stragglers, fast clusters
+//! should simply do more local work per report. Per-edge local epochs are
+//! scaled greedily by the inverse of the edge's expected unit time (same
+//! time model as Var-Freq A, §2.2), then the run executes under
+//! `SyncMode::Async` — per-report staleness-discounted edge aggregation
+//! with a cloud timer — instead of barriered rounds.
+
+use anyhow::Result;
+
+use crate::hfl::{AsyncHflEngine, HflEngine, RunHistory};
+
+/// Greedy per-edge local-epoch counts: slower clusters train less per
+/// report (their updates would arrive stale anyway), faster ones more.
+pub fn async_greedy_frequencies(engine: &HflEngine) -> Vec<usize> {
+    let cfg = &engine.cfg.hfl;
+    let units: Vec<f64> = (0..engine.edges())
+        .map(|j| engine.predict_edge_time(j, 1, 1))
+        .collect();
+    let slowest = units.iter().copied().fold(0.0, f64::max);
+    units
+        .iter()
+        .map(|&u| {
+            let scale = (slowest / u).clamp(1.0, 4.0);
+            ((cfg.gamma1 as f64 * scale).round() as usize)
+                .clamp(1, cfg.gamma1_max)
+        })
+        .collect()
+}
+
+/// Run the greedy frequencies under the engine's configured (async) mode
+/// to the time threshold.
+pub fn async_greedy(engine: &mut AsyncHflEngine) -> Result<RunHistory> {
+    let g1 = async_greedy_frequencies(&engine.eng);
+    engine.run_with(&g1)
+}

@@ -7,7 +7,14 @@
 //!  * Favor       [5]  — DQN-based device selection (FedAvg + RL).
 //!  * Share       [9]  — data-distribution-aware device→edge re-assignment.
 //!  * Hwamei      [15] — Arena minus the §3.6 enhancements (see agent/).
+//!
+//! Beyond the paper, two event-driven schemes exercise the asynchronous
+//! engine (`hfl::async_engine`):
+//!  * Semi-Sync        — K-quorum edge aggregation, cloud on a timer.
+//!  * Async-Greedy     — staleness-discounted async mode with greedy
+//!    per-edge local-epoch scaling (see async_greedy.rs).
 
+pub mod async_greedy;
 pub mod favor;
 pub mod share;
 pub mod var_freq;

@@ -11,9 +11,9 @@ use anyhow::{bail, Context, Result};
 
 use crate::agent::{train_arena, ArenaOptions};
 use crate::baselines;
-use crate::config::ExperimentConfig;
+use crate::config::{ExperimentConfig, SyncModeCfg};
 use crate::exp;
-use crate::hfl::HflEngine;
+use crate::hfl::{AsyncHflEngine, HflEngine};
 
 const USAGE: &str = "\
 arena — learning-based synchronization for hierarchical federated learning
@@ -26,6 +26,10 @@ USAGE:
   arena list
 
 SCHEMES: vanilla-fl vanilla-hfl var-freq-a var-freq-b favor share arena hwamei
+         semi-sync async-greedy
+         (the last two pick their sync.mode themselves; tune them with
+         --set sync.quorum=K, sync.staleness_alpha=A, sync.cloud_interval=S;
+         --set sim.leave_prob=P / sim.join_prob=P enables device churn)
 ";
 
 pub struct Args {
@@ -119,7 +123,6 @@ fn cmd_run(args: &Args) -> Result<()> {
         .get("scheme")
         .map(|s| s.as_str())
         .unwrap_or("vanilla-hfl");
-    let mut engine = HflEngine::new(cfg.clone(), true)?;
     println!(
         "running {scheme} on {} (T={}s, {} devices / {} edges)",
         cfg.hfl.dataset.name(),
@@ -128,36 +131,54 @@ fn cmd_run(args: &Args) -> Result<()> {
         cfg.topology.edges
     );
     let hist = match scheme {
-        "vanilla-fl" => baselines::vanilla_fl(&mut engine, 0.6)?,
-        "vanilla-hfl" => baselines::vanilla_hfl(&mut engine)?,
-        "var-freq-a" => baselines::var_freq::var_freq_a(&mut engine)?,
-        "var-freq-b" => baselines::var_freq::var_freq_b(&mut engine)?,
-        "favor" => baselines::favor::favor(
-            &mut engine,
-            &baselines::favor::FavorOptions::default(),
-        )?,
-        "share" => baselines::share::share(&mut engine)?,
-        "arena" | "hwamei" => {
-            let opts = if scheme == "arena" {
-                ArenaOptions {
-                    verbose: true,
-                    ..ArenaOptions::arena(cfg.agent.episodes)
-                }
-            } else {
-                ArenaOptions {
-                    verbose: true,
-                    ..ArenaOptions::hwamei(cfg.agent.episodes)
-                }
-            };
-            let (agent, sb, _) = train_arena(&mut engine, &opts)?;
-            crate::agent::arena::run_arena_policy(
-                &mut engine,
-                &agent,
-                &sb,
-                opts.nearest_solution,
-            )?
+        // Event-driven schemes run on the async engine.
+        "semi-sync" => {
+            let mut c = cfg.clone();
+            c.sync.mode = SyncModeCfg::SemiSync;
+            let mut engine = AsyncHflEngine::new(c, false)?;
+            engine.run_to_threshold()?
         }
-        other => bail!("unknown scheme '{other}'"),
+        "async-greedy" => {
+            let mut c = cfg.clone();
+            c.sync.mode = SyncModeCfg::Async;
+            let mut engine = AsyncHflEngine::new(c, true)?;
+            baselines::async_greedy::async_greedy(&mut engine)?
+        }
+        _ => {
+            let mut engine = HflEngine::new(cfg.clone(), true)?;
+            match scheme {
+                "vanilla-fl" => baselines::vanilla_fl(&mut engine, 0.6)?,
+                "vanilla-hfl" => baselines::vanilla_hfl(&mut engine)?,
+                "var-freq-a" => baselines::var_freq::var_freq_a(&mut engine)?,
+                "var-freq-b" => baselines::var_freq::var_freq_b(&mut engine)?,
+                "favor" => baselines::favor::favor(
+                    &mut engine,
+                    &baselines::favor::FavorOptions::default(),
+                )?,
+                "share" => baselines::share::share(&mut engine)?,
+                "arena" | "hwamei" => {
+                    let opts = if scheme == "arena" {
+                        ArenaOptions {
+                            verbose: true,
+                            ..ArenaOptions::arena(cfg.agent.episodes)
+                        }
+                    } else {
+                        ArenaOptions {
+                            verbose: true,
+                            ..ArenaOptions::hwamei(cfg.agent.episodes)
+                        }
+                    };
+                    let (agent, sb, _) = train_arena(&mut engine, &opts)?;
+                    crate::agent::arena::run_arena_policy(
+                        &mut engine,
+                        &agent,
+                        &sb,
+                        opts.nearest_solution,
+                    )?
+                }
+                other => bail!("unknown scheme '{other}'"),
+            }
+        }
     };
     for r in &hist.rounds {
         println!(
@@ -243,7 +264,7 @@ fn cmd_profile(args: &Args) -> Result<()> {
 
 fn cmd_list() -> Result<()> {
     println!("presets: mnist cifar");
-    println!("schemes: vanilla-fl vanilla-hfl var-freq-a var-freq-b favor share arena hwamei");
+    println!("schemes: vanilla-fl vanilla-hfl var-freq-a var-freq-b favor share arena hwamei semi-sync async-greedy");
     println!("experiments:");
     for e in exp::EXPERIMENTS {
         println!("  {e}");

@@ -111,6 +111,61 @@ pub struct AgentConfig {
     pub npca: usize,
 }
 
+/// Which synchronization engine schedule executes the hierarchy
+/// (`hfl::async_engine::SyncMode` is built from this).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SyncModeCfg {
+    /// Barrier-synchronized rounds (the paper's setting; default).
+    Synchronous,
+    /// Edges aggregate on a K-quorum of reports; cloud on a timer.
+    SemiSync,
+    /// Staleness-discounted fully asynchronous aggregation.
+    Async,
+}
+
+impl SyncModeCfg {
+    pub fn name(self) -> &'static str {
+        match self {
+            SyncModeCfg::Synchronous => "sync",
+            SyncModeCfg::SemiSync => "semi-sync",
+            SyncModeCfg::Async => "async",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "sync" | "synchronous" => Ok(SyncModeCfg::Synchronous),
+            "semi-sync" | "semisync" | "semi" => Ok(SyncModeCfg::SemiSync),
+            "async" => Ok(SyncModeCfg::Async),
+            _ => bail!("unknown sync mode '{s}' (sync|semi-sync|async)"),
+        }
+    }
+}
+
+/// Knobs of the event-driven synchronization modes.
+#[derive(Clone, Debug)]
+pub struct SyncConfig {
+    pub mode: SyncModeCfg,
+    /// SemiSync: device reports that close an edge round (0 = all active
+    /// members, i.e. synchronous-per-edge behavior).
+    pub quorum: usize,
+    /// Async: staleness discount exponent α of 1/(1+s)^α (0 disables).
+    pub staleness_alpha: f64,
+    /// SemiSync/Async: cloud aggregation timer period, simulated seconds.
+    pub cloud_interval: f64,
+}
+
+impl Default for SyncConfig {
+    fn default() -> Self {
+        SyncConfig {
+            mode: SyncModeCfg::Synchronous,
+            quorum: 2,
+            staleness_alpha: 0.5,
+            cloud_interval: 150.0,
+        }
+    }
+}
+
 /// Simulation calibration (Fig. 3 / Fig. 4 models; see sim/).
 #[derive(Clone, Debug)]
 pub struct SimConfig {
@@ -130,6 +185,10 @@ pub struct SimConfig {
     pub us_bandwidth: f64,
     /// Jitter sigma on communication time.
     pub comm_jitter: f64,
+    /// Device mobility (paper §1): per-round probability an active device
+    /// leaves, and a departed one rejoins. Defaults (0 / 1) disable churn.
+    pub leave_prob: f64,
+    pub join_prob: f64,
 }
 
 #[derive(Clone, Debug)]
@@ -139,6 +198,7 @@ pub struct ExperimentConfig {
     pub hfl: HflConfig,
     pub agent: AgentConfig,
     pub sim: SimConfig,
+    pub sync: SyncConfig,
     /// Worker threads for parallel device training (0 = auto).
     pub workers: usize,
     /// Run model aggregation natively in rust instead of through the
@@ -199,7 +259,10 @@ impl ExperimentConfig {
                 us_latency: 0.12,
                 us_bandwidth: 9.0e6,
                 comm_jitter: 0.15,
+                leave_prob: 0.0,
+                join_prob: 1.0,
             },
+            sync: SyncConfig::default(),
             workers: 0,
             native_aggregation: false,
             artifacts_dir: "artifacts".into(),
@@ -298,6 +361,14 @@ impl ExperimentConfig {
             "sim.time_jitter" => self.sim.time_jitter = parse_f()?,
             "sim.power_idle" => self.sim.power_idle = parse_f()?,
             "sim.power_max" => self.sim.power_max = parse_f()?,
+            "sim.leave_prob" => self.sim.leave_prob = parse_f()?,
+            "sim.join_prob" => self.sim.join_prob = parse_f()?,
+            "sync.mode" => self.sync.mode = SyncModeCfg::parse(value)?,
+            "sync.quorum" => self.sync.quorum = parse_u()?,
+            "sync.staleness_alpha" => {
+                self.sync.staleness_alpha = parse_f()?
+            }
+            "sync.cloud_interval" => self.sync.cloud_interval = parse_f()?,
             _ => bail!("unknown config key '{key}'"),
         }
         Ok(())
@@ -345,6 +416,17 @@ impl ExperimentConfig {
         if !(0.0 < self.agent.lambda && self.agent.lambda <= 1.0) {
             bail!("lambda must be in (0,1]");
         }
+        if !(0.0..=1.0).contains(&self.sim.leave_prob)
+            || !(0.0..=1.0).contains(&self.sim.join_prob)
+        {
+            bail!("sim.leave_prob/join_prob must be probabilities in [0,1]");
+        }
+        if self.sync.staleness_alpha < 0.0 {
+            bail!("sync.staleness_alpha must be >= 0");
+        }
+        if self.sync.cloud_interval <= 0.0 {
+            bail!("sync.cloud_interval must be positive");
+        }
         Ok(())
     }
 
@@ -361,6 +443,9 @@ impl ExperimentConfig {
             ("gamma2", Json::num(self.hfl.gamma2 as f64)),
             ("episodes", Json::num(self.agent.episodes as f64)),
             ("epsilon", Json::num(self.agent.epsilon)),
+            ("sync_mode", Json::str(self.sync.mode.name())),
+            ("leave_prob", Json::num(self.sim.leave_prob)),
+            ("join_prob", Json::num(self.sim.join_prob)),
         ])
     }
 }
@@ -422,6 +507,38 @@ mod tests {
         let mut c = ExperimentConfig::mnist();
         c.topology.devices = 100;
         c.topology.edges = 5; // 20 per edge > nmax 16
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn sync_and_mobility_overrides() {
+        let mut c = ExperimentConfig::mnist();
+        c.apply_override("sync.mode", "semi-sync").unwrap();
+        c.apply_override("sync.quorum", "3").unwrap();
+        c.apply_override("sync.staleness_alpha", "0.7").unwrap();
+        c.apply_override("sync.cloud_interval", "90").unwrap();
+        c.apply_override("sim.leave_prob", "0.1").unwrap();
+        c.apply_override("sim.join_prob", "0.4").unwrap();
+        assert_eq!(c.sync.mode, SyncModeCfg::SemiSync);
+        assert_eq!(c.sync.quorum, 3);
+        assert!((c.sync.staleness_alpha - 0.7).abs() < 1e-12);
+        assert!((c.sim.leave_prob - 0.1).abs() < 1e-12);
+        c.validate().unwrap();
+        c.apply_override("sync.mode", "async").unwrap();
+        assert_eq!(c.sync.mode, SyncModeCfg::Async);
+        assert!(c.apply_override("sync.mode", "bogus").is_err());
+    }
+
+    #[test]
+    fn validation_catches_bad_sync_and_mobility() {
+        let mut c = ExperimentConfig::mnist();
+        c.sim.leave_prob = 1.5;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::mnist();
+        c.sync.cloud_interval = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::mnist();
+        c.sync.staleness_alpha = -0.1;
         assert!(c.validate().is_err());
     }
 

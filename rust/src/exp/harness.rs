@@ -14,8 +14,8 @@ use crate::agent::{
     StateBuilder,
 };
 use crate::baselines::{self, favor::FavorOptions};
-use crate::config::{Dataset, ExperimentConfig, Partition};
-use crate::hfl::{HflEngine, RunHistory};
+use crate::config::{Dataset, ExperimentConfig, Partition, SyncModeCfg};
+use crate::hfl::{AsyncHflEngine, HflEngine, RunHistory};
 use crate::runtime::Runtime;
 use crate::sim::{CpuModel, EnergyModel, NetworkModel, Region};
 use crate::util::csv::CsvWriter;
@@ -152,6 +152,18 @@ fn scheme_history(
         "share" => {
             let mut e = HflEngine::new(cfg.clone(), true)?;
             baselines::share::share(&mut e)
+        }
+        "semi-sync" => {
+            let mut c = cfg.clone();
+            c.sync.mode = SyncModeCfg::SemiSync;
+            let mut e = AsyncHflEngine::new(c, false)?;
+            e.run_to_threshold()
+        }
+        "async-greedy" => {
+            let mut c = cfg.clone();
+            c.sync.mode = SyncModeCfg::Async;
+            let mut e = AsyncHflEngine::new(c, true)?;
+            baselines::async_greedy::async_greedy(&mut e)
         }
         "arena" | "hwamei" => {
             let opts = if name == "arena" {
@@ -348,7 +360,8 @@ fn fig7(cfg: &ExperimentConfig) -> Result<()> {
 // ---------------------------------------------------------------------
 
 const FIG8_SCHEMES: &[&str] = &[
-    "vanilla-fl", "vanilla-hfl", "favor", "share", "hwamei", "arena",
+    "vanilla-fl", "vanilla-hfl", "favor", "share", "semi-sync",
+    "async-greedy", "hwamei", "arena",
 ];
 
 fn fig8(cfg: &ExperimentConfig) -> Result<()> {

@@ -1,0 +1,95 @@
+//! Weighted model aggregation shared by both synchronization engines
+//! (paper Eqs. 1-2). The Pallas `fedavg_reduce` artifact path stays in the
+//! engines (it needs the runtime handle); this module owns the native CPU
+//! reference and the staleness weighting used by the asynchronous modes.
+
+/// sum_i w_i m_i / sum_i w_i over flat models, native rust — the CPU
+/// roofline reference for the fedavg_reduce kernel (A/B'd in
+/// benches/aggregation.rs).
+pub fn aggregate_native(
+    models: &[&[f32]],
+    weights: &[f32],
+    p: usize,
+) -> Vec<f32> {
+    let wsum: f32 = weights.iter().sum();
+    let mut out = vec![0.0f32; p];
+    for (m, &w) in models.iter().zip(weights) {
+        if w == 0.0 {
+            continue;
+        }
+        for (o, &x) in out.iter_mut().zip(*m) {
+            *o += w * x;
+        }
+    }
+    let inv = 1.0 / wsum;
+    for o in out.iter_mut() {
+        *o *= inv;
+    }
+    out
+}
+
+/// Staleness discount of arXiv:2107.11415 / FedAsync: an update computed
+/// against a model `staleness` versions old contributes with multiplier
+/// `1 / (1 + s)^alpha`. `alpha = 0` ignores staleness entirely.
+pub fn staleness_discount(staleness: u64, alpha: f64) -> f32 {
+    (1.0 / (1.0 + staleness as f64).powf(alpha)) as f32
+}
+
+/// In-place convex blend `base = (1 - beta) * base + beta * update` — the
+/// per-report edge model mix of the fully asynchronous mode.
+pub fn mix_into(base: &mut [f32], update: &[f32], beta: f32) {
+    debug_assert_eq!(base.len(), update.len());
+    let keep = 1.0 - beta;
+    for (b, &u) in base.iter_mut().zip(update) {
+        *b = keep * *b + beta * u;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_aggregation_matches_formula() {
+        let a = vec![1.0f32; 8];
+        let b = vec![5.0f32; 8];
+        let out = aggregate_native(&[&a, &b], &[1.0, 3.0], 8);
+        for v in out {
+            assert!((v - 4.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn native_aggregation_skips_zero_weights() {
+        let a = vec![2.0f32; 4];
+        let b = vec![999.0f32; 4];
+        let out = aggregate_native(&[&a, &b], &[2.0, 0.0], 4);
+        for v in out {
+            assert!((v - 2.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn staleness_discount_decays() {
+        assert!((staleness_discount(0, 0.5) - 1.0).abs() < 1e-6);
+        let d1 = staleness_discount(1, 0.5);
+        let d4 = staleness_discount(4, 0.5);
+        assert!(d1 < 1.0 && d4 < d1, "{d1} {d4}");
+        // alpha = 0 disables the discount.
+        assert!((staleness_discount(9, 0.0) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mix_into_blends() {
+        let mut base = vec![0.0f32; 4];
+        let update = vec![2.0f32; 4];
+        mix_into(&mut base, &update, 0.25);
+        for v in &base {
+            assert!((v - 0.5).abs() < 1e-6);
+        }
+        mix_into(&mut base, &update, 1.0);
+        for v in &base {
+            assert!((v - 2.0).abs() < 1e-6);
+        }
+    }
+}

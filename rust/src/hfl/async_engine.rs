@@ -1,0 +1,682 @@
+//! Event-driven HFL engine: one executor, three synchronization modes.
+//!
+//! Where [`HflEngine::run_round`] can only express lock-step rounds (every
+//! edge advances through barrier-synchronized sub-rounds), this engine is
+//! driven by the deterministic discrete-event queue of [`crate::sim::event`]
+//! and supports the synchronization families the paper's scheme decides
+//! *between*:
+//!
+//! * **`SyncMode::Synchronous`** — the classic HFL schedule, re-expressed
+//!   as events: every device's `DeviceTrainDone` is scheduled, each edge's
+//!   `EdgeAggregate` fires when its last member reports, `CloudAggregate`
+//!   fires on the straggler path. Reproduces `HflEngine::run_round`
+//!   **bit-for-bit** under the same seed (same RNG streams consumed in the
+//!   same order; equality is enforced by an integration test), proving the
+//!   event core models the barrier semantics exactly.
+//! * **`SyncMode::SemiSync`** — K-quorum edge aggregation: an edge
+//!   aggregates as soon as `quorum` of its members have reported (reported
+//!   devices idle until the quorum closes, then restart from the new edge
+//!   model), while the cloud aggregates on a fixed timer. Stragglers can
+//!   no longer stall their whole edge.
+//! * **`SyncMode::Async`** — fully asynchronous, staleness-discounted
+//!   aggregation after arXiv:2107.11415 / FedAsync: every device report
+//!   immediately blends into the edge model with weight
+//!   `data_share · 1/(1+s)^α` where `s` counts edge-model versions the
+//!   update is stale by; the cloud timer aggregates edge models weighted by
+//!   data size and per-edge freshness. Devices never wait; communication
+//!   fully overlaps computation.
+//!
+//! In the timer-driven modes one `RoundStats` is emitted per cloud
+//! aggregation window: `round_time` is the window length, `gamma2` reports
+//! the *observed* per-edge aggregation counts of the window, and
+//! `EdgeStats::total_time` covers only the edge→cloud path (edges never
+//! block on a barrier). Everything stays deterministic from the experiment
+//! seed: real training goes through the same seeded worker-pool jobs, and
+//! simultaneous events are ordered by the queue's seeded tie-break.
+
+use anyhow::{bail, Result};
+
+use crate::config::{ExperimentConfig, SyncConfig, SyncModeCfg};
+use crate::runtime::pool::TrainJob;
+use crate::sim::{Event, EventQueue};
+
+use super::aggregate::staleness_discount;
+use super::engine::HflEngine;
+use super::metrics::{RoundAccumulator, RoundStats, RunHistory};
+
+/// Synchronization policy the event loop executes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SyncMode {
+    Synchronous,
+    SemiSync {
+        /// Device reports that close an edge round (0 = all active members).
+        quorum: usize,
+        /// Cloud aggregation period, simulated seconds.
+        cloud_interval: f64,
+    },
+    Async {
+        /// Staleness discount exponent α of `1/(1+s)^α`.
+        staleness_alpha: f64,
+        cloud_interval: f64,
+    },
+}
+
+impl SyncMode {
+    pub fn from_config(sync: &SyncConfig) -> Self {
+        match sync.mode {
+            SyncModeCfg::Synchronous => SyncMode::Synchronous,
+            SyncModeCfg::SemiSync => SyncMode::SemiSync {
+                quorum: sync.quorum,
+                cloud_interval: sync.cloud_interval,
+            },
+            SyncModeCfg::Async => SyncMode::Async {
+                staleness_alpha: sync.staleness_alpha,
+                cloud_interval: sync.cloud_interval,
+            },
+        }
+    }
+
+    fn cloud_interval(&self) -> f64 {
+        match self {
+            SyncMode::Synchronous => f64::INFINITY,
+            SyncMode::SemiSync { cloud_interval, .. }
+            | SyncMode::Async { cloud_interval, .. } => *cloud_interval,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SyncMode::Synchronous => "synchronous",
+            SyncMode::SemiSync { .. } => "semi-sync",
+            SyncMode::Async { .. } => "async",
+        }
+    }
+}
+
+/// A dispatched-but-not-yet-completed local training run. The real compute
+/// happens eagerly at dispatch (results depend only on weights + seed, not
+/// on simulated time); the simulated completion is the queued event.
+struct PendingTrain {
+    w: Vec<f32>,
+    last_loss: Option<f64>,
+    t: f64,
+    energy: f64,
+}
+
+pub struct AsyncHflEngine {
+    pub eng: HflEngine,
+    pub mode: SyncMode,
+    queue: EventQueue,
+    /// Per-edge local epochs for dispatched jobs.
+    g1: Vec<usize>,
+    /// device -> owning edge.
+    dev_edge: Vec<usize>,
+    in_flight: Vec<Option<PendingTrain>>,
+    /// Per-edge devices reported since the edge last aggregated.
+    reported: Vec<Vec<usize>>,
+    /// Per-edge model version (bumped per edge aggregation).
+    edge_version: Vec<u64>,
+    /// Edge version a device's current training started from.
+    device_version: Vec<u64>,
+    /// Cloud aggregation windows completed.
+    cloud_round_idx: u64,
+    /// Window index of each edge's last aggregation (cloud freshness).
+    edge_last_update_round: Vec<u64>,
+    /// Edge aggregations inside the current cloud window.
+    window_edge_aggs: Vec<usize>,
+    acc: RoundAccumulator,
+    window_start: f64,
+}
+
+impl AsyncHflEngine {
+    pub fn new(cfg: ExperimentConfig, use_profiling: bool) -> Result<Self> {
+        let mode = SyncMode::from_config(&cfg.sync);
+        let seed = cfg.seed;
+        let eng = HflEngine::new(cfg, use_profiling)?;
+        let n = eng.cfg.topology.devices;
+        let m = eng.cfg.topology.edges;
+        let mut dev_edge = vec![0usize; n];
+        for (j, edge) in eng.topo.edges.iter().enumerate() {
+            for &d in &edge.members {
+                dev_edge[d] = j;
+            }
+        }
+        let g1 = vec![eng.cfg.hfl.gamma1; m];
+        Ok(AsyncHflEngine {
+            queue: EventQueue::new(seed ^ 0xa57c),
+            g1,
+            dev_edge,
+            in_flight: (0..n).map(|_| None).collect(),
+            reported: vec![Vec::new(); m],
+            edge_version: vec![0; m],
+            device_version: vec![0; n],
+            cloud_round_idx: 0,
+            edge_last_update_round: vec![0; m],
+            window_edge_aggs: vec![0; m],
+            acc: RoundAccumulator::new(m),
+            window_start: 0.0,
+            mode,
+            eng,
+        })
+    }
+
+    pub fn edges(&self) -> usize {
+        self.eng.edges()
+    }
+
+    /// Run the configured mode to the time threshold with uniform default
+    /// frequencies.
+    pub fn run_to_threshold(&mut self) -> Result<RunHistory> {
+        let g1 = vec![self.eng.cfg.hfl.gamma1; self.edges()];
+        self.run_with(&g1)
+    }
+
+    /// Run the configured mode to the time threshold under per-edge local
+    /// epochs `g1` (gamma2 only applies in `Synchronous`, from the config).
+    pub fn run_with(&mut self, g1: &[usize]) -> Result<RunHistory> {
+        anyhow::ensure!(
+            g1.len() == self.edges(),
+            "need {} per-edge frequencies",
+            self.edges()
+        );
+        match self.mode {
+            SyncMode::Synchronous => {
+                self.eng.reset();
+                let g2 = vec![self.eng.cfg.hfl.gamma2; self.edges()];
+                let mut hist = RunHistory::default();
+                while self.eng.remaining_time() > 0.0 {
+                    hist.push(self.run_round(g1, &g2, None)?);
+                }
+                Ok(hist)
+            }
+            _ => self.run_event_loop(g1),
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // Synchronous mode: one barriered cloud round, event-driven.
+    // -----------------------------------------------------------------
+
+    /// Execute one synchronous cloud round through the event queue.
+    /// Equivalent to `HflEngine::run_round` bit-for-bit under the same
+    /// seed: the same RNG streams are consumed in the same order, and the
+    /// event timeline reproduces the barrier arithmetic exactly (an edge's
+    /// aggregate fires at its slowest member's completion; the cloud at
+    /// the straggler edge's path).
+    pub fn run_round(
+        &mut self,
+        gamma1: &[usize],
+        gamma2: &[usize],
+        participation: Option<&[bool]>,
+    ) -> Result<RoundStats> {
+        if !matches!(self.mode, SyncMode::Synchronous) {
+            bail!(
+                "run_round is the synchronous entry point; {} mode runs \
+                 through run_with/run_to_threshold",
+                self.mode.name()
+            );
+        }
+        let m = self.edges();
+        anyhow::ensure!(
+            gamma1.len() == m && gamma2.len() == m,
+            "need {m} per-edge frequencies"
+        );
+        let mut acc = RoundAccumulator::new(m);
+        let mut edge_clock = vec![0.0f64; m];
+        let max_gamma2 = gamma2.iter().copied().max().unwrap_or(1).max(1);
+
+        for sub in 0..max_gamma2 {
+            // One relative-time queue per sub-round: edges advance their
+            // gamma2 schedules in *parallel* simulated time, so a fast
+            // edge's sub-k+1 events may precede a slow edge's sub-k ones —
+            // each drain unit gets its own timeline (and its events carry
+            // the per-edge clock, matching run_round's accumulators
+            // bit-for-bit).
+            let mut q = EventQueue::new(
+                self.eng.cfg.seed
+                    ^ 0x51ac
+                    ^ ((self.eng.round as u64) << 8)
+                    ^ ((sub as u64) << 40),
+            );
+            let (jobs, job_edges) =
+                self.eng.gather_jobs(sub, gamma1, gamma2, participation);
+            if jobs.is_empty() {
+                continue;
+            }
+            let results = self.eng.train_batch(jobs)?;
+            // Schedule every member's completion; count expected reports.
+            let mut expect = vec![0usize; m];
+            let mut seen = vec![0usize; m];
+            for (res, &j) in results.iter().zip(&job_edges) {
+                let (t_dev, e_dev) =
+                    self.eng.simulate_train(res.device, res.losses.len());
+                acc.record_train(
+                    j,
+                    res.device,
+                    t_dev,
+                    e_dev,
+                    res.losses.last().copied(),
+                );
+                q.schedule(
+                    edge_clock[j] + t_dev,
+                    Event::DeviceTrainDone {
+                        device: res.device,
+                        edge: j,
+                    },
+                );
+                expect[j] += 1;
+            }
+            for res in results {
+                self.eng.device_w[res.device] = res.w;
+            }
+            // Drain the sub-round: an edge aggregates when its last member
+            // reports, at that member's completion time.
+            let mut remaining = expect.iter().sum::<usize>();
+            while remaining > 0 {
+                let (t, ev) =
+                    q.pop().expect("sync sub-round queue underflow");
+                remaining -= 1;
+                match ev {
+                    Event::DeviceTrainDone { edge, .. } => {
+                        seen[edge] += 1;
+                        if seen[edge] == expect[edge] {
+                            q.schedule(t, Event::EdgeAggregate { edge });
+                            remaining += 1;
+                        }
+                    }
+                    Event::EdgeAggregate { edge } => {
+                        let devs =
+                            self.eng.edge_participants(edge, participation);
+                        if !devs.is_empty() {
+                            self.eng.edge_aggregate_devices(edge, &devs)?;
+                            edge_clock[edge] = t;
+                        }
+                    }
+                    _ => unreachable!("unexpected event in sync sub-round"),
+                }
+            }
+        }
+
+        // Edge -> cloud communication (straggler path per edge).
+        for j in 0..m {
+            let region = self.eng.topo.edges[j].region;
+            let t_ec = self.eng.sample_comm_time(region);
+            acc.record_comm(j, t_ec, edge_clock[j]);
+        }
+        // Cloud aggregation at the straggler path, then the mobility
+        // process advances (the barrier makes their event times trivial —
+        // round_time — so no queue is needed for this tail).
+        let round_time = acc.round_time();
+        let active: Vec<usize> =
+            (0..m).filter(|&j| acc.per_edge[j].active > 0).collect();
+        self.eng.cloud_aggregate_edges(&active, None)?;
+        self.eng.broadcast_cloud();
+
+        self.eng.clock.advance(round_time);
+        self.eng.round += 1;
+        self.eng.total_energy += acc.round_energy;
+        self.eng.mobility.step();
+
+        let (accuracy, test_loss) = self.eng.evaluate()?;
+        let stats = acc.finish(
+            self.eng.round,
+            accuracy,
+            test_loss,
+            round_time,
+            self.eng.clock.now(),
+            gamma1,
+            gamma2,
+        );
+        self.eng.last_round = Some(stats.clone());
+        Ok(stats)
+    }
+
+    // -----------------------------------------------------------------
+    // SemiSync / Async modes: the free-running event loop.
+    // -----------------------------------------------------------------
+
+    fn run_event_loop(&mut self, g1: &[usize]) -> Result<RunHistory> {
+        let m = self.edges();
+        let n = self.eng.cfg.topology.devices;
+        self.eng.reset();
+        self.g1 = g1.to_vec();
+        self.queue = EventQueue::new(self.eng.cfg.seed ^ 0xa57c);
+        self.in_flight = (0..n).map(|_| None).collect();
+        self.reported = vec![Vec::new(); m];
+        self.edge_version = vec![0; m];
+        self.device_version = vec![0; n];
+        self.cloud_round_idx = 0;
+        self.edge_last_update_round = vec![0; m];
+        self.window_edge_aggs = vec![0; m];
+        self.acc = RoundAccumulator::new(m);
+        self.window_start = 0.0;
+
+        let interval = self.mode.cloud_interval();
+        self.queue.schedule(interval, Event::CloudAggregate);
+        // Mobility steps once per window, offset to avoid timer ties.
+        self.queue.schedule(0.5 * interval, Event::MobilityFlip);
+        let all: Vec<usize> = (0..n).collect();
+        self.dispatch(&all, 0.0)?;
+
+        let threshold = self.eng.cfg.hfl.threshold_time;
+        let mut hist = RunHistory::default();
+        while let Some(t_next) = self.queue.peek_time() {
+            if t_next > threshold {
+                break;
+            }
+            let (t, ev) = self.queue.pop().expect("peeked event vanished");
+            match ev {
+                Event::DeviceTrainDone { device, edge } => {
+                    self.on_train_done(device, edge, t)?;
+                }
+                Event::EdgeAggregate { edge } => {
+                    self.on_edge_aggregate(edge, t)?;
+                }
+                Event::CloudAggregate => {
+                    hist.push(self.on_cloud_aggregate(t)?);
+                }
+                Event::MobilityFlip => self.on_mobility_flip(t)?,
+            }
+        }
+        // Flush the tail: training completed after the last timer tick
+        // (or a cloud_interval longer than the whole run) would otherwise
+        // drop its energy/accuracy from the history entirely.
+        if self.acc.per_edge.iter().any(|e| e.active > 0) {
+            hist.push(self.on_cloud_aggregate(threshold)?);
+        }
+        Ok(hist)
+    }
+
+    /// Start local training on every listed device that is active and
+    /// idle: run the real compute now, schedule the simulated completion.
+    fn dispatch(&mut self, devs: &[usize], now: f64) -> Result<()> {
+        let mut jobs = Vec::new();
+        for &d in devs {
+            if !self.eng.mobility.is_active(d) || self.in_flight[d].is_some()
+            {
+                continue;
+            }
+            let j = self.dev_edge[d];
+            jobs.push(TrainJob {
+                device: d,
+                w: self.eng.device_w[d].clone(),
+                epochs: self.g1[j],
+                seed: self.eng.fork_job_seed(d),
+            });
+        }
+        if jobs.is_empty() {
+            return Ok(());
+        }
+        let results = self.eng.train_batch(jobs)?;
+        for res in results {
+            let d = res.device;
+            let (t_dev, e_dev) =
+                self.eng.simulate_train(d, res.losses.len());
+            self.device_version[d] = self.edge_version[self.dev_edge[d]];
+            self.in_flight[d] = Some(PendingTrain {
+                w: res.w,
+                last_loss: res.losses.last().copied(),
+                t: t_dev,
+                energy: e_dev,
+            });
+            self.queue.schedule(
+                now + t_dev,
+                Event::DeviceTrainDone {
+                    device: d,
+                    edge: self.dev_edge[d],
+                },
+            );
+        }
+        Ok(())
+    }
+
+    fn on_train_done(
+        &mut self,
+        device: usize,
+        edge: usize,
+        t: f64,
+    ) -> Result<()> {
+        let Some(p) = self.in_flight[device].take() else {
+            return Ok(());
+        };
+        // Energy was spent even if the device has since left.
+        self.acc.record_train(edge, device, p.t, p.energy, p.last_loss);
+        if !self.eng.mobility.is_active(device) {
+            return Ok(()); // departed mid-flight: result discarded
+        }
+        self.eng.device_w[device] = p.w;
+        self.reported[edge].push(device);
+        match self.mode {
+            SyncMode::SemiSync { quorum, .. } => {
+                if self.reported[edge].len()
+                    >= self.effective_quorum(edge, quorum)
+                {
+                    self.queue
+                        .schedule(t, Event::EdgeAggregate { edge });
+                }
+            }
+            SyncMode::Async { .. } => {
+                self.queue.schedule(t, Event::EdgeAggregate { edge });
+            }
+            SyncMode::Synchronous => {
+                unreachable!("sync mode does not use the free-running loop")
+            }
+        }
+        Ok(())
+    }
+
+    /// K-quorum resolved against the edge's currently active population.
+    fn effective_quorum(&self, edge: usize, quorum: usize) -> usize {
+        let active = self.eng.topo.edges[edge]
+            .members
+            .iter()
+            .filter(|&&d| self.eng.mobility.is_active(d))
+            .count()
+            .max(1);
+        if quorum == 0 {
+            active
+        } else {
+            quorum.min(active)
+        }
+    }
+
+    fn on_edge_aggregate(&mut self, edge: usize, t: f64) -> Result<()> {
+        let devs = std::mem::take(&mut self.reported[edge]);
+        if devs.is_empty() {
+            return Ok(()); // already flushed (duplicate trigger)
+        }
+        match self.mode {
+            SyncMode::SemiSync { .. } => {
+                // Quorum closes like a small synchronous edge round.
+                self.eng.edge_aggregate_devices(edge, &devs)?;
+            }
+            SyncMode::Async { staleness_alpha, .. } => {
+                let edge_data = self.eng.edge_data_weight(edge);
+                for &d in &devs {
+                    let s = self.edge_version[edge] - self.device_version[d];
+                    let share =
+                        self.eng.topo.shards[d].n as f32 / edge_data;
+                    let beta = share * staleness_discount(s, staleness_alpha);
+                    self.eng.mix_device_into_edge(edge, d, beta);
+                }
+                for &d in &devs {
+                    self.eng.device_w[d] =
+                        self.eng.edge_w[edge].clone();
+                }
+            }
+            SyncMode::Synchronous => unreachable!(),
+        }
+        self.edge_version[edge] += 1;
+        self.edge_last_update_round[edge] = self.cloud_round_idx;
+        self.window_edge_aggs[edge] += 1;
+        // Reporting devices restart from the fresh edge model.
+        self.dispatch(&devs, t)
+    }
+
+    fn on_cloud_aggregate(&mut self, t: f64) -> Result<RoundStats> {
+        let m = self.edges();
+        // Flush partial quorums so no edge (or idle-waiting device) can
+        // starve across windows.
+        for j in 0..m {
+            if !self.reported[j].is_empty() {
+                self.on_edge_aggregate(j, t)?;
+            }
+        }
+        for j in 0..m {
+            let region = self.eng.topo.edges[j].region;
+            let t_ec = self.eng.sample_comm_time(region);
+            self.acc.record_comm(j, t_ec, 0.0);
+        }
+        match self.mode {
+            SyncMode::Async { staleness_alpha, .. } => {
+                // All edges contribute, discounted by how many windows ago
+                // they last aggregated (pure cloud echoes decay fastest).
+                let edges: Vec<usize> = (0..m).collect();
+                let factors: Vec<f32> = (0..m)
+                    .map(|j| {
+                        staleness_discount(
+                            self.cloud_round_idx
+                                - self.edge_last_update_round[j],
+                            staleness_alpha,
+                        )
+                    })
+                    .collect();
+                self.eng.cloud_aggregate_edges(&edges, Some(&factors))?;
+            }
+            SyncMode::SemiSync { .. } => {
+                // Only edges that actually aggregated this window.
+                let edges: Vec<usize> = (0..m)
+                    .filter(|&j| self.window_edge_aggs[j] > 0)
+                    .collect();
+                self.eng.cloud_aggregate_edges(&edges, None)?;
+            }
+            SyncMode::Synchronous => unreachable!(),
+        }
+        // Push the new global model down to the edges only; devices are
+        // mid-training and pick it up at their next edge aggregation
+        // (overlapped communication).
+        let cloud = self.eng.cloud_w.clone();
+        for e in self.eng.edge_w.iter_mut() {
+            e.clone_from(&cloud);
+        }
+        self.cloud_round_idx += 1;
+
+        let round_time = t - self.window_start;
+        self.eng.clock.advance(round_time);
+        self.eng.round += 1;
+        self.eng.total_energy += self.acc.round_energy;
+        let (accuracy, test_loss) = self.eng.evaluate()?;
+        let g2_observed = std::mem::replace(
+            &mut self.window_edge_aggs,
+            vec![0; m],
+        );
+        let acc = std::mem::replace(&mut self.acc, RoundAccumulator::new(m));
+        let stats = acc.finish(
+            self.eng.round,
+            accuracy,
+            test_loss,
+            round_time,
+            self.eng.clock.now(),
+            &self.g1,
+            &g2_observed,
+        );
+        self.eng.last_round = Some(stats.clone());
+        self.window_start = t;
+        self.queue
+            .schedule(t + self.mode.cloud_interval(), Event::CloudAggregate);
+        Ok(stats)
+    }
+
+    fn on_mobility_flip(&mut self, t: f64) -> Result<()> {
+        let n = self.eng.cfg.topology.devices;
+        let was: Vec<bool> =
+            (0..n).map(|d| self.eng.mobility.is_active(d)).collect();
+        self.eng.mobility.step();
+        let flipped: Vec<usize> = (0..n)
+            .filter(|&d| self.eng.mobility.is_active(d) != was[d])
+            .collect();
+        // A flipped device's pending report is void either way: a leaver
+        // took its update with it, and a rejoiner restarts from the edge
+        // model — without this purge a report-leave-rejoin sequence would
+        // enter reported[] twice and double-weight the device.
+        for &d in &flipped {
+            self.reported[self.dev_edge[d]].retain(|&x| x != d);
+        }
+        let rejoined: Vec<usize> = flipped
+            .iter()
+            .copied()
+            .filter(|&d| self.eng.mobility.is_active(d))
+            .collect();
+        // Rejoining devices start from their edge's current model.
+        for &d in &rejoined {
+            self.eng.device_w[d] =
+                self.eng.edge_w[self.dev_edge[d]].clone();
+        }
+        self.dispatch(&rejoined, t)?;
+        self.queue
+            .schedule(t + self.mode.cloud_interval(), Event::MobilityFlip);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SyncConfig;
+
+    #[test]
+    fn mode_from_config() {
+        assert_eq!(
+            SyncMode::from_config(&SyncConfig::default()),
+            SyncMode::Synchronous
+        );
+        let sc = SyncConfig {
+            mode: SyncModeCfg::SemiSync,
+            quorum: 3,
+            staleness_alpha: 0.7,
+            cloud_interval: 90.0,
+        };
+        assert_eq!(
+            SyncMode::from_config(&sc),
+            SyncMode::SemiSync {
+                quorum: 3,
+                cloud_interval: 90.0
+            }
+        );
+        let sc = SyncConfig {
+            mode: SyncModeCfg::Async,
+            ..sc
+        };
+        match SyncMode::from_config(&sc) {
+            SyncMode::Async {
+                staleness_alpha,
+                cloud_interval,
+            } => {
+                assert!((staleness_alpha - 0.7).abs() < 1e-12);
+                assert!((cloud_interval - 90.0).abs() < 1e-12);
+            }
+            other => panic!("wrong mode {other:?}"),
+        }
+    }
+
+    #[test]
+    fn mode_names() {
+        assert_eq!(SyncMode::Synchronous.name(), "synchronous");
+        assert_eq!(
+            SyncMode::SemiSync {
+                quorum: 2,
+                cloud_interval: 1.0
+            }
+            .name(),
+            "semi-sync"
+        );
+        assert_eq!(
+            SyncMode::Async {
+                staleness_alpha: 0.5,
+                cloud_interval: 1.0
+            }
+            .name(),
+            "async"
+        );
+    }
+}

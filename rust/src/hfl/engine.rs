@@ -8,8 +8,11 @@ use crate::runtime::{pool::TrainJob, DevicePool, HostTensor, Runtime};
 use crate::sim::{EnergyModel, MobilityModel, NetworkModel, SimClock};
 use crate::util::rng::Rng;
 
-use super::metrics::{EdgeStats, RoundStats};
+use super::aggregate::aggregate_native;
+use super::metrics::{RoundAccumulator, RoundStats};
 use super::topology::{build_topology, Topology};
+use crate::runtime::pool::TrainResult;
+use crate::sim::Region;
 
 pub struct HflEngine {
     pub cfg: ExperimentConfig,
@@ -79,7 +82,7 @@ impl HflEngine {
         let energy_model =
             EnergyModel::new(cfg.sim.power_idle, cfg.sim.power_max);
         let net = NetworkModel::from_config(&cfg.sim);
-        let mobility = MobilityModel::disabled(n);
+        let mobility = MobilityModel::from_config(n, &cfg.sim, cfg.seed);
         Ok(HflEngine {
             p,
             cloud_w: init_w.clone(),
@@ -225,6 +228,200 @@ impl HflEngine {
         v
     }
 
+    // -----------------------------------------------------------------
+    // Shared round primitives. Both this engine's barrier-style
+    // `run_round` and `AsyncHflEngine`'s event-driven loop are built from
+    // these; they consume the RNG streams in identical order so the two
+    // engines agree bit-for-bit in synchronous mode.
+    // -----------------------------------------------------------------
+
+    /// Deterministic per-(round, device) training seed.
+    pub(crate) fn fork_job_seed(&mut self, device: usize) -> u64 {
+        self.rng
+            .fork(((self.round as u64) << 20) ^ device as u64)
+            .next_u64()
+    }
+
+    /// Whether `device` trains this round (mobility + participation mask).
+    pub(crate) fn trains_this_round(
+        &self,
+        device: usize,
+        participation: Option<&[bool]>,
+    ) -> bool {
+        self.mobility.is_active(device)
+            && participation.map(|p| p[device]).unwrap_or(true)
+    }
+
+    /// Edge `j`'s members that train this round, in member order.
+    pub(crate) fn edge_participants(
+        &self,
+        j: usize,
+        participation: Option<&[bool]>,
+    ) -> Vec<usize> {
+        self.topo.edges[j]
+            .members
+            .iter()
+            .copied()
+            .filter(|&d| self.trains_this_round(d, participation))
+            .collect()
+    }
+
+    /// Gather the training jobs of sub-round `sub` in canonical
+    /// (edge-major, member-order) sequence; returns (jobs, owning edge per
+    /// job). Seed forks happen here, in this exact order.
+    pub(crate) fn gather_jobs(
+        &mut self,
+        sub: usize,
+        gamma1: &[usize],
+        gamma2: &[usize],
+        participation: Option<&[bool]>,
+    ) -> (Vec<TrainJob>, Vec<usize>) {
+        let mut jobs = Vec::new();
+        let mut job_edges = Vec::new();
+        let round = self.round;
+        for (j, edge) in self.topo.edges.iter().enumerate() {
+            if sub >= gamma2[j] {
+                continue;
+            }
+            for &dev in &edge.members {
+                if !self.trains_this_round(dev, participation) {
+                    continue;
+                }
+                // Same fork expression as fork_job_seed (inlined: the
+                // edge iteration holds a topo borrow).
+                jobs.push(TrainJob {
+                    device: dev,
+                    w: self.device_w[dev].clone(),
+                    epochs: gamma1[j],
+                    seed: self
+                        .rng
+                        .fork(((round as u64) << 20) ^ dev as u64)
+                        .next_u64(),
+                });
+                job_edges.push(j);
+            }
+        }
+        (jobs, job_edges)
+    }
+
+    /// Run a batch of jobs over the worker pool (results in job order).
+    pub(crate) fn train_batch(
+        &mut self,
+        jobs: Vec<TrainJob>,
+    ) -> Result<Vec<TrainResult>> {
+        self.pool.train(jobs)
+    }
+
+    /// Simulated (time, energy) of `epochs` local epochs on `device`,
+    /// advancing the device's CPU state.
+    pub(crate) fn simulate_train(
+        &mut self,
+        device: usize,
+        epochs: usize,
+    ) -> (f64, f64) {
+        let nb = self.rt.manifest.config.nb;
+        let cpu = &mut self.topo.cpus[device];
+        let mut t_dev = 0.0;
+        let mut e_dev = 0.0;
+        for _ in 0..epochs {
+            cpu.step_usage();
+            for _ in 0..nb {
+                let t = cpu.sgd_time();
+                t_dev += t;
+                e_dev += self.energy_model.sgd_energy(cpu, t);
+            }
+        }
+        (t_dev, e_dev)
+    }
+
+    /// Aggregate `devs`' models (data-size weighted, member order) into
+    /// edge `j`'s model and broadcast it to all the edge's devices.
+    pub(crate) fn edge_aggregate_devices(
+        &mut self,
+        j: usize,
+        devs: &[usize],
+    ) -> Result<()> {
+        let mut models = Vec::new();
+        let mut weights = Vec::new();
+        for &dev in devs {
+            models.push(self.device_w[dev].as_slice());
+            weights.push(self.topo.shards[dev].n as f32);
+        }
+        let agg = self.aggregate(&models, &weights)?;
+        for &dev in &self.topo.edges[j].members {
+            self.device_w[dev].clone_from(&agg);
+        }
+        self.edge_w[j] = agg;
+        Ok(())
+    }
+
+    /// Blend device `dev`'s model into edge `j`'s with weight `beta`
+    /// (asynchronous staleness-discounted update; paper-external, after
+    /// arXiv:2107.11415).
+    pub(crate) fn mix_device_into_edge(
+        &mut self,
+        j: usize,
+        dev: usize,
+        beta: f32,
+    ) {
+        super::aggregate::mix_into(
+            &mut self.edge_w[j],
+            &self.device_w[dev],
+            beta,
+        );
+    }
+
+    /// Total training-data size under edge `j` (all members).
+    pub(crate) fn edge_data_weight(&self, j: usize) -> f32 {
+        self.topo.edges[j]
+            .members
+            .iter()
+            .map(|&d| self.topo.shards[d].n as f32)
+            .sum()
+    }
+
+    /// Cloud aggregation over the listed edges (data-size weighted, with
+    /// optional per-edge extra factors, e.g. staleness discounts).
+    pub(crate) fn cloud_aggregate_edges(
+        &mut self,
+        edges: &[usize],
+        factors: Option<&[f32]>,
+    ) -> Result<()> {
+        if edges.is_empty() {
+            return Ok(());
+        }
+        let mut weights = Vec::with_capacity(edges.len());
+        for (i, &j) in edges.iter().enumerate() {
+            let mut w = self.edge_data_weight(j);
+            if let Some(f) = factors {
+                w *= f[i];
+            }
+            weights.push(w);
+        }
+        let models: Vec<&[f32]> =
+            edges.iter().map(|&j| self.edge_w[j].as_slice()).collect();
+        self.cloud_w = self.aggregate(&models, &weights)?;
+        Ok(())
+    }
+
+    /// Broadcast the global model everywhere (next round starts from
+    /// w(k+1)).
+    pub(crate) fn broadcast_cloud(&mut self) {
+        for e in self.edge_w.iter_mut() {
+            e.clone_from(&self.cloud_w);
+        }
+        for d in self.device_w.iter_mut() {
+            d.clone_from(&self.cloud_w);
+        }
+    }
+
+    /// Sample one edge→cloud round-trip for `region` from the engine's
+    /// main RNG stream.
+    pub(crate) fn sample_comm_time(&mut self, region: Region) -> f64 {
+        let pbytes = crate::sim::network::model_bytes(self.p);
+        self.net.comm_time(region, pbytes, &mut self.rng)
+    }
+
     /// Execute one cloud round under per-edge frequencies.
     /// `participation`: per-device mask (None = all mobility-active devices
     /// train). Devices that skip keep their model and spend nothing.
@@ -239,13 +436,7 @@ impl HflEngine {
             gamma1.len() == m && gamma2.len() == m,
             "need {m} per-edge frequencies"
         );
-        let nb = self.rt.manifest.config.nb;
-        let mut per_edge = vec![EdgeStats::default(); m];
-        let mut round_energy = 0.0;
-        let mut train_loss_acc = 0.0;
-        let mut train_loss_n = 0.0;
-        let mut device_losses: Vec<(usize, f64)> = Vec::new();
-
+        let mut acc = RoundAccumulator::new(m);
         let max_gamma2 = gamma2.iter().copied().max().unwrap_or(1).max(1);
         let mut edge_sub_time = vec![0.0f64; m];
 
@@ -253,163 +444,75 @@ impl HflEngine {
         // parallel simulated time; real compute batches across edges per
         // sub-round index to keep the worker pool full.
         for sub in 0..max_gamma2 {
-            // Gather jobs for all edges still running sub-rounds.
-            let mut jobs = Vec::new();
-            let mut job_edges = Vec::new();
-            for (j, edge) in self.topo.edges.iter().enumerate() {
-                if sub >= gamma2[j] {
-                    continue;
-                }
-                for &dev in &edge.members {
-                    if !self.mobility.is_active(dev) {
-                        continue;
-                    }
-                    if let Some(mask) = participation {
-                        if !mask[dev] {
-                            continue;
-                        }
-                    }
-                    jobs.push(TrainJob {
-                        device: dev,
-                        w: self.device_w[dev].clone(),
-                        epochs: gamma1[j],
-                        seed: self
-                            .rng
-                            .fork(((self.round as u64) << 20) ^ dev as u64)
-                            .next_u64(),
-                    });
-                    job_edges.push(j);
-                }
-            }
+            let (jobs, job_edges) =
+                self.gather_jobs(sub, gamma1, gamma2, participation);
             if jobs.is_empty() {
                 continue;
             }
             // Real compute: parallel local training.
-            let results = self.pool.train(jobs)?;
+            let results = self.train_batch(jobs)?;
             // Simulated time/energy per device + apply new weights.
             let mut sub_slowest = vec![0.0f64; m];
             for (res, &j) in results.iter().zip(&job_edges) {
-                let dev = res.device;
-                let cpu = &mut self.topo.cpus[dev];
-                let mut t_dev = 0.0;
-                let mut e_dev = 0.0;
-                for _ in 0..res.losses.len() {
-                    cpu.step_usage();
-                    for _ in 0..nb {
-                        let t = cpu.sgd_time();
-                        t_dev += t;
-                        e_dev += self.energy_model.sgd_energy(cpu, t);
-                    }
-                }
-                per_edge[j].energy += e_dev;
-                round_energy += e_dev;
-                per_edge[j].active += 1;
+                let (t_dev, e_dev) =
+                    self.simulate_train(res.device, res.losses.len());
                 if t_dev > sub_slowest[j] {
                     sub_slowest[j] = t_dev;
                 }
-                if t_dev > per_edge[j].t_sgd_slowest {
-                    per_edge[j].t_sgd_slowest = t_dev;
-                }
-                if let Some(&loss) = res.losses.last() {
-                    train_loss_acc += loss;
-                    train_loss_n += 1.0;
-                    device_losses.push((dev, loss));
-                }
+                acc.record_train(
+                    j,
+                    res.device,
+                    t_dev,
+                    e_dev,
+                    res.losses.last().copied(),
+                );
             }
             for res in results {
                 self.device_w[res.device] = res.w;
             }
             // Edge aggregations for the edges that trained this sub-round.
             for j in 0..m {
-                if sub >= gamma2[j] || per_edge[j].active == 0 {
+                if sub >= gamma2[j] || acc.per_edge[j].active == 0 {
                     continue;
                 }
-                let members = &self.topo.edges[j].members;
-                let mut models = Vec::new();
-                let mut weights = Vec::new();
-                for &dev in members {
-                    let trained = self.mobility.is_active(dev)
-                        && participation.map(|p| p[dev]).unwrap_or(true);
-                    if trained {
-                        models.push(self.device_w[dev].as_slice());
-                        weights.push(self.topo.shards[dev].n as f32);
-                    }
-                }
-                if models.is_empty() {
+                let devs = self.edge_participants(j, participation);
+                if devs.is_empty() {
                     continue;
                 }
-                let agg = self.aggregate(&models, &weights)?;
-                // Broadcast back to the cluster's devices.
-                for &dev in members {
-                    self.device_w[dev].clone_from(&agg);
-                }
-                self.edge_w[j] = agg;
+                self.edge_aggregate_devices(j, &devs)?;
                 edge_sub_time[j] += sub_slowest[j];
             }
         }
 
         // Edge -> cloud communication (straggler path per edge).
-        let pbytes = crate::sim::network::model_bytes(self.p);
-        for (j, edge) in self.topo.edges.iter().enumerate() {
-            let t_ec = self.net.comm_time(edge.region, pbytes, &mut self.rng);
-            per_edge[j].t_ec = t_ec;
-            per_edge[j].total_time = edge_sub_time[j] + t_ec;
+        for j in 0..m {
+            let region = self.topo.edges[j].region;
+            let t_ec = self.sample_comm_time(region);
+            acc.record_comm(j, t_ec, edge_sub_time[j]);
         }
 
         // Cloud aggregation over edge models, weighted by cluster data.
-        let mut models = Vec::new();
-        let mut weights = Vec::new();
-        for (j, edge) in self.topo.edges.iter().enumerate() {
-            if per_edge[j].active == 0 {
-                continue;
-            }
-            models.push(self.edge_w[j].as_slice());
-            weights.push(
-                edge.members
-                    .iter()
-                    .map(|&d| self.topo.shards[d].n as f32)
-                    .sum(),
-            );
-            let _ = edge;
-        }
-        if !models.is_empty() {
-            self.cloud_w = self.aggregate(&models, &weights)?;
-        }
-        // Broadcast global model everywhere (next round starts from w(k+1)).
-        for e in self.edge_w.iter_mut() {
-            e.clone_from(&self.cloud_w);
-        }
-        for d in self.device_w.iter_mut() {
-            d.clone_from(&self.cloud_w);
-        }
+        let active: Vec<usize> =
+            (0..m).filter(|&j| acc.per_edge[j].active > 0).collect();
+        self.cloud_aggregate_edges(&active, None)?;
+        self.broadcast_cloud();
 
-        let round_time = per_edge
-            .iter()
-            .map(|e| e.total_time)
-            .fold(0.0, f64::max);
+        let round_time = acc.round_time();
         self.clock.advance(round_time);
         self.round += 1;
-        self.total_energy += round_energy;
+        self.total_energy += acc.round_energy;
         self.mobility.step();
 
         let (accuracy, test_loss) = self.evaluate()?;
-        let stats = RoundStats {
-            k: self.round,
+        let stats = acc.finish(
+            self.round,
             accuracy,
             test_loss,
-            train_loss: if train_loss_n > 0.0 {
-                train_loss_acc / train_loss_n
-            } else {
-                0.0
-            },
             round_time,
-            sim_now: self.clock.now(),
-            per_edge,
-            energy: round_energy,
-            gamma1: gamma1.to_vec(),
-            gamma2: gamma2.to_vec(),
-            device_losses,
-        };
+            self.clock.now(),
+            gamma1,
+            gamma2,
+        );
         self.last_round = Some(stats.clone());
         Ok(stats)
     }
@@ -457,47 +560,5 @@ impl HflEngine {
         (0..self.edges())
             .map(|j| self.predict_edge_time(j, gamma1[j], gamma2[j]))
             .fold(0.0, f64::max)
-    }
-}
-
-/// sum_i w_i m_i / sum_i w_i over flat models, native rust.
-fn aggregate_native(models: &[&[f32]], weights: &[f32], p: usize) -> Vec<f32> {
-    let wsum: f32 = weights.iter().sum();
-    let mut out = vec![0.0f32; p];
-    for (m, &w) in models.iter().zip(weights) {
-        if w == 0.0 {
-            continue;
-        }
-        for (o, &x) in out.iter_mut().zip(*m) {
-            *o += w * x;
-        }
-    }
-    let inv = 1.0 / wsum;
-    for o in out.iter_mut() {
-        *o *= inv;
-    }
-    out
-}
-
-#[cfg(test)]
-mod tests {
-    #[test]
-    fn native_aggregation_matches_formula() {
-        let a = vec![1.0f32; 8];
-        let b = vec![5.0f32; 8];
-        let out = super::aggregate_native(&[&a, &b], &[1.0, 3.0], 8);
-        for v in out {
-            assert!((v - 4.0).abs() < 1e-6);
-        }
-    }
-
-    #[test]
-    fn native_aggregation_skips_zero_weights() {
-        let a = vec![2.0f32; 4];
-        let b = vec![999.0f32; 4];
-        let out = super::aggregate_native(&[&a, &b], &[2.0, 0.0], 4);
-        for v in out {
-            assert!((v - 2.0).abs() < 1e-6);
-        }
     }
 }

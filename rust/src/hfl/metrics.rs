@@ -67,6 +67,99 @@ impl RoundStats {
     }
 }
 
+/// Streaming builder for one round's [`RoundStats`], shared by the
+/// synchronous and event-driven engines so both account identically: the
+/// same record calls in the same order produce bit-identical stats.
+#[derive(Clone, Debug)]
+pub struct RoundAccumulator {
+    pub per_edge: Vec<EdgeStats>,
+    pub round_energy: f64,
+    train_loss_acc: f64,
+    train_loss_n: f64,
+    device_losses: Vec<(usize, f64)>,
+}
+
+impl RoundAccumulator {
+    pub fn new(m: usize) -> Self {
+        RoundAccumulator {
+            per_edge: vec![EdgeStats::default(); m],
+            round_energy: 0.0,
+            train_loss_acc: 0.0,
+            train_loss_n: 0.0,
+            device_losses: Vec::new(),
+        }
+    }
+
+    /// One device finished local training under `edge`, spending simulated
+    /// `t` seconds and `energy` mAh.
+    pub fn record_train(
+        &mut self,
+        edge: usize,
+        device: usize,
+        t: f64,
+        energy: f64,
+        last_loss: Option<f64>,
+    ) {
+        let e = &mut self.per_edge[edge];
+        e.energy += energy;
+        self.round_energy += energy;
+        e.active += 1;
+        if t > e.t_sgd_slowest {
+            e.t_sgd_slowest = t;
+        }
+        if let Some(loss) = last_loss {
+            self.train_loss_acc += loss;
+            self.train_loss_n += 1.0;
+            self.device_losses.push((device, loss));
+        }
+    }
+
+    /// Close an edge's round: `compute_time` simulated seconds of local
+    /// training plus the sampled edge→cloud time `t_ec`.
+    pub fn record_comm(&mut self, edge: usize, t_ec: f64, compute_time: f64) {
+        let e = &mut self.per_edge[edge];
+        e.t_ec = t_ec;
+        e.total_time = compute_time + t_ec;
+    }
+
+    /// Straggler-path duration: max per-edge total time.
+    pub fn round_time(&self) -> f64 {
+        self.per_edge
+            .iter()
+            .map(|e| e.total_time)
+            .fold(0.0, f64::max)
+    }
+
+    pub fn finish(
+        self,
+        k: usize,
+        accuracy: f64,
+        test_loss: f64,
+        round_time: f64,
+        sim_now: f64,
+        gamma1: &[usize],
+        gamma2: &[usize],
+    ) -> RoundStats {
+        RoundStats {
+            k,
+            accuracy,
+            test_loss,
+            train_loss: if self.train_loss_n > 0.0 {
+                self.train_loss_acc / self.train_loss_n
+            } else {
+                0.0
+            },
+            round_time,
+            sim_now,
+            per_edge: self.per_edge,
+            energy: self.round_energy,
+            gamma1: gamma1.to_vec(),
+            gamma2: gamma2.to_vec(),
+            device_losses: self.device_losses,
+        }
+    }
+}
+
 /// A whole training run (one scheme, one threshold time).
 #[derive(Clone, Debug, Default)]
 pub struct RunHistory {
@@ -177,6 +270,23 @@ mod tests {
         assert!((h.total_energy() - 31.0).abs() < 1e-12);
         assert_eq!(h.time_to_accuracy(0.5), Some(200.0));
         assert_eq!(h.time_to_accuracy(0.9), None);
+    }
+
+    #[test]
+    fn accumulator_builds_round_stats() {
+        let mut acc = RoundAccumulator::new(2);
+        acc.record_train(0, 3, 10.0, 1.5, Some(0.8));
+        acc.record_train(0, 4, 12.0, 2.5, Some(0.6));
+        acc.record_train(1, 7, 20.0, 4.0, None);
+        acc.record_comm(0, 3.0, 12.0);
+        acc.record_comm(1, 5.0, 20.0);
+        assert!((acc.round_time() - 25.0).abs() < 1e-12);
+        let s = acc.finish(1, 0.5, 1.0, 25.0, 25.0, &[2, 2], &[1, 1]);
+        assert_eq!(s.per_edge[0].active, 2);
+        assert!((s.per_edge[0].t_sgd_slowest - 12.0).abs() < 1e-12);
+        assert!((s.energy - 8.0).abs() < 1e-12);
+        assert!((s.train_loss - 0.7).abs() < 1e-12);
+        assert_eq!(s.device_losses, vec![(3, 0.8), (4, 0.6)]);
     }
 
     #[test]

@@ -9,10 +9,17 @@
 //! evaluates. Simulated time advances by the straggler path; energy is
 //! accounted per device from the Fig. 3-calibrated models.
 
+//! `AsyncHflEngine` (hfl/async_engine.rs) is the event-driven counterpart:
+//! the same hierarchy executed over the `sim::event` queue in synchronous,
+//! K-quorum semi-synchronous, or staleness-discounted asynchronous mode.
+
+pub mod aggregate;
+pub mod async_engine;
 pub mod engine;
 pub mod metrics;
 pub mod topology;
 
+pub use async_engine::{AsyncHflEngine, SyncMode};
 pub use engine::HflEngine;
-pub use metrics::{EdgeStats, RoundStats, RunHistory};
+pub use metrics::{EdgeStats, RoundAccumulator, RoundStats, RunHistory};
 pub use topology::{build_topology, Edge, Topology};

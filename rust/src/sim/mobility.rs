@@ -29,6 +29,22 @@ impl MobilityModel {
         MobilityModel::new(n, 0.0, 1.0, Rng::new(0))
     }
 
+    /// Population churning at the config's `sim.leave_prob`/`sim.join_prob`
+    /// rates, seeded independently of the engine's main stream so enabling
+    /// mobility does not perturb training/communication draws.
+    pub fn from_config(
+        n: usize,
+        sim: &crate::config::SimConfig,
+        seed: u64,
+    ) -> Self {
+        MobilityModel::new(
+            n,
+            sim.leave_prob,
+            sim.join_prob,
+            Rng::new(seed ^ 0x0b111e),
+        )
+    }
+
     pub fn is_active(&self, device: usize) -> bool {
         self.active[device]
     }
@@ -85,6 +101,42 @@ mod tests {
         }
         let frac = counts as f64 / (rounds * 200) as f64;
         assert!((frac - 0.75).abs() < 0.05, "stationary frac {frac}");
+    }
+
+    #[test]
+    fn same_seed_step_sequences_are_reproducible() {
+        let mut a = MobilityModel::new(64, 0.2, 0.4, Rng::new(77));
+        let mut b = MobilityModel::new(64, 0.2, 0.4, Rng::new(77));
+        for _ in 0..500 {
+            assert_eq!(a.step(), b.step());
+            assert_eq!(a.active_set(), b.active_set());
+        }
+    }
+
+    #[test]
+    fn from_config_rates_and_determinism() {
+        let mut sim = crate::config::ExperimentConfig::mnist().sim;
+        sim.leave_prob = 0.3;
+        sim.join_prob = 0.7;
+        let mut a = MobilityModel::from_config(30, &sim, 42);
+        let mut b = MobilityModel::from_config(30, &sim, 42);
+        assert_eq!(a.leave_prob, 0.3);
+        assert_eq!(a.join_prob, 0.7);
+        for _ in 0..200 {
+            a.step();
+            b.step();
+            assert_eq!(a.active_set(), b.active_set());
+        }
+        // Defaults (leave 0 / join 1) must behave like `disabled`.
+        let mut d = MobilityModel::from_config(
+            30,
+            &crate::config::ExperimentConfig::mnist().sim,
+            42,
+        );
+        for _ in 0..50 {
+            assert_eq!(d.step(), 0);
+            assert_eq!(d.active_count(), 30);
+        }
     }
 
     #[test]

@@ -9,11 +9,13 @@
 pub mod clock;
 pub mod cpu;
 pub mod energy;
+pub mod event;
 pub mod mobility;
 pub mod network;
 
 pub use clock::SimClock;
 pub use cpu::CpuModel;
 pub use energy::EnergyModel;
+pub use event::{Event, EventQueue};
 pub use mobility::MobilityModel;
 pub use network::{NetworkModel, Region};

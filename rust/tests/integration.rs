@@ -3,8 +3,8 @@
 //! These exercise the full rust↔PJRT path: artifact loading, execution,
 //! numerics against CPU references, and whole HFL rounds.
 
-use arena::config::ExperimentConfig;
-use arena::hfl::HflEngine;
+use arena::config::{ExperimentConfig, SyncModeCfg};
+use arena::hfl::{AsyncHflEngine, HflEngine};
 use arena::runtime::{HostTensor, Runtime};
 use arena::util::rng::Rng;
 
@@ -351,6 +351,108 @@ fn mobility_limits_participants() {
     let s2 = engine.run_round(&vec![1; m], &vec![1; m], None).unwrap();
     let a2: usize = s2.per_edge.iter().map(|e| e.active).sum();
     assert!(a2 <= 1, "after mass departure only the keep-alive remains");
+}
+
+#[test]
+fn async_engine_sync_mode_matches_run_round_bit_for_bit() {
+    require_artifacts!();
+    let cfg = small_cfg();
+    let mut barrier = HflEngine::new(cfg.clone(), true).unwrap();
+    let mut events = AsyncHflEngine::new(cfg, true).unwrap();
+    let m = barrier.edges();
+    let g1 = vec![2; m];
+    let g2 = vec![2; m];
+    for k in 0..3 {
+        let a = barrier.run_round(&g1, &g2, None).unwrap();
+        let b = events.run_round(&g1, &g2, None).unwrap();
+        // Same seed, same RNG streams, same arithmetic: the event-driven
+        // timeline must reproduce the barrier engine exactly, not just
+        // approximately.
+        assert_eq!(a.accuracy, b.accuracy, "accuracy diverged at round {k}");
+        assert_eq!(a.round_time, b.round_time, "time diverged at round {k}");
+        assert_eq!(a.energy, b.energy, "energy diverged at round {k}");
+        assert_eq!(a.train_loss, b.train_loss);
+        assert_eq!(a.sim_now, b.sim_now);
+        for j in 0..m {
+            assert_eq!(a.per_edge[j].total_time, b.per_edge[j].total_time);
+            assert_eq!(a.per_edge[j].t_ec, b.per_edge[j].t_ec);
+            assert_eq!(a.per_edge[j].active, b.per_edge[j].active);
+        }
+    }
+    assert_eq!(barrier.cloud_w, events.eng.cloud_w, "models diverged");
+}
+
+#[test]
+fn async_engine_sync_mode_matches_under_churn_and_mask() {
+    require_artifacts!();
+    let mut cfg = small_cfg();
+    cfg.sim.leave_prob = 0.2;
+    cfg.sim.join_prob = 0.5;
+    let mut barrier = HflEngine::new(cfg.clone(), false).unwrap();
+    let mut events = AsyncHflEngine::new(cfg.clone(), false).unwrap();
+    let m = barrier.edges();
+    let n = cfg.topology.devices;
+    let mask: Vec<bool> = (0..n).map(|d| d % 3 != 0).collect();
+    let g1 = vec![2; m];
+    let g2 = vec![1; m];
+    for _ in 0..3 {
+        let a = barrier.run_round(&g1, &g2, Some(&mask)).unwrap();
+        let b = events.run_round(&g1, &g2, Some(&mask)).unwrap();
+        assert_eq!(a.accuracy, b.accuracy);
+        assert_eq!(a.round_time, b.round_time);
+        assert_eq!(a.energy, b.energy);
+    }
+}
+
+#[test]
+fn semi_sync_and_async_modes_run_end_to_end() {
+    require_artifacts!();
+    let mut cfg = small_cfg();
+    cfg.hfl.threshold_time = 500.0;
+    cfg.sync.cloud_interval = 120.0;
+    for mode in [SyncModeCfg::SemiSync, SyncModeCfg::Async] {
+        let mut c = cfg.clone();
+        c.sync.mode = mode;
+        let mut e = AsyncHflEngine::new(c, false).unwrap();
+        let hist = e.run_to_threshold().unwrap();
+        assert!(
+            !hist.rounds.is_empty(),
+            "{mode:?}: no cloud windows completed"
+        );
+        assert!(hist.total_energy() > 0.0, "{mode:?}: no energy accounted");
+        for r in &hist.rounds {
+            assert!(r.accuracy >= 0.0 && r.accuracy <= 1.0);
+            assert!(r.round_time > 0.0);
+            // At least one edge aggregation per window once training flows.
+            let aggs: usize = r.gamma2.iter().sum();
+            assert!(aggs > 0, "{mode:?}: window {} had no edge aggs", r.k);
+        }
+        // Event-driven runs advance the simulated clock through windows.
+        assert!(hist.total_time() > 0.0);
+    }
+}
+
+#[test]
+fn async_modes_are_seed_deterministic() {
+    require_artifacts!();
+    let mut cfg = small_cfg();
+    cfg.hfl.threshold_time = 400.0;
+    cfg.sync.cloud_interval = 120.0;
+    cfg.sync.mode = SyncModeCfg::Async;
+    cfg.sim.leave_prob = 0.1;
+    cfg.sim.join_prob = 0.5;
+    let run = |cfg: &ExperimentConfig| {
+        let mut e = AsyncHflEngine::new(cfg.clone(), false).unwrap();
+        e.run_to_threshold().unwrap()
+    };
+    let a = run(&cfg);
+    let b = run(&cfg);
+    assert_eq!(a.rounds.len(), b.rounds.len());
+    for (ra, rb) in a.rounds.iter().zip(&b.rounds) {
+        assert_eq!(ra.accuracy, rb.accuracy);
+        assert_eq!(ra.energy, rb.energy);
+        assert_eq!(ra.round_time, rb.round_time);
+    }
 }
 
 #[test]
