@@ -14,8 +14,15 @@ fn report(label: &str, hist: &RunHistory) {
     for r in &hist.rounds {
         let aggs: usize = r.gamma2.iter().sum();
         println!(
-            "  k={:<3} t={:>7.1}s  acc {:.3}  E {:>7.2} mAh  edge-aggs {:>3}",
-            r.k, r.sim_now, r.accuracy, r.energy, aggs
+            "  k={:<3} t={:>7.1}s  acc {:.3}  E {:>7.2} mAh  edge-aggs {:>3}  \
+             overlap {:.2}  link-util {:.2}",
+            r.k,
+            r.sim_now,
+            r.accuracy,
+            r.energy,
+            aggs,
+            r.comm_overlap_frac(),
+            r.mean_link_util()
         );
     }
     println!(
@@ -56,15 +63,19 @@ fn main() -> Result<()> {
     report("semi-sync (K=2 quorum edges, cloud timer)", &hist);
 
     // Fully async with staleness discounting, plus device churn to show
-    // stragglers/leavers no longer stall anyone.
+    // stragglers/leavers no longer stall anyone. Uploads are in flight
+    // while the next local round trains (see the overlap column); an
+    // asymmetric uplink makes the contention visible.
     let mut async_cfg = cfg.clone();
     async_cfg.sync.mode = SyncModeCfg::Async;
     async_cfg.sync.staleness_alpha = 0.5;
     async_cfg.sim.leave_prob = 0.1;
     async_cfg.sim.join_prob = 0.5;
+    async_cfg.link.up_bandwidth_scale = 0.5;
+    async_cfg.link.contention = true;
     let mut engine = AsyncHflEngine::new(async_cfg, true)?;
     let hist = engine.run_to_threshold()?;
-    report("async (staleness-discounted, churning devices)", &hist);
+    report("async (staleness-discounted, churning, narrow uplink)", &hist);
 
     println!("\nall three synchronization modes ran to the time threshold.");
     Ok(())

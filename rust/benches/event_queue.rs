@@ -2,39 +2,51 @@
 //! ≥10k device events scheduled and drained per iteration (the target is
 //! that the queue never shows up in an async-run profile next to real
 //! training). Coarse timestamps force heavy tie-break traffic, the worst
-//! case for the seeded ordering. No artifacts needed.
-//! `cargo bench --bench event_queue`
+//! case for the seeded ordering. The transfer-heavy workloads push to 1M
+//! events with interleaved `TransferDone`s (including the stale
+//! re-prediction pattern of link contention) — the baseline for the
+//! ROADMAP "event-queue scale-out" item. No artifacts needed.
+//!
+//! `cargo bench --bench event_queue` — also rewrites
+//! `BENCH_event_queue.json` at the repo root with the measured numbers.
+
+use std::collections::BTreeMap;
 
 use arena::sim::{Event, EventQueue};
-use arena::util::microbench::{bench, black_box};
+use arena::util::json::Json;
+use arena::util::microbench::{bench, black_box, BenchResult};
 
 fn main() {
+    let mut results = Vec::new();
     for &n in &[10_000usize, 100_000] {
-        bench(&format!("event_queue/schedule+drain/{n}"), || {
-            let mut q = EventQueue::new(42);
-            for i in 0..n {
-                // ~500 distinct timestamps -> ~n/500 ties per slot.
-                let t = ((i * 7919) % 500) as f64 * 0.25;
-                q.schedule(
-                    t,
-                    Event::DeviceTrainDone {
-                        device: i % 10_000,
-                        edge: i % 8,
-                    },
-                );
-            }
-            let mut last = -1.0f64;
-            while let Some((t, ev)) = q.pop() {
-                debug_assert!(t >= last);
-                last = t;
-                black_box(ev);
-            }
-            black_box(last);
-        });
+        results.push(bench(
+            &format!("event_queue/schedule+drain/{n}"),
+            || {
+                let mut q = EventQueue::new(42);
+                for i in 0..n {
+                    // ~500 distinct timestamps -> ~n/500 ties per slot.
+                    let t = ((i * 7919) % 500) as f64 * 0.25;
+                    q.schedule(
+                        t,
+                        Event::DeviceTrainDone {
+                            device: i % 10_000,
+                            edge: i % 8,
+                        },
+                    );
+                }
+                let mut last = -1.0f64;
+                while let Some((t, ev)) = q.pop() {
+                    debug_assert!(t >= last);
+                    last = t;
+                    black_box(ev);
+                }
+                black_box(last);
+            },
+        ));
 
         // Steady-state churn: the queue holds n events while each pop
         // reschedules one — the async engine's actual access pattern.
-        bench(&format!("event_queue/steady_state/{n}"), || {
+        results.push(bench(&format!("event_queue/steady_state/{n}"), || {
             let mut q = EventQueue::new(7);
             for i in 0..n {
                 q.schedule(
@@ -50,6 +62,106 @@ fn main() {
                 q.schedule(t + 500.0, ev);
             }
             black_box(q.len());
-        });
+        }));
     }
+
+    // Transfer-heavy: the queue under the transfer layer's event pattern —
+    // TransferDone storms interleaved with training/aggregation events,
+    // scaled to 1M events per drain.
+    for &n in &[100_000usize, 1_000_000] {
+        results.push(bench(
+            &format!("event_queue/transfer_heavy/{n}"),
+            || {
+                let mut q = EventQueue::new(13);
+                for i in 0..n {
+                    let t = ((i * 31) % 2000) as f64 * 0.5;
+                    let ev = match i % 3 {
+                        0 => Event::TransferDone { transfer: i },
+                        1 => Event::DeviceTrainDone {
+                            device: i % 100_000,
+                            edge: i % 16,
+                        },
+                        _ => Event::EdgeAggregate { edge: i % 16 },
+                    };
+                    q.schedule(t, ev);
+                }
+                while let Some((_, ev)) = q.pop() {
+                    black_box(ev);
+                }
+            },
+        ));
+
+        // Contention re-prediction churn: every popped TransferDone
+        // schedules a superseding prediction for a sibling transfer (the
+        // link layer's stale-event pattern), so the queue sees ~2x the
+        // logical transfer count.
+        results.push(bench(
+            &format!("event_queue/transfer_repredict/{n}"),
+            || {
+                let mut q = EventQueue::new(17);
+                let seed_events = n / 2;
+                for i in 0..seed_events {
+                    q.schedule(
+                        ((i * 53) % 1000) as f64,
+                        Event::TransferDone { transfer: i },
+                    );
+                }
+                let mut budget = n - seed_events;
+                while let Some((t, ev)) = q.pop() {
+                    if budget > 0 {
+                        if let Event::TransferDone { transfer } = ev {
+                            q.schedule(
+                                t + 7.5,
+                                Event::TransferDone {
+                                    transfer: transfer ^ 1,
+                                },
+                            );
+                            budget -= 1;
+                        }
+                    }
+                    black_box(ev);
+                }
+            },
+        ));
+    }
+
+    if let Err(e) = write_json(&results) {
+        eprintln!("warning: could not write BENCH_event_queue.json: {e}");
+    }
+}
+
+/// Record the run at the repo root (benches run with CWD = rust/).
+fn write_json(results: &[BenchResult]) -> std::io::Result<()> {
+    let mut root = BTreeMap::new();
+    root.insert(
+        "generated_by".to_string(),
+        Json::Str("cargo bench --bench event_queue".into()),
+    );
+    root.insert(
+        "note".to_string(),
+        Json::Str(
+            "per-iteration ns; transfer_heavy/transfer_repredict are the \
+             event-queue scale-out baselines (ROADMAP)"
+                .into(),
+        ),
+    );
+    let mut arr = Vec::new();
+    for r in results {
+        let mut e = BTreeMap::new();
+        e.insert("name".to_string(), Json::Str(r.name.clone()));
+        e.insert("iters".to_string(), Json::Num(r.iters as f64));
+        e.insert("mean_ns".to_string(), Json::Num(r.mean_ns));
+        e.insert("p50_ns".to_string(), Json::Num(r.p50_ns));
+        e.insert("p99_ns".to_string(), Json::Num(r.p99_ns));
+        arr.push(Json::Obj(e));
+    }
+    root.insert("results".to_string(), Json::Arr(arr));
+    let path = if std::path::Path::new("../BENCH_event_queue.json").exists()
+        || std::path::Path::new("../ROADMAP.md").exists()
+    {
+        "../BENCH_event_queue.json"
+    } else {
+        "BENCH_event_queue.json"
+    };
+    std::fs::write(path, Json::Obj(root).to_pretty())
 }

@@ -6,6 +6,13 @@
 //! The PCA loading vectors are fit once after the first cloud aggregation
 //! (on the cloud, Gram trick — see pca/) and reused; the projection itself
 //! runs through the pca_project Pallas artifact.
+//!
+//! `T_j^ec` is fed from *observed* transfer completions: since the
+//! transfer layer (`sim::link`) landed, `EdgeStats::{t_up, t_down}` carry
+//! the durations of edge j's last completed uplink/downlink transfers —
+//! contention and jitter included — instead of a freshly resampled
+//! round-trip, so the agent sees the communication times the run actually
+//! experienced.
 
 use anyhow::Result;
 
@@ -107,6 +114,8 @@ impl StateBuilder {
             }
             let e = &last.per_edge[j];
             s[base + self.npca] = (e.t_sgd_slowest / sc.sgd_time) as f32;
+            // t_ec is the observed round trip of the edge's last landed
+            // transfers (see EdgeStats), not a resampled draw.
             s[base + self.npca + 1] = (e.t_ec / sc.comm_time) as f32;
             s[base + self.npca + 2] = (e.energy / sc.energy) as f32;
         }

@@ -30,6 +30,13 @@ SCHEMES: vanilla-fl vanilla-hfl var-freq-a var-freq-b favor share arena hwamei
          (the last two pick their sync.mode themselves; tune them with
          --set sync.quorum=K, sync.staleness_alpha=A, sync.cloud_interval=S;
          --set sim.leave_prob=P / sim.join_prob=P enables device churn)
+
+LINKS:   every edge<->cloud transfer is an in-flight event on a per-edge
+         uplink/downlink pair; tune with
+         --set link.up_bandwidth_scale=S / link.down_bandwidth_scale=S
+         (multiples of the region bandwidth) and
+         --set link.contention=true|false (fair-share when transfers
+         overlap on one link)
 ";
 
 pub struct Args {
@@ -135,7 +142,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         "semi-sync" => {
             let mut c = cfg.clone();
             c.sync.mode = SyncModeCfg::SemiSync;
-            let mut engine = AsyncHflEngine::new(c, false)?;
+            let mut engine = AsyncHflEngine::new(c, true)?;
             engine.run_to_threshold()?
         }
         "async-greedy" => {

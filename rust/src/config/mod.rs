@@ -166,6 +166,31 @@ impl Default for SyncConfig {
     }
 }
 
+/// Knobs of the edge↔cloud transfer layer (`sim::link`). Bandwidth scales
+/// multiply the region bandwidth of `SimConfig` per direction, so uplinks
+/// and downlinks can be provisioned asymmetrically (consumer uplinks are
+/// typically the narrow side).
+#[derive(Clone, Debug)]
+pub struct LinkConfig {
+    /// Uplink (edge→cloud) bandwidth as a multiple of the region bandwidth.
+    pub up_bandwidth_scale: f64,
+    /// Downlink (cloud→edge) bandwidth as a multiple of the region bandwidth.
+    pub down_bandwidth_scale: f64,
+    /// Fair-share contention when multiple transfers overlap on one link
+    /// (false = infinite-capacity links, transfers never slow each other).
+    pub contention: bool,
+}
+
+impl Default for LinkConfig {
+    fn default() -> Self {
+        LinkConfig {
+            up_bandwidth_scale: 1.0,
+            down_bandwidth_scale: 1.0,
+            contention: true,
+        }
+    }
+}
+
 /// Simulation calibration (Fig. 3 / Fig. 4 models; see sim/).
 #[derive(Clone, Debug)]
 pub struct SimConfig {
@@ -199,6 +224,7 @@ pub struct ExperimentConfig {
     pub agent: AgentConfig,
     pub sim: SimConfig,
     pub sync: SyncConfig,
+    pub link: LinkConfig,
     /// Worker threads for parallel device training (0 = auto).
     pub workers: usize,
     /// Run model aggregation natively in rust instead of through the
@@ -263,6 +289,7 @@ impl ExperimentConfig {
                 join_prob: 1.0,
             },
             sync: SyncConfig::default(),
+            link: LinkConfig::default(),
             workers: 0,
             native_aggregation: false,
             artifacts_dir: "artifacts".into(),
@@ -369,6 +396,17 @@ impl ExperimentConfig {
                 self.sync.staleness_alpha = parse_f()?
             }
             "sync.cloud_interval" => self.sync.cloud_interval = parse_f()?,
+            "link.up_bandwidth_scale" => {
+                self.link.up_bandwidth_scale = parse_f()?
+            }
+            "link.down_bandwidth_scale" => {
+                self.link.down_bandwidth_scale = parse_f()?
+            }
+            "link.contention" => {
+                self.link.contention = value.parse().map_err(|_| {
+                    anyhow::anyhow!("link.contention must be true|false")
+                })?
+            }
             _ => bail!("unknown config key '{key}'"),
         }
         Ok(())
@@ -427,6 +465,14 @@ impl ExperimentConfig {
         if self.sync.cloud_interval <= 0.0 {
             bail!("sync.cloud_interval must be positive");
         }
+        for (name, s) in [
+            ("link.up_bandwidth_scale", self.link.up_bandwidth_scale),
+            ("link.down_bandwidth_scale", self.link.down_bandwidth_scale),
+        ] {
+            if !(s.is_finite() && s > 0.0) {
+                bail!("{name} must be a positive finite number (got {s})");
+            }
+        }
         Ok(())
     }
 
@@ -446,6 +492,9 @@ impl ExperimentConfig {
             ("sync_mode", Json::str(self.sync.mode.name())),
             ("leave_prob", Json::num(self.sim.leave_prob)),
             ("join_prob", Json::num(self.sim.join_prob)),
+            ("link_up_scale", Json::num(self.link.up_bandwidth_scale)),
+            ("link_down_scale", Json::num(self.link.down_bandwidth_scale)),
+            ("link_contention", Json::Bool(self.link.contention)),
         ])
     }
 }
@@ -539,6 +588,24 @@ mod tests {
         assert!(c.validate().is_err());
         let mut c = ExperimentConfig::mnist();
         c.sync.staleness_alpha = -0.1;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn link_overrides_and_validation() {
+        let mut c = ExperimentConfig::mnist();
+        assert!(c.link.contention, "contention defaults on");
+        c.apply_override("link.up_bandwidth_scale", "0.25").unwrap();
+        c.apply_override("link.down_bandwidth_scale", "4").unwrap();
+        c.apply_override("link.contention", "false").unwrap();
+        assert!((c.link.up_bandwidth_scale - 0.25).abs() < 1e-12);
+        assert!((c.link.down_bandwidth_scale - 4.0).abs() < 1e-12);
+        assert!(!c.link.contention);
+        c.validate().unwrap();
+        assert!(c.apply_override("link.contention", "maybe").is_err());
+        c.link.up_bandwidth_scale = 0.0;
+        assert!(c.validate().is_err());
+        c.link.up_bandwidth_scale = f64::NAN;
         assert!(c.validate().is_err());
     }
 

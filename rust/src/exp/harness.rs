@@ -156,7 +156,9 @@ fn scheme_history(
         "semi-sync" => {
             let mut c = cfg.clone();
             c.sync.mode = SyncModeCfg::SemiSync;
-            let mut e = AsyncHflEngine::new(c, false)?;
+            // Profiled topology like every other scheme in the
+            // head-to-head, so the comparison isolates the sync mode.
+            let mut e = AsyncHflEngine::new(c, true)?;
             e.run_to_threshold()
         }
         "async-greedy" => {
@@ -420,7 +422,8 @@ fn fig9(cfg: &ExperimentConfig) -> Result<()> {
     let fracs = [0.7, 0.8, 0.9, 1.0];
     let mut w = CsvWriter::create(
         format!("{dir}/{}.csv", cfg.hfl.dataset.name()),
-        &["scheme", "threshold_s", "accuracy", "energy_per_device_mah"],
+        &["scheme", "threshold_s", "accuracy", "energy_per_device_mah",
+          "comm_overlap_frac", "mean_link_util"],
     )?;
     println!(
         "Fig.9 ({}): accuracy/energy at threshold times",
@@ -432,14 +435,20 @@ fn fig9(cfg: &ExperimentConfig) -> Result<()> {
             let t = f * cfg.hfl.threshold_time;
             let (acc, energy) = h.at_time(t);
             let e_dev = energy / cfg.topology.devices as f64;
+            // Transfer-layer columns for the async-baselines head-to-head:
+            // how much comm the scheme hid behind compute, and how loaded
+            // its links ran.
+            let (overlap, util) = h.comm_stats_at(t);
             println!(
-                "  {scheme:<12} T={t:>6.0}s  acc {acc:.3}  energy/dev {e_dev:.1} mAh"
+                "  {scheme:<12} T={t:>6.0}s  acc {acc:.3}  energy/dev {e_dev:.1} mAh  overlap {overlap:.2}  util {util:.2}"
             );
             w.row(&[
                 scheme.to_string(),
                 format!("{t:.0}"),
                 format!("{acc:.4}"),
                 format!("{e_dev:.2}"),
+                format!("{overlap:.4}"),
+                format!("{util:.4}"),
             ])?;
         }
     }

@@ -1,4 +1,5 @@
-//! Event-driven HFL engine: one executor, three synchronization modes.
+//! Event-driven HFL engine: one executor, three synchronization modes,
+//! and a first-class transfer layer.
 //!
 //! Where [`HflEngine::run_round`] can only express lock-step rounds (every
 //! edge advances through barrier-synchronized sub-rounds), this engine is
@@ -8,11 +9,13 @@
 //!
 //! * **`SyncMode::Synchronous`** — the classic HFL schedule, re-expressed
 //!   as events: every device's `DeviceTrainDone` is scheduled, each edge's
-//!   `EdgeAggregate` fires when its last member reports, `CloudAggregate`
-//!   fires on the straggler path. Reproduces `HflEngine::run_round`
-//!   **bit-for-bit** under the same seed (same RNG streams consumed in the
-//!   same order; equality is enforced by an integration test), proving the
-//!   event core models the barrier semantics exactly.
+//!   `EdgeAggregate` fires when its last member reports, and the
+//!   communication tail routes through the shared link layer
+//!   (`HflEngine::sync_comm_phase`): the round closes when the straggler's
+//!   upload lands. Reproduces `HflEngine::run_round` **bit-for-bit** under
+//!   the same seed (same RNG streams consumed in the same order; equality
+//!   is enforced by an integration test), proving the event core models
+//!   the barrier semantics exactly.
 //! * **`SyncMode::SemiSync`** — K-quorum edge aggregation: an edge
 //!   aggregates as soon as `quorum` of its members have reported (reported
 //!   devices idle until the quorum closes, then restart from the new edge
@@ -23,22 +26,41 @@
 //!   immediately blends into the edge model with weight
 //!   `data_share · 1/(1+s)^α` where `s` counts edge-model versions the
 //!   update is stale by; the cloud timer aggregates edge models weighted by
-//!   data size and per-edge freshness. Devices never wait; communication
-//!   fully overlaps computation.
+//!   data size and per-edge freshness.
+//!
+//! # Communication is in-flight, not a lump
+//!
+//! Edge↔cloud communication is no longer sampled as a lump at the cloud
+//! timer. In the timer-driven modes, an edge that aggregates schedules an
+//! **in-flight upload** of the fresh edge model on its uplink
+//! ([`crate::sim::link::LinkManager`]) and keeps training — upload time
+//! overlaps the next local round (pace steering à la arXiv:1902.01046).
+//! The cloud timer aggregates whatever uploads have *landed* by the tick
+//! (latest version per edge, discounted by per-edge freshness in `Async`
+//! mode), and the cloud→edge broadcast is a set of **downlink transfers**:
+//! an edge only adopts the new global model when its broadcast lands, and
+//! devices pick it up at their next edge aggregation. Overlapping
+//! transfers on one link fair-share its bandwidth when `link.contention`
+//! is on, and every landing is a `TransferDone` event, so the whole
+//! timeline stays deterministic from the experiment seed (stale
+//! re-predictions are dropped by the link layer's bit-exact timestamp
+//! match).
 //!
 //! In the timer-driven modes one `RoundStats` is emitted per cloud
 //! aggregation window: `round_time` is the window length, `gamma2` reports
-//! the *observed* per-edge aggregation counts of the window, and
-//! `EdgeStats::total_time` covers only the edge→cloud path (edges never
-//! block on a barrier). Everything stays deterministic from the experiment
-//! seed: real training goes through the same seeded worker-pool jobs, and
-//! simultaneous events are ordered by the queue's seeded tie-break.
+//! the *observed* per-edge aggregation counts of the window, `T_j^ec` is
+//! the *observed* duration of the edge's last landed transfers, and the
+//! per-edge `compute_busy`/`up_busy`/`down_busy`/`comm_overlap` fields
+//! split the window into compute vs in-flight communication time.
+
+use std::collections::HashMap;
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
 use crate::config::{ExperimentConfig, SyncConfig, SyncModeCfg};
 use crate::runtime::pool::TrainJob;
-use crate::sim::{Event, EventQueue};
+use crate::sim::{Direction, Event, EventQueue};
 
 use super::aggregate::staleness_discount;
 use super::engine::HflEngine;
@@ -93,6 +115,20 @@ impl SyncMode {
     }
 }
 
+/// True when `reported` outstanding reports satisfy the K-quorum against
+/// the edge's `live` membership. The quorum clamps to the live count, so a
+/// departure that shrinks an edge below K cannot leave its round unclosable
+/// (the semi-sync liveness fix; re-checked on every `MobilityFlip`).
+pub(crate) fn quorum_satisfied(
+    reported: usize,
+    quorum: usize,
+    live: usize,
+) -> bool {
+    let live = live.max(1);
+    let eff = if quorum == 0 { live } else { quorum.min(live) };
+    reported >= eff
+}
+
 /// A dispatched-but-not-yet-completed local training run. The real compute
 /// happens eagerly at dispatch (results depend only on weights + seed, not
 /// on simulated time); the simulated completion is the queued event.
@@ -101,6 +137,20 @@ struct PendingTrain {
     last_loss: Option<f64>,
     t: f64,
     energy: f64,
+    /// Set when the device flipped (left, possibly rejoined) mid-flight:
+    /// the result trained against a pre-departure model and is discarded
+    /// on completion even if the device is active again by then.
+    void: bool,
+}
+
+/// Model snapshot riding an in-flight transfer. The link layer schedules
+/// pure timing; the engine owns the payloads, keyed by transfer id.
+enum Payload {
+    /// Edge→cloud: the edge model as of `version` at upload start.
+    Upload { edge: usize, w: Vec<f32>, version: u64 },
+    /// Cloud→edge: the global model broadcast by cloud window `round`
+    /// (shared — one snapshot serves every edge's downlink).
+    Downlink { edge: usize, w: Arc<Vec<f32>>, round: u64 },
 }
 
 pub struct AsyncHflEngine {
@@ -120,12 +170,45 @@ pub struct AsyncHflEngine {
     device_version: Vec<u64>,
     /// Cloud aggregation windows completed.
     cloud_round_idx: u64,
-    /// Window index of each edge's last aggregation (cloud freshness).
+    /// Window index of the edge's last *landed* upload (cloud freshness).
     edge_last_update_round: Vec<u64>,
     /// Edge aggregations inside the current cloud window.
     window_edge_aggs: Vec<usize>,
     acc: RoundAccumulator,
     window_start: f64,
+    // ---- transfer layer state ------------------------------------------
+    /// Payloads of in-flight transfers, keyed by transfer id.
+    payloads: HashMap<usize, Payload>,
+    /// Latest edge model that has landed at the cloud, per edge
+    /// (initial global model until anything lands).
+    landed_w: Vec<Vec<f32>>,
+    landed_version: Vec<u64>,
+    /// Uploads landed in the current cloud window, per edge.
+    window_landings: Vec<usize>,
+    /// Last observed transfer durations per edge (feed T_j^ec; 0 until
+    /// the first landing).
+    obs_up: Vec<f64>,
+    obs_down: Vec<f64>,
+    /// Cloud window of the broadcast each edge last adopted: a stale
+    /// broadcast landing late (contention reorder) must not revert the
+    /// edge to an older global model.
+    adopted_cloud_round: Vec<u64>,
+    /// Busy-interval sweeper: engine state is piecewise constant between
+    /// events, so integrating at every pop is exact.
+    sweep_t: f64,
+    training_count: Vec<usize>,
+    win_compute_busy: Vec<f64>,
+    win_up_busy: Vec<f64>,
+    win_down_busy: Vec<f64>,
+    win_comm_busy: Vec<f64>,
+    win_overlap: Vec<f64>,
+    /// (transfer id, edge, landing time) of every completed transfer, in
+    /// landing order — the determinism witness of the transfer path.
+    pub transfer_log: Vec<(usize, usize, f64)>,
+    /// Set for the end-of-run tail flush: the event loop is over, so new
+    /// training dispatches and transfers could never complete — skip them
+    /// instead of burning real compute on dead work.
+    draining: bool,
 }
 
 impl AsyncHflEngine {
@@ -142,6 +225,7 @@ impl AsyncHflEngine {
             }
         }
         let g1 = vec![eng.cfg.hfl.gamma1; m];
+        let landed_w = eng.edge_w.clone();
         Ok(AsyncHflEngine {
             queue: EventQueue::new(seed ^ 0xa57c),
             g1,
@@ -155,6 +239,22 @@ impl AsyncHflEngine {
             window_edge_aggs: vec![0; m],
             acc: RoundAccumulator::new(m),
             window_start: 0.0,
+            payloads: HashMap::new(),
+            landed_w,
+            landed_version: vec![0; m],
+            window_landings: vec![0; m],
+            obs_up: vec![0.0; m],
+            obs_down: vec![0.0; m],
+            adopted_cloud_round: vec![0; m],
+            sweep_t: 0.0,
+            training_count: vec![0; m],
+            win_compute_busy: vec![0.0; m],
+            win_up_busy: vec![0.0; m],
+            win_down_busy: vec![0.0; m],
+            win_comm_busy: vec![0.0; m],
+            win_overlap: vec![0.0; m],
+            transfer_log: Vec::new(),
+            draining: false,
             mode,
             eng,
         })
@@ -201,8 +301,8 @@ impl AsyncHflEngine {
     /// Equivalent to `HflEngine::run_round` bit-for-bit under the same
     /// seed: the same RNG streams are consumed in the same order, and the
     /// event timeline reproduces the barrier arithmetic exactly (an edge's
-    /// aggregate fires at its slowest member's completion; the cloud at
-    /// the straggler edge's path).
+    /// aggregate fires at its slowest member's completion; the cloud when
+    /// the straggler edge's upload lands through the shared link layer).
     pub fn run_round(
         &mut self,
         gamma1: &[usize],
@@ -297,16 +397,9 @@ impl AsyncHflEngine {
             }
         }
 
-        // Edge -> cloud communication (straggler path per edge).
-        for j in 0..m {
-            let region = self.eng.topo.edges[j].region;
-            let t_ec = self.eng.sample_comm_time(region);
-            acc.record_comm(j, t_ec, edge_clock[j]);
-        }
-        // Cloud aggregation at the straggler path, then the mobility
-        // process advances (the barrier makes their event times trivial —
-        // round_time — so no queue is needed for this tail).
-        let round_time = acc.round_time();
+        // Edge -> cloud communication through the link layer: the round
+        // closes when the last upload lands (shared with HflEngine).
+        let round_time = self.eng.sync_comm_phase(&edge_clock, &mut acc);
         let active: Vec<usize> =
             (0..m).filter(|&j| acc.per_edge[j].active > 0).collect();
         self.eng.cloud_aggregate_edges(&active, None)?;
@@ -350,6 +443,22 @@ impl AsyncHflEngine {
         self.window_edge_aggs = vec![0; m];
         self.acc = RoundAccumulator::new(m);
         self.window_start = 0.0;
+        self.payloads.clear();
+        self.landed_w = self.eng.edge_w.clone();
+        self.landed_version = vec![0; m];
+        self.window_landings = vec![0; m];
+        self.obs_up = vec![0.0; m];
+        self.obs_down = vec![0.0; m];
+        self.adopted_cloud_round = vec![0; m];
+        self.sweep_t = 0.0;
+        self.training_count = vec![0; m];
+        self.win_compute_busy = vec![0.0; m];
+        self.win_up_busy = vec![0.0; m];
+        self.win_down_busy = vec![0.0; m];
+        self.win_comm_busy = vec![0.0; m];
+        self.win_overlap = vec![0.0; m];
+        self.transfer_log.clear();
+        self.draining = false;
 
         let interval = self.mode.cloud_interval();
         self.queue.schedule(interval, Event::CloudAggregate);
@@ -365,6 +474,7 @@ impl AsyncHflEngine {
                 break;
             }
             let (t, ev) = self.queue.pop().expect("peeked event vanished");
+            self.sweep(t);
             match ev {
                 Event::DeviceTrainDone { device, edge } => {
                     self.on_train_done(device, edge, t)?;
@@ -376,20 +486,60 @@ impl AsyncHflEngine {
                     hist.push(self.on_cloud_aggregate(t)?);
                 }
                 Event::MobilityFlip => self.on_mobility_flip(t)?,
+                Event::TransferDone { transfer } => {
+                    self.on_transfer_done(transfer, t)?;
+                }
             }
         }
         // Flush the tail: training completed after the last timer tick
         // (or a cloud_interval longer than the whole run) would otherwise
-        // drop its energy/accuracy from the history entirely.
+        // drop its energy/accuracy from the history entirely. Draining
+        // suppresses new dispatches/transfers — they could never finish.
         if self.acc.per_edge.iter().any(|e| e.active > 0) {
+            self.draining = true;
             hist.push(self.on_cloud_aggregate(threshold)?);
+            self.draining = false;
         }
         Ok(hist)
+    }
+
+    /// Integrate the per-edge busy intervals up to `t`. Every state change
+    /// happens at an event, so the (training, transferring) indicator pair
+    /// is constant over the gap since the previous event.
+    fn sweep(&mut self, t: f64) {
+        let dt = t - self.sweep_t;
+        if dt <= 0.0 {
+            return;
+        }
+        for j in 0..self.edges() {
+            let c = self.training_count[j] > 0;
+            let u = self.eng.links.active_count(j, Direction::Up) > 0;
+            let d = self.eng.links.active_count(j, Direction::Down) > 0;
+            if c {
+                self.win_compute_busy[j] += dt;
+            }
+            if u {
+                self.win_up_busy[j] += dt;
+            }
+            if d {
+                self.win_down_busy[j] += dt;
+            }
+            if u || d {
+                self.win_comm_busy[j] += dt;
+            }
+            if c && (u || d) {
+                self.win_overlap[j] += dt;
+            }
+        }
+        self.sweep_t = t;
     }
 
     /// Start local training on every listed device that is active and
     /// idle: run the real compute now, schedule the simulated completion.
     fn dispatch(&mut self, devs: &[usize], now: f64) -> Result<()> {
+        if self.draining {
+            return Ok(());
+        }
         let mut jobs = Vec::new();
         for &d in devs {
             if !self.eng.mobility.is_active(d) || self.in_flight[d].is_some()
@@ -412,19 +562,19 @@ impl AsyncHflEngine {
             let d = res.device;
             let (t_dev, e_dev) =
                 self.eng.simulate_train(d, res.losses.len());
-            self.device_version[d] = self.edge_version[self.dev_edge[d]];
+            let j = self.dev_edge[d];
+            self.device_version[d] = self.edge_version[j];
             self.in_flight[d] = Some(PendingTrain {
                 w: res.w,
                 last_loss: res.losses.last().copied(),
                 t: t_dev,
                 energy: e_dev,
+                void: false,
             });
+            self.training_count[j] += 1;
             self.queue.schedule(
                 now + t_dev,
-                Event::DeviceTrainDone {
-                    device: d,
-                    edge: self.dev_edge[d],
-                },
+                Event::DeviceTrainDone { device: d, edge: j },
             );
         }
         Ok(())
@@ -439,8 +589,16 @@ impl AsyncHflEngine {
         let Some(p) = self.in_flight[device].take() else {
             return Ok(());
         };
+        self.training_count[edge] =
+            self.training_count[edge].saturating_sub(1);
         // Energy was spent even if the device has since left.
         self.acc.record_train(edge, device, p.t, p.energy, p.last_loss);
+        if p.void {
+            // Flipped mid-flight: the pre-departure result is stale even
+            // if the device rejoined. It restarts from the model the
+            // rejoin handed it (no-op if it is still departed).
+            return self.dispatch(&[device], t);
+        }
         if !self.eng.mobility.is_active(device) {
             return Ok(()); // departed mid-flight: result discarded
         }
@@ -448,9 +606,11 @@ impl AsyncHflEngine {
         self.reported[edge].push(device);
         match self.mode {
             SyncMode::SemiSync { quorum, .. } => {
-                if self.reported[edge].len()
-                    >= self.effective_quorum(edge, quorum)
-                {
+                if quorum_satisfied(
+                    self.reported[edge].len(),
+                    quorum,
+                    self.live_members(edge),
+                ) {
                     self.queue
                         .schedule(t, Event::EdgeAggregate { edge });
                 }
@@ -465,19 +625,13 @@ impl AsyncHflEngine {
         Ok(())
     }
 
-    /// K-quorum resolved against the edge's currently active population.
-    fn effective_quorum(&self, edge: usize, quorum: usize) -> usize {
-        let active = self.eng.topo.edges[edge]
+    /// Currently active members of `edge`.
+    fn live_members(&self, edge: usize) -> usize {
+        self.eng.topo.edges[edge]
             .members
             .iter()
             .filter(|&&d| self.eng.mobility.is_active(d))
             .count()
-            .max(1);
-        if quorum == 0 {
-            active
-        } else {
-            quorum.min(active)
-        }
     }
 
     fn on_edge_aggregate(&mut self, edge: usize, t: f64) -> Result<()> {
@@ -507,31 +661,125 @@ impl AsyncHflEngine {
             SyncMode::Synchronous => unreachable!(),
         }
         self.edge_version[edge] += 1;
-        self.edge_last_update_round[edge] = self.cloud_round_idx;
         self.window_edge_aggs[edge] += 1;
-        // Reporting devices restart from the fresh edge model.
+        // The fresh edge model goes up as an in-flight transfer while the
+        // reporting devices restart training — the overlap the lump model
+        // could never express.
+        self.start_upload(edge, t);
         self.dispatch(&devs, t)
     }
 
+    /// Snapshot `edge`'s model and put it on the uplink at time `t`.
+    fn start_upload(&mut self, edge: usize, t: f64) {
+        if self.draining {
+            return;
+        }
+        let region = self.eng.topo.edges[edge].region;
+        let work = self.eng.sample_one_way(region, Direction::Up);
+        let bytes = crate::sim::network::model_bytes(self.eng.p);
+        let (id, resched) =
+            self.eng.links.start(edge, Direction::Up, bytes, work, t);
+        self.payloads.insert(
+            id,
+            Payload::Upload {
+                edge,
+                w: self.eng.edge_w[edge].clone(),
+                version: self.edge_version[edge],
+            },
+        );
+        for (tid, finish) in resched {
+            self.queue
+                .schedule(finish, Event::TransferDone { transfer: tid });
+        }
+    }
+
+    /// Put the cloud model on `edge`'s downlink at time `t`. `round` is
+    /// the broadcasting cloud window (for the out-of-order landing guard).
+    fn start_downlink(
+        &mut self,
+        edge: usize,
+        cloud: &Arc<Vec<f32>>,
+        round: u64,
+        t: f64,
+    ) {
+        if self.draining {
+            return;
+        }
+        let region = self.eng.topo.edges[edge].region;
+        let work = self.eng.sample_one_way(region, Direction::Down);
+        let bytes = crate::sim::network::model_bytes(self.eng.p);
+        let (id, resched) =
+            self.eng.links.start(edge, Direction::Down, bytes, work, t);
+        self.payloads.insert(
+            id,
+            Payload::Downlink { edge, w: Arc::clone(cloud), round },
+        );
+        for (tid, finish) in resched {
+            self.queue
+                .schedule(finish, Event::TransferDone { transfer: tid });
+        }
+    }
+
+    /// A `TransferDone` popped: stale predictions are dropped; a live one
+    /// lands its payload (upload → cloud's view, downlink → edge model).
+    fn on_transfer_done(&mut self, id: usize, t: f64) -> Result<()> {
+        let Some((tr, resched)) = self.eng.links.poll(id, t) else {
+            return Ok(()); // superseded prediction
+        };
+        // Remaining sharers speed up; chase their new predictions.
+        for (tid, finish) in resched {
+            self.queue
+                .schedule(finish, Event::TransferDone { transfer: tid });
+        }
+        let payload = self
+            .payloads
+            .remove(&tr.id)
+            .expect("live transfer without payload");
+        self.transfer_log.push((tr.id, tr.edge, t));
+        match payload {
+            Payload::Upload { edge, w, version } => {
+                self.obs_up[edge] = tr.finish - tr.start;
+                self.window_landings[edge] += 1;
+                self.edge_last_update_round[edge] = self.cloud_round_idx;
+                // Latest *version* wins at the cloud: contention can land
+                // an older snapshot after a newer one.
+                if version > self.landed_version[edge] {
+                    self.landed_version[edge] = version;
+                    self.landed_w[edge] = w;
+                }
+            }
+            Payload::Downlink { edge, w, round } => {
+                self.obs_down[edge] = tr.finish - tr.start;
+                // The edge adopts the global model only now that the
+                // broadcast landed; devices pick it up at their next edge
+                // aggregation. Contention can land broadcasts out of
+                // order — never revert to an older window's model.
+                if round > self.adopted_cloud_round[edge] {
+                    self.adopted_cloud_round[edge] = round;
+                    self.eng.edge_w[edge].clone_from(&*w);
+                }
+            }
+        }
+        Ok(())
+    }
+
     fn on_cloud_aggregate(&mut self, t: f64) -> Result<RoundStats> {
+        self.sweep(t); // a tail flush arrives outside the event loop
         let m = self.edges();
         // Flush partial quorums so no edge (or idle-waiting device) can
-        // starve across windows.
+        // starve across windows; their uploads start now and land later.
         for j in 0..m {
             if !self.reported[j].is_empty() {
                 self.on_edge_aggregate(j, t)?;
             }
         }
-        for j in 0..m {
-            let region = self.eng.topo.edges[j].region;
-            let t_ec = self.eng.sample_comm_time(region);
-            self.acc.record_comm(j, t_ec, 0.0);
-        }
+        // The cloud aggregates what has LANDED by its timer — not the
+        // live edge models, which may still be in flight.
         match self.mode {
             SyncMode::Async { staleness_alpha, .. } => {
-                // All edges contribute, discounted by how many windows ago
-                // they last aggregated (pure cloud echoes decay fastest).
-                let edges: Vec<usize> = (0..m).collect();
+                // All edges contribute their last landed model, discounted
+                // by how many windows ago it landed (pure echoes decay
+                // fastest).
                 let factors: Vec<f32> = (0..m)
                     .map(|j| {
                         staleness_discount(
@@ -541,25 +789,50 @@ impl AsyncHflEngine {
                         )
                     })
                     .collect();
-                self.eng.cloud_aggregate_edges(&edges, Some(&factors))?;
+                let views: Vec<(usize, &[f32])> = (0..m)
+                    .map(|j| (j, self.landed_w[j].as_slice()))
+                    .collect();
+                self.eng.cloud_aggregate_views(&views, Some(&factors))?;
             }
             SyncMode::SemiSync { .. } => {
-                // Only edges that actually aggregated this window.
-                let edges: Vec<usize> = (0..m)
-                    .filter(|&j| self.window_edge_aggs[j] > 0)
+                // Only edges whose upload actually landed this window.
+                let views: Vec<(usize, &[f32])> = (0..m)
+                    .filter(|&j| self.window_landings[j] > 0)
+                    .map(|j| (j, self.landed_w[j].as_slice()))
                     .collect();
-                self.eng.cloud_aggregate_edges(&edges, None)?;
+                self.eng.cloud_aggregate_views(&views, None)?;
             }
             SyncMode::Synchronous => unreachable!(),
         }
-        // Push the new global model down to the edges only; devices are
-        // mid-training and pick it up at their next edge aggregation
-        // (overlapped communication).
-        let cloud = self.eng.cloud_w.clone();
-        for e in self.eng.edge_w.iter_mut() {
-            e.clone_from(&cloud);
-        }
         self.cloud_round_idx += 1;
+        // Broadcast as in-flight downlink transfers (was: instantaneous
+        // broadcast_cloud); each edge adopts the model when it lands.
+        // One shared snapshot serves all m downlinks.
+        let cloud = Arc::new(self.eng.cloud_w.clone());
+        let round = self.cloud_round_idx;
+        for j in 0..m {
+            self.start_downlink(j, &cloud, round, t);
+        }
+
+        // Close the window's stats from observed transfers + busy sweep.
+        for j in 0..m {
+            self.acc.record_window(
+                j,
+                self.obs_up[j],
+                self.obs_down[j],
+                self.win_compute_busy[j],
+                self.win_up_busy[j],
+                self.win_down_busy[j],
+                self.win_comm_busy[j],
+                self.win_overlap[j],
+            );
+        }
+        self.window_landings = vec![0; m];
+        self.win_compute_busy = vec![0.0; m];
+        self.win_up_busy = vec![0.0; m];
+        self.win_down_busy = vec![0.0; m];
+        self.win_comm_busy = vec![0.0; m];
+        self.win_overlap = vec![0.0; m];
 
         let round_time = t - self.window_start;
         self.eng.clock.advance(round_time);
@@ -582,8 +855,12 @@ impl AsyncHflEngine {
         );
         self.eng.last_round = Some(stats.clone());
         self.window_start = t;
-        self.queue
-            .schedule(t + self.mode.cloud_interval(), Event::CloudAggregate);
+        if !self.draining {
+            self.queue.schedule(
+                t + self.mode.cloud_interval(),
+                Event::CloudAggregate,
+            );
+        }
         Ok(stats)
     }
 
@@ -601,6 +878,33 @@ impl AsyncHflEngine {
         // enter reported[] twice and double-weight the device.
         for &d in &flipped {
             self.reported[self.dev_edge[d]].retain(|&x| x != d);
+            // A run already in flight trained against a pre-departure
+            // model: void it so a leave(+rejoin) can never land a stale
+            // update at full weight.
+            if let Some(p) = self.in_flight[d].as_mut() {
+                p.void = true;
+            }
+        }
+        // Quorum liveness: a departure can shrink an edge's live set to
+        // (or below) the reports already outstanding; without this
+        // re-check the edge round could only close at the next timer
+        // flush, because no further DeviceTrainDone will fire for it.
+        if let SyncMode::SemiSync { quorum, .. } = self.mode {
+            let mut hit: Vec<usize> =
+                flipped.iter().map(|&d| self.dev_edge[d]).collect();
+            hit.sort_unstable();
+            hit.dedup();
+            for j in hit {
+                if !self.reported[j].is_empty()
+                    && quorum_satisfied(
+                        self.reported[j].len(),
+                        quorum,
+                        self.live_members(j),
+                    )
+                {
+                    self.queue.schedule(t, Event::EdgeAggregate { edge: j });
+                }
+            }
         }
         let rejoined: Vec<usize> = flipped
             .iter()
@@ -678,5 +982,24 @@ mod tests {
             .name(),
             "async"
         );
+    }
+
+    #[test]
+    fn quorum_clamps_to_live_membership() {
+        // Plain quorum against a healthy edge.
+        assert!(!quorum_satisfied(2, 3, 5));
+        assert!(quorum_satisfied(3, 3, 5));
+        // quorum 0 = "all live members".
+        assert!(!quorum_satisfied(3, 0, 4));
+        assert!(quorum_satisfied(4, 0, 4));
+        // The liveness regression: membership shrank below the configured
+        // quorum while 2 reports were outstanding — the round must be
+        // closable with what is still alive.
+        assert!(quorum_satisfied(2, 3, 2));
+        assert!(quorum_satisfied(1, 3, 1));
+        // Even a fully-departed edge (live = 0 clamps to 1) closes on one
+        // outstanding report rather than deadlocking.
+        assert!(quorum_satisfied(1, 3, 0));
+        assert!(!quorum_satisfied(0, 3, 0));
     }
 }

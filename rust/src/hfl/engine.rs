@@ -5,7 +5,10 @@ use anyhow::{Context, Result};
 use crate::config::ExperimentConfig;
 use crate::pca::PcaModel;
 use crate::runtime::{pool::TrainJob, DevicePool, HostTensor, Runtime};
-use crate::sim::{EnergyModel, MobilityModel, NetworkModel, SimClock};
+use crate::sim::{
+    Direction, EnergyModel, LinkManager, MobilityModel, NetworkModel,
+    SimClock,
+};
 use crate::util::rng::Rng;
 
 use super::aggregate::aggregate_native;
@@ -23,6 +26,9 @@ pub struct HflEngine {
     pub clock: SimClock,
     pub energy_model: EnergyModel,
     pub net: NetworkModel,
+    /// Per-edge uplink/downlink transfer scheduling (`sim::link`); all
+    /// edge↔cloud communication of both engines routes through it.
+    pub links: LinkManager,
     pub mobility: MobilityModel,
     rng: Rng,
     /// Flat model parameter count.
@@ -82,6 +88,7 @@ impl HflEngine {
         let energy_model =
             EnergyModel::new(cfg.sim.power_idle, cfg.sim.power_max);
         let net = NetworkModel::from_config(&cfg.sim);
+        let links = LinkManager::new(m, cfg.link.contention);
         let mobility = MobilityModel::from_config(n, &cfg.sim, cfg.seed);
         Ok(HflEngine {
             p,
@@ -97,6 +104,7 @@ impl HflEngine {
             clock: SimClock::new(),
             energy_model,
             net,
+            links,
             mobility,
             rng,
             round: 0,
@@ -117,6 +125,7 @@ impl HflEngine {
             d.clone_from(&self.init_w);
         }
         self.clock.reset();
+        self.links.reset();
         self.round = 0;
         self.total_energy = 0.0;
         self.last_round = None;
@@ -278,25 +287,20 @@ impl HflEngine {
     ) -> (Vec<TrainJob>, Vec<usize>) {
         let mut jobs = Vec::new();
         let mut job_edges = Vec::new();
-        let round = self.round;
-        for (j, edge) in self.topo.edges.iter().enumerate() {
+        for j in 0..self.topo.edges.len() {
             if sub >= gamma2[j] {
                 continue;
             }
-            for &dev in &edge.members {
+            for idx in 0..self.topo.edges[j].members.len() {
+                let dev = self.topo.edges[j].members[idx];
                 if !self.trains_this_round(dev, participation) {
                     continue;
                 }
-                // Same fork expression as fork_job_seed (inlined: the
-                // edge iteration holds a topo borrow).
                 jobs.push(TrainJob {
                     device: dev,
                     w: self.device_w[dev].clone(),
                     epochs: gamma1[j],
-                    seed: self
-                        .rng
-                        .fork(((round as u64) << 20) ^ dev as u64)
-                        .next_u64(),
+                    seed: self.fork_job_seed(dev),
                 });
                 job_edges.push(j);
             }
@@ -404,6 +408,30 @@ impl HflEngine {
         Ok(())
     }
 
+    /// Cloud aggregation over explicit per-edge model *views* (what has
+    /// landed at the cloud, not necessarily the live edge models),
+    /// data-size weighted with optional extra factors.
+    pub(crate) fn cloud_aggregate_views(
+        &mut self,
+        views: &[(usize, &[f32])],
+        factors: Option<&[f32]>,
+    ) -> Result<()> {
+        if views.is_empty() {
+            return Ok(());
+        }
+        let mut weights = Vec::with_capacity(views.len());
+        for (i, &(j, _)) in views.iter().enumerate() {
+            let mut w = self.edge_data_weight(j);
+            if let Some(f) = factors {
+                w *= f[i];
+            }
+            weights.push(w);
+        }
+        let models: Vec<&[f32]> = views.iter().map(|&(_, m)| m).collect();
+        self.cloud_w = self.aggregate(&models, &weights)?;
+        Ok(())
+    }
+
     /// Broadcast the global model everywhere (next round starts from
     /// w(k+1)).
     pub(crate) fn broadcast_cloud(&mut self) {
@@ -415,11 +443,73 @@ impl HflEngine {
         }
     }
 
-    /// Sample one edge→cloud round-trip for `region` from the engine's
-    /// main RNG stream.
-    pub(crate) fn sample_comm_time(&mut self, region: Region) -> f64 {
+    /// Sample the exclusive-link work (seconds) of one `dir`-direction
+    /// model transfer for `region`, from the engine's main RNG stream.
+    pub(crate) fn sample_one_way(
+        &mut self,
+        region: Region,
+        dir: Direction,
+    ) -> f64 {
         let pbytes = crate::sim::network::model_bytes(self.p);
-        self.net.comm_time(region, pbytes, &mut self.rng)
+        let scale = match dir {
+            Direction::Up => self.cfg.link.up_bandwidth_scale,
+            Direction::Down => self.cfg.link.down_bandwidth_scale,
+        };
+        self.net.one_way_time(region, pbytes, scale, &mut self.rng)
+    }
+
+    /// The barrier round's communication tail through the link layer:
+    /// every edge uploads its model when its compute finishes
+    /// (`edge_compute[j]`, round-relative), the cloud aggregates when the
+    /// *last* upload lands — the degenerate no-overlap case of the
+    /// transfer layer — and the downlink broadcast departs then, landing
+    /// during the start of the next round (charged to stats, not to the
+    /// barrier). Returns the round duration. Both engines call this
+    /// helper, consuming identical RNG draws in identical order, which is
+    /// what keeps Synchronous mode bit-for-bit equal between them.
+    pub(crate) fn sync_comm_phase(
+        &mut self,
+        edge_compute: &[f64],
+        acc: &mut RoundAccumulator,
+    ) -> f64 {
+        let m = self.edges();
+        let pbytes = crate::sim::network::model_bytes(self.p);
+        self.links.begin_round();
+        let mut up_dur = vec![0.0f64; m];
+        let mut t_cloud = 0.0f64;
+        for j in 0..m {
+            let region = self.topo.edges[j].region;
+            let work = self.sample_one_way(region, Direction::Up);
+            let (id, resched) =
+                self.links
+                    .start(j, Direction::Up, pbytes, work, edge_compute[j]);
+            // One transfer per per-edge uplink under the barrier: its
+            // first prediction is final.
+            debug_assert_eq!(resched.len(), 1);
+            let finish = resched[0].1;
+            let (tr, _) = self
+                .links
+                .poll(id, finish)
+                .expect("uncontended upload lands at its prediction");
+            up_dur[j] = tr.finish - tr.start;
+            if tr.finish > t_cloud {
+                t_cloud = tr.finish;
+            }
+        }
+        for j in 0..m {
+            let region = self.topo.edges[j].region;
+            let work = self.sample_one_way(region, Direction::Down);
+            let (id, resched) =
+                self.links.start(j, Direction::Down, pbytes, work, t_cloud);
+            debug_assert_eq!(resched.len(), 1);
+            let finish = resched[0].1;
+            let (tr, _) = self
+                .links
+                .poll(id, finish)
+                .expect("uncontended downlink lands at its prediction");
+            acc.record_link(j, up_dur[j], tr.finish - tr.start, edge_compute[j]);
+        }
+        t_cloud
     }
 
     /// Execute one cloud round under per-edge frequencies.
@@ -484,12 +574,9 @@ impl HflEngine {
             }
         }
 
-        // Edge -> cloud communication (straggler path per edge).
-        for j in 0..m {
-            let region = self.topo.edges[j].region;
-            let t_ec = self.sample_comm_time(region);
-            acc.record_comm(j, t_ec, edge_sub_time[j]);
-        }
+        // Edge -> cloud communication: in-flight uploads through the link
+        // layer; the round closes when the straggler's upload lands.
+        let round_time = self.sync_comm_phase(&edge_sub_time, &mut acc);
 
         // Cloud aggregation over edge models, weighted by cluster data.
         let active: Vec<usize> =
@@ -497,7 +584,6 @@ impl HflEngine {
         self.cloud_aggregate_edges(&active, None)?;
         self.broadcast_cloud();
 
-        let round_time = acc.round_time();
         self.clock.advance(round_time);
         self.round += 1;
         self.total_energy += acc.round_energy;
@@ -529,6 +615,17 @@ impl HflEngine {
 
     /// Expected duration of edge `j`'s part of a round under (γ1, γ2) —
     /// the time model behind the agent's feasible-action projection (§3.6).
+    ///
+    /// The communication term follows the transfer layer's overlapped-time
+    /// model instead of the old lump `2.0 * mean_comm_time`:
+    ///  * **Synchronous** — the barrier closes when the edge's upload
+    ///    lands, and the downlink broadcast overlaps the next round's
+    ///    dispatch, so only the (asymmetric-bandwidth) uplink mean is on
+    ///    the critical path.
+    ///  * **SemiSync/Async** — uploads are in flight while the next local
+    ///    round trains, so the upload only costs what compute cannot hide
+    ///    (`max(compute, up)`), plus the downlink that delivers the next
+    ///    global model.
     pub fn predict_edge_time(
         &self,
         j: usize,
@@ -547,8 +644,21 @@ impl HflEngine {
                 c.base_time * c.slowdown()
             })
             .fold(0.0, f64::max);
-        slow * (nb * gamma1 * gamma2) as f64
-            + 2.0 * self.net.mean_comm_time(edge.region, pbytes)
+        let compute = slow * (nb * gamma1 * gamma2) as f64;
+        let up = self.net.one_way_mean(
+            edge.region,
+            pbytes,
+            self.cfg.link.up_bandwidth_scale,
+        );
+        let down = self.net.one_way_mean(
+            edge.region,
+            pbytes,
+            self.cfg.link.down_bandwidth_scale,
+        );
+        match self.cfg.sync.mode {
+            crate::config::SyncModeCfg::Synchronous => compute + up,
+            _ => compute.max(up) + down,
+        }
     }
 
     /// Expected duration of a whole round (straggler edge).

@@ -5,18 +5,51 @@ use crate::util::csv::CsvWriter;
 use crate::util::json::Json;
 
 /// Per-edge observables h_j(k) of paper Eq. (7), plus bookkeeping.
+///
+/// Since the transfer layer (`sim::link`) landed, communication fields are
+/// *observed* from completed transfers, not resampled: `t_up`/`t_down` are
+/// the durations of the last uplink/downlink transfer that landed for this
+/// edge, and `t_ec = t_up + t_down` is the observed round trip that feeds
+/// the DRL state. The `*_busy` fields split the round into compute vs
+/// in-flight communication time so overlap is first-class.
 #[derive(Clone, Debug, Default)]
 pub struct EdgeStats {
     /// Local SGD time of the slowest device under this edge (T_j^SGD).
     pub t_sgd_slowest: f64,
-    /// Edge→cloud communication time (T_j^ec).
+    /// Edge→cloud communication time (T_j^ec), observed: `t_up + t_down`.
     pub t_ec: f64,
+    /// Duration of the edge's last completed uplink transfer.
+    pub t_up: f64,
+    /// Duration of the edge's last completed downlink transfer.
+    pub t_down: f64,
     /// Device energy consumed under this edge this round, mAh (E_j).
     pub energy: f64,
     /// Active devices that trained this round.
     pub active: usize,
     /// Wall (simulated) time this edge needed for the whole round.
     pub total_time: f64,
+    /// Seconds of the round with ≥1 member device training.
+    pub compute_busy: f64,
+    /// Seconds with ≥1 transfer in flight on the edge's uplink.
+    pub up_busy: f64,
+    /// Seconds with ≥1 transfer in flight on the edge's downlink.
+    pub down_busy: f64,
+    /// Seconds with ≥1 transfer in flight on *either* of the edge's links
+    /// (interval union, ≤ `up_busy + down_busy`).
+    pub comm_busy: f64,
+    /// Seconds during which compute and communication were both in flight
+    /// (0 under the barrier engine: it never overlaps them).
+    pub comm_overlap: f64,
+}
+
+impl EdgeStats {
+    /// (uplink, downlink) busy fraction of a `window`-second round.
+    pub fn link_util(&self, window: f64) -> (f64, f64) {
+        if window <= 0.0 {
+            return (0.0, 0.0);
+        }
+        (self.up_busy / window, self.down_busy / window)
+    }
 }
 
 /// One cloud-aggregation round.
@@ -42,6 +75,27 @@ pub struct RoundStats {
 }
 
 impl RoundStats {
+    /// Fraction of in-flight communication time that overlapped local
+    /// training (0 = fully serialized, as in the lump model; →1 = uploads
+    /// fully hidden behind compute).
+    pub fn comm_overlap_frac(&self) -> f64 {
+        let comm: f64 = self.per_edge.iter().map(|e| e.comm_busy).sum();
+        if comm <= 0.0 {
+            return 0.0;
+        }
+        self.per_edge.iter().map(|e| e.comm_overlap).sum::<f64>() / comm
+    }
+
+    /// Mean busy fraction over all 2M directed links for the round.
+    pub fn mean_link_util(&self) -> f64 {
+        if self.round_time <= 0.0 || self.per_edge.is_empty() {
+            return 0.0;
+        }
+        let busy: f64 =
+            self.per_edge.iter().map(|e| e.up_busy + e.down_busy).sum();
+        busy / (2.0 * self.per_edge.len() as f64 * self.round_time)
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("k", Json::num(self.k as f64)),
@@ -51,6 +105,8 @@ impl RoundStats {
             ("round_time", Json::num(self.round_time)),
             ("sim_now", Json::num(self.sim_now)),
             ("energy", Json::num(self.energy)),
+            ("comm_overlap_frac", Json::num(self.comm_overlap_frac())),
+            ("mean_link_util", Json::num(self.mean_link_util())),
             (
                 "gamma1",
                 Json::arr_f64(
@@ -114,12 +170,58 @@ impl RoundAccumulator {
         }
     }
 
-    /// Close an edge's round: `compute_time` simulated seconds of local
-    /// training plus the sampled edge→cloud time `t_ec`.
-    pub fn record_comm(&mut self, edge: usize, t_ec: f64, compute_time: f64) {
+    /// Close an edge's barrier round from observed link-layer transfers:
+    /// `compute_time` simulated seconds of local training, then an `up`
+    /// upload (on the round's critical path — the barrier closes when the
+    /// last upload lands) and a `down` broadcast that overlaps the start
+    /// of the next round and is charged to stats only.
+    pub fn record_link(
+        &mut self,
+        edge: usize,
+        up: f64,
+        down: f64,
+        compute_time: f64,
+    ) {
         let e = &mut self.per_edge[edge];
-        e.t_ec = t_ec;
-        e.total_time = compute_time + t_ec;
+        e.t_up = up;
+        e.t_down = down;
+        e.t_ec = up + down;
+        e.compute_busy = compute_time;
+        e.up_busy = up;
+        e.down_busy = down;
+        e.comm_busy = up + down; // serialized: the intervals are disjoint
+        e.comm_overlap = 0.0;
+        e.total_time = compute_time + up;
+    }
+
+    /// Close an edge's timer window (event-driven modes) from the busy
+    /// intervals swept over the window. `t_up`/`t_down` are the last
+    /// *observed* transfer durations (possibly from an earlier window if
+    /// nothing landed in this one; 0.0 until anything ever lands).
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_window(
+        &mut self,
+        edge: usize,
+        t_up: f64,
+        t_down: f64,
+        compute_busy: f64,
+        up_busy: f64,
+        down_busy: f64,
+        comm_busy: f64,
+        overlap: f64,
+    ) {
+        let e = &mut self.per_edge[edge];
+        e.t_up = t_up;
+        e.t_down = t_down;
+        e.t_ec = t_up + t_down;
+        e.compute_busy = compute_busy;
+        e.up_busy = up_busy;
+        e.down_busy = down_busy;
+        e.comm_busy = comm_busy;
+        e.comm_overlap = overlap;
+        // Busy union: the wall-clock this edge spent doing *anything*
+        // (inclusion-exclusion over the compute and comm interval sets).
+        e.total_time = compute_busy + comm_busy - overlap;
     }
 
     /// Straggler-path duration: max per-edge total time.
@@ -215,12 +317,35 @@ impl RunHistory {
             .map(|r| r.sim_now)
     }
 
-    /// Write the (time, accuracy, energy) series to CSV.
+    /// Mean (comm_overlap_frac, mean_link_util) over the rounds completed
+    /// by simulated time `t` — the fig9/table summary companion of
+    /// [`RunHistory::at_time`].
+    pub fn comm_stats_at(&self, t: f64) -> (f64, f64) {
+        let mut overlap = 0.0;
+        let mut util = 0.0;
+        let mut n = 0.0;
+        for r in &self.rounds {
+            if r.sim_now > t {
+                break;
+            }
+            overlap += r.comm_overlap_frac();
+            util += r.mean_link_util();
+            n += 1.0;
+        }
+        if n > 0.0 {
+            (overlap / n, util / n)
+        } else {
+            (0.0, 0.0)
+        }
+    }
+
+    /// Write the (time, accuracy, energy, link) series to CSV.
     pub fn write_csv(&self, path: &str, label: &str) -> std::io::Result<()> {
         let mut w = CsvWriter::create(
             path,
             &["scheme", "k", "sim_time", "accuracy", "round_energy",
-              "cum_energy", "train_loss"],
+              "cum_energy", "train_loss", "comm_overlap_frac",
+              "mean_link_util"],
         )?;
         let mut cum = 0.0;
         for r in &self.rounds {
@@ -233,6 +358,8 @@ impl RunHistory {
                 format!("{:.3}", r.energy),
                 format!("{cum:.3}"),
                 format!("{:.4}", r.train_loss),
+                format!("{:.4}", r.comm_overlap_frac()),
+                format!("{:.4}", r.mean_link_util()),
             ])?;
         }
         w.flush()
@@ -278,15 +405,44 @@ mod tests {
         acc.record_train(0, 3, 10.0, 1.5, Some(0.8));
         acc.record_train(0, 4, 12.0, 2.5, Some(0.6));
         acc.record_train(1, 7, 20.0, 4.0, None);
-        acc.record_comm(0, 3.0, 12.0);
-        acc.record_comm(1, 5.0, 20.0);
+        // Barrier round: uploads on the critical path, downlinks charged
+        // to stats only.
+        acc.record_link(0, 3.0, 1.0, 12.0);
+        acc.record_link(1, 5.0, 2.0, 20.0);
         assert!((acc.round_time() - 25.0).abs() < 1e-12);
         let s = acc.finish(1, 0.5, 1.0, 25.0, 25.0, &[2, 2], &[1, 1]);
         assert_eq!(s.per_edge[0].active, 2);
         assert!((s.per_edge[0].t_sgd_slowest - 12.0).abs() < 1e-12);
+        assert!((s.per_edge[0].t_ec - 4.0).abs() < 1e-12, "t_ec = up+down");
+        assert!((s.per_edge[0].t_up - 3.0).abs() < 1e-12);
+        assert!((s.per_edge[0].t_down - 1.0).abs() < 1e-12);
+        assert_eq!(s.per_edge[0].comm_overlap, 0.0, "barrier never overlaps");
         assert!((s.energy - 8.0).abs() < 1e-12);
         assert!((s.train_loss - 0.7).abs() < 1e-12);
         assert_eq!(s.device_losses, vec![(3, 0.8), (4, 0.6)]);
+        assert_eq!(s.comm_overlap_frac(), 0.0);
+        // busy fractions: (3+1+5+2) link-busy seconds over 2*2*25.
+        assert!((s.mean_link_util() - 11.0 / 100.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn window_recording_reports_overlap() {
+        let mut acc = RoundAccumulator::new(2);
+        acc.record_train(0, 0, 30.0, 1.0, Some(0.5));
+        acc.record_train(1, 2, 40.0, 1.0, None);
+        // Edge 0: 60s compute, 20s comm of which 15s overlapped training.
+        acc.record_window(0, 8.0, 2.0, 60.0, 18.0, 2.0, 20.0, 15.0);
+        // Edge 1: fully serialized window.
+        acc.record_window(1, 6.0, 2.0, 50.0, 8.0, 2.0, 10.0, 0.0);
+        let s = acc.finish(1, 0.5, 1.0, 100.0, 100.0, &[2, 2], &[1, 1]);
+        assert!((s.per_edge[0].total_time - 65.0).abs() < 1e-12);
+        assert!((s.per_edge[1].total_time - 60.0).abs() < 1e-12);
+        assert!((s.per_edge[0].t_ec - 10.0).abs() < 1e-12);
+        // 15 overlapped of 30 comm-busy seconds.
+        assert!((s.comm_overlap_frac() - 0.5).abs() < 1e-12);
+        let (up, down) = s.per_edge[0].link_util(100.0);
+        assert!((up - 0.18).abs() < 1e-12);
+        assert!((down - 0.02).abs() < 1e-12);
     }
 
     #[test]

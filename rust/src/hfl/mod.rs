@@ -12,6 +12,10 @@
 //! `AsyncHflEngine` (hfl/async_engine.rs) is the event-driven counterpart:
 //! the same hierarchy executed over the `sim::event` queue in synchronous,
 //! K-quorum semi-synchronous, or staleness-discounted asynchronous mode.
+//! All edge↔cloud communication — both engines — runs as in-flight
+//! transfers through `sim::link` (per-edge uplink/downlink pairs with
+//! fair-share contention), so upload time can overlap the next local
+//! round and metrics report compute vs in-flight comm time separately.
 
 pub mod aggregate;
 pub mod async_engine;

@@ -17,7 +17,12 @@
 //!  * `EdgeAggregate`    — an edge closes its (sub-)round and aggregates;
 //!  * `CloudAggregate`   — the cloud aggregates edge models (barrier in
 //!    synchronous mode, a timer in semi-sync/async modes);
-//!  * `MobilityFlip`     — the join/leave Markov process advances.
+//!  * `MobilityFlip`     — the join/leave Markov process advances;
+//!  * `TransferDone`     — an in-flight edge↔cloud transfer predicted by
+//!    `sim::link::LinkManager` lands. Contention re-predictions leave
+//!    stale `TransferDone`s in the queue; the link layer identifies the
+//!    live one by bit-exact timestamp match, so poppers must route these
+//!    through `LinkManager::poll` and drop the `None`s.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -32,6 +37,8 @@ pub enum Event {
     EdgeAggregate { edge: usize },
     CloudAggregate,
     MobilityFlip,
+    /// An in-flight transfer's predicted landing (id from the link layer).
+    TransferDone { transfer: usize },
 }
 
 /// Heap entry: min-ordered by (time, tie, seq).

@@ -1,0 +1,462 @@
+//! Per-edge uplink/downlink transfer scheduling — the first-class
+//! communication layer behind `Event::TransferDone`.
+//!
+//! Every edge owns two directed links to the cloud (`Direction::Up`,
+//! `Direction::Down`). A transfer is admitted with a *work* budget measured
+//! in exclusive-link seconds (latency + bytes/bandwidth, jitter already
+//! applied by the caller so all RNG stays on the engine's streams), and the
+//! manager tracks how that work drains over simulated time.
+//!
+//! # Contention model
+//!
+//! Links are processor-sharing queues: with contention enabled, `k`
+//! concurrent transfers on one link each drain at rate `1/k` (fair share),
+//! so a transfer's completion time depends on everything that overlaps it.
+//! The latency floor is folded into the work budget, i.e. it is shared
+//! too — a deliberate simplification that keeps the model a single number
+//! per transfer. With contention disabled every transfer drains at rate 1
+//! regardless of load (infinite-capacity link, the pre-transfer-layer
+//! lump behavior spread over time).
+//!
+//! # Event protocol
+//!
+//! The manager never touches the event queue; it only *predicts* finish
+//! times. Whenever link membership changes (a transfer starts or
+//! completes), [`LinkManager::start`]/[`LinkManager::poll`] return the
+//! recomputed `(transfer id, finish time)` pairs for every transfer still
+//! on that link, and the caller schedules a `TransferDone` for each. A
+//! popped `TransferDone` is *live* only if its timestamp is bit-identical
+//! to the transfer's currently predicted finish (`poll` returns `None`
+//! otherwise): earlier predictions that were invalidated by later
+//! arrivals/departures pop as stale events and are dropped. Because every
+//! recomputation schedules a fresh event at the new prediction, exactly
+//! one event per transfer eventually matches.
+//!
+//! Everything is a pure function of the call sequence — no RNG, no global
+//! state — so two runs issuing the same calls observe bit-identical
+//! transfer timelines. That is what makes the asynchronous engines'
+//! overlapped-communication runs reproducible from the experiment seed.
+
+use std::collections::HashMap;
+
+/// Transfer direction relative to the edge: `Up` = edge→cloud upload,
+/// `Down` = cloud→edge broadcast.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Direction {
+    Up,
+    Down,
+}
+
+impl Direction {
+    pub fn name(self) -> &'static str {
+        match self {
+            Direction::Up => "up",
+            Direction::Down => "down",
+        }
+    }
+}
+
+/// Handle for a completed transfer, returned by [`LinkManager::poll`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct Transfer {
+    /// Monotonically increasing id (never reused within a run).
+    pub id: usize,
+    pub edge: usize,
+    pub dir: Direction,
+    /// Payload size on the wire.
+    pub bytes: usize,
+    /// Simulated time the transfer was admitted.
+    pub start: f64,
+    /// Simulated time it landed (`finish - start` ≥ the uncontended work).
+    pub finish: f64,
+}
+
+#[derive(Clone, Debug)]
+struct InFlight {
+    edge: usize,
+    dir: Direction,
+    bytes: usize,
+    start: f64,
+    /// Exclusive-link seconds of work left; drains at the fair-share rate.
+    remaining: f64,
+    /// Currently predicted completion time. The `TransferDone` event whose
+    /// timestamp equals this value bit-for-bit is the live one.
+    finish: f64,
+}
+
+#[derive(Clone, Debug, Default)]
+struct LinkState {
+    /// In-flight transfer ids in admission order (deterministic).
+    active: Vec<usize>,
+    /// Simulated time the link's work accounting was last advanced to.
+    last_t: f64,
+}
+
+/// All per-edge links of one topology plus their in-flight transfers.
+#[derive(Clone, Debug)]
+pub struct LinkManager {
+    edges: usize,
+    contention: bool,
+    /// `2 * edges` directed links, indexed `edge * 2 + dir`.
+    links: Vec<LinkState>,
+    flights: HashMap<usize, InFlight>,
+    next_id: usize,
+}
+
+impl LinkManager {
+    pub fn new(edges: usize, contention: bool) -> Self {
+        LinkManager {
+            edges,
+            contention,
+            links: vec![LinkState::default(); 2 * edges],
+            flights: HashMap::new(),
+            next_id: 0,
+        }
+    }
+
+    fn link_idx(&self, edge: usize, dir: Direction) -> usize {
+        debug_assert!(edge < self.edges, "edge {edge} out of range");
+        edge * 2
+            + match dir {
+                Direction::Up => 0,
+                Direction::Down => 1,
+            }
+    }
+
+    /// Transfers currently in flight on `edge`'s `dir` link.
+    pub fn active_count(&self, edge: usize, dir: Direction) -> usize {
+        self.links[self.link_idx(edge, dir)].active.len()
+    }
+
+    /// All in-flight transfers, every link.
+    pub fn in_flight_total(&self) -> usize {
+        self.flights.len()
+    }
+
+    pub fn contention(&self) -> bool {
+        self.contention
+    }
+
+    /// Drop all in-flight transfers and rewind every link clock (fresh
+    /// run). Ids restart from 0 so two reset managers replay identically.
+    pub fn reset(&mut self) {
+        self.flights.clear();
+        for l in &mut self.links {
+            l.active.clear();
+            l.last_t = 0.0;
+        }
+        self.next_id = 0;
+    }
+
+    /// Rewind the link clocks for a barrier round that accounts in
+    /// round-relative time. Requires the previous round to have drained
+    /// every transfer it started (the barrier guarantees it).
+    pub fn begin_round(&mut self) {
+        debug_assert!(
+            self.flights.is_empty(),
+            "begin_round with {} transfers in flight",
+            self.flights.len()
+        );
+        for l in &mut self.links {
+            l.last_t = 0.0;
+        }
+    }
+
+    /// Drain in-flight work on link `li` up to time `t`.
+    fn advance(&mut self, li: usize, t: f64) {
+        let dt = t - self.links[li].last_t;
+        if dt <= 0.0 {
+            debug_assert!(
+                dt >= -1e-9,
+                "link time moved backwards: {t} < {}",
+                self.links[li].last_t
+            );
+            return;
+        }
+        let k = self.links[li].active.len();
+        if k > 0 {
+            let rate = if self.contention { 1.0 / k as f64 } else { 1.0 };
+            for i in 0..k {
+                let id = self.links[li].active[i];
+                let f = self.flights.get_mut(&id).expect("active transfer");
+                // Clamp: simultaneous completions can leave a hair of
+                // negative residue; finishes must never precede `t`.
+                f.remaining = (f.remaining - dt * rate).max(0.0);
+            }
+        }
+        self.links[li].last_t = t;
+    }
+
+    /// Recompute predicted finishes for everything on link `li` as of `t`;
+    /// returns `(id, finish)` for the caller to (re)schedule.
+    fn refinish(&mut self, li: usize, t: f64) -> Vec<(usize, f64)> {
+        let k = self.links[li].active.len();
+        let stretch = if self.contention && k > 0 { k as f64 } else { 1.0 };
+        let mut out = Vec::with_capacity(k);
+        for i in 0..k {
+            let id = self.links[li].active[i];
+            let f = self.flights.get_mut(&id).expect("active transfer");
+            f.finish = t + f.remaining * stretch;
+            out.push((id, f.finish));
+        }
+        out
+    }
+
+    /// Admit a transfer of `bytes` needing `work` exclusive-link seconds
+    /// on `edge`'s `dir` link at time `now`. Returns the new transfer's id
+    /// plus the recomputed `(id, finish)` predictions for every transfer
+    /// on the link (the new one included) — schedule a `TransferDone` for
+    /// each.
+    pub fn start(
+        &mut self,
+        edge: usize,
+        dir: Direction,
+        bytes: usize,
+        work: f64,
+        now: f64,
+    ) -> (usize, Vec<(usize, f64)>) {
+        assert!(
+            work.is_finite() && work >= 0.0,
+            "transfer work must be finite and non-negative ({work})"
+        );
+        let li = self.link_idx(edge, dir);
+        self.advance(li, now);
+        let id = self.next_id;
+        self.next_id += 1;
+        self.flights.insert(
+            id,
+            InFlight {
+                edge,
+                dir,
+                bytes,
+                start: now,
+                remaining: work,
+                finish: now + work,
+            },
+        );
+        self.links[li].active.push(id);
+        let resched = self.refinish(li, now);
+        (id, resched)
+    }
+
+    /// Handle a popped `TransferDone { transfer: id }` at time `t`.
+    /// Returns the completed [`Transfer`] plus finish predictions for the
+    /// transfers that remain on the link (they speed up when a sharer
+    /// leaves) — or `None` when the event is stale (the prediction it was
+    /// scheduled against has since been superseded, or the transfer
+    /// already completed via an equal-time duplicate).
+    pub fn poll(
+        &mut self,
+        id: usize,
+        t: f64,
+    ) -> Option<(Transfer, Vec<(usize, f64)>)> {
+        let f = self.flights.get(&id)?;
+        // Bit-exact match: predictions are scheduled verbatim, so the live
+        // event reproduces the stored f64 exactly; any difference means a
+        // newer prediction owns this transfer.
+        #[allow(clippy::float_cmp)]
+        if f.finish != t {
+            return None;
+        }
+        let li = self.link_idx(f.edge, f.dir);
+        self.advance(li, t);
+        let f = self.flights.remove(&id).expect("present above");
+        self.links[li].active.retain(|&x| x != id);
+        let resched = self.refinish(li, t);
+        Some((
+            Transfer {
+                id,
+                edge: f.edge,
+                dir: f.dir,
+                bytes: f.bytes,
+                start: f.start,
+                finish: t,
+            },
+            resched,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{Event, EventQueue};
+
+    /// Drive a schedule of (start_time, edge, dir, work) through a manager
+    /// and an event queue exactly the way the engines do; returns the
+    /// completed transfers in landing order.
+    fn drive(
+        contention: bool,
+        seed: u64,
+        plan: &[(f64, usize, Direction, f64)],
+    ) -> Vec<Transfer> {
+        let mut links = LinkManager::new(4, contention);
+        let mut q = EventQueue::new(seed);
+        let mut plan: Vec<_> = plan.to_vec();
+        plan.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let mut done = Vec::new();
+        let mut next = 0usize;
+        loop {
+            // Admit every transfer that starts before the next event
+            // (re-peek after each admission: a new transfer can finish
+            // before the next planned start).
+            while next < plan.len() {
+                let t_ev = q.peek_time();
+                if !t_ev.map(|t| plan[next].0 <= t).unwrap_or(true) {
+                    break;
+                }
+                let (t0, edge, dir, work) = plan[next];
+                next += 1;
+                let (_, resched) = links.start(edge, dir, 1000, work, t0);
+                for (id, finish) in resched {
+                    q.schedule(finish, Event::TransferDone { transfer: id });
+                }
+            }
+            match q.pop() {
+                None => break,
+                Some((t, Event::TransferDone { transfer })) => {
+                    if let Some((tr, resched)) = links.poll(transfer, t) {
+                        done.push(tr);
+                        for (id, finish) in resched {
+                            q.schedule(
+                                finish,
+                                Event::TransferDone { transfer: id },
+                            );
+                        }
+                    }
+                }
+                Some(_) => unreachable!("only transfer events scheduled"),
+            }
+        }
+        assert_eq!(links.in_flight_total(), 0, "transfers left in flight");
+        done
+    }
+
+    #[test]
+    fn uncontended_transfer_lands_after_its_work() {
+        let done = drive(true, 1, &[(2.0, 0, Direction::Up, 10.0)]);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].start, 2.0);
+        assert_eq!(done[0].finish, 12.0);
+    }
+
+    #[test]
+    fn fair_share_stretches_overlapping_transfers() {
+        // A: work 10 from t=0. B: work 10 from t=5. Processor sharing:
+        // A has 5 left at t=5, drains at 1/2 -> lands at 15; B then has
+        // 5 left alone -> lands at 20.
+        let done = drive(
+            true,
+            1,
+            &[(0.0, 0, Direction::Up, 10.0), (5.0, 0, Direction::Up, 10.0)],
+        );
+        assert_eq!(done.len(), 2);
+        assert!((done[0].finish - 15.0).abs() < 1e-9, "{:?}", done);
+        assert!((done[1].finish - 20.0).abs() < 1e-9, "{:?}", done);
+    }
+
+    #[test]
+    fn contention_off_restores_independent_timing() {
+        let done = drive(
+            false,
+            1,
+            &[(0.0, 0, Direction::Up, 10.0), (5.0, 0, Direction::Up, 10.0)],
+        );
+        assert!((done[0].finish - 10.0).abs() < 1e-9);
+        assert!((done[1].finish - 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn distinct_links_never_contend() {
+        // Same timings as the fair-share test, but split across the up
+        // and down links / different edges: no stretching.
+        let done = drive(
+            true,
+            1,
+            &[
+                (0.0, 0, Direction::Up, 10.0),
+                (5.0, 0, Direction::Down, 10.0),
+                (5.0, 1, Direction::Up, 10.0),
+            ],
+        );
+        for tr in &done {
+            assert!(
+                (tr.finish - tr.start - 10.0).abs() < 1e-9,
+                "stretched across links: {tr:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn stale_predictions_are_dropped_not_double_completed() {
+        // Three staggered transfers on one link produce a pile of
+        // superseded predictions; each transfer must land exactly once.
+        let done = drive(
+            true,
+            3,
+            &[
+                (0.0, 2, Direction::Up, 4.0),
+                (1.0, 2, Direction::Up, 4.0),
+                (2.0, 2, Direction::Up, 4.0),
+            ],
+        );
+        assert_eq!(done.len(), 3);
+        let mut ids: Vec<usize> = done.iter().map(|t| t.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 3, "a transfer completed twice");
+        // Landing order is time-sorted.
+        for w in done.windows(2) {
+            assert!(w[0].finish <= w[1].finish);
+        }
+    }
+
+    #[test]
+    fn transfer_timeline_is_deterministic() {
+        let plan: Vec<(f64, usize, Direction, f64)> = (0..40)
+            .map(|i| {
+                (
+                    (i % 7) as f64 * 1.5,
+                    i % 3,
+                    if i % 2 == 0 { Direction::Up } else { Direction::Down },
+                    2.0 + (i % 5) as f64,
+                )
+            })
+            .collect();
+        let a = drive(true, 9, &plan);
+        let b = drive(true, 9, &plan);
+        assert_eq!(a, b, "same calls, same seed -> identical timeline");
+        assert_eq!(a.len(), 40);
+    }
+
+    #[test]
+    fn conservation_under_contention() {
+        // Fair share serializes: total landing span on one link can never
+        // beat the serial sum of work, and every transfer takes at least
+        // its own work.
+        let plan: Vec<(f64, usize, Direction, f64)> =
+            (0..10).map(|i| (i as f64 * 0.5, 0, Direction::Up, 3.0)).collect();
+        let done = drive(true, 4, &plan);
+        let total_work: f64 = 10.0 * 3.0;
+        let makespan = done.last().unwrap().finish;
+        assert!(
+            makespan >= total_work - 1e-6,
+            "one link finished {total_work}s of work in {makespan}s"
+        );
+        for tr in &done {
+            assert!(tr.finish - tr.start >= 3.0 - 1e-9, "{tr:?}");
+        }
+    }
+
+    #[test]
+    fn reset_restores_a_fresh_manager() {
+        let mut links = LinkManager::new(2, true);
+        let (id0, _) = links.start(0, Direction::Up, 10, 5.0, 0.0);
+        assert_eq!(id0, 0);
+        links.reset();
+        assert_eq!(links.in_flight_total(), 0);
+        let (id1, resched) = links.start(0, Direction::Up, 10, 5.0, 0.0);
+        assert_eq!(id1, 0, "ids restart after reset");
+        assert_eq!(resched, vec![(0, 5.0)]);
+    }
+}

@@ -10,6 +10,7 @@ pub mod clock;
 pub mod cpu;
 pub mod energy;
 pub mod event;
+pub mod link;
 pub mod mobility;
 pub mod network;
 
@@ -17,5 +18,6 @@ pub use clock::SimClock;
 pub use cpu::CpuModel;
 pub use energy::EnergyModel;
 pub use event::{Event, EventQueue};
+pub use link::{Direction, LinkManager, Transfer};
 pub use mobility::MobilityModel;
 pub use network::{NetworkModel, Region};

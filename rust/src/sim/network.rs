@@ -57,7 +57,35 @@ impl NetworkModel {
         lat + bytes as f64 / bw
     }
 
-    /// Sampled round-trip (upload + download ≈ 2x one way).
+    /// Mean one-way time with the region bandwidth scaled by `bw_scale`
+    /// (the `link.{up,down}_bandwidth_scale` knobs: uplinks and downlinks
+    /// can be provisioned asymmetrically).
+    pub fn one_way_mean(
+        &self,
+        region: Region,
+        bytes: usize,
+        bw_scale: f64,
+    ) -> f64 {
+        let (lat, bw) = self.params(region);
+        lat + bytes as f64 / (bw * bw_scale)
+    }
+
+    /// Sampled one-way transfer work (seconds of exclusive link time) for
+    /// the transfer layer: mean with scaled bandwidth, log-normal jitter.
+    pub fn one_way_time(
+        &self,
+        region: Region,
+        bytes: usize,
+        bw_scale: f64,
+        rng: &mut Rng,
+    ) -> f64 {
+        self.one_way_mean(region, bytes, bw_scale)
+            * rng.lognormal(0.0, self.jitter)
+    }
+
+    /// Sampled round-trip (upload + download ≈ 2x one way). Kept for the
+    /// Fig. 4 harness; the engines now route per-direction transfers
+    /// through `sim::link` instead.
     pub fn comm_time(
         &self,
         region: Region,
@@ -102,6 +130,18 @@ mod tests {
             let us = n.mean_comm_time(Region::Us, model_bytes(p));
             assert!(cn > 2.0 * us, "p={p}: cn {cn} us {us}");
         }
+    }
+
+    #[test]
+    fn one_way_mean_scales_bandwidth_only() {
+        let n = net();
+        let bytes = model_bytes(100_000);
+        let base = n.one_way_mean(Region::Us, bytes, 1.0);
+        assert!((base - n.mean_comm_time(Region::Us, bytes)).abs() < 1e-12);
+        // Doubling bandwidth halves the transfer part, not the latency.
+        let fast = n.one_way_mean(Region::Us, bytes, 2.0);
+        let transfer = base - n.us_latency;
+        assert!((fast - (n.us_latency + transfer / 2.0)).abs() < 1e-9);
     }
 
     #[test]

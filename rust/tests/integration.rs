@@ -433,6 +433,135 @@ fn semi_sync_and_async_modes_run_end_to_end() {
 }
 
 #[test]
+fn semi_sync_quorum_survives_membership_below_quorum() {
+    // Liveness regression (transfer-layer PR): churn devices until edge
+    // membership drops below sync.quorum. Before the MobilityFlip
+    // re-check, an edge whose live set shrank under the outstanding
+    // reports could only close at the timer flush; the run must keep
+    // closing edge rounds and finishing cloud windows regardless.
+    require_artifacts!();
+    let mut cfg = small_cfg();
+    cfg.hfl.threshold_time = 600.0;
+    cfg.sync.mode = SyncModeCfg::SemiSync;
+    // Quorum equal to full edge membership (2 devices/edge here), heavy
+    // one-way churn so live membership falls below it and stays there.
+    cfg.sync.quorum = 2;
+    cfg.sync.cloud_interval = 150.0;
+    cfg.sim.leave_prob = 0.6;
+    cfg.sim.join_prob = 0.05;
+    let mut e = AsyncHflEngine::new(cfg, false).unwrap();
+    let hist = e.run_to_threshold().unwrap();
+    assert!(
+        !hist.rounds.is_empty(),
+        "churned semi-sync run produced no cloud windows"
+    );
+    let total_aggs: usize = hist
+        .rounds
+        .iter()
+        .map(|r| r.gamma2.iter().sum::<usize>())
+        .sum();
+    assert!(
+        total_aggs > 0,
+        "no edge round ever closed under churn (quorum deadlock)"
+    );
+}
+
+#[test]
+fn transfer_path_is_deterministic_under_contention() {
+    // Same seed ⇒ identical TransferDone landing order and identical
+    // RunHistory, in both event-driven modes, with fair-share contention
+    // and churn enabled.
+    require_artifacts!();
+    for mode in [SyncModeCfg::SemiSync, SyncModeCfg::Async] {
+        let mut cfg = small_cfg();
+        cfg.hfl.threshold_time = 500.0;
+        cfg.sync.mode = mode;
+        cfg.sync.quorum = 1; // frequent quorums -> overlapping uploads
+        cfg.sync.cloud_interval = 100.0;
+        cfg.link.contention = true;
+        cfg.sim.leave_prob = 0.1;
+        cfg.sim.join_prob = 0.5;
+        let run = |cfg: &ExperimentConfig| {
+            let mut e = AsyncHflEngine::new(cfg.clone(), false).unwrap();
+            let hist = e.run_to_threshold().unwrap();
+            (e.transfer_log.clone(), hist)
+        };
+        let (log_a, hist_a) = run(&cfg);
+        let (log_b, hist_b) = run(&cfg);
+        assert!(
+            !log_a.is_empty(),
+            "{mode:?}: no transfers landed at all"
+        );
+        assert_eq!(
+            log_a, log_b,
+            "{mode:?}: TransferDone ordering diverged across identical runs"
+        );
+        assert_eq!(hist_a.rounds.len(), hist_b.rounds.len());
+        for (ra, rb) in hist_a.rounds.iter().zip(&hist_b.rounds) {
+            assert_eq!(ra.accuracy, rb.accuracy, "{mode:?}");
+            assert_eq!(ra.energy, rb.energy, "{mode:?}");
+            assert_eq!(ra.round_time, rb.round_time, "{mode:?}");
+            for (ea, eb) in ra.per_edge.iter().zip(&rb.per_edge) {
+                assert_eq!(ea.t_up, eb.t_up, "{mode:?}");
+                assert_eq!(ea.t_down, eb.t_down, "{mode:?}");
+                assert_eq!(ea.comm_overlap, eb.comm_overlap, "{mode:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn overlap_is_realized_in_event_driven_modes() {
+    // Acceptance: with contention enabled, a window's wall-clock must
+    // undercut the lump model's serialized compute+comm charge for some
+    // edge — i.e. uploads actually ran while devices trained.
+    require_artifacts!();
+    for mode in [SyncModeCfg::SemiSync, SyncModeCfg::Async] {
+        let mut cfg = small_cfg();
+        cfg.hfl.threshold_time = 600.0;
+        cfg.sync.mode = mode;
+        cfg.sync.quorum = 1;
+        cfg.sync.cloud_interval = 120.0;
+        cfg.link.contention = true;
+        let mut e = AsyncHflEngine::new(cfg, false).unwrap();
+        let hist = e.run_to_threshold().unwrap();
+        let mut saw_overlap = false;
+        let mut beat_lump = false;
+        for r in &hist.rounds {
+            if r.comm_overlap_frac() > 0.0 {
+                saw_overlap = true;
+            }
+            for edge in &r.per_edge {
+                // The lump model charges compute + comm serially; the
+                // busy-union wall-clock of the edge must beat it whenever
+                // any overlap happened (and can never exceed the window).
+                let lump = edge.compute_busy + edge.comm_busy;
+                assert!(
+                    edge.total_time <= r.round_time + 1e-6,
+                    "{mode:?}: busy union {} exceeds window {}",
+                    edge.total_time,
+                    r.round_time
+                );
+                if lump > edge.total_time + 1e-9 {
+                    beat_lump = true;
+                    assert!(
+                        edge.comm_overlap > 0.0,
+                        "{mode:?}: wall-clock beat the lump sum without \
+                         recorded overlap"
+                    );
+                }
+            }
+        }
+        assert!(saw_overlap, "{mode:?}: no window overlapped comm/compute");
+        assert!(
+            beat_lump,
+            "{mode:?}: no edge's wall-clock beat the serialized \
+             compute+comm sum"
+        );
+    }
+}
+
+#[test]
 fn async_modes_are_seed_deterministic() {
     require_artifacts!();
     let mut cfg = small_cfg();
