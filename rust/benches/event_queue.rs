@@ -5,16 +5,21 @@
 //! case for the seeded ordering. The transfer-heavy workloads push to 1M
 //! events with interleaved `TransferDone`s (including the stale
 //! re-prediction pattern of link contention) — the baseline for the
-//! ROADMAP "event-queue scale-out" item. No artifacts needed.
+//! ROADMAP "event-queue scale-out" item. The churn-heavy workload mixes
+//! `MobilityFlip`/`Recluster` events in, and `membership/plan_recluster`
+//! prices one full re-clustering of a churned population. No artifacts
+//! needed.
 //!
 //! `cargo bench --bench event_queue` — also rewrites
 //! `BENCH_event_queue.json` at the repo root with the measured numbers.
 
 use std::collections::BTreeMap;
 
-use arena::sim::{Event, EventQueue};
+use arena::hfl::membership::plan_recluster;
+use arena::sim::{Event, EventQueue, Region};
 use arena::util::json::Json;
 use arena::util::microbench::{bench, black_box, BenchResult};
+use arena::util::rng::Rng;
 
 fn main() {
     let mut results = Vec::new();
@@ -125,6 +130,84 @@ fn main() {
         ));
     }
 
+    // Churn-heavy: the event mix of a mobile population — MobilityFlip
+    // and Recluster events threaded through training/transfer storms
+    // (the membership subsystem's queue-side footprint).
+    for &n in &[100_000usize, 1_000_000] {
+        results.push(bench(&format!("event_queue/churn_heavy/{n}"), || {
+            let mut q = EventQueue::new(23);
+            for i in 0..n {
+                let t = ((i * 37) % 4000) as f64 * 0.25;
+                let ev = match i % 16 {
+                    0 => Event::MobilityFlip,
+                    1 => Event::Recluster,
+                    2..=6 => Event::TransferDone { transfer: i },
+                    7 | 8 => Event::EdgeAggregate { edge: i % 16 },
+                    _ => Event::DeviceTrainDone {
+                        device: i % 50_000,
+                        edge: i % 16,
+                    },
+                };
+                q.schedule(t, ev);
+            }
+            while let Some((_, ev)) = q.pop() {
+                black_box(ev);
+            }
+        }));
+    }
+
+    // Recluster cost: one full membership plan over a churned population
+    // (z-score + per-region balanced k-means + departed parking) — what
+    // an Event::Recluster pays beyond re-profiling. No artifacts needed.
+    for &n in &[1_000usize, 10_000] {
+        let m = 16usize;
+        let m_cn = 10usize;
+        let edge_regions: Vec<Region> = (0..m)
+            .map(|j| if j < m_cn { Region::Cn } else { Region::Us })
+            .collect();
+        let n_cn = n * 6 / 10;
+        let device_regions: Vec<Region> = (0..n)
+            .map(|d| if d < n_cn { Region::Cn } else { Region::Us })
+            .collect();
+        let current: Vec<usize> = (0..n)
+            .map(|d| {
+                if d < n_cn {
+                    d % m_cn
+                } else {
+                    m_cn + d % (m - m_cn)
+                }
+            })
+            .collect();
+        let mut setup = Rng::new(99);
+        // ~75% of the population is live; plenty per region at n >= 1k.
+        let live: Vec<usize> =
+            (0..n).filter(|_| setup.uniform() < 0.75).collect();
+        let features: Vec<Vec<f64>> = live
+            .iter()
+            .map(|&d| {
+                (0..5)
+                    .map(|_| setup.uniform() * 10.0 + (d % 7) as f64)
+                    .collect()
+            })
+            .collect();
+        results.push(bench(
+            &format!("membership/plan_recluster/{n}"),
+            || {
+                let mut rng = Rng::new(7);
+                let plan = plan_recluster(
+                    &live,
+                    &features,
+                    &device_regions,
+                    &edge_regions,
+                    &current,
+                    &mut rng,
+                )
+                .expect("feasible population");
+                black_box(plan.migrated.len());
+            },
+        ));
+    }
+
     if let Err(e) = write_json(&results) {
         eprintln!("warning: could not write BENCH_event_queue.json: {e}");
     }
@@ -141,7 +224,9 @@ fn write_json(results: &[BenchResult]) -> std::io::Result<()> {
         "note".to_string(),
         Json::Str(
             "per-iteration ns; transfer_heavy/transfer_repredict are the \
-             event-queue scale-out baselines (ROADMAP)"
+             event-queue scale-out baselines (ROADMAP); churn_heavy and \
+             membership/plan_recluster record the re-clustering-on-churn \
+             cost"
                 .into(),
         ),
     );

@@ -13,6 +13,14 @@
 //! contention and jitter included — instead of a freshly resampled
 //! round-trip, so the agent sees the communication times the run actually
 //! experienced.
+//!
+//! Under churn-driven re-clustering (`hfl::membership`) the *composition*
+//! of edge j changes mid-run, but the state stays well-formed: M is
+//! fixed, and every per-edge feature is recomputed against the current
+//! membership — row j's PCA score projects edge j's live model, and
+//! `t_sgd_slowest`/`t_ec`/`E_j` come from the next round's stats, which
+//! accumulate over the migrated member sets. The agent simply observes
+//! edge j getting faster/slower as its membership shifts.
 
 use anyhow::Result;
 

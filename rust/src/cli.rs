@@ -37,6 +37,13 @@ LINKS:   every edge<->cloud transfer is an in-flight event on a per-edge
          (multiples of the region bandwidth) and
          --set link.contention=true|false (fair-share when transfers
          overlap on one link)
+
+CHURN:   with sim.leave_prob/join_prob enabled, the membership subsystem
+         can re-cluster the live population when the active set drifts:
+         --set cluster.recluster_threshold=F (drift fraction; 0 = off,
+         try 0.1-0.3) and --set cluster.recluster_min_interval=S
+         (simulated seconds between re-clusterings). Migrated devices
+         warm-start from their new edge's model over its downlink.
 ";
 
 pub struct Args {

@@ -77,35 +77,8 @@ pub fn profile_devices(
     let features: Vec<Vec<f64>> =
         profiles.iter().map(|p| p.as_vec()).collect();
     let norm = zscore(&features);
-
-    let mut assignment = vec![usize::MAX; n];
-    let mut total_mse = 0.0;
-    for &region in &[Region::Cn, Region::Us] {
-        let edges: Vec<usize> = (0..edge_regions.len())
-            .filter(|&j| edge_regions[j] == region)
-            .collect();
-        let devices: Vec<usize> = (0..n)
-            .filter(|&i| device_regions[i] == region)
-            .collect();
-        if edges.is_empty() {
-            assert!(
-                devices.is_empty(),
-                "devices in region {region:?} but no edges there"
-            );
-            continue;
-        }
-        if devices.is_empty() {
-            continue;
-        }
-        let pts: Vec<Vec<f64>> =
-            devices.iter().map(|&i| norm[i].clone()).collect();
-        let clustering =
-            balanced_kmeans(&pts, edges.len(), 50, rng);
-        for (local, &dev) in devices.iter().enumerate() {
-            assignment[dev] = edges[clustering.assignment[local]];
-        }
-        total_mse += clustering.mse * devices.len() as f64;
-    }
+    let (assignment, total_mse) =
+        cluster_by_region(&norm, device_regions, edge_regions, rng);
     let mse = total_mse / n as f64;
     ProfilingOutcome {
         assignment,
@@ -114,7 +87,53 @@ pub fn profile_devices(
     }
 }
 
-fn zscore(features: &[Vec<f64>]) -> Vec<Vec<f64>> {
+/// The region-constrained balanced clustering core, shared between the
+/// startup clustering above and the membership subsystem's live
+/// re-clustering (`hfl::membership::plan_recluster`): per region, cluster
+/// that region's points into that region's edges with AFK-MC²-seeded
+/// balanced k-means. `norm` holds already-normalized feature rows and
+/// `point_regions[i]` the region of row i. Returns (edge per point,
+/// point-weighted mse sum).
+pub(crate) fn cluster_by_region(
+    norm: &[Vec<f64>],
+    point_regions: &[Region],
+    edge_regions: &[Region],
+    rng: &mut Rng,
+) -> (Vec<usize>, f64) {
+    let n = norm.len();
+    let mut assignment = vec![usize::MAX; n];
+    let mut total_mse = 0.0;
+    for &region in &[Region::Cn, Region::Us] {
+        let edges: Vec<usize> = (0..edge_regions.len())
+            .filter(|&j| edge_regions[j] == region)
+            .collect();
+        let points: Vec<usize> = (0..n)
+            .filter(|&i| point_regions[i] == region)
+            .collect();
+        if edges.is_empty() {
+            assert!(
+                points.is_empty(),
+                "devices in region {region:?} but no edges there"
+            );
+            continue;
+        }
+        if points.is_empty() {
+            continue;
+        }
+        let pts: Vec<Vec<f64>> =
+            points.iter().map(|&i| norm[i].clone()).collect();
+        let clustering = balanced_kmeans(&pts, edges.len(), 50, rng);
+        for (local, &i) in points.iter().enumerate() {
+            assignment[i] = edges[clustering.assignment[local]];
+        }
+        total_mse += clustering.mse * points.len() as f64;
+    }
+    (assignment, total_mse)
+}
+
+/// Column-wise z-scoring of feature vectors (shared with the membership
+/// subsystem's live re-clustering).
+pub(crate) fn zscore(features: &[Vec<f64>]) -> Vec<Vec<f64>> {
     let dims = features[0].len();
     let mut out = vec![vec![0.0; dims]; features.len()];
     for d in 0..dims {

@@ -166,6 +166,31 @@ impl Default for SyncConfig {
     }
 }
 
+/// Knobs of the membership subsystem (`hfl::membership`): churn-driven
+/// re-clustering of the live population (paper §3.1 "periodically
+/// re-cluster").
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// Drift fraction that triggers a re-cluster: joins+leaves since the
+    /// last clustering divided by the population, or the relative live
+    /// edge-size imbalance (worst region), whichever is larger. `<= 0`
+    /// disables re-clustering entirely (the pre-subsystem behavior;
+    /// default).
+    pub recluster_threshold: f64,
+    /// Minimum simulated seconds between re-clusterings (profiling the
+    /// whole population is not free; this rate-limits it).
+    pub recluster_min_interval: f64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            recluster_threshold: 0.0,
+            recluster_min_interval: 300.0,
+        }
+    }
+}
+
 /// Knobs of the edge↔cloud transfer layer (`sim::link`). Bandwidth scales
 /// multiply the region bandwidth of `SimConfig` per direction, so uplinks
 /// and downlinks can be provisioned asymmetrically (consumer uplinks are
@@ -225,6 +250,7 @@ pub struct ExperimentConfig {
     pub sim: SimConfig,
     pub sync: SyncConfig,
     pub link: LinkConfig,
+    pub cluster: ClusterConfig,
     /// Worker threads for parallel device training (0 = auto).
     pub workers: usize,
     /// Run model aggregation natively in rust instead of through the
@@ -290,6 +316,7 @@ impl ExperimentConfig {
             },
             sync: SyncConfig::default(),
             link: LinkConfig::default(),
+            cluster: ClusterConfig::default(),
             workers: 0,
             native_aggregation: false,
             artifacts_dir: "artifacts".into(),
@@ -402,6 +429,12 @@ impl ExperimentConfig {
             "link.down_bandwidth_scale" => {
                 self.link.down_bandwidth_scale = parse_f()?
             }
+            "cluster.recluster_threshold" => {
+                self.cluster.recluster_threshold = parse_f()?
+            }
+            "cluster.recluster_min_interval" => {
+                self.cluster.recluster_min_interval = parse_f()?
+            }
             "link.contention" => {
                 self.link.contention = value.parse().map_err(|_| {
                     anyhow::anyhow!("link.contention must be true|false")
@@ -473,6 +506,14 @@ impl ExperimentConfig {
                 bail!("{name} must be a positive finite number (got {s})");
             }
         }
+        if !self.cluster.recluster_threshold.is_finite() {
+            bail!("cluster.recluster_threshold must be finite");
+        }
+        if !(self.cluster.recluster_min_interval.is_finite()
+            && self.cluster.recluster_min_interval >= 0.0)
+        {
+            bail!("cluster.recluster_min_interval must be >= 0 and finite");
+        }
         Ok(())
     }
 
@@ -492,6 +533,14 @@ impl ExperimentConfig {
             ("sync_mode", Json::str(self.sync.mode.name())),
             ("leave_prob", Json::num(self.sim.leave_prob)),
             ("join_prob", Json::num(self.sim.join_prob)),
+            (
+                "recluster_threshold",
+                Json::num(self.cluster.recluster_threshold),
+            ),
+            (
+                "recluster_min_interval",
+                Json::num(self.cluster.recluster_min_interval),
+            ),
             ("link_up_scale", Json::num(self.link.up_bandwidth_scale)),
             ("link_down_scale", Json::num(self.link.down_bandwidth_scale)),
             ("link_contention", Json::Bool(self.link.contention)),
@@ -606,6 +655,25 @@ mod tests {
         c.link.up_bandwidth_scale = 0.0;
         assert!(c.validate().is_err());
         c.link.up_bandwidth_scale = f64::NAN;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn cluster_overrides_and_validation() {
+        let mut c = ExperimentConfig::mnist();
+        assert_eq!(
+            c.cluster.recluster_threshold, 0.0,
+            "re-clustering defaults off"
+        );
+        c.apply_override("cluster.recluster_threshold", "0.15").unwrap();
+        c.apply_override("cluster.recluster_min_interval", "120").unwrap();
+        assert!((c.cluster.recluster_threshold - 0.15).abs() < 1e-12);
+        assert!((c.cluster.recluster_min_interval - 120.0).abs() < 1e-12);
+        c.validate().unwrap();
+        c.cluster.recluster_min_interval = -1.0;
+        assert!(c.validate().is_err());
+        c.cluster.recluster_min_interval = 120.0;
+        c.cluster.recluster_threshold = f64::NAN;
         assert!(c.validate().is_err());
     }
 

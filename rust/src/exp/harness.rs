@@ -423,7 +423,8 @@ fn fig9(cfg: &ExperimentConfig) -> Result<()> {
     let mut w = CsvWriter::create(
         format!("{dir}/{}.csv", cfg.hfl.dataset.name()),
         &["scheme", "threshold_s", "accuracy", "energy_per_device_mah",
-          "comm_overlap_frac", "mean_link_util"],
+          "comm_overlap_frac", "mean_link_util", "n_reclusters",
+          "migrated_devices"],
     )?;
     println!(
         "Fig.9 ({}): accuracy/energy at threshold times",
@@ -439,6 +440,11 @@ fn fig9(cfg: &ExperimentConfig) -> Result<()> {
             // how much comm the scheme hid behind compute, and how loaded
             // its links ran.
             let (overlap, util) = h.comm_stats_at(t);
+            // Membership columns: under churn + an enabled
+            // cluster.recluster_threshold these report how much the
+            // topology moved by time t (0 under the default quiescent
+            // setup).
+            let (reclusters, migrated) = h.membership_stats_at(t);
             println!(
                 "  {scheme:<12} T={t:>6.0}s  acc {acc:.3}  energy/dev {e_dev:.1} mAh  overlap {overlap:.2}  util {util:.2}"
             );
@@ -449,6 +455,8 @@ fn fig9(cfg: &ExperimentConfig) -> Result<()> {
                 format!("{e_dev:.2}"),
                 format!("{overlap:.4}"),
                 format!("{util:.4}"),
+                reclusters.to_string(),
+                migrated.to_string(),
             ])?;
         }
     }

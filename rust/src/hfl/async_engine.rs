@@ -46,6 +46,20 @@
 //! re-predictions are dropped by the link layer's bit-exact timestamp
 //! match).
 //!
+//! # Membership migrates live
+//!
+//! When churn drifts the active set past `cluster.recluster_threshold`,
+//! a `MobilityFlip` schedules an [`Event::Recluster`] and the membership
+//! subsystem (`hfl::membership`) re-profiles and re-clusters the live
+//! population *without stopping the run*: migrated devices' in-flight
+//! training is voided (the stale-result protocol), their pending quorum
+//! reports are purged and semi-sync quorums re-derived against the new
+//! membership, and each destination edge's current model rides a real
+//! in-flight downlink — a migrated device resumes training only when its
+//! warm-start model lands. Synchronous mode re-clusters between cloud
+//! rounds through the same `HflEngine` path as the barrier engine
+//! (bit-for-bit equal).
+//!
 //! In the timer-driven modes one `RoundStats` is emitted per cloud
 //! aggregation window: `round_time` is the window length, `gamma2` reports
 //! the *observed* per-edge aggregation counts of the window, `T_j^ec` is
@@ -53,7 +67,7 @@
 //! per-edge `compute_busy`/`up_busy`/`down_busy`/`comm_overlap` fields
 //! split the window into compute vs in-flight communication time.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
@@ -151,6 +165,16 @@ enum Payload {
     /// Cloud→edge: the global model broadcast by cloud window `round`
     /// (shared — one snapshot serves every edge's downlink).
     Downlink { edge: usize, w: Arc<Vec<f32>>, round: u64 },
+    /// Warm-start delivery for a re-clustering: `edge`'s model at
+    /// migration time, bound for the devices migrated onto it. `seq`
+    /// identifies the re-clustering; a later one (or a leave+rejoin)
+    /// supersedes the pending warm-start per device.
+    Migration {
+        edge: usize,
+        w: Arc<Vec<f32>>,
+        devices: Vec<usize>,
+        seq: u64,
+    },
 }
 
 pub struct AsyncHflEngine {
@@ -205,6 +229,15 @@ pub struct AsyncHflEngine {
     /// (transfer id, edge, landing time) of every completed transfer, in
     /// landing order — the determinism witness of the transfer path.
     pub transfer_log: Vec<(usize, usize, f64)>,
+    /// Per-device pending warm-start: the re-clustering seq whose
+    /// migration downlink the device is waiting for (0 = none). Awaiting
+    /// devices are never dispatched.
+    migration_seq: Vec<u64>,
+    /// Monotone id of executed re-clusterings within the run.
+    recluster_seq: u64,
+    /// (recluster seq, device, new edge) of every warm-start that landed
+    /// and was applied, in landing order.
+    pub migration_log: Vec<(u64, usize, usize)>,
     /// Set for the end-of-run tail flush: the event loop is over, so new
     /// training dispatches and transfers could never complete — skip them
     /// instead of burning real compute on dead work.
@@ -254,6 +287,9 @@ impl AsyncHflEngine {
             win_comm_busy: vec![0.0; m],
             win_overlap: vec![0.0; m],
             transfer_log: Vec::new(),
+            migration_seq: vec![0; n],
+            recluster_seq: 0,
+            migration_log: Vec::new(),
             draining: false,
             mode,
             eng,
@@ -399,7 +435,7 @@ impl AsyncHflEngine {
 
         // Edge -> cloud communication through the link layer: the round
         // closes when the last upload lands (shared with HflEngine).
-        let round_time = self.eng.sync_comm_phase(&edge_clock, &mut acc);
+        let mut round_time = self.eng.sync_comm_phase(&edge_clock, &mut acc);
         let active: Vec<usize> =
             (0..m).filter(|&j| acc.per_edge[j].active > 0).collect();
         self.eng.cloud_aggregate_edges(&active, None)?;
@@ -408,10 +444,19 @@ impl AsyncHflEngine {
         self.eng.clock.advance(round_time);
         self.eng.round += 1;
         self.eng.total_energy += acc.round_energy;
-        self.eng.mobility.step();
+        let flips = self.eng.mobility.step();
+        self.eng.membership.observe(flips);
+        // Same between-rounds re-clustering call as HflEngine::run_round,
+        // in the same position: identical RNG consumption and identical
+        // accounting keep the two engines bit-for-bit equal in
+        // synchronous mode.
+        if let Some(out) = self.eng.maybe_recluster_barrier(&mut acc)? {
+            round_time += out.migration_downlink_time;
+            self.refresh_dev_edge();
+        }
 
         let (accuracy, test_loss) = self.eng.evaluate()?;
-        let stats = acc.finish(
+        let mut stats = acc.finish(
             self.eng.round,
             accuracy,
             test_loss,
@@ -420,8 +465,19 @@ impl AsyncHflEngine {
             gamma1,
             gamma2,
         );
+        self.eng.finalize_membership_stats(&mut stats);
         self.eng.last_round = Some(stats.clone());
         Ok(stats)
+    }
+
+    /// Rebuild the device→edge map from the (possibly re-clustered)
+    /// topology.
+    fn refresh_dev_edge(&mut self) {
+        for (j, e) in self.eng.topo.edges.iter().enumerate() {
+            for &d in &e.members {
+                self.dev_edge[d] = j;
+            }
+        }
     }
 
     // -----------------------------------------------------------------
@@ -458,6 +514,10 @@ impl AsyncHflEngine {
         self.win_comm_busy = vec![0.0; m];
         self.win_overlap = vec![0.0; m];
         self.transfer_log.clear();
+        self.migration_seq = vec![0; n];
+        self.recluster_seq = 0;
+        self.migration_log.clear();
+        self.refresh_dev_edge();
         self.draining = false;
 
         let interval = self.mode.cloud_interval();
@@ -486,6 +546,7 @@ impl AsyncHflEngine {
                     hist.push(self.on_cloud_aggregate(t)?);
                 }
                 Event::MobilityFlip => self.on_mobility_flip(t)?,
+                Event::Recluster => self.on_recluster(t)?,
                 Event::TransferDone { transfer } => {
                     self.on_transfer_done(transfer, t)?;
                 }
@@ -542,7 +603,11 @@ impl AsyncHflEngine {
         }
         let mut jobs = Vec::new();
         for &d in devs {
-            if !self.eng.mobility.is_active(d) || self.in_flight[d].is_some()
+            // Devices awaiting a migration warm-start idle until their new
+            // edge's model lands.
+            if !self.eng.mobility.is_active(d)
+                || self.in_flight[d].is_some()
+                || self.migration_seq[d] != 0
             {
                 continue;
             }
@@ -759,6 +824,28 @@ impl AsyncHflEngine {
                     self.eng.edge_w[edge].clone_from(&*w);
                 }
             }
+            Payload::Migration { edge, w, devices, seq } => {
+                self.obs_down[edge] = tr.finish - tr.start;
+                let mut resume = Vec::new();
+                for d in devices {
+                    // A later re-clustering or a leave(+rejoin) supersedes
+                    // this warm-start for the device.
+                    if self.migration_seq[d] != seq {
+                        continue;
+                    }
+                    debug_assert_eq!(
+                        self.dev_edge[d], edge,
+                        "pending warm-start on the wrong edge"
+                    );
+                    self.migration_seq[d] = 0;
+                    self.eng.device_w[d].clone_from(&*w);
+                    self.migration_log.push((seq, d, edge));
+                    resume.push(d);
+                }
+                // Migrants resume training from the delivered model
+                // (dispatch skips any that have since departed).
+                self.dispatch(&resume, t)?;
+            }
         }
         Ok(())
     }
@@ -844,7 +931,7 @@ impl AsyncHflEngine {
             vec![0; m],
         );
         let acc = std::mem::replace(&mut self.acc, RoundAccumulator::new(m));
-        let stats = acc.finish(
+        let mut stats = acc.finish(
             self.eng.round,
             accuracy,
             test_loss,
@@ -853,6 +940,7 @@ impl AsyncHflEngine {
             &self.g1,
             &g2_observed,
         );
+        self.eng.finalize_membership_stats(&mut stats);
         self.eng.last_round = Some(stats.clone());
         self.window_start = t;
         if !self.draining {
@@ -865,13 +953,10 @@ impl AsyncHflEngine {
     }
 
     fn on_mobility_flip(&mut self, t: f64) -> Result<()> {
-        let n = self.eng.cfg.topology.devices;
-        let was: Vec<bool> =
-            (0..n).map(|d| self.eng.mobility.is_active(d)).collect();
-        self.eng.mobility.step();
-        let flipped: Vec<usize> = (0..n)
-            .filter(|&d| self.eng.mobility.is_active(d) != was[d])
-            .collect();
+        let flips = self.eng.mobility.step();
+        self.eng.membership.observe(flips);
+        // The model reports who flipped — no full active-vector re-scan.
+        let flipped: Vec<usize> = self.eng.mobility.flipped().to_vec();
         // A flipped device's pending report is void either way: a leaver
         // took its update with it, and a rejoiner restarts from the edge
         // model — without this purge a report-leave-rejoin sequence would
@@ -884,42 +969,156 @@ impl AsyncHflEngine {
             if let Some(p) = self.in_flight[d].as_mut() {
                 p.void = true;
             }
+            // Any pending migration warm-start is moot either way: a
+            // leaver is re-parked by later re-clusterings (its delivery
+            // must not apply), and a rejoiner takes the current edge
+            // model below. Without this clear, a departed migrant kept
+            // its seq and a late landing could warm-start it onto the
+            // wrong edge.
+            self.migration_seq[d] = 0;
         }
         // Quorum liveness: a departure can shrink an edge's live set to
         // (or below) the reports already outstanding; without this
         // re-check the edge round could only close at the next timer
         // flush, because no further DeviceTrainDone will fire for it.
-        if let SyncMode::SemiSync { quorum, .. } = self.mode {
-            let mut hit: Vec<usize> =
-                flipped.iter().map(|&d| self.dev_edge[d]).collect();
-            hit.sort_unstable();
-            hit.dedup();
-            for j in hit {
-                if !self.reported[j].is_empty()
-                    && quorum_satisfied(
-                        self.reported[j].len(),
-                        quorum,
-                        self.live_members(j),
-                    )
-                {
-                    self.queue.schedule(t, Event::EdgeAggregate { edge: j });
-                }
-            }
-        }
+        self.recheck_quorums(
+            flipped.iter().map(|&d| self.dev_edge[d]).collect(),
+            t,
+        );
         let rejoined: Vec<usize> = flipped
             .iter()
             .copied()
             .filter(|&d| self.eng.mobility.is_active(d))
             .collect();
-        // Rejoining devices start from their edge's current model.
+        // Rejoining devices start from their edge's current model (at
+        // least as fresh as any migration snapshot; the pending-warm-start
+        // flag was cleared in the purge loop above).
         for &d in &rejoined {
             self.eng.device_w[d] =
                 self.eng.edge_w[self.dev_edge[d]].clone();
         }
         self.dispatch(&rejoined, t)?;
+        // Membership drift check: re-cluster as a scheduled event when the
+        // churn pushed drift past the threshold (O(1) gate before the
+        // O(n) imbalance scan).
+        if self.eng.membership.wants_check(t)
+            && self.eng.membership.should_recluster(
+                t,
+                self.eng.cfg.topology.devices,
+                self.eng.membership_imbalance(),
+            )
+        {
+            self.queue.schedule(t, Event::Recluster);
+        }
         self.queue
             .schedule(t + self.mode.cloud_interval(), Event::MobilityFlip);
         Ok(())
+    }
+
+    /// Execute a churn-driven re-clustering live: re-profile + re-cluster
+    /// the active population (`HflEngine::recluster_core`), then migrate
+    /// the running topology — void in-flight work of migrated devices,
+    /// purge their pending reports, re-derive semi-sync quorums, and ship
+    /// each destination edge's model to its migrants as an in-flight
+    /// downlink transfer.
+    fn on_recluster(&mut self, t: f64) -> Result<()> {
+        let n = self.eng.cfg.topology.devices;
+        // Re-check: the drift that scheduled this event may have been
+        // handled already (duplicate trigger), or may no longer qualify.
+        if !self.eng.membership.wants_check(t)
+            || !self.eng.membership.should_recluster(
+                t,
+                n,
+                self.eng.membership_imbalance(),
+            )
+        {
+            return Ok(());
+        }
+        let Some(out) = self.eng.recluster_core(t)? else {
+            return Ok(()); // infeasible region split; retried on later flips
+        };
+        self.refresh_dev_edge();
+        self.recluster_seq += 1;
+        let seq = self.recluster_seq;
+        let mut by_dest: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for &(d, old, new) in &out.migrated {
+            // Stale-result protocol (as for leavers): the device's pending
+            // report and in-flight training were computed against its old
+            // edge's model — void them.
+            self.reported[old].retain(|&x| x != d);
+            if let Some(p) = self.in_flight[d].as_mut() {
+                p.void = true;
+            }
+            self.migration_seq[d] = seq;
+            by_dest.entry(new).or_default().push(d);
+        }
+        // Warm-start delivery: one downlink per destination edge, carrying
+        // its model snapshot for all its migrants.
+        for (edge, devices) in by_dest {
+            let w = Arc::new(self.eng.edge_w[edge].clone());
+            self.start_migration_downlink(edge, w, devices, seq, t);
+        }
+        // Re-derive semi-sync quorums against the new membership: an edge
+        // that lost members may now satisfy its (live-clamped) quorum
+        // with the reports it already holds.
+        self.recheck_quorums(
+            out.migrated
+                .iter()
+                .flat_map(|&(_, old, new)| [old, new])
+                .collect(),
+            t,
+        );
+        self.eng.last_recluster = Some(out);
+        Ok(())
+    }
+
+    /// Semi-sync only: re-check the K-quorum of the listed edges against
+    /// their current live membership and close any edge round that the
+    /// outstanding reports now satisfy (shared by the churn and
+    /// re-clustering paths — both shrink live sets out from under
+    /// pending reports).
+    fn recheck_quorums(&mut self, mut hit: Vec<usize>, t: f64) {
+        let SyncMode::SemiSync { quorum, .. } = self.mode else {
+            return;
+        };
+        hit.sort_unstable();
+        hit.dedup();
+        for j in hit {
+            if !self.reported[j].is_empty()
+                && quorum_satisfied(
+                    self.reported[j].len(),
+                    quorum,
+                    self.live_members(j),
+                )
+            {
+                self.queue.schedule(t, Event::EdgeAggregate { edge: j });
+            }
+        }
+    }
+
+    /// Put `edge`'s warm-start snapshot on its downlink for its migrants.
+    fn start_migration_downlink(
+        &mut self,
+        edge: usize,
+        w: Arc<Vec<f32>>,
+        devices: Vec<usize>,
+        seq: u64,
+        t: f64,
+    ) {
+        if self.draining {
+            return;
+        }
+        let region = self.eng.topo.edges[edge].region;
+        let work = self.eng.sample_one_way(region, Direction::Down);
+        let bytes = crate::sim::network::model_bytes(self.eng.p);
+        let (id, resched) =
+            self.eng.links.start(edge, Direction::Down, bytes, work, t);
+        self.payloads
+            .insert(id, Payload::Migration { edge, w, devices, seq });
+        for (tid, finish) in resched {
+            self.queue
+                .schedule(finish, Event::TransferDone { transfer: tid });
+        }
     }
 }
 

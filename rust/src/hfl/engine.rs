@@ -12,6 +12,7 @@ use crate::sim::{
 use crate::util::rng::Rng;
 
 use super::aggregate::aggregate_native;
+use super::membership::{self, MembershipTracker, ReclusterOutcome};
 use super::metrics::{RoundAccumulator, RoundStats};
 use super::topology::{build_topology, Topology};
 use crate::runtime::pool::TrainResult;
@@ -30,6 +31,11 @@ pub struct HflEngine {
     /// edge↔cloud communication of both engines routes through it.
     pub links: LinkManager,
     pub mobility: MobilityModel,
+    /// Membership subsystem: drift tracking + churn-driven re-clustering
+    /// policy (`hfl::membership`, `cluster.*` config knobs).
+    pub membership: MembershipTracker,
+    /// Outcome of the most recent re-clustering, if any ran this run.
+    pub last_recluster: Option<ReclusterOutcome>,
     rng: Rng,
     /// Flat model parameter count.
     pub p: usize,
@@ -90,6 +96,8 @@ impl HflEngine {
         let net = NetworkModel::from_config(&cfg.sim);
         let links = LinkManager::new(m, cfg.link.contention);
         let mobility = MobilityModel::from_config(n, &cfg.sim, cfg.seed);
+        let membership =
+            MembershipTracker::from_config(&cfg.cluster, cfg.seed);
         Ok(HflEngine {
             p,
             cloud_w: init_w.clone(),
@@ -106,6 +114,8 @@ impl HflEngine {
             net,
             links,
             mobility,
+            membership,
+            last_recluster: None,
             rng,
             round: 0,
             total_energy: 0.0,
@@ -126,6 +136,8 @@ impl HflEngine {
         }
         self.clock.reset();
         self.links.reset();
+        self.membership.reset();
+        self.last_recluster = None;
         self.round = 0;
         self.total_energy = 0.0;
         self.last_round = None;
@@ -512,6 +524,167 @@ impl HflEngine {
         t_cloud
     }
 
+    // -----------------------------------------------------------------
+    // Membership subsystem (hfl::membership): churn-driven re-clustering.
+    // -----------------------------------------------------------------
+
+    /// Live (mobility-active) member count per edge.
+    pub(crate) fn live_per_edge(&self) -> Vec<usize> {
+        self.topo
+            .edges
+            .iter()
+            .map(|e| {
+                e.members
+                    .iter()
+                    .filter(|&&d| self.mobility.is_active(d))
+                    .count()
+            })
+            .collect()
+    }
+
+    /// The drift-relevant live imbalance: worst per-region edge-size
+    /// spread (what a region-constrained re-cluster can repair).
+    pub(crate) fn membership_imbalance(&self) -> f64 {
+        let edge_regions: Vec<Region> =
+            self.topo.edges.iter().map(|e| e.region).collect();
+        membership::region_imbalance(&self.live_per_edge(), &edge_regions)
+    }
+
+    /// Re-profile the live population and apply a region-constrained
+    /// balanced re-clustering to the topology. Shared by the barrier path
+    /// and the event engine (which layers live migration on top). Does
+    /// NOT touch device models — warm-starting is engine-specific.
+    /// Returns `None` (drift kept, retried later) when some region has
+    /// fewer live devices than edges.
+    pub(crate) fn recluster_core(
+        &mut self,
+        at: f64,
+    ) -> Result<Option<ReclusterOutcome>> {
+        let live = self.mobility.active_set();
+        let edge_regions: Vec<Region> =
+            self.topo.edges.iter().map(|e| e.region).collect();
+        // Cheap feasibility gate before paying the profiling pass:
+        // plan_recluster would decline anyway, and profiling advances
+        // every live device's CPU state as a side effect — a failed
+        // attempt must not perturb later training times.
+        if !membership::plan_is_feasible(
+            &live,
+            &self.topo.device_regions,
+            &edge_regions,
+        ) {
+            return Ok(None);
+        }
+        let mut current = vec![0usize; self.cfg.topology.devices];
+        for (j, e) in self.topo.edges.iter().enumerate() {
+            for &d in &e.members {
+                current[d] = j;
+            }
+        }
+        // Fresh profiling pass over the live devices (the paper's §3.1
+        // profiling task, advancing each device's CPU state).
+        let features: Vec<Vec<f64>> = live
+            .iter()
+            .map(|&d| {
+                crate::cluster::profiling::profile_device(
+                    &mut self.topo.cpus[d],
+                    &self.energy_model,
+                    30,
+                )
+                .as_vec()
+            })
+            .collect();
+        let Some(plan) = membership::plan_recluster(
+            &live,
+            &features,
+            &self.topo.device_regions,
+            &edge_regions,
+            &current,
+            &mut self.membership.rng,
+        ) else {
+            return Ok(None);
+        };
+        self.topo.set_assignment(&plan.assignment);
+        self.membership.record_recluster(at, plan.migrated.len());
+        Ok(Some(ReclusterOutcome {
+            at,
+            migrated: plan.migrated,
+            live: plan.live,
+            mse: plan.mse,
+            migration_downlink_time: 0.0,
+        }))
+    }
+
+    /// Between-cloud-rounds re-clustering for the barrier engine (also
+    /// the event engine's synchronous mode — both call this right after
+    /// the mobility step, consuming identical RNG draws, which preserves
+    /// their bit-for-bit equivalence). Migrated devices warm-start from
+    /// their new edge's current model, delivered as downlink transfers
+    /// through the link layer; the clock advances by the straggler
+    /// landing, each delivery is charged to `acc`'s link stats, and the
+    /// caller extends the round's duration by
+    /// `ReclusterOutcome::migration_downlink_time`.
+    pub(crate) fn maybe_recluster_barrier(
+        &mut self,
+        acc: &mut RoundAccumulator,
+    ) -> Result<Option<ReclusterOutcome>> {
+        let now = self.clock.now();
+        // O(1) gate first; the imbalance term costs an O(n) membership
+        // scan and is only worth computing once drift exists at all.
+        if !self.membership.wants_check(now)
+            || !self.membership.should_recluster(
+                now,
+                self.cfg.topology.devices,
+                self.membership_imbalance(),
+            )
+        {
+            return Ok(None);
+        }
+        let Some(mut out) = self.recluster_core(now)? else {
+            return Ok(None);
+        };
+        let dests: std::collections::BTreeSet<usize> =
+            out.migrated.iter().map(|&(_, _, new)| new).collect();
+        let pbytes = crate::sim::network::model_bytes(self.p);
+        self.links.begin_round();
+        let mut t_done = 0.0f64;
+        for &j in &dests {
+            let region = self.topo.edges[j].region;
+            let work = self.sample_one_way(region, Direction::Down);
+            let (id, resched) =
+                self.links.start(j, Direction::Down, pbytes, work, 0.0);
+            // One warm-start broadcast per destination edge's downlink:
+            // uncontended, first prediction is final.
+            debug_assert_eq!(resched.len(), 1);
+            let finish = resched[0].1;
+            let (tr, _) = self
+                .links
+                .poll(id, finish)
+                .expect("uncontended migration downlink lands as predicted");
+            acc.record_migration_down(j, tr.finish - tr.start);
+            if tr.finish > t_done {
+                t_done = tr.finish;
+            }
+        }
+        for &(d, _, new) in &out.migrated {
+            self.device_w[d] = self.edge_w[new].clone();
+        }
+        self.clock.advance(t_done);
+        out.migration_downlink_time = t_done;
+        self.last_recluster = Some(out.clone());
+        Ok(Some(out))
+    }
+
+    /// Stamp the membership fields of a finished round's stats: per-round
+    /// recluster/migration counters (drained from the tracker) plus the
+    /// current active-set size and the drift-relevant live imbalance.
+    pub(crate) fn finalize_membership_stats(&mut self, stats: &mut RoundStats) {
+        let (reclusters, migrated) = self.membership.take_round_stats();
+        stats.n_reclusters = reclusters;
+        stats.migrated_devices = migrated;
+        stats.active_devices = self.mobility.active_count();
+        stats.edge_size_imbalance = self.membership_imbalance();
+    }
+
     /// Execute one cloud round under per-edge frequencies.
     /// `participation`: per-device mask (None = all mobility-active devices
     /// train). Devices that skip keep their model and spend nothing.
@@ -576,7 +749,7 @@ impl HflEngine {
 
         // Edge -> cloud communication: in-flight uploads through the link
         // layer; the round closes when the straggler's upload lands.
-        let round_time = self.sync_comm_phase(&edge_sub_time, &mut acc);
+        let mut round_time = self.sync_comm_phase(&edge_sub_time, &mut acc);
 
         // Cloud aggregation over edge models, weighted by cluster data.
         let active: Vec<usize> =
@@ -587,10 +760,18 @@ impl HflEngine {
         self.clock.advance(round_time);
         self.round += 1;
         self.total_energy += acc.round_energy;
-        self.mobility.step();
+        let flips = self.mobility.step();
+        self.membership.observe(flips);
+        // Between cloud rounds: re-cluster if the active set drifted past
+        // the threshold (§3.1 "periodically re-cluster"). The warm-start
+        // downlinks extend the round's wall-clock (the clock itself was
+        // already advanced inside).
+        if let Some(out) = self.maybe_recluster_barrier(&mut acc)? {
+            round_time += out.migration_downlink_time;
+        }
 
         let (accuracy, test_loss) = self.evaluate()?;
-        let stats = acc.finish(
+        let mut stats = acc.finish(
             self.round,
             accuracy,
             test_loss,
@@ -599,6 +780,7 @@ impl HflEngine {
             gamma1,
             gamma2,
         );
+        self.finalize_membership_stats(&mut stats);
         self.last_round = Some(stats.clone());
         Ok(stats)
     }

@@ -1,0 +1,742 @@
+//! Online membership: churn-driven re-clustering with live topology
+//! migration (paper §3.1 — "if new devices join, the profiling module can
+//! also periodically re-cluster").
+//!
+//! The startup topology (`hfl::topology::build_topology`) clusters the
+//! *whole* population once. Under churn (`sim::mobility`) the active set
+//! drifts away from that clustering: edges shrink unevenly, capability
+//! mixes degrade, and the straggler-removal property of the profiling
+//! module erodes. This module makes re-clustering a first-class, online
+//! operation:
+//!
+//! * [`MembershipTracker`] accumulates drift — joins + leaves since the
+//!   last clustering (fed by [`crate::sim::FlipStats`], no per-event
+//!   re-scan of the active vector) and the worst per-region live
+//!   edge-size imbalance ([`region_imbalance`]) — and decides when
+//!   `cluster.recluster_threshold` is crossed, rate-limited by
+//!   `cluster.recluster_min_interval`.
+//! * [`plan_recluster`] re-clusters the **live** population with the same
+//!   region-constrained balanced k-means the profiling module uses at
+//!   startup, then parks departed devices on their region's emptiest
+//!   edges so no edge can exceed its startup share (`topology.nmax`
+//!   safety) when they rejoin. Pure function of its inputs + RNG stream:
+//!   deterministic under a fixed seed, unit/property-testable and
+//!   benchable without AOT artifacts.
+//!
+//! The engines drive the subsystem differently but share the core
+//! (`HflEngine::recluster_core`):
+//!
+//! * `HflEngine` (and the event engine's synchronous mode, bit-for-bit
+//!   identically) checks between cloud rounds, right after the mobility
+//!   step; migrated devices warm-start from their new edge's current
+//!   model, delivered as downlink transfers through `sim::link` whose
+//!   straggler landing advances the simulated clock.
+//! * `AsyncHflEngine` schedules an [`crate::sim::Event::Recluster`] when
+//!   a `MobilityFlip` pushes drift past the threshold; migration is live:
+//!   in-flight training of migrated devices is voided (the stale-result
+//!   protocol), pending quorum reports are purged and semi-sync quorums
+//!   re-derived against the new membership, and each destination edge's
+//!   model rides a real in-flight downlink — the migrated devices resume
+//!   training only when it lands.
+//!
+//! With `cluster.recluster_threshold <= 0` (default) or zero churn the
+//! subsystem is inert and runs are bit-for-bit identical to the
+//! pre-subsystem behavior ([`MembershipTracker::should_recluster`] hard
+//! short-circuits on zero observed flips).
+
+use crate::cluster::profiling::{cluster_by_region, zscore};
+use crate::config::ClusterConfig;
+use crate::sim::{FlipStats, Region};
+use crate::util::rng::Rng;
+
+/// A device move produced by a re-clustering.
+pub type Migration = (usize, usize, usize); // (device, old edge, new edge)
+
+/// Full re-assignment of the population after one re-clustering.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReclusterPlan {
+    /// Edge id per device (whole population: live devices from the fresh
+    /// clustering, departed devices parked on their region's emptiest
+    /// edges).
+    pub assignment: Vec<usize>,
+    /// Live devices whose edge changed.
+    pub migrated: Vec<Migration>,
+    /// Within-cluster MSE of the live clustering (normalized features).
+    pub mse: f64,
+    /// Live devices that were clustered.
+    pub live: usize,
+}
+
+/// What one executed re-clustering did (surfaced by the engines for tests
+/// and logging).
+#[derive(Clone, Debug)]
+pub struct ReclusterOutcome {
+    /// Simulated time the re-clustering ran.
+    pub at: f64,
+    pub migrated: Vec<Migration>,
+    pub live: usize,
+    pub mse: f64,
+    /// Straggler duration of the warm-start downlinks (barrier path; the
+    /// event engine's migration downlinks are in-flight transfers
+    /// instead).
+    pub migration_downlink_time: f64,
+}
+
+/// Live imbalance the balancer can actually act on: the worst per-region
+/// [`edge_imbalance`]. Re-clustering balances *within* regions (devices
+/// cannot cross), so structural cross-region skew — regions with unequal
+/// devices-per-edge shares — must not register as drift or every flip
+/// past `min_interval` would re-trigger a re-cluster that cannot fix it.
+pub fn region_imbalance(
+    live_per_edge: &[usize],
+    edge_regions: &[Region],
+) -> f64 {
+    assert_eq!(live_per_edge.len(), edge_regions.len());
+    [Region::Cn, Region::Us]
+        .iter()
+        .map(|&region| {
+            let counts: Vec<usize> = live_per_edge
+                .iter()
+                .zip(edge_regions)
+                .filter(|&(_, &r)| r == region)
+                .map(|(&c, _)| c)
+                .collect();
+            edge_imbalance(&counts)
+        })
+        .fold(0.0, f64::max)
+}
+
+/// Relative live edge-size imbalance: `(max - min) / mean` of the live
+/// member counts (0 for an empty or perfectly even population).
+pub fn edge_imbalance(live_per_edge: &[usize]) -> f64 {
+    if live_per_edge.is_empty() {
+        return 0.0;
+    }
+    let total: usize = live_per_edge.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let mean = total as f64 / live_per_edge.len() as f64;
+    let max = *live_per_edge.iter().max().unwrap() as f64;
+    let min = *live_per_edge.iter().min().unwrap() as f64;
+    (max - min) / mean
+}
+
+/// Region-constrained balanced re-clustering of the live population.
+///
+/// `live` lists the active devices and `features[i]` is `live[i]`'s
+/// freshly profiled characteristic (`V_i`, see `cluster::profiling`).
+/// `current` is the full current device→edge assignment; departed devices
+/// keep region but are re-parked for balance. Returns `None` when any
+/// region has fewer live devices than edges (clustering is deferred until
+/// the population recovers).
+/// Whether the live population can be re-clustered at all: balanced
+/// k-means needs at least one point per cluster in every region. Cheap
+/// (no profiling, no allocation) — the engines gate on this *before*
+/// paying the re-profiling pass, since a failed attempt would otherwise
+/// still mutate every live device's CPU state.
+pub fn plan_is_feasible(
+    live: &[usize],
+    device_regions: &[Region],
+    edge_regions: &[Region],
+) -> bool {
+    [Region::Cn, Region::Us].iter().all(|&region| {
+        let k = edge_regions.iter().filter(|&&r| r == region).count();
+        let l = live
+            .iter()
+            .filter(|&&d| device_regions[d] == region)
+            .count();
+        k == 0 || l >= k
+    })
+}
+
+pub fn plan_recluster(
+    live: &[usize],
+    features: &[Vec<f64>],
+    device_regions: &[Region],
+    edge_regions: &[Region],
+    current: &[usize],
+    rng: &mut Rng,
+) -> Option<ReclusterPlan> {
+    let n = current.len();
+    assert_eq!(live.len(), features.len(), "one feature row per live device");
+    let mut is_live = vec![false; n];
+    for &d in live {
+        is_live[d] = true;
+    }
+    if !plan_is_feasible(live, device_regions, edge_regions) {
+        return None;
+    }
+
+    // The exact clustering recipe of the startup profiling module,
+    // applied to the live rows only (shared core — see
+    // `cluster::profiling::cluster_by_region`).
+    let norm = zscore(features);
+    let live_regions: Vec<Region> =
+        live.iter().map(|&d| device_regions[d]).collect();
+    let (live_assign, total_mse) =
+        cluster_by_region(&norm, &live_regions, edge_regions, rng);
+    let mut assignment = current.to_vec();
+    for (i, &d) in live.iter().enumerate() {
+        assignment[d] = live_assign[i];
+    }
+    for &region in &[Region::Cn, Region::Us] {
+        let edges: Vec<usize> = (0..edge_regions.len())
+            .filter(|&j| edge_regions[j] == region)
+            .collect();
+        if edges.is_empty() {
+            continue;
+        }
+        // Park departed devices on the region's emptiest edges (by total
+        // size, ties to the lowest edge id) so a rejoin wave cannot push
+        // any edge past its startup share.
+        let mut sizes: Vec<usize> = edges
+            .iter()
+            .map(|&e| {
+                live.iter().filter(|&&d| assignment[d] == e).count()
+            })
+            .collect();
+        for d in 0..n {
+            if is_live[d] || device_regions[d] != region {
+                continue;
+            }
+            let slot = sizes
+                .iter()
+                .enumerate()
+                .min_by_key(|&(i, &s)| (s, i))
+                .map(|(i, _)| i)
+                .expect("region has edges");
+            assignment[d] = edges[slot];
+            sizes[slot] += 1;
+        }
+        // Repair: in tight populations balanced k-means can leave a
+        // cluster empty (min size is l - (k-1)·⌈l/k⌉, which can reach 0)
+        // and a region may have no departed devices to park there. Every
+        // edge must keep at least one member (topology invariant), so
+        // pull one device over from the fullest edge — preferring a
+        // departed device, whose move is invisible until it rejoins.
+        loop {
+            let Some(empty) = sizes.iter().position(|&s| s == 0) else {
+                break;
+            };
+            let donor = sizes
+                .iter()
+                .enumerate()
+                .max_by_key(|&(i, &s)| (s, std::cmp::Reverse(i)))
+                .map(|(i, _)| i)
+                .expect("region has edges");
+            debug_assert!(
+                sizes[donor] > 1,
+                "region population must cover its edges"
+            );
+            let donor_edge = edges[donor];
+            let pick = (0..n)
+                .rev()
+                .filter(|&d| assignment[d] == donor_edge)
+                .min_by_key(|&d| is_live[d])
+                .expect("donor edge is non-empty");
+            assignment[pick] = edges[empty];
+            sizes[donor] -= 1;
+            sizes[empty] += 1;
+        }
+    }
+
+    let migrated: Vec<Migration> = live
+        .iter()
+        .filter(|&&d| assignment[d] != current[d])
+        .map(|&d| (d, current[d], assignment[d]))
+        .collect();
+    Some(ReclusterPlan {
+        assignment,
+        migrated,
+        mse: if live.is_empty() {
+            0.0
+        } else {
+            total_mse / live.len() as f64
+        },
+        live: live.len(),
+    })
+}
+
+/// Tracks active-set drift and owns the re-clustering policy + RNG stream.
+///
+/// Drift is `max(churn fraction, live edge-size imbalance)` where the
+/// churn fraction is (joins + leaves since the last clustering) / n and
+/// the imbalance is the worst *per-region* spread ([`region_imbalance`] —
+/// what a region-constrained re-cluster can actually repair). With zero
+/// observed flips the tracker never triggers regardless of the imbalance
+/// term — the hard guarantee that zero-churn runs are bit-for-bit
+/// unchanged.
+#[derive(Clone, Debug)]
+pub struct MembershipTracker {
+    /// Drift fraction that triggers a re-cluster (`<= 0` disables).
+    pub threshold: f64,
+    /// Minimum simulated seconds between re-clusterings.
+    pub min_interval: f64,
+    /// Dedicated RNG stream for re-profiling/clustering, independent of
+    /// the engine's main stream (enabling the subsystem must not perturb
+    /// training/communication draws until it actually fires).
+    pub(crate) rng: Rng,
+    drift: FlipStats,
+    last_recluster_t: f64,
+    /// Re-clusterings executed over the run.
+    pub n_reclusters: usize,
+    /// Devices migrated over the run.
+    pub migrated_total: usize,
+    round_reclusters: usize,
+    round_migrated: usize,
+}
+
+impl MembershipTracker {
+    pub fn from_config(cluster: &ClusterConfig, seed: u64) -> Self {
+        MembershipTracker {
+            threshold: cluster.recluster_threshold,
+            min_interval: cluster.recluster_min_interval,
+            rng: Rng::new(seed ^ 0x4ec1),
+            drift: FlipStats::default(),
+            last_recluster_t: 0.0,
+            n_reclusters: 0,
+            migrated_total: 0,
+            round_reclusters: 0,
+            round_migrated: 0,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.threshold > 0.0
+    }
+
+    /// Feed one mobility step's join/leave counts into the drift.
+    pub fn observe(&mut self, flips: FlipStats) {
+        self.drift.merge(flips);
+    }
+
+    /// Joins + leaves accumulated since the last re-clustering.
+    pub fn drift_flips(&self) -> FlipStats {
+        self.drift
+    }
+
+    /// Current drift measure against a population of `n`. `imbalance` is
+    /// the live edge-size imbalance the balancer can act on — the
+    /// engines feed [`region_imbalance`] (`HflEngine::membership_imbalance`).
+    pub fn drift(&self, n: usize, imbalance: f64) -> f64 {
+        if n == 0 {
+            return 0.0;
+        }
+        let churn = self.drift.total() as f64 / n as f64;
+        churn.max(imbalance)
+    }
+
+    /// O(1) pre-gate for [`should_recluster`](Self::should_recluster):
+    /// whether a drift check is worth computing at all. Hard-gated on at
+    /// least one observed flip since the last clustering, so a churn-free
+    /// (or disabled) run never pays the O(n) live-imbalance scan — and
+    /// can never trigger (the bit-for-bit no-op guarantee).
+    pub fn wants_check(&self, now: f64) -> bool {
+        self.enabled()
+            && self.drift.total() > 0
+            && now - self.last_recluster_t >= self.min_interval
+    }
+
+    /// Whether a re-clustering should run now. Callers gate on
+    /// [`wants_check`](Self::wants_check) first and only then compute
+    /// `imbalance` (an O(n) membership scan).
+    pub fn should_recluster(
+        &self,
+        now: f64,
+        n: usize,
+        imbalance: f64,
+    ) -> bool {
+        self.wants_check(now) && self.drift(n, imbalance) >= self.threshold
+    }
+
+    /// Commit an executed re-clustering: reset the drift accumulator and
+    /// bump the run/round counters.
+    pub fn record_recluster(&mut self, now: f64, migrated: usize) {
+        self.drift = FlipStats::default();
+        self.last_recluster_t = now;
+        self.n_reclusters += 1;
+        self.migrated_total += migrated;
+        self.round_reclusters += 1;
+        self.round_migrated += migrated;
+    }
+
+    /// Drain the per-round (re-clusterings, migrated devices) counters —
+    /// the engines call this once per emitted `RoundStats`.
+    pub fn take_round_stats(&mut self) -> (usize, usize) {
+        (
+            std::mem::take(&mut self.round_reclusters),
+            std::mem::take(&mut self.round_migrated),
+        )
+    }
+
+    /// Fresh-run reset (keeps the policy knobs, restarts drift/counters;
+    /// the RNG stream continues — determinism is per engine construction,
+    /// matching the mobility model which is not reset either).
+    pub fn reset(&mut self) {
+        self.drift = FlipStats::default();
+        self.last_recluster_t = 0.0;
+        self.n_reclusters = 0;
+        self.migrated_total = 0;
+        self.round_reclusters = 0;
+        self.round_migrated = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{check, Gen};
+
+    fn tracker(threshold: f64, min_interval: f64) -> MembershipTracker {
+        MembershipTracker::from_config(
+            &ClusterConfig {
+                recluster_threshold: threshold,
+                recluster_min_interval: min_interval,
+            },
+            42,
+        )
+    }
+
+    #[test]
+    fn imbalance_of_even_and_uneven_populations() {
+        assert_eq!(edge_imbalance(&[]), 0.0);
+        assert_eq!(edge_imbalance(&[0, 0, 0]), 0.0);
+        assert_eq!(edge_imbalance(&[4, 4, 4]), 0.0);
+        // mean 3, max-min 2 -> 2/3.
+        assert!((edge_imbalance(&[4, 3, 2]) - 2.0 / 3.0).abs() < 1e-12);
+        // One dead edge is maximal pressure.
+        assert!(edge_imbalance(&[6, 0]) > 1.9);
+    }
+
+    #[test]
+    fn region_imbalance_ignores_structural_cross_region_skew() {
+        use Region::{Cn, Us};
+        let regions = [Cn, Cn, Us, Us];
+        // Each region internally even, but CN edges carry 6 and US 3:
+        // re-clustering cannot fix that, so it must not read as drift.
+        assert_eq!(region_imbalance(&[6, 6, 3, 3], &regions), 0.0);
+        // Within-region skew does count — and the worst region wins.
+        let v = region_imbalance(&[6, 6, 5, 1], &regions);
+        assert!((v - 4.0 / 3.0).abs() < 1e-12, "us (5-1)/3 = {v}");
+        let v = region_imbalance(&[8, 4, 3, 3], &regions);
+        assert!((v - 4.0 / 6.0).abs() < 1e-12, "cn (8-4)/6 = {v}");
+    }
+
+    #[test]
+    fn zero_churn_never_triggers() {
+        // Even with an absurdly low threshold, long horizon, and a wildly
+        // imbalanced live layout: no observed flip -> no re-cluster.
+        let t = tracker(1e-9, 0.0);
+        assert!(!t.wants_check(1e9), "zero flips must not even check");
+        assert!(!t.should_recluster(1e9, 10, 3.0));
+        assert_eq!(t.drift_flips().total(), 0);
+    }
+
+    #[test]
+    fn threshold_and_min_interval_gate_triggers() {
+        let mut t = tracker(0.2, 100.0);
+        assert!(t.enabled());
+        t.observe(FlipStats { joins: 1, leaves: 0 });
+        // Drift exists and the interval passed: a check is warranted...
+        assert!(t.wants_check(150.0));
+        assert!(!t.wants_check(50.0), "inside min_interval");
+        // ...but 1 flip / 10 devices = 0.1 < 0.2 with balanced edges
+        // stays below the threshold.
+        assert!(!t.should_recluster(150.0, 10, 0.0));
+        t.observe(FlipStats { joins: 0, leaves: 1 });
+        // 0.2 >= 0.2 but min_interval not yet passed.
+        assert!(!t.should_recluster(50.0, 10, 0.0));
+        assert!(t.should_recluster(150.0, 10, 0.0));
+        // Imbalance alone (with nonzero churn) can also trip it.
+        let mut t2 = tracker(0.5, 0.0);
+        t2.observe(FlipStats { joins: 0, leaves: 1 });
+        assert!(!t2.should_recluster(1.0, 100, 0.0));
+        assert!(t2.should_recluster(1.0, 100, 1.0));
+        // Committing resets the drift and starts the interval clock.
+        t.record_recluster(150.0, 3);
+        assert_eq!(t.n_reclusters, 1);
+        assert_eq!(t.migrated_total, 3);
+        assert!(!t.should_recluster(500.0, 10, 1.6));
+        assert_eq!(t.take_round_stats(), (1, 3));
+        assert_eq!(t.take_round_stats(), (0, 0), "round counters drain");
+    }
+
+    #[test]
+    fn disabled_tracker_ignores_everything() {
+        let mut t = tracker(0.0, 0.0);
+        assert!(!t.enabled());
+        t.observe(FlipStats { joins: 50, leaves: 50 });
+        assert!(!t.should_recluster(1e6, 10, 2.0));
+    }
+
+    #[test]
+    fn feasibility_requires_live_cover_per_region() {
+        let device_regions =
+            [Region::Cn, Region::Cn, Region::Cn, Region::Us, Region::Us];
+        let edge_regions = [Region::Cn, Region::Cn, Region::Us];
+        assert!(plan_is_feasible(
+            &[0, 1, 3],
+            &device_regions,
+            &edge_regions
+        ));
+        // Only one live CN device for two CN edges.
+        assert!(!plan_is_feasible(
+            &[0, 3, 4],
+            &device_regions,
+            &edge_regions
+        ));
+    }
+
+    // ---- plan_recluster properties -----------------------------------
+
+    struct Pop {
+        device_regions: Vec<Region>,
+        edge_regions: Vec<Region>,
+        current: Vec<usize>,
+        live: Vec<usize>,
+        features: Vec<Vec<f64>>,
+        seed: u64,
+    }
+
+    /// Random region-valid population with a feasible live set (each
+    /// region keeps at least as many live devices as it has edges).
+    fn gen_pop(g: &mut Gen) -> Pop {
+        let m_cn = g.usize_in(1, 3);
+        let m_us = g.usize_in(1, 3);
+        let mut edge_regions = vec![Region::Cn; m_cn];
+        edge_regions.extend(vec![Region::Us; m_us]);
+        let n_cn = m_cn + g.size(12);
+        let n_us = m_us + g.size(12);
+        let mut device_regions = vec![Region::Cn; n_cn];
+        device_regions.extend(vec![Region::Us; n_us]);
+        let n = n_cn + n_us;
+        // Current assignment: round-robin within each region (any
+        // region-respecting map works).
+        let current: Vec<usize> = (0..n)
+            .map(|d| {
+                if device_regions[d] == Region::Cn {
+                    d % m_cn
+                } else {
+                    m_cn + (d % m_us)
+                }
+            })
+            .collect();
+        // Live mask: drop devices at random but keep each region feasible.
+        let mut live = Vec::new();
+        let mut live_cn = 0;
+        let mut live_us = 0;
+        for d in 0..n {
+            if g.bool() || g.bool() {
+                live.push(d);
+                match device_regions[d] {
+                    Region::Cn => live_cn += 1,
+                    Region::Us => live_us += 1,
+                }
+            }
+        }
+        for d in 0..n {
+            let region = device_regions[d];
+            let (cnt, need) = match region {
+                Region::Cn => (&mut live_cn, m_cn),
+                Region::Us => (&mut live_us, m_us),
+            };
+            if *cnt < need && !live.contains(&d) {
+                live.push(d);
+                *cnt += 1;
+            }
+        }
+        live.sort_unstable();
+        let features: Vec<Vec<f64>> =
+            (0..live.len()).map(|_| g.vec_f64(5, 0.0, 10.0)).collect();
+        let seed = g.rng.next_u64();
+        Pop {
+            device_regions,
+            edge_regions,
+            current,
+            live,
+            features,
+            seed,
+        }
+    }
+
+    #[test]
+    fn plan_preserves_population_regions_and_balance() {
+        check("recluster-plan-invariants", 60, gen_pop, |p| {
+            let mut rng = Rng::new(p.seed);
+            let plan = plan_recluster(
+                &p.live,
+                &p.features,
+                &p.device_regions,
+                &p.edge_regions,
+                &p.current,
+                &mut rng,
+            )
+            .ok_or("feasible population must produce a plan")?;
+            let n = p.current.len();
+            let m = p.edge_regions.len();
+            if plan.assignment.len() != n {
+                return Err("assignment must cover the population".into());
+            }
+            if plan.live != p.live.len() {
+                return Err(format!(
+                    "live count changed: {} != {}",
+                    plan.live,
+                    p.live.len()
+                ));
+            }
+            // Region constraints: every device (live or parked) stays on
+            // an edge of its own region.
+            for d in 0..n {
+                let e = plan.assignment[d];
+                if e >= m {
+                    return Err(format!("device {d} on bogus edge {e}"));
+                }
+                if p.edge_regions[e] != p.device_regions[d] {
+                    return Err(format!("device {d} crossed regions"));
+                }
+            }
+            // nmax safety: no edge exceeds its region's fair share.
+            for &region in &[Region::Cn, Region::Us] {
+                let k = p
+                    .edge_regions
+                    .iter()
+                    .filter(|&&r| r == region)
+                    .count();
+                let n_r = p
+                    .device_regions
+                    .iter()
+                    .filter(|&&r| r == region)
+                    .count();
+                let cap = n_r.div_ceil(k);
+                for j in 0..m {
+                    if p.edge_regions[j] != region {
+                        continue;
+                    }
+                    let total = (0..n)
+                        .filter(|&d| plan.assignment[d] == j)
+                        .count();
+                    if total > cap {
+                        return Err(format!(
+                            "edge {j} holds {total} > cap {cap}"
+                        ));
+                    }
+                }
+            }
+            // Topology invariant: no edge ends empty (each region holds
+            // at least as many devices as edges by construction).
+            for j in 0..m {
+                if (0..n).all(|d| plan.assignment[d] != j) {
+                    return Err(format!("edge {j} ended empty"));
+                }
+            }
+            // Migration list is exactly the live diff.
+            for &(d, old, new) in &plan.migrated {
+                if p.current[d] != old || plan.assignment[d] != new {
+                    return Err("migration entry inconsistent".into());
+                }
+                if !p.live.contains(&d) {
+                    return Err("departed device listed as migrated".into());
+                }
+            }
+            let diff = p
+                .live
+                .iter()
+                .filter(|&&d| plan.assignment[d] != p.current[d])
+                .count();
+            if diff != plan.migrated.len() {
+                return Err("migration list incomplete".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn plan_is_deterministic_under_a_fixed_seed() {
+        check("recluster-plan-determinism", 30, gen_pop, |p| {
+            let run = || {
+                let mut rng = Rng::new(p.seed);
+                plan_recluster(
+                    &p.live,
+                    &p.features,
+                    &p.device_regions,
+                    &p.edge_regions,
+                    &p.current,
+                    &mut rng,
+                )
+            };
+            if run() != run() {
+                return Err("same seed produced different plans".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn infeasible_region_defers_reclustering() {
+        // 2 CN edges but only 1 live CN device: plan must decline.
+        let device_regions = vec![Region::Cn, Region::Cn, Region::Us];
+        let edge_regions = vec![Region::Cn, Region::Cn, Region::Us];
+        let current = vec![0, 1, 2];
+        let live = vec![0, 2];
+        let features = vec![vec![1.0; 5], vec![2.0; 5]];
+        let mut rng = Rng::new(1);
+        assert!(plan_recluster(
+            &live,
+            &features,
+            &device_regions,
+            &edge_regions,
+            &current,
+            &mut rng,
+        )
+        .is_none());
+    }
+
+    #[test]
+    fn plan_groups_similar_live_devices() {
+        // One region, two edges, live devices in two clear speed bands:
+        // each band should dominate one edge.
+        let n = 12;
+        let device_regions = vec![Region::Cn; n];
+        let edge_regions = vec![Region::Cn, Region::Cn];
+        let current: Vec<usize> = (0..n).map(|d| d % 2).collect();
+        let live: Vec<usize> = (0..n).collect();
+        let features: Vec<Vec<f64>> = (0..n)
+            .map(|d| {
+                let base = if d < 6 { 1.0 } else { 9.0 };
+                vec![base, base * 2.0, base, base, base]
+            })
+            .collect();
+        let mut rng = Rng::new(7);
+        let plan = plan_recluster(
+            &live,
+            &features,
+            &device_regions,
+            &edge_regions,
+            &current,
+            &mut rng,
+        )
+        .unwrap();
+        // Majority of each band must share an edge, and the two bands'
+        // majority edges must differ (perfect splits depend on seeding
+        // internals; the grouping property is what matters).
+        let majority = |devs: std::ops::Range<usize>| -> (usize, usize) {
+            let mut counts = [0usize; 2];
+            for d in devs {
+                counts[plan.assignment[d]] += 1;
+            }
+            if counts[0] >= counts[1] {
+                (0, counts[0])
+            } else {
+                (1, counts[1])
+            }
+        };
+        let (slow_edge, slow_n) = majority(0..6);
+        let (fast_edge, fast_n) = majority(6..n);
+        assert!(
+            slow_n >= 5 && fast_n >= 5 && slow_edge != fast_edge,
+            "bands not grouped: {:?}",
+            plan.assignment
+        );
+    }
+}

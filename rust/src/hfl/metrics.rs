@@ -72,6 +72,18 @@ pub struct RoundStats {
     pub gamma2: Vec<usize>,
     /// (device, last-epoch mean loss) for every device that trained.
     pub device_losses: Vec<(usize, f64)>,
+    /// Membership subsystem (`hfl::membership`): re-clusterings executed
+    /// during this round/window.
+    pub n_reclusters: usize,
+    /// Devices migrated between edges by those re-clusterings.
+    pub migrated_devices: usize,
+    /// Mobility-active devices at the end of the round/window.
+    pub active_devices: usize,
+    /// Live edge-size imbalance at round end: the worst per-region
+    /// `(max-min)/mean` spread — the drift signal the re-clustering
+    /// threshold is compared against (cross-region skew excluded, since
+    /// region-constrained re-clustering cannot repair it).
+    pub edge_size_imbalance: f64,
 }
 
 impl RoundStats {
@@ -107,6 +119,10 @@ impl RoundStats {
             ("energy", Json::num(self.energy)),
             ("comm_overlap_frac", Json::num(self.comm_overlap_frac())),
             ("mean_link_util", Json::num(self.mean_link_util())),
+            ("n_reclusters", Json::num(self.n_reclusters as f64)),
+            ("migrated_devices", Json::num(self.migrated_devices as f64)),
+            ("active_devices", Json::num(self.active_devices as f64)),
+            ("edge_size_imbalance", Json::num(self.edge_size_imbalance)),
             (
                 "gamma1",
                 Json::arr_f64(
@@ -194,6 +210,21 @@ impl RoundAccumulator {
         e.total_time = compute_time + up;
     }
 
+    /// Account a between-rounds migration warm-start downlink on `edge`
+    /// (the barrier engine's re-clustering path): it runs after the
+    /// round's own comm phase, extending the edge's wall-clock and
+    /// downlink busy time, and becomes the last observed downlink
+    /// duration. (The event engine's migration downlinks are real
+    /// in-flight transfers and are swept into the window stats instead.)
+    pub fn record_migration_down(&mut self, edge: usize, down: f64) {
+        let e = &mut self.per_edge[edge];
+        e.t_down = down;
+        e.t_ec = e.t_up + down;
+        e.down_busy += down;
+        e.comm_busy += down;
+        e.total_time += down;
+    }
+
     /// Close an edge's timer window (event-driven modes) from the busy
     /// intervals swept over the window. `t_up`/`t_down` are the last
     /// *observed* transfer durations (possibly from an earlier window if
@@ -258,6 +289,13 @@ impl RoundAccumulator {
             gamma1: gamma1.to_vec(),
             gamma2: gamma2.to_vec(),
             device_losses: self.device_losses,
+            // Membership fields are stamped by the engines after `finish`
+            // (`HflEngine::finalize_membership_stats`): the accumulator
+            // only sees training/communication records.
+            n_reclusters: 0,
+            migrated_devices: 0,
+            active_devices: 0,
+            edge_size_imbalance: 0.0,
         }
     }
 }
@@ -339,13 +377,30 @@ impl RunHistory {
         }
     }
 
-    /// Write the (time, accuracy, energy, link) series to CSV.
+    /// Cumulative (re-clusterings, migrated devices) over the rounds
+    /// completed by simulated time `t` — the membership companion of
+    /// [`RunHistory::at_time`] for the fig9/table summaries.
+    pub fn membership_stats_at(&self, t: f64) -> (usize, usize) {
+        let mut reclusters = 0;
+        let mut migrated = 0;
+        for r in &self.rounds {
+            if r.sim_now > t {
+                break;
+            }
+            reclusters += r.n_reclusters;
+            migrated += r.migrated_devices;
+        }
+        (reclusters, migrated)
+    }
+
+    /// Write the (time, accuracy, energy, link, membership) series to CSV.
     pub fn write_csv(&self, path: &str, label: &str) -> std::io::Result<()> {
         let mut w = CsvWriter::create(
             path,
             &["scheme", "k", "sim_time", "accuracy", "round_energy",
               "cum_energy", "train_loss", "comm_overlap_frac",
-              "mean_link_util"],
+              "mean_link_util", "n_reclusters", "migrated_devices",
+              "active_devices", "edge_size_imbalance"],
         )?;
         let mut cum = 0.0;
         for r in &self.rounds {
@@ -360,6 +415,10 @@ impl RunHistory {
                 format!("{:.4}", r.train_loss),
                 format!("{:.4}", r.comm_overlap_frac()),
                 format!("{:.4}", r.mean_link_util()),
+                r.n_reclusters.to_string(),
+                r.migrated_devices.to_string(),
+                r.active_devices.to_string(),
+                format!("{:.4}", r.edge_size_imbalance),
             ])?;
         }
         w.flush()
@@ -383,6 +442,10 @@ mod tests {
             gamma1: vec![5],
             gamma2: vec![4],
             device_losses: vec![],
+            n_reclusters: 0,
+            migrated_devices: 0,
+            active_devices: 0,
+            edge_size_imbalance: 0.0,
         }
     }
 
@@ -426,6 +489,23 @@ mod tests {
     }
 
     #[test]
+    fn migration_downlink_accounting_extends_the_round() {
+        let mut acc = RoundAccumulator::new(2);
+        acc.record_train(0, 1, 10.0, 1.0, None);
+        acc.record_link(0, 3.0, 1.0, 10.0);
+        acc.record_link(1, 2.0, 1.0, 0.0);
+        acc.record_migration_down(0, 4.0);
+        let s = acc.finish(1, 0.5, 1.0, 17.0, 17.0, &[1, 1], &[1, 1]);
+        assert!((s.per_edge[0].t_down - 4.0).abs() < 1e-12);
+        assert!((s.per_edge[0].t_ec - 7.0).abs() < 1e-12, "up 3 + down 4");
+        assert!((s.per_edge[0].down_busy - 5.0).abs() < 1e-12);
+        assert!((s.per_edge[0].comm_busy - 8.0).abs() < 1e-12);
+        assert!((s.per_edge[0].total_time - 17.0).abs() < 1e-12);
+        // The edge without migrants keeps its barrier accounting.
+        assert!((s.per_edge[1].down_busy - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
     fn window_recording_reports_overlap() {
         let mut acc = RoundAccumulator::new(2);
         acc.record_train(0, 0, 30.0, 1.0, Some(0.5));
@@ -450,5 +530,27 @@ mod tests {
         let j = round(2, 0.5, 10.0, 1.0).to_json();
         assert_eq!(j.get("k").unwrap().as_usize().unwrap(), 2);
         assert!(j.get("gamma1").unwrap().as_arr().is_some());
+        assert!(j.get("n_reclusters").is_some());
+        assert!(j.get("active_devices").is_some());
+    }
+
+    #[test]
+    fn membership_stats_accumulate_by_time() {
+        let mut h = RunHistory::default();
+        let mut r1 = round(1, 0.3, 100.0, 10.0); // sim_now 100
+        r1.n_reclusters = 1;
+        r1.migrated_devices = 4;
+        let mut r2 = round(2, 0.4, 100.0, 10.0); // sim_now 200
+        r2.n_reclusters = 0;
+        r2.migrated_devices = 0;
+        let mut r3 = round(3, 0.5, 100.0, 10.0); // sim_now 300
+        r3.n_reclusters = 2;
+        r3.migrated_devices = 3;
+        h.push(r1);
+        h.push(r2);
+        h.push(r3);
+        assert_eq!(h.membership_stats_at(50.0), (0, 0));
+        assert_eq!(h.membership_stats_at(250.0), (1, 4));
+        assert_eq!(h.membership_stats_at(1e9), (3, 7));
     }
 }

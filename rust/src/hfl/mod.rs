@@ -17,13 +17,21 @@
 //! fair-share contention), so upload time can overlap the next local
 //! round and metrics report compute vs in-flight comm time separately.
 
+//! The membership subsystem (`hfl/membership.rs`) keeps the clustered
+//! topology aligned with the *live* population: churn drift past
+//! `cluster.recluster_threshold` triggers a re-profile + region-constrained
+//! balanced re-cluster, and the running topology migrates in place (both
+//! engines; the event engine does it live via a `Recluster` event).
+
 pub mod aggregate;
 pub mod async_engine;
 pub mod engine;
+pub mod membership;
 pub mod metrics;
 pub mod topology;
 
 pub use async_engine::{AsyncHflEngine, SyncMode};
 pub use engine::HflEngine;
+pub use membership::{MembershipTracker, ReclusterOutcome};
 pub use metrics::{EdgeStats, RoundAccumulator, RoundStats, RunHistory};
 pub use topology::{build_topology, Edge, Topology};

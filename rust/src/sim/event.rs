@@ -18,6 +18,9 @@
 //!  * `CloudAggregate`   — the cloud aggregates edge models (barrier in
 //!    synchronous mode, a timer in semi-sync/async modes);
 //!  * `MobilityFlip`     — the join/leave Markov process advances;
+//!  * `Recluster`        — the membership subsystem (`hfl::membership`)
+//!    re-clusters the live population after the active set drifted past
+//!    the configured threshold, migrating devices between edges;
 //!  * `TransferDone`     — an in-flight edge↔cloud transfer predicted by
 //!    `sim::link::LinkManager` lands. Contention re-predictions leave
 //!    stale `TransferDone`s in the queue; the link layer identifies the
@@ -37,6 +40,9 @@ pub enum Event {
     EdgeAggregate { edge: usize },
     CloudAggregate,
     MobilityFlip,
+    /// Churn-driven re-clustering of the live population (scheduled when
+    /// membership drift crosses `cluster.recluster_threshold`).
+    Recluster,
     /// An in-flight transfer's predicted landing (id from the link layer).
     TransferDone { transfer: usize },
 }

@@ -2,9 +2,36 @@
 //! time"). A two-state Markov process per device: active devices leave
 //! with `leave_prob` per cloud round, departed ones return with
 //! `join_prob`. The profiling module re-clusters when the active set
-//! changes enough; the DRL state dimensions are unaffected (M fixed).
+//! drifts enough (`hfl::membership`); the DRL state dimensions are
+//! unaffected (M fixed).
+//!
+//! Every [`MobilityModel::step`] reports its join/leave counts as a
+//! [`FlipStats`] (re-readable via [`MobilityModel::flip_stats`]) and
+//! remembers *which* devices flipped ([`MobilityModel::flipped`]), so
+//! drift tracking and the event engines never have to re-scan the whole
+//! active vector per event.
 
 use crate::util::rng::Rng;
+
+/// Join/leave counts of one or more mobility steps.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FlipStats {
+    /// Departed devices that became active.
+    pub joins: usize,
+    /// Active devices that departed.
+    pub leaves: usize,
+}
+
+impl FlipStats {
+    pub fn total(self) -> usize {
+        self.joins + self.leaves
+    }
+
+    pub fn merge(&mut self, other: FlipStats) {
+        self.joins += other.joins;
+        self.leaves += other.leaves;
+    }
+}
 
 #[derive(Clone, Debug)]
 pub struct MobilityModel {
@@ -12,6 +39,11 @@ pub struct MobilityModel {
     pub join_prob: f64,
     active: Vec<bool>,
     rng: Rng,
+    /// Devices that changed state in the most recent `step` (net flips:
+    /// a leave revived by the keep-alive in the same step cancels out).
+    last_flipped: Vec<usize>,
+    /// Join/leave counts of the most recent `step`.
+    last_stats: FlipStats,
 }
 
 impl MobilityModel {
@@ -21,10 +53,13 @@ impl MobilityModel {
             join_prob,
             active: vec![true; n],
             rng,
+            last_flipped: Vec::new(),
+            last_stats: FlipStats::default(),
         }
     }
 
-    /// Immobile population (the default experiment setting).
+    /// Immobile population (the default experiment setting). Steps report
+    /// zero joins/leaves, so drift tracking sees a quiescent population.
     pub fn disabled(n: usize) -> Self {
         MobilityModel::new(n, 0.0, 1.0, Rng::new(0))
     }
@@ -57,22 +92,51 @@ impl MobilityModel {
         (0..self.active.len()).filter(|&i| self.active[i]).collect()
     }
 
-    /// Advance one cloud round; returns the number of state flips.
-    pub fn step(&mut self) -> usize {
-        let mut flips = 0;
-        for a in self.active.iter_mut() {
+    /// Devices that changed state in the most recent [`step`](Self::step)
+    /// — the event engines use this instead of diffing the active vector.
+    pub fn flipped(&self) -> &[usize] {
+        &self.last_flipped
+    }
+
+    /// Join/leave counts of the most recent [`step`](Self::step) — the
+    /// per-interval churn surface the membership subsystem's drift
+    /// tracking accumulates (`hfl::membership::MembershipTracker`).
+    pub fn flip_stats(&self) -> FlipStats {
+        self.last_stats
+    }
+
+    /// Advance one cloud round; returns this step's join/leave counts.
+    pub fn step(&mut self) -> FlipStats {
+        let mut fs = FlipStats::default();
+        self.last_flipped.clear();
+        for (i, a) in self.active.iter_mut().enumerate() {
             let p = if *a { self.leave_prob } else { self.join_prob };
             if self.rng.uniform() < p {
                 *a = !*a;
-                flips += 1;
+                if *a {
+                    fs.joins += 1;
+                } else {
+                    fs.leaves += 1;
+                }
+                self.last_flipped.push(i);
             }
         }
-        // Never let the system empty out entirely.
+        // Never let the system empty out entirely. If device 0 departed in
+        // this very step the revival cancels its flip (net no change).
         if self.active.iter().all(|&a| !a) {
             self.active[0] = true;
-            flips += 1;
+            if let Some(pos) =
+                self.last_flipped.iter().position(|&d| d == 0)
+            {
+                self.last_flipped.remove(pos);
+                fs.leaves -= 1;
+            } else {
+                self.last_flipped.push(0);
+                fs.joins += 1;
+            }
         }
-        flips
+        self.last_stats = fs;
+        fs
     }
 }
 
@@ -84,7 +148,9 @@ mod tests {
     fn disabled_never_changes() {
         let mut m = MobilityModel::disabled(10);
         for _ in 0..100 {
-            assert_eq!(m.step(), 0);
+            assert_eq!(m.step(), FlipStats::default());
+            assert!(m.flipped().is_empty());
+            assert_eq!(m.flip_stats().total(), 0);
             assert_eq!(m.active_count(), 10);
         }
     }
@@ -109,6 +175,7 @@ mod tests {
         let mut b = MobilityModel::new(64, 0.2, 0.4, Rng::new(77));
         for _ in 0..500 {
             assert_eq!(a.step(), b.step());
+            assert_eq!(a.flipped(), b.flipped());
             assert_eq!(a.active_set(), b.active_set());
         }
     }
@@ -134,7 +201,7 @@ mod tests {
             42,
         );
         for _ in 0..50 {
-            assert_eq!(d.step(), 0);
+            assert_eq!(d.step().total(), 0);
             assert_eq!(d.active_count(), 30);
         }
     }
@@ -146,5 +213,43 @@ mod tests {
             m.step();
             assert!(m.active_count() >= 1);
         }
+    }
+
+    #[test]
+    fn flip_stats_match_the_state_diff() {
+        // The reported joins/leaves and flipped() must equal the actual
+        // active-set diff of each step — keep-alive revivals included
+        // (which can report a join even at join_prob 0).
+        let mut m = MobilityModel::new(8, 0.5, 0.1, Rng::new(9));
+        for _ in 0..50 {
+            let before = m.active_set();
+            let fs = m.step();
+            let after = m.active_set();
+            let joins =
+                after.iter().filter(|d| !before.contains(d)).count();
+            let leaves =
+                before.iter().filter(|d| !after.contains(d)).count();
+            assert_eq!(fs, FlipStats { joins, leaves });
+            assert_eq!(fs, m.flip_stats(), "flip_stats mirrors the step");
+            assert_eq!(fs.total(), m.flipped().len());
+            // flipped() is exactly the symmetric difference.
+            for &d in m.flipped() {
+                assert_ne!(before.contains(&d), after.contains(&d));
+            }
+        }
+    }
+
+    #[test]
+    fn keep_alive_revival_is_a_net_noop_for_flips() {
+        // With leave_prob 1 everyone tries to leave each step; the
+        // keep-alive revives device 0, which must not be reported as
+        // flipped (its state did not change net of the step).
+        let mut m = MobilityModel::new(3, 1.0, 0.0, Rng::new(1));
+        m.step(); // collapses to {0}
+        let fs = m.step(); // 0 leaves + revived, others stay departed
+        assert_eq!(fs.joins, 0);
+        assert_eq!(fs.leaves, 0);
+        assert!(m.flipped().is_empty());
+        assert!(m.is_active(0));
     }
 }

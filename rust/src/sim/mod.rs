@@ -19,5 +19,5 @@ pub use cpu::CpuModel;
 pub use energy::EnergyModel;
 pub use event::{Event, EventQueue};
 pub use link::{Direction, LinkManager, Transfer};
-pub use mobility::MobilityModel;
+pub use mobility::{FlipStats, MobilityModel};
 pub use network::{NetworkModel, Region};

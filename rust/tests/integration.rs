@@ -388,6 +388,10 @@ fn async_engine_sync_mode_matches_under_churn_and_mask() {
     let mut cfg = small_cfg();
     cfg.sim.leave_prob = 0.2;
     cfg.sim.join_prob = 0.5;
+    // Also under churn-driven re-clustering: both engines run it through
+    // the same HflEngine path at the same point of the round.
+    cfg.cluster.recluster_threshold = 0.15;
+    cfg.cluster.recluster_min_interval = 0.0;
     let mut barrier = HflEngine::new(cfg.clone(), false).unwrap();
     let mut events = AsyncHflEngine::new(cfg.clone(), false).unwrap();
     let m = barrier.edges();
@@ -581,6 +585,199 @@ fn async_modes_are_seed_deterministic() {
         assert_eq!(ra.accuracy, rb.accuracy);
         assert_eq!(ra.energy, rb.energy);
         assert_eq!(ra.round_time, rb.round_time);
+    }
+}
+
+#[test]
+fn recluster_triggers_and_warm_starts_under_churn() {
+    // Acceptance (membership subsystem): with churn and an enabled
+    // threshold, a run logs >= 1 recluster with migrated_devices > 0,
+    // migrated devices hold their new edge's model right after the
+    // re-clustering, and the topology stays valid throughout.
+    require_artifacts!();
+    let mut cfg = small_cfg();
+    cfg.hfl.threshold_time = 1500.0;
+    cfg.sim.leave_prob = 0.3;
+    cfg.sim.join_prob = 0.6;
+    cfg.cluster.recluster_threshold = 0.1;
+    cfg.cluster.recluster_min_interval = 0.0;
+    let mut e = HflEngine::new(cfg.clone(), true).unwrap();
+    let m = e.edges();
+    let n = cfg.topology.devices;
+    let mut total_reclusters = 0;
+    let mut total_migrated = 0;
+    for _ in 0..8 {
+        let stats = e.run_round(&vec![1; m], &vec![1; m], None).unwrap();
+        total_reclusters += stats.n_reclusters;
+        total_migrated += stats.migrated_devices;
+        assert_eq!(stats.active_devices, e.mobility.active_count());
+        if stats.n_reclusters > 0 {
+            let out = e.last_recluster.clone().expect("outcome recorded");
+            assert_eq!(stats.migrated_devices, out.migrated.len());
+            for &(d, old, new) in &out.migrated {
+                assert_ne!(old, new, "non-move listed as migration");
+                // Warm start: the migrated device resumed from its new
+                // edge's current model.
+                assert_eq!(
+                    e.device_w[d], e.edge_w[new],
+                    "device {d} not warm-started from edge {new}"
+                );
+                assert!(e.topo.edges[new].members.contains(&d));
+                assert_eq!(
+                    e.topo.device_regions[d],
+                    e.topo.edges[new].region,
+                    "migration crossed regions"
+                );
+            }
+        }
+        // The migrated topology stays valid: full population coverage,
+        // region constraints, nmax never exceeded.
+        let total: usize =
+            e.topo.edges.iter().map(|x| x.members.len()).sum();
+        assert_eq!(total, n);
+        for edge in &e.topo.edges {
+            assert!(edge.members.len() <= cfg.topology.nmax);
+            for &d in &edge.members {
+                assert_eq!(e.topo.device_regions[d], edge.region);
+            }
+        }
+    }
+    assert!(
+        total_reclusters >= 1,
+        "no recluster fired under heavy churn with threshold 0.1"
+    );
+    assert!(total_migrated > 0, "reclusters moved no devices");
+}
+
+#[test]
+fn semi_sync_quorum_liveness_across_recluster() {
+    // Regression (membership subsystem): live migration re-derives the
+    // semi-sync quorums from the new membership — a shrunken edge must
+    // still close its round, and cloud windows keep completing after the
+    // topology moved under the running engine.
+    require_artifacts!();
+    let mut cfg = small_cfg();
+    cfg.hfl.threshold_time = 900.0;
+    cfg.sync.mode = SyncModeCfg::SemiSync;
+    cfg.sync.quorum = 2;
+    cfg.sync.cloud_interval = 120.0;
+    cfg.sim.leave_prob = 0.25;
+    cfg.sim.join_prob = 0.5;
+    cfg.cluster.recluster_threshold = 0.1;
+    cfg.cluster.recluster_min_interval = 0.0;
+    let mut e = AsyncHflEngine::new(cfg, false).unwrap();
+    let hist = e.run_to_threshold().unwrap();
+    assert!(!hist.rounds.is_empty(), "no cloud windows at all");
+    let reclusters: usize =
+        hist.rounds.iter().map(|r| r.n_reclusters).sum();
+    let migrated: usize =
+        hist.rounds.iter().map(|r| r.migrated_devices).sum();
+    assert!(reclusters >= 1, "no recluster in churned semi-sync run");
+    assert!(migrated > 0, "live migration moved no devices");
+    // Quorum liveness across the recluster: edge rounds keep closing in
+    // the windows at/after the first re-clustering.
+    let first = hist
+        .rounds
+        .iter()
+        .position(|r| r.n_reclusters > 0)
+        .unwrap();
+    let aggs_after: usize = hist.rounds[first..]
+        .iter()
+        .map(|r| r.gamma2.iter().sum::<usize>())
+        .sum();
+    assert!(aggs_after > 0, "no edge round closed after the recluster");
+    // Warm-start downlinks actually landed and were applied.
+    assert!(
+        !e.migration_log.is_empty(),
+        "no migration warm-start landed"
+    );
+}
+
+#[test]
+fn recluster_enabled_is_noop_without_churn() {
+    // Bit-for-bit acceptance: enabling the membership subsystem must not
+    // change a churn-free run in any way — it draws from no RNG stream
+    // until it actually fires, and it can only fire after observed flips.
+    require_artifacts!();
+    let base = small_cfg();
+    let mut enabled = base.clone();
+    enabled.cluster.recluster_threshold = 0.05;
+    enabled.cluster.recluster_min_interval = 0.0;
+    let run = |cfg: &ExperimentConfig| {
+        let mut e = HflEngine::new(cfg.clone(), true).unwrap();
+        let m = e.edges();
+        let mut rounds = Vec::new();
+        for _ in 0..3 {
+            rounds.push(e.run_round(&vec![2; m], &vec![1; m], None).unwrap());
+        }
+        (rounds, e.cloud_w.clone())
+    };
+    let (a, wa) = run(&base);
+    let (b, wb) = run(&enabled);
+    assert_eq!(wa, wb, "cloud models diverged");
+    for (ra, rb) in a.iter().zip(&b) {
+        assert_eq!(ra.accuracy, rb.accuracy);
+        assert_eq!(ra.energy, rb.energy);
+        assert_eq!(ra.round_time, rb.round_time);
+        assert_eq!(ra.sim_now, rb.sim_now);
+        assert_eq!(ra.n_reclusters, 0);
+        assert_eq!(rb.n_reclusters, 0);
+        assert_eq!(rb.migrated_devices, 0);
+    }
+    // Same no-op guarantee in an event-driven mode.
+    let mut acfg = base.clone();
+    acfg.hfl.threshold_time = 400.0;
+    acfg.sync.mode = SyncModeCfg::SemiSync;
+    acfg.sync.cloud_interval = 120.0;
+    let mut aena = acfg.clone();
+    aena.cluster.recluster_threshold = 0.05;
+    aena.cluster.recluster_min_interval = 0.0;
+    let run_async = |cfg: &ExperimentConfig| {
+        let mut e = AsyncHflEngine::new(cfg.clone(), false).unwrap();
+        let hist = e.run_to_threshold().unwrap();
+        (e.transfer_log.clone(), hist)
+    };
+    let (la, ha) = run_async(&acfg);
+    let (lb, hb) = run_async(&aena);
+    assert_eq!(la, lb, "transfer timeline diverged");
+    assert_eq!(ha.rounds.len(), hb.rounds.len());
+    for (ra, rb) in ha.rounds.iter().zip(&hb.rounds) {
+        assert_eq!(ra.accuracy, rb.accuracy);
+        assert_eq!(ra.energy, rb.energy);
+        assert_eq!(ra.round_time, rb.round_time);
+    }
+}
+
+#[test]
+fn recluster_runs_are_seed_deterministic() {
+    // The whole migration pipeline — drift trigger, re-profiling,
+    // clustering, warm-start downlinks — replays identically from the
+    // experiment seed.
+    require_artifacts!();
+    let mut cfg = small_cfg();
+    cfg.hfl.threshold_time = 600.0;
+    cfg.sync.mode = SyncModeCfg::SemiSync;
+    cfg.sync.quorum = 1;
+    cfg.sync.cloud_interval = 100.0;
+    cfg.sim.leave_prob = 0.25;
+    cfg.sim.join_prob = 0.5;
+    cfg.cluster.recluster_threshold = 0.1;
+    cfg.cluster.recluster_min_interval = 0.0;
+    let run = |cfg: &ExperimentConfig| {
+        let mut e = AsyncHflEngine::new(cfg.clone(), false).unwrap();
+        let hist = e.run_to_threshold().unwrap();
+        (e.migration_log.clone(), e.transfer_log.clone(), hist)
+    };
+    let (ma, ta, ha) = run(&cfg);
+    let (mb, tb, hb) = run(&cfg);
+    assert_eq!(ma, mb, "migration landings diverged");
+    assert_eq!(ta, tb, "transfer timeline diverged");
+    assert_eq!(ha.rounds.len(), hb.rounds.len());
+    for (ra, rb) in ha.rounds.iter().zip(&hb.rounds) {
+        assert_eq!(ra.accuracy, rb.accuracy);
+        assert_eq!(ra.energy, rb.energy);
+        assert_eq!(ra.n_reclusters, rb.n_reclusters);
+        assert_eq!(ra.migrated_devices, rb.migrated_devices);
     }
 }
 
