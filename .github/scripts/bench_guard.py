@@ -1,0 +1,74 @@
+#!/usr/bin/env python3
+"""Bench regression guard: compare a fresh event-queue bench run against
+the checked-in baseline and fail if any shared workload regressed by more
+than the allowed factor (default 2x on mean ns/iter).
+
+Usage: bench_guard.py <baseline.json> <current.json> [max_ratio]
+
+The baseline ships as BENCH_event_queue.json at the repo root; the bench
+rewrites that file in place, so CI copies the baseline aside before the
+run. A baseline with no results (fresh seed) passes with a notice —
+committing the first real run arms the guard.
+
+Record the baseline in the SAME environment that checks it: copy the
+rewritten BENCH_event_queue.json out of a CI run (ARENA_BENCH_FAST=1 on
+a shared runner) rather than a fast dev box, or the 2x gate measures
+hardware difference instead of regression.
+"""
+
+import json
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        data = json.load(f)
+    return {r["name"]: float(r["mean_ns"]) for r in data.get("results", [])}
+
+
+def main():
+    if len(sys.argv) < 3:
+        print(__doc__)
+        return 2
+    baseline = load(sys.argv[1])
+    current = load(sys.argv[2])
+    max_ratio = float(sys.argv[3]) if len(sys.argv) > 3 else 2.0
+    if not baseline:
+        print(
+            "bench guard: baseline has no results yet (pending first "
+            "recorded run) — passing; commit the rewritten "
+            "BENCH_event_queue.json to arm the guard"
+        )
+        return 0
+    if not current:
+        print("bench guard: FAIL — current run produced no results")
+        return 1
+    failed = []
+    for name, base_ns in sorted(baseline.items()):
+        cur_ns = current.get(name)
+        if cur_ns is None:
+            print(f"bench guard: workload '{name}' missing from current run")
+            failed.append(name)
+            continue
+        ratio = cur_ns / base_ns if base_ns > 0 else float("inf")
+        marker = "FAIL" if ratio > max_ratio else "ok"
+        print(
+            f"bench guard: {name}: {base_ns:.0f} -> {cur_ns:.0f} ns/iter "
+            f"({ratio:.2f}x) {marker}"
+        )
+        if ratio > max_ratio:
+            failed.append(name)
+    for name in sorted(set(current) - set(baseline)):
+        print(f"bench guard: new workload '{name}' (no baseline, ignored)")
+    if failed:
+        print(
+            f"bench guard: FAIL — {len(failed)} workload(s) regressed "
+            f">{max_ratio}x: {', '.join(failed)}"
+        )
+        return 1
+    print("bench guard: all workloads within budget")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,102 @@
+//! Learned per-edge synchronization control of the event-driven engine:
+//! train the DRL agent ON `AsyncHflEngine` (per-edge local-epoch counts
+//! γ1_j + staleness exponents α_j, re-armed at every cloud decision
+//! point), then roll the greedy policy out against the fixed-α async
+//! baseline on the same seed. Exercises the `ControlledEngine` path, the
+//! extended control state (staleness / in-flight / quorum-fill rows) and
+//! the `_ctrl` PPO artifacts end-to-end.
+//!
+//! `cargo run --release --example learned_sync [-- episodes]`
+
+use anyhow::Result;
+use arena::agent::{run_policy_on, train_arena_on, ArenaOptions};
+use arena::config::{ExperimentConfig, SyncModeCfg};
+use arena::hfl::{AsyncHflEngine, RunHistory};
+use arena::runtime::Runtime;
+
+fn report(label: &str, hist: &RunHistory) {
+    for r in &hist.rounds {
+        println!(
+            "  k={:<2} t={:>7.1}s acc={:.3} E={:>7.2}mAh g1={:?} \
+             staleness={:.2}",
+            r.k,
+            r.sim_now,
+            r.accuracy,
+            r.energy,
+            r.gamma1,
+            r.mean_staleness()
+        );
+    }
+    println!(
+        "  {label}: final acc {:.3}, total energy {:.1} mAh over {:.0}s",
+        hist.final_accuracy(),
+        hist.total_energy(),
+        hist.total_time()
+    );
+}
+
+fn main() -> Result<()> {
+    std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "2");
+    let dir = std::env::var("ARENA_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".into());
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        return Ok(());
+    }
+    // The learned controller needs the `_ctrl` agent variant (extended
+    // control-state layout); older artifact sets predate it.
+    let rt = Runtime::load(&dir, &[])?;
+    if !rt.manifest.artifacts.contains_key("ppo_actor_fwd_ctrl") {
+        eprintln!(
+            "skipping: artifact set has no ppo_actor_fwd_ctrl (re-run \
+             `make artifacts` to add the control-state variants)"
+        );
+        return Ok(());
+    }
+    drop(rt);
+
+    let episodes: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2);
+    let mut cfg = ExperimentConfig::mnist();
+    cfg.topology.devices = 10;
+    cfg.hfl.threshold_time = 600.0;
+    cfg.sync.mode = SyncModeCfg::Async;
+    cfg.sync.cloud_interval = 120.0;
+    cfg.agent.episodes = episodes;
+    cfg.artifacts_dir = dir;
+
+    println!("=== baseline: fixed-α async (uniform γ1) ===");
+    let mut engine = AsyncHflEngine::new(cfg.clone(), true)?;
+    let base = engine.run_to_threshold()?;
+    report("fixed-α async", &base);
+
+    println!("=== training the per-edge (γ1_j, α_j) controller \
+              ({episodes} episodes) ===");
+    let mut learned_cfg = cfg.clone();
+    learned_cfg.sync.learned = true;
+    let mut engine = AsyncHflEngine::new(learned_cfg.clone(), true)?;
+    let opts = ArenaOptions {
+        verbose: true,
+        ..ArenaOptions::arena(episodes)
+    };
+    let (agent, sb, _) = train_arena_on(&mut engine, &opts)?;
+
+    println!("=== greedy rollout of the learned controller ===");
+    // Fresh engine: training advanced the RNG/churn process on the old
+    // one, and the comparison against the baseline above should be a
+    // pure function of the seed.
+    let mut engine = AsyncHflEngine::new(learned_cfg, true)?;
+    let hist = run_policy_on(&mut engine, &agent, &sb, true)?;
+    report("arena-learned", &hist);
+
+    println!(
+        "\nlearned vs fixed-α: acc {:.3} vs {:.3}, energy {:.1} vs {:.1} mAh",
+        hist.final_accuracy(),
+        base.final_accuracy(),
+        hist.total_energy(),
+        base.total_energy()
+    );
+    Ok(())
+}

@@ -25,9 +25,14 @@ CONV_CH = (8, 16)
 FC = (128, 64)
 
 
-def ppo_layout(m_edges, npca):
-    """[(name, shape, offset)] for the flat PPO parameter vector."""
-    rows, cols = m_edges + 1, npca + 3
+def ppo_layout(m_edges, npca, extra=0):
+    """[(name, shape, offset)] for the flat PPO parameter vector.
+
+    `extra` appends state columns beyond the paper's npca+3 — the control
+    layout (extra=3) carries per-edge staleness / in-flight / quorum-fill
+    features for the event-driven engine (rust: agent/state.rs `ctrl`).
+    """
+    rows, cols = m_edges + 1, npca + 3 + extra
     flat_dim = rows * cols * CONV_CH[1]
     n_act = 4 * m_edges
     shapes = [
@@ -54,8 +59,8 @@ def ppo_layout(m_edges, npca):
     return layout
 
 
-def ppo_param_count(m_edges, npca):
-    layout = ppo_layout(m_edges, npca)
+def ppo_param_count(m_edges, npca, extra=0):
+    layout = ppo_layout(m_edges, npca, extra)
     name, shape, off = layout[-1]
     n = 1
     for d in shape:
@@ -73,10 +78,10 @@ def _unflatten(layout, flat):
     return out
 
 
-def init_ppo_params(m_edges, npca, key):
+def init_ppo_params(m_edges, npca, key, extra=0):
     """Orthogonal-ish (scaled normal) init, small actor head for stable mu."""
     parts = []
-    for name, shape, _ in ppo_layout(m_edges, npca):
+    for name, shape, _ in ppo_layout(m_edges, npca, extra):
         key, sub = jax.random.split(key)
         if name.endswith("_b"):
             parts.append(jnp.zeros(shape, jnp.float32).ravel())
@@ -105,9 +110,9 @@ def _conv3_same(x, w, b):
     ) + b
 
 
-def forward(m_edges, npca, flat, states, use_pallas=True):
-    """states: [B, M+1, npca+3] -> (mu[B,2M], sigma[B,2M], value[B])."""
-    p = _unflatten(ppo_layout(m_edges, npca), flat)
+def forward(m_edges, npca, flat, states, use_pallas=True, extra=0):
+    """states: [B, M+1, npca+3+extra] -> (mu[B,2M], sigma[B,2M], value[B])."""
+    p = _unflatten(ppo_layout(m_edges, npca, extra), flat)
     h = states[..., None]  # [B, rows, cols, 1]
     h = jnp.maximum(_conv3_same(h, p["conv0_w"], p["conv0_b"]), 0.0)
     h = jnp.maximum(_conv3_same(h, p["conv1_w"], p["conv1_b"]), 0.0)
@@ -135,19 +140,19 @@ def _entropy(sigma):
                    axis=-1)
 
 
-def actor_fwd(m_edges, npca, use_pallas=True):
-    """Returns f(theta, state[M+1,npca+3]) -> (mu[2M], sigma[2M], value[1])."""
+def actor_fwd(m_edges, npca, use_pallas=True, extra=0):
+    """Returns f(theta, state[M+1,cols]) -> (mu[2M], sigma[2M], value[1])."""
 
     def run(theta, state):
         mu, sigma, v = forward(m_edges, npca, theta, state[None],
-                               use_pallas)
+                               use_pallas, extra)
         return mu[0], sigma[0], v
 
     return run
 
 
 def ppo_update(m_edges, npca, lr=3e-4, clip_eps=0.2, vf_coef=0.5,
-               ent_coef=0.01, use_pallas=True):
+               ent_coef=0.01, use_pallas=True, extra=0):
     """Returns the PPO/Adam step function over a padded trajectory batch.
 
     f(theta, adam_m, adam_v, t[1],
@@ -158,7 +163,7 @@ def ppo_update(m_edges, npca, lr=3e-4, clip_eps=0.2, vf_coef=0.5,
 
     def loss(theta, states, actions, old_logp, adv, ret, mask):
         mu, sigma, values = forward(m_edges, npca, theta, states,
-                                    use_pallas)
+                                    use_pallas, extra)
         logp = _log_prob(mu, sigma, actions)
         ratio = jnp.exp(logp - old_logp)
         clipped = jnp.clip(ratio, 1.0 - clip_eps, 1.0 + clip_eps)

@@ -122,21 +122,27 @@ def build_dataset(b, ds, cfg, use_pallas, train_pallas):
     return p
 
 
-def build_agent(b, cfg, use_pallas, npca=None, datasets=()):
+def build_agent(b, cfg, use_pallas, npca=None, datasets=(), ctrl=False):
     """Emit the PPO artifacts (and the matching pca_project variants) for
     one n_PCA value. npca=None uses the default (no name suffix); other
     values get an `_npca<k>` suffix — the Fig. 12 state-dimension ablation.
+    ctrl=True emits the `_ctrl` variant instead: the extended
+    (M+1) x (npca+6) control state whose per-edge rows carry the event
+    engine's staleness / in-flight / quorum-fill features (rust:
+    agent/state.rs, decoded to per-edge (gamma1_j, alpha_j)).
     """
     m, bt = cfg["m_edges"], cfg["traj_batch"]
     default = npca is None
     npca = cfg["npca"] if default else npca
-    suffix = "" if default else f"_npca{npca}"
-    pp = agent_mod.ppo_param_count(m, npca)
-    rows, cols = m + 1, npca + 3
+    assert not (ctrl and not default), "ctrl variant only at default n_PCA"
+    extra = 3 if ctrl else 0
+    suffix = "_ctrl" if ctrl else ("" if default else f"_npca{npca}")
+    pp = agent_mod.ppo_param_count(m, npca, extra)
+    rows, cols = m + 1, npca + 3 + extra
 
     b.emit(
         f"ppo_actor_fwd{suffix}",
-        agent_mod.actor_fwd(m, npca, use_pallas),
+        agent_mod.actor_fwd(m, npca, use_pallas, extra),
         [spec([pp]), spec([rows, cols])],
         {"params": pp, "npca": npca},
     )
@@ -144,7 +150,7 @@ def build_agent(b, cfg, use_pallas, npca=None, datasets=()):
         f"ppo_update{suffix}",
         agent_mod.ppo_update(
             m, npca, lr=cfg["ppo_lr"], clip_eps=cfg["clip_eps"],
-            use_pallas=use_pallas,
+            use_pallas=use_pallas, extra=extra,
         ),
         [
             spec([pp]), spec([pp]), spec([pp]), spec([1]),
@@ -163,8 +169,10 @@ def build_agent(b, cfg, use_pallas, npca=None, datasets=()):
             {"params": p, "npca": npca},
         )
 
-    key = jax.random.PRNGKey(cfg["seed"] + 1)
-    b.write_init(f"ppo{suffix}", agent_mod.init_ppo_params(m, npca, key))
+    key = jax.random.PRNGKey(cfg["seed"] + 1 + (7 if ctrl else 0))
+    b.write_init(
+        f"ppo{suffix}", agent_mod.init_ppo_params(m, npca, key, extra)
+    )
     return pp
 
 
@@ -218,6 +226,9 @@ def main():
         params[ds] = build_dataset(b, ds, cfg, use_pallas, train_pallas)
     print("lowering agent artifacts...")
     params["ppo"] = build_agent(b, cfg, use_pallas, datasets=())
+    print("lowering control-state (ctrl) agent artifacts...")
+    params["ppo_ctrl"] = build_agent(b, cfg, use_pallas, datasets=(),
+                                     ctrl=True)
     for v in [v for v in args.npca_variants.split(",") if v]:
         k = int(v)
         print(f"lowering n_PCA={k} ablation artifacts...")

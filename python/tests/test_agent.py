@@ -118,3 +118,21 @@ def test_value_loss_decreases_with_repeated_updates():
         if first is None:
             first = float(losses[1])
     assert float(losses[1]) < first, (float(losses[1]), first)
+
+
+def test_ctrl_layout_extends_state_columns():
+    # The control variant widens every state row by 3 feature columns
+    # (staleness / in-flight / quorum fill) and grows fc0 accordingly,
+    # while the action head stays 2M wide.
+    extra = 3
+    layout = A.ppo_layout(M_EDGES, NPCA, extra)
+    total = sum(int(np.prod(s)) for _, s, _ in layout)
+    assert total == A.ppo_param_count(M_EDGES, NPCA, extra)
+    assert total > A.ppo_param_count(M_EDGES, NPCA)
+    th = A.init_ppo_params(M_EDGES, NPCA, jax.random.PRNGKey(3), extra)
+    assert th.shape == (total,)
+    state = jnp.ones((ROWS, COLS + extra))
+    mu, sigma, v = A.actor_fwd(M_EDGES, NPCA, extra=extra)(th, state)
+    assert mu.shape == (2 * M_EDGES,)
+    assert sigma.shape == (2 * M_EDGES,)
+    assert v.shape == (1,)

@@ -12,8 +12,7 @@ fn main() {
         let models: Vec<Vec<f32>> = (0..6)
             .map(|_| (0..p).map(|_| rng.normal() as f32).collect())
             .collect();
-        let refs: Vec<&[f32]> =
-            models.iter().map(|m| m.as_slice()).collect();
+        let refs: Vec<&[f32]> = models.iter().map(|m| m.as_slice()).collect();
         bench(&format!("pca/fit/p={p}"), || {
             let pca = PcaModel::fit(&refs, 6);
             black_box(pca);

@@ -10,6 +10,8 @@
 
 use crate::util::rng::Rng;
 
+use super::bound::{max_feasible_gamma1, BoundParams};
+
 #[derive(Clone, Debug)]
 pub struct ActionConfig {
     pub m: usize,
@@ -29,12 +31,18 @@ pub struct DecidedAction {
     pub gamma2: Vec<usize>,
 }
 
+/// Map a raw action coordinate affinely into `[lo, hi]`: mid + a * half,
+/// clamped — the shared decode for frequency and α coordinates.
+pub fn to_range(a: f32, lo: f64, hi: f64) -> f64 {
+    let mid = (lo + hi) / 2.0;
+    let half = (hi - lo) / 2.0;
+    (mid + a as f64 * half).clamp(lo, hi)
+}
+
 /// Map a raw action coordinate into the continuous frequency space
 /// [1, gmax]: mid + a * half, clamped.
 pub fn to_continuous(a: f32, gmax: usize) -> f64 {
-    let mid = (1.0 + gmax as f64) / 2.0;
-    let half = (gmax as f64 - 1.0) / 2.0;
-    (mid + a as f64 * half).clamp(1.0, gmax as f64)
+    to_range(a, 1.0, gmax as f64)
 }
 
 /// Sample raw ~ N(mu, sigma) and return (raw, log_prob).
@@ -64,7 +72,8 @@ pub fn log_prob(mu: &[f32], sigma: &[f32], raw: &[f32]) -> f64 {
     for ((&m, &s), &a) in mu.iter().zip(sigma).zip(raw) {
         let s = s.max(1e-4) as f64;
         let z = (a - m) as f64 / s;
-        logp += -0.5 * z * z - s.ln() - 0.5 * (2.0 * std::f64::consts::PI).ln();
+        logp +=
+            -0.5 * z * z - s.ln() - 0.5 * (2.0 * std::f64::consts::PI).ln();
     }
     logp
 }
@@ -121,6 +130,49 @@ pub fn nearest_feasible(
         g2.push(c2);
     }
     (g1, g2)
+}
+
+/// Decode parameters of the event-driven (per-edge γ1_j, α_j) action
+/// space. The same 2M raw coordinates the barrier decode interprets as
+/// (γ1, γ2) pairs here decode to per-edge local-epoch counts γ1_j — the
+/// edge-aggregation period of the event engine, re-armed at cloud
+/// decision points — and per-edge staleness-discount exponents α_j.
+#[derive(Clone, Debug)]
+pub struct AsyncActionConfig {
+    pub m: usize,
+    pub gamma1_max: usize,
+    /// Decode range of the per-edge staleness exponent α_j
+    /// (`sync.alpha_min`/`sync.alpha_max`).
+    pub alpha_min: f64,
+    pub alpha_max: f64,
+    /// Eq. (29) step-size feasibility gate on γ1_j (`bound.rs`); None
+    /// skips the gate.
+    pub bound: Option<BoundParams>,
+}
+
+/// Decode a raw 2M-vector into per-edge (γ1_j, α_j): the first M
+/// coordinates map affinely into [1, γ̃1] and round to the nearest
+/// integer, clamped by the Eq. (29) feasibility bound (γ2 = 1: the cloud
+/// timer, not a frequency, is the outer period in the event modes); the
+/// second M map affinely into [α_min, α_max].
+pub fn decode_async(
+    cfg: &AsyncActionConfig,
+    raw: &[f32],
+) -> (Vec<usize>, Vec<f64>) {
+    assert_eq!(raw.len(), 2 * cfg.m, "raw action length");
+    let cap = cfg
+        .bound
+        .as_ref()
+        .map(|b| max_feasible_gamma1(b, cfg.gamma1_max, 1.0))
+        .unwrap_or(cfg.gamma1_max);
+    let mut g1 = Vec::with_capacity(cfg.m);
+    let mut alpha = Vec::with_capacity(cfg.m);
+    for j in 0..cfg.m {
+        let c = to_continuous(raw[j], cfg.gamma1_max);
+        g1.push((c.round() as usize).clamp(1, cap.max(1)));
+        alpha.push(to_range(raw[cfg.m + j], cfg.alpha_min, cfg.alpha_max));
+    }
+    (g1, alpha)
 }
 
 #[cfg(test)]
@@ -191,8 +243,8 @@ mod tests {
         let c = cfg(true);
         let (g1, g2) = nearest_feasible(
             &c,
-            &vec![8.0; 3],
-            &vec![4.0; 3],
+            &[8.0; 3],
+            &[4.0; 3],
             |_, a, b| (a * b) as f64,
             0.5, // nothing fits
         );
@@ -205,12 +257,73 @@ mod tests {
         let c = cfg(false);
         let (g1, _) = nearest_feasible(
             &c,
-            &vec![9.7; 3],
-            &vec![3.0; 3],
+            &[9.7; 3],
+            &[3.0; 3],
             |_, a, b| (a * b) as f64,
             0.5,
         );
         assert_eq!(g1, vec![10; 3]);
+    }
+
+    fn acfg(bound: Option<BoundParams>) -> AsyncActionConfig {
+        AsyncActionConfig {
+            m: 3,
+            gamma1_max: 8,
+            alpha_min: 0.0,
+            alpha_max: 2.0,
+            bound,
+        }
+    }
+
+    #[test]
+    fn async_decode_saturates_at_the_extremes() {
+        let c = acfg(None);
+        // Raw +inf-ish saturates every coordinate at its upper bound,
+        // -inf-ish at the lower (the bound.rs / config box).
+        let hi = decode_async(&c, &[1e9f32; 6]);
+        assert_eq!(hi.0, vec![8; 3]);
+        for &a in &hi.1 {
+            assert!((a - 2.0).abs() < 1e-12);
+        }
+        let lo = decode_async(&c, &[-1e9f32; 6]);
+        assert_eq!(lo.0, vec![1; 3]);
+        for &a in &lo.1 {
+            assert!(a.abs() < 1e-12);
+        }
+        // A centered raw action decodes to the mid-box.
+        let mid = decode_async(&c, &[0.0f32; 6]);
+        for &g in &mid.0 {
+            assert!((1..=8).contains(&g));
+        }
+        for &a in &mid.1 {
+            assert!((a - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn async_decode_respects_step_size_bound() {
+        // A large step size shrinks the Eq. (29)-feasible γ1 range; the
+        // decode must clamp to it even when the raw action saturates high.
+        let b = BoundParams {
+            gamma1_max: 8.0,
+            gamma2_max: 4.0,
+            m_edges: 3.0,
+            n_devices: 30.0,
+            eta: 0.4,
+            smooth_l: 1.0,
+            sigma2: 1.0,
+            grad_norm2: 1.0,
+        };
+        let cap = max_feasible_gamma1(&b, 8, 1.0);
+        assert!(cap < 8);
+        let c = acfg(Some(b));
+        let (g1, _) = decode_async(&c, &[1e9f32; 6]);
+        assert_eq!(g1, vec![cap; 3]);
+        // The floor survives even an infeasible bound.
+        let mut b1 = acfg(None);
+        b1.bound = Some(BoundParams { eta: 10.0, ..b });
+        let (g1, _) = decode_async(&b1, &[1e9f32; 6]);
+        assert_eq!(g1, vec![1; 3]);
     }
 
     #[test]

@@ -1,20 +1,155 @@
 //! Algorithm 1: Arena's training loop, plus greedy policy rollout.
 //!
+//! The loop is generic over a [`ControlledEngine`]: the barrier
+//! [`HflEngine`] (the paper's setting — the action decodes to per-edge
+//! (γ1, γ2) frequencies under the §3.6 nearest-feasible projection) and
+//! the event-driven [`AsyncHflEngine`] (the ROADMAP's staleness-adaptive
+//! γ — the same 2M-wide action decodes to per-edge local-epoch counts
+//! γ1_j plus staleness exponents α_j, re-armed at every cloud decision
+//! point through `AsyncHflEngine::set_control`). The event engine's
+//! episodes run over the extended control state (`agent::state` ctrl
+//! layout) and the matching `_ctrl` PPO artifacts.
+//!
 //! The Hwamei ablation (paper Table 2) is the same loop with the §3.6
 //! enhancements off: plain discounted returns instead of GAE, naive
 //! rounding instead of the nearest-feasible-solution projection.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
-use crate::hfl::{HflEngine, RoundStats, RunHistory};
+use crate::hfl::{AsyncHflEngine, HflEngine, RoundStats, RunHistory};
 use crate::runtime::Runtime;
 use crate::util::rng::Rng;
 
-use super::action::{nearest_feasible, to_continuous, ActionConfig};
+use super::action::{
+    decode_async, nearest_feasible, to_continuous, ActionConfig,
+    AsyncActionConfig,
+};
+use super::bound::BoundParams;
 use super::gae::{discounted_returns, gae_advantages, normalize};
 use super::memory::{Trajectory, Transition};
 use super::ppo::PpoAgent;
-use super::state::StateBuilder;
+use super::state::{StateBuilder, StateScales};
+
+/// What Algorithm 1 needs from an engine: episode bootstrap, one decision
+/// interval per action, and access to the barrier core for state
+/// construction (PCA scores, remaining time, config).
+pub trait ControlledEngine {
+    /// The barrier core this engine is built on.
+    fn base(&self) -> &HflEngine;
+
+    /// Start a fresh episode and execute the bootstrap interval
+    /// (Algorithm 1 line 3) at the configured default knobs.
+    fn begin_episode(&mut self) -> Result<RoundStats>;
+
+    /// Decode `raw` (2M coordinates) and execute one decision interval;
+    /// `None` once the run's time budget is exhausted.
+    fn step_decided(
+        &mut self,
+        raw: &[f32],
+        nearest: bool,
+    ) -> Result<Option<RoundStats>>;
+
+    /// Whether the DRL state carries the per-edge control columns (the
+    /// agent then runs the `_ctrl` artifact variant).
+    fn ctrl_state(&self) -> bool;
+}
+
+impl ControlledEngine for HflEngine {
+    fn base(&self) -> &HflEngine {
+        self
+    }
+
+    fn begin_episode(&mut self) -> Result<RoundStats> {
+        self.reset();
+        let m = self.edges();
+        let g1 = vec![self.cfg.hfl.gamma1; m];
+        let g2 = vec![self.cfg.hfl.gamma2; m];
+        self.run_round(&g1, &g2, None)
+    }
+
+    fn step_decided(
+        &mut self,
+        raw: &[f32],
+        nearest: bool,
+    ) -> Result<Option<RoundStats>> {
+        if self.remaining_time() <= 0.0 {
+            return Ok(None);
+        }
+        let m = self.edges();
+        let acfg = ActionConfig {
+            m,
+            gamma1_max: self.cfg.hfl.gamma1_max,
+            gamma2_max: self.cfg.hfl.gamma2_max,
+            nearest_solution: nearest,
+        };
+        let cont1: Vec<f64> = (0..m)
+            .map(|j| to_continuous(raw[j], acfg.gamma1_max))
+            .collect();
+        let cont2: Vec<f64> = (0..m)
+            .map(|j| to_continuous(raw[m + j], acfg.gamma2_max))
+            .collect();
+        let budget = self.remaining_time();
+        let (g1, g2) = nearest_feasible(
+            &acfg,
+            &cont1,
+            &cont2,
+            |j, a, b| self.predict_edge_time(j, a, b),
+            budget,
+        );
+        self.run_round(&g1, &g2, None).map(Some)
+    }
+
+    fn ctrl_state(&self) -> bool {
+        false
+    }
+}
+
+impl ControlledEngine for AsyncHflEngine {
+    fn base(&self) -> &HflEngine {
+        &self.eng
+    }
+
+    fn begin_episode(&mut self) -> Result<RoundStats> {
+        let m = self.edges();
+        let g1 = vec![self.eng.cfg.hfl.gamma1; m];
+        self.begin_run(&g1)?;
+        self.run_window()?.context(
+            "time budget shorter than one cloud window: no bootstrap round",
+        )
+    }
+
+    fn step_decided(
+        &mut self,
+        raw: &[f32],
+        nearest: bool,
+    ) -> Result<Option<RoundStats>> {
+        let cfg = &self.eng.cfg;
+        let acfg = AsyncActionConfig {
+            m: self.edges(),
+            gamma1_max: cfg.hfl.gamma1_max,
+            alpha_min: cfg.sync.alpha_min,
+            alpha_max: cfg.sync.alpha_max,
+            // Arena gates γ1_j through Eq. 29 (same diagnostic constants
+            // as the Fig. 7 bound report); the Hwamei ablation decodes
+            // naively, mirroring its skipped projection on the barrier
+            // engine.
+            bound: if nearest {
+                Some(BoundParams::diagnostic(cfg))
+            } else {
+                None
+            },
+        };
+        let (g1, alpha) = decode_async(&acfg, raw);
+        // Re-arm the per-edge aggregation periods and staleness exponents
+        // at the decision point; in-flight work is untouched.
+        self.set_control(&g1, &alpha)?;
+        self.run_window()
+    }
+
+    fn ctrl_state(&self) -> bool {
+        true
+    }
+}
 
 #[derive(Clone, Debug)]
 pub struct ArenaOptions {
@@ -70,65 +205,78 @@ pub fn reward(
     upsilon.powf(acc_now) - upsilon.powf(acc_prev) - epsilon * avg_energy
 }
 
-/// Train the PPO agent over `opts.episodes` episodes (Algorithm 1).
-/// Returns the trained agent, per-episode logs, and the state builder
-/// (holding the fitted PCA) for later greedy rollouts.
-pub fn train_arena(
-    engine: &mut HflEngine,
+/// The (fresh) agent and state builder matching `engine`'s layout: the
+/// `_ctrl` variant over the extended control state for the event engine,
+/// the plain n_PCA variant for the barrier engine. Scales derive from the
+/// run's own link/energy configuration. Shared by the training loop and
+/// the harness's cache-restore paths so restored policies always see the
+/// normalization they were trained under.
+pub(crate) fn agent_for<E: ControlledEngine>(
+    engine: &E,
+    rt: &Runtime,
+) -> Result<(PpoAgent, StateBuilder)> {
+    let base = engine.base();
+    let cfg = &base.cfg;
+    let agent = if engine.ctrl_state() {
+        anyhow::ensure!(
+            cfg.agent.npca == rt.manifest.config.npca,
+            "the _ctrl agent variant is only built at the manifest default \
+             n_PCA ({}); config asks for {}",
+            rt.manifest.config.npca,
+            cfg.agent.npca
+        );
+        PpoAgent::new_ctrl_variant(rt)?
+    } else {
+        PpoAgent::new_variant(rt, cfg.agent.npca)?
+    };
+    let scales = StateScales::derive(
+        cfg,
+        &base.net,
+        rt.manifest.config.nb,
+        base.p,
+    );
+    let sb = StateBuilder::new(base.edges(), cfg.agent.npca, scales)
+        .with_ctrl(engine.ctrl_state());
+    Ok((agent, sb))
+}
+
+/// Train the PPO agent over `opts.episodes` episodes (Algorithm 1) on any
+/// [`ControlledEngine`]. Returns the trained agent, per-episode logs, and
+/// the state builder (holding the fitted PCA) for later greedy rollouts.
+pub fn train_arena_on<E: ControlledEngine>(
+    engine: &mut E,
     opts: &ArenaOptions,
 ) -> Result<(PpoAgent, StateBuilder, Vec<EpisodeLog>)> {
-    let mut agent_rt = Runtime::load(&engine.cfg.artifacts_dir, &[])?;
-    let mut agent =
-        PpoAgent::new_variant(&agent_rt, engine.cfg.agent.npca)?;
+    let cfg = engine.base().cfg.clone();
+    let mut agent_rt = Runtime::load(&cfg.artifacts_dir, &[])?;
+    let (mut agent, mut sb) = agent_for(engine, &agent_rt)?;
     let (fwd_art, upd_art) = agent.artifact_names();
     agent_rt.compile(&fwd_art)?;
     agent_rt.compile(&upd_art)?;
-    let m = engine.edges();
-    let cfg = engine.cfg.clone();
-    let mut sb = StateBuilder::new(m, cfg.agent.npca, cfg.hfl.threshold_time);
-    let acfg = ActionConfig {
-        m,
-        gamma1_max: cfg.hfl.gamma1_max,
-        gamma2_max: cfg.hfl.gamma2_max,
-        nearest_solution: opts.nearest_solution,
-    };
     let mut rng = Rng::new(cfg.seed ^ 0xa6e47);
     let mut logs = Vec::with_capacity(opts.episodes);
     let n_dev = cfg.topology.devices as f64;
 
     for ep in 0..opts.episodes {
-        engine.reset();
-        // Line 3: first cloud aggregation at the configured frequencies.
-        let mut last = engine.run_round(
-            &vec![cfg.hfl.gamma1; m],
-            &vec![cfg.hfl.gamma2; m],
-            None,
-        )?;
+        // Line 3: bootstrap interval at the configured frequencies.
+        let mut last = engine.begin_episode()?;
         // Line 4: fit the PCA module once, on the first episode's models.
         if !sb.pca_ready() {
-            sb.fit_pca(engine);
+            sb.fit_pca(engine.base());
         }
         let mut traj = Trajectory::default();
         let mut ep_energy = last.energy;
         // Lines 7-17: interact until the time budget runs out.
-        while engine.remaining_time() > 0.0 && traj.len() < agent.batch() {
-            let state = sb.build(engine, &last)?;
+        while engine.base().remaining_time() > 0.0
+            && traj.len() < agent.batch()
+        {
+            let state = sb.build(engine.base(), &last)?;
             let (raw, logp, value) = agent.act(&agent_rt, &state, &mut rng)?;
-            let cont1: Vec<f64> = (0..m)
-                .map(|j| to_continuous(raw[j], acfg.gamma1_max))
-                .collect();
-            let cont2: Vec<f64> = (0..m)
-                .map(|j| to_continuous(raw[m + j], acfg.gamma2_max))
-                .collect();
-            let budget = engine.remaining_time();
-            let (g1, g2) = nearest_feasible(
-                &acfg,
-                &cont1,
-                &cont2,
-                |j, a, b| engine.predict_edge_time(j, a, b),
-                budget,
-            );
-            let stats = engine.run_round(&g1, &g2, None)?;
+            let Some(stats) =
+                engine.step_decided(&raw, opts.nearest_solution)?
+            else {
+                break;
+            };
             let r = reward(
                 cfg.agent.upsilon,
                 cfg.agent.epsilon,
@@ -146,7 +294,7 @@ pub fn train_arena(
             ep_energy += stats.energy;
             last = stats;
         }
-        // Lines 19: update the agent from the episode's trajectory.
+        // Line 19: update the agent from the episode's trajectory.
         let rewards = traj.rewards();
         let values = traj.values();
         let (mut adv, ret) = if opts.use_gae {
@@ -200,54 +348,49 @@ pub fn train_arena(
     Ok((agent, sb, logs))
 }
 
-/// Greedy (mean-action) rollout of a trained policy; returns the round
-/// history for time-to-accuracy / threshold-time figures.
+/// Train on the barrier engine (the paper's Algorithm 1 setting).
+pub fn train_arena(
+    engine: &mut HflEngine,
+    opts: &ArenaOptions,
+) -> Result<(PpoAgent, StateBuilder, Vec<EpisodeLog>)> {
+    train_arena_on(engine, opts)
+}
+
+/// Greedy (mean-action) rollout of a trained policy on any
+/// [`ControlledEngine`]; returns the round history for time-to-accuracy /
+/// threshold-time figures.
+pub fn run_policy_on<E: ControlledEngine>(
+    engine: &mut E,
+    agent: &PpoAgent,
+    sb: &StateBuilder,
+    nearest_solution: bool,
+) -> Result<RunHistory> {
+    let mut agent_rt = Runtime::load(&engine.base().cfg.artifacts_dir, &[])?;
+    let (fwd_art, _) = agent.artifact_names();
+    agent_rt.compile(&fwd_art)?;
+    let mut hist = RunHistory::default();
+    let mut last = engine.begin_episode()?;
+    hist.push(last.clone());
+    while engine.base().remaining_time() > 0.0 {
+        let state = sb.build(engine.base(), &last)?;
+        let (mu, _) = agent.act_mean(&agent_rt, &state)?;
+        let Some(stats) = engine.step_decided(&mu, nearest_solution)? else {
+            break;
+        };
+        hist.push(stats.clone());
+        last = stats;
+    }
+    Ok(hist)
+}
+
+/// Greedy rollout on the barrier engine.
 pub fn run_arena_policy(
     engine: &mut HflEngine,
     agent: &PpoAgent,
     sb: &StateBuilder,
     nearest_solution: bool,
 ) -> Result<RunHistory> {
-    let mut agent_rt = Runtime::load(&engine.cfg.artifacts_dir, &[])?;
-    let (fwd_art, _) = agent.artifact_names();
-    agent_rt.compile(&fwd_art)?;
-    let cfg = engine.cfg.clone();
-    let m = engine.edges();
-    let acfg = ActionConfig {
-        m,
-        gamma1_max: cfg.hfl.gamma1_max,
-        gamma2_max: cfg.hfl.gamma2_max,
-        nearest_solution,
-    };
-    engine.reset();
-    let mut hist = RunHistory::default();
-    let mut last: RoundStats = engine.run_round(
-        &vec![cfg.hfl.gamma1; m],
-        &vec![cfg.hfl.gamma2; m],
-        None,
-    )?;
-    hist.push(last.clone());
-    while engine.remaining_time() > 0.0 {
-        let state = sb.build(engine, &last)?;
-        let (mu, _) = agent.act_mean(&agent_rt, &state)?;
-        let cont1: Vec<f64> = (0..m)
-            .map(|j| to_continuous(mu[j], acfg.gamma1_max))
-            .collect();
-        let cont2: Vec<f64> = (0..m)
-            .map(|j| to_continuous(mu[m + j], acfg.gamma2_max))
-            .collect();
-        let budget = engine.remaining_time();
-        let (g1, g2) = nearest_feasible(
-            &acfg,
-            &cont1,
-            &cont2,
-            |j, a, b| engine.predict_edge_time(j, a, b),
-            budget,
-        );
-        last = engine.run_round(&g1, &g2, None)?;
-        hist.push(last.clone());
-    }
-    Ok(hist)
+    run_policy_on(engine, agent, sb, nearest_solution)
 }
 
 #[cfg(test)]
@@ -280,5 +423,20 @@ mod tests {
         let h = ArenaOptions::hwamei(10);
         assert!(a.use_gae && a.nearest_solution);
         assert!(!h.use_gae && !h.nearest_solution);
+    }
+
+    #[test]
+    fn diagnostic_bound_tracks_topology() {
+        let mut cfg = crate::config::ExperimentConfig::mnist();
+        cfg.hfl.gamma1_max = 7;
+        cfg.topology.edges = 4;
+        let b = BoundParams::diagnostic(&cfg);
+        assert!((b.gamma1_max - 7.0).abs() < 1e-12);
+        assert!((b.m_edges - 4.0).abs() < 1e-12);
+        // The diagnostic step size keeps the whole default box feasible.
+        assert_eq!(
+            crate::agent::bound::max_feasible_gamma1(&b, 7, 1.0),
+            7
+        );
     }
 }

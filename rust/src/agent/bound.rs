@@ -19,6 +19,25 @@ pub struct BoundParams {
     pub grad_norm2: f64,
 }
 
+impl BoundParams {
+    /// The diagnostic constants (η, L, σ², ‖∇f‖²) over a run's topology
+    /// box — one constructor shared by the Fig. 7 bound report and the
+    /// per-edge action-decode gate, so the bound the harness reports and
+    /// the cap the agent trains under cannot drift apart.
+    pub fn diagnostic(cfg: &crate::config::ExperimentConfig) -> Self {
+        BoundParams {
+            gamma1_max: cfg.hfl.gamma1_max as f64,
+            gamma2_max: cfg.hfl.gamma2_max as f64,
+            m_edges: cfg.topology.edges as f64,
+            n_devices: cfg.topology.devices as f64,
+            eta: 0.003,
+            smooth_l: 1.0,
+            sigma2: 1.0,
+            grad_norm2: 1.0,
+        }
+    }
+}
+
 /// RHS of Eq. (16): expected one-round decrease bound
 /// E[f(w(k+1))] − E[f(w(k))] ≤ bound(...). Negative = guaranteed descent.
 pub fn convergence_bound(p: &BoundParams) -> f64 {
@@ -52,6 +71,23 @@ pub fn step_size_feasible(
             + g1t * g1t * gamma2_j * (gamma2_j - 1.0) / 2.0)
         - l * eta * gamma1_j * gamma2_j
         >= 0.0
+}
+
+/// Largest γ1ʲ in `[1, gamma1_max]` that keeps the Eq. (29) step-size
+/// condition satisfiable at `gamma2_j` — the bound the per-edge action
+/// decode clamps against (`agent::action::decode_async`). Falls back to 1
+/// when even that is infeasible (the run still has to train).
+pub fn max_feasible_gamma1(
+    p: &BoundParams,
+    gamma1_max: usize,
+    gamma2_j: f64,
+) -> usize {
+    for g1 in (1..=gamma1_max.max(1)).rev() {
+        if step_size_feasible(p, g1 as f64, gamma2_j) {
+            return g1;
+        }
+    }
+    1
 }
 
 #[cfg(test)]
@@ -105,5 +141,19 @@ mod tests {
         assert!(step_size_feasible(&p, 5.0, 4.0));
         p.eta = 10.0;
         assert!(!step_size_feasible(&p, 5.0, 4.0));
+    }
+
+    #[test]
+    fn max_feasible_gamma1_clamps_with_eta() {
+        let mut p = base();
+        // Small step size: the whole box is feasible.
+        assert_eq!(max_feasible_gamma1(&p, 8, 1.0), 8);
+        // A large step size shrinks the feasible γ1 range; the floor is 1
+        // even when nothing satisfies Eq. (29).
+        p.eta = 0.4;
+        let g = max_feasible_gamma1(&p, 8, 1.0);
+        assert!(g < 8, "eta=0.4 must cut the feasible range, got {g}");
+        p.eta = 10.0;
+        assert_eq!(max_feasible_gamma1(&p, 8, 1.0), 1);
     }
 }

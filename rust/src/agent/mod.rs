@@ -10,10 +10,16 @@ pub mod memory;
 pub mod ppo;
 pub mod state;
 
-pub use action::{nearest_feasible, ActionConfig, DecidedAction};
-pub use arena::{train_arena, ArenaOptions, EpisodeLog};
+pub use action::{
+    decode_async, nearest_feasible, ActionConfig, AsyncActionConfig,
+    DecidedAction,
+};
+pub use arena::{
+    run_arena_policy, run_policy_on, train_arena, train_arena_on,
+    ArenaOptions, ControlledEngine, EpisodeLog,
+};
 pub use bound::convergence_bound;
 pub use gae::gae_advantages;
 pub use memory::{Trajectory, Transition};
 pub use ppo::PpoAgent;
-pub use state::StateBuilder;
+pub use state::{StateBuilder, StateScales};

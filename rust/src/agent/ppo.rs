@@ -68,6 +68,36 @@ impl PpoAgent {
         })
     }
 
+    /// Variant over the extended control-state layout — an
+    /// (M+1) x (n_pca + 6) state whose rows carry the per-edge staleness
+    /// features of the event-driven engine (`agent::state` ctrl layout).
+    /// Requires the `_ctrl` artifacts (aot.py emits them next to the
+    /// defaults); the action head stays 2M wide, decoded as per-edge
+    /// (γ1_j, α_j) instead of (γ1_j, γ2_j).
+    pub fn new_ctrl_variant(rt: &Runtime) -> Result<Self> {
+        let c = &rt.manifest.config;
+        anyhow::ensure!(
+            rt.manifest.artifacts.contains_key("ppo_actor_fwd_ctrl"),
+            "no ppo_actor_fwd_ctrl artifact in the manifest — rebuild the \
+             artifact set (`make artifacts`) to get the control-state \
+             variants"
+        );
+        let theta = rt.load_init_params("ppo_ctrl")?;
+        let n = theta.len();
+        Ok(PpoAgent {
+            theta,
+            adam_m: vec![0.0; n],
+            adam_v: vec![0.0; n],
+            step_t: 0.0,
+            m: c.m_edges,
+            npca: c.npca,
+            state_len: (c.m_edges + 1) * (c.npca + 6),
+            act_len: 2 * c.m_edges,
+            batch: c.traj_batch,
+            suffix: "_ctrl".into(),
+        })
+    }
+
     /// Artifact names this agent executes (for Runtime::load).
     pub fn artifact_names(&self) -> (String, String) {
         (
@@ -96,7 +126,7 @@ impl PpoAgent {
     ) -> Result<(Vec<f32>, Vec<f32>, f64)> {
         anyhow::ensure!(state.len() == self.state_len, "state length");
         let rows = self.m + 1;
-        let cols = self.npca + 3;
+        let cols = self.state_len / rows;
         let out = rt.execute(
             &format!("ppo_actor_fwd{}", self.suffix),
             &[
@@ -170,7 +200,7 @@ impl PpoAgent {
         batch: &PpoBatch,
     ) -> Result<UpdateLosses> {
         let rows = self.m + 1;
-        let cols = self.npca + 3;
+        let cols = self.state_len / rows;
         let b = self.batch;
         self.step_t += 1.0;
         let n = self.theta.len();

@@ -1,8 +1,22 @@
 //! DRL state construction (paper §3.2, Fig. 6).
 //!
-//! s(k) is an (M+1) x (n_pca + 3) matrix:
+//! s(k) is an (M+1) x C matrix. In the paper's barrier setting
+//! C = n_pca + 3:
 //!   row 0:      [ PCA(cloud model)  |  k, T_re(k), A_test(k-1) ]
 //!   row j=1..M: [ PCA(edge_j model) |  T_j^SGD,  T_j^ec,  E_j  ]
+//! When the builder drives the event-driven engine (`ctrl` layout,
+//! C = n_pca + 6) every row gains three control columns, sourced from the
+//! [`crate::hfl::EdgeStats`] control observables the async engine records
+//! at each cloud decision point:
+//!   row 0:      [ ... | mean staleness, mean in-flight, mean quorum fill ]
+//!   row j=1..M: [ ... | s_j, u_j, q_j ]
+//! where s_j is the observed staleness of edge j's last landed upload (in
+//! cloud windows), u_j the uploads still in flight on its uplink, and q_j
+//! its semi-sync quorum fill. These are what the per-edge (γ1_j, α_j)
+//! policy reacts to: a persistently stale edge wants lighter local work
+//! and a harsher discount, a saturated uplink wants a longer aggregation
+//! period.
+//!
 //! The PCA loading vectors are fit once after the first cloud aggregation
 //! (on the cloud, Gram trick — see pca/) and reused; the projection itself
 //! runs through the pca_project Pallas artifact.
@@ -14,6 +28,12 @@
 //! round-trip, so the agent sees the communication times the run actually
 //! experienced.
 //!
+//! Normalization scales are derived from the run's own configuration
+//! ([`StateScales::derive`]): the communication scale from the configured
+//! link bandwidths and model size, the energy scale from the power band
+//! and per-round epoch budget — so state entries stay O(1) across
+//! topologies instead of assuming one calibration.
+//!
 //! Under churn-driven re-clustering (`hfl::membership`) the *composition*
 //! of edge j changes mid-run, but the state stays well-formed: M is
 //! fixed, and every per-edge feature is recomputed against the current
@@ -24,8 +44,10 @@
 
 use anyhow::Result;
 
+use crate::config::ExperimentConfig;
 use crate::hfl::{HflEngine, RoundStats};
 use crate::pca::PcaModel;
+use crate::sim::{EnergyModel, NetworkModel, Region};
 
 /// Normalization scales so every state entry is O(1) for the CNN trunk.
 #[derive(Clone, Debug)]
@@ -36,6 +58,10 @@ pub struct StateScales {
     pub comm_time: f64,
     pub energy: f64,
     pub pca: f64,
+    /// Cloud windows of upload staleness treated as O(1) (ctrl layout).
+    pub staleness: f64,
+    /// Concurrent uplink transfers treated as O(1) (ctrl layout).
+    pub in_flight: f64,
 }
 
 impl Default for StateScales {
@@ -47,6 +73,57 @@ impl Default for StateScales {
             comm_time: 60.0,
             energy: 50.0,
             pca: 10.0,
+            staleness: 4.0,
+            in_flight: 4.0,
+        }
+    }
+}
+
+impl StateScales {
+    /// Derive the scales from a run's configuration instead of the fixed
+    /// defaults: the communication scale is the worst-region expected
+    /// round trip under the configured `link.*` bandwidth scales and model
+    /// size, the SGD scale the slowest plausible per-dispatch compute
+    /// (γ̃1 local epochs of `nb` batches at 2x interference slowdown), and
+    /// the energy scale one edge's round energy at mid-band power. `nb`
+    /// and `p` come from the artifact manifest (batches per epoch, flat
+    /// parameter count).
+    pub fn derive(
+        cfg: &ExperimentConfig,
+        net: &NetworkModel,
+        nb: usize,
+        p: usize,
+    ) -> StateScales {
+        let pbytes = crate::sim::network::model_bytes(p);
+        let comm = [Region::Cn, Region::Us]
+            .iter()
+            .map(|&r| {
+                let up = cfg.link.up_bandwidth_scale;
+                let down = cfg.link.down_bandwidth_scale;
+                net.one_way_mean(r, pbytes, up)
+                    + net.one_way_mean(r, pbytes, down)
+            })
+            .fold(0.0, f64::max);
+        let sgd =
+            cfg.sim.sgd_base_time * 2.0 * (nb * cfg.hfl.gamma1_max) as f64;
+        let energy_model =
+            EnergyModel::new(cfg.sim.power_idle, cfg.sim.power_max);
+        let p_mid = 0.5 * (cfg.sim.power_idle + cfg.sim.power_max);
+        let t_round = cfg.sim.sgd_base_time
+            * (nb * cfg.hfl.gamma1 * cfg.hfl.gamma2) as f64;
+        let per_device = energy_model.to_mah(p_mid, t_round);
+        let energy = per_device * cfg.devices_per_edge().max(1) as f64;
+        StateScales {
+            round: 10.0,
+            time: cfg.hfl.threshold_time,
+            sgd_time: sgd.max(1e-9),
+            comm_time: comm.max(1e-9),
+            energy: energy.max(1e-9),
+            pca: 10.0,
+            staleness: 4.0,
+            // An edge rarely keeps more uploads in flight than it has
+            // members (one per report), so that is the O(1) yardstick.
+            in_flight: cfg.devices_per_edge().max(1) as f64,
         }
     }
 }
@@ -55,21 +132,31 @@ pub struct StateBuilder {
     pub npca: usize,
     pub m: usize,
     pub scales: StateScales,
+    /// Extended layout carrying the per-edge control (staleness) columns.
+    pub ctrl: bool,
     pca: Option<PcaModel>,
 }
 
 impl StateBuilder {
-    pub fn new(m: usize, npca: usize, threshold_time: f64) -> Self {
-        let scales = StateScales {
-            time: threshold_time,
-            ..Default::default()
-        };
+    /// `scales` should come from [`StateScales::derive`] on any real run
+    /// (tests may pass `StateScales::default()`): requiring them at
+    /// construction keeps the topology-independent fallback off every
+    /// reachable training/rollout path.
+    pub fn new(m: usize, npca: usize, scales: StateScales) -> Self {
         StateBuilder {
             npca,
             m,
             scales,
+            ctrl: false,
             pca: None,
         }
+    }
+
+    /// Switch to the extended (n_pca + 6 column) control layout; the
+    /// matching `_ctrl` PPO artifacts must be built for it.
+    pub fn with_ctrl(mut self, ctrl: bool) -> Self {
+        self.ctrl = ctrl;
+        self
     }
 
     pub fn rows(&self) -> usize {
@@ -77,7 +164,7 @@ impl StateBuilder {
     }
 
     pub fn cols(&self) -> usize {
-        self.npca + 3
+        self.npca + if self.ctrl { 6 } else { 3 }
     }
 
     pub fn pca_ready(&self) -> bool {
@@ -111,8 +198,7 @@ impl StateBuilder {
             s[c] = v / sc.pca as f32;
         }
         s[self.npca] = last.k as f32 / sc.round as f32;
-        s[self.npca + 1] =
-            (engine.remaining_time() / sc.time) as f32;
+        s[self.npca + 1] = (engine.remaining_time() / sc.time) as f32;
         s[self.npca + 2] = last.accuracy as f32;
         // Rows 1..=M: edge PCA + h_j (Eq. 7).
         for j in 0..self.m {
@@ -126,6 +212,25 @@ impl StateBuilder {
             // transfers (see EdgeStats), not a resampled draw.
             s[base + self.npca + 1] = (e.t_ec / sc.comm_time) as f32;
             s[base + self.npca + 2] = (e.energy / sc.energy) as f32;
+            if self.ctrl {
+                s[base + self.npca + 3] = (e.staleness / sc.staleness) as f32;
+                s[base + self.npca + 4] =
+                    (e.in_flight_up as f64 / sc.in_flight) as f32;
+                s[base + self.npca + 5] = e.quorum_fill as f32;
+            }
+        }
+        if self.ctrl {
+            // Row 0 control columns: population means of the per-edge
+            // signals (the cloud's aggregate view of how stale its inputs
+            // run).
+            let m = self.m.max(1) as f32;
+            for off in 0..3 {
+                let mut sum = 0.0f32;
+                for j in 0..self.m {
+                    sum += s[(j + 1) * cols + self.npca + 3 + off];
+                }
+                s[self.npca + 3 + off] = sum / m;
+            }
         }
         Ok(s)
     }
@@ -138,14 +243,41 @@ mod tests {
     #[test]
     fn scales_default_sane() {
         let s = StateScales::default();
-        assert!(s.time > 0.0 && s.energy > 0.0);
+        assert!(s.time > 0.0 && s.energy > 0.0 && s.staleness > 0.0);
     }
 
     #[test]
     fn dims() {
-        let b = StateBuilder::new(5, 6, 3000.0);
+        let b = StateBuilder::new(5, 6, StateScales::default());
         assert_eq!(b.rows(), 6);
         assert_eq!(b.cols(), 9);
         assert!(!b.pca_ready());
+        let b = b.with_ctrl(true);
+        assert_eq!(b.cols(), 12, "ctrl layout adds 3 columns");
+    }
+
+    #[test]
+    fn derived_scales_track_config() {
+        let cfg = ExperimentConfig::mnist();
+        let net = NetworkModel::from_config(&cfg.sim);
+        let s = StateScales::derive(&cfg, &net, 2, 21_840);
+        assert!((s.time - cfg.hfl.threshold_time).abs() < 1e-12);
+        assert!(s.comm_time > 0.0 && s.energy > 0.0 && s.sgd_time > 0.0);
+        // Halving the uplink bandwidth must widen the comm scale: the
+        // derived scales react to the link config (the old hard-coded
+        // 60.0/50.0 did not).
+        let mut slow = cfg.clone();
+        slow.link.up_bandwidth_scale = 0.25;
+        let s2 = StateScales::derive(&slow, &net, 2, 21_840);
+        assert!(s2.comm_time > s.comm_time);
+        // A heavier epoch budget must widen the energy scale.
+        let mut heavy = cfg.clone();
+        heavy.hfl.gamma1 *= 2;
+        let s3 = StateScales::derive(&heavy, &net, 2, 21_840);
+        assert!(s3.energy > s.energy);
+        // The in-flight yardstick follows the edge population.
+        assert!(
+            (s.in_flight - cfg.devices_per_edge() as f64).abs() < 1e-12
+        );
     }
 }

@@ -62,10 +62,8 @@ pub fn share_assignment(engine: &HflEngine) -> Vec<usize> {
     let regions: Vec<_> = (0..m)
         .map(|j| engine.topo.edges[j].region)
         .collect();
-    let dev_region =
-        |d: usize, a: &[usize]| regions[a[d]];
-    let mut best =
-        objective(&device_hists, &global, &assignment, m, classes);
+    let dev_region = |d: usize, a: &[usize]| regions[a[d]];
+    let mut best = objective(&device_hists, &global, &assignment, m, classes);
     // Greedy swap descent (same-region pairs keep sizes balanced and the
     // communication structure intact).
     let mut improved = true;

@@ -9,7 +9,7 @@
 
 use anyhow::{bail, Context, Result};
 
-use crate::agent::{train_arena, ArenaOptions};
+use crate::agent::{run_policy_on, train_arena, train_arena_on, ArenaOptions};
 use crate::baselines;
 use crate::config::{ExperimentConfig, SyncModeCfg};
 use crate::exp;
@@ -26,10 +26,21 @@ USAGE:
   arena list
 
 SCHEMES: vanilla-fl vanilla-hfl var-freq-a var-freq-b favor share arena hwamei
-         semi-sync async-greedy
-         (the last two pick their sync.mode themselves; tune them with
+         semi-sync async-greedy arena-async
+         (the last three pick their sync.mode themselves; tune them with
          --set sync.quorum=K, sync.staleness_alpha=A, sync.cloud_interval=S;
          --set sim.leave_prob=P / sim.join_prob=P enables device churn)
+
+LEARNED: arena-async trains the DRL agent ON the event engine (sets
+         sync.learned): the action re-arms per-edge local-epoch counts
+         gamma1_j and staleness exponents alpha_j at every cloud decision
+         point, fed by the per-edge staleness/in-flight/quorum state rows.
+         Bound the alpha decode with --set sync.alpha_min=A /
+         sync.alpha_max=B; needs the _ctrl artifacts (make artifacts).
+         train-agent with --set sync.learned=true (and an event
+         sync.mode) trains the same controller standalone.
+         The fig_async_headtohead experiment compares it against fixed
+         semi-sync K and fixed-alpha async at matched energy budgets.
 
 LINKS:   every edge<->cloud transfer is an in-flight event on a per-edge
          uplink/downlink pair; tune with
@@ -92,7 +103,9 @@ pub fn parse_args(argv: &[String]) -> Result<Args> {
     Ok(a)
 }
 
-pub fn config_from(args: &Args) -> Result<ExperimentConfig> {
+/// Build the config from preset/--config plus --set overrides, without
+/// validating — cmd_run adjusts scheme-driven knobs before validation.
+fn config_from_raw(args: &Args) -> Result<ExperimentConfig> {
     let mut cfg = if let Some(path) = args.flags.get("config") {
         ExperimentConfig::load(path)?
     } else {
@@ -106,6 +119,11 @@ pub fn config_from(args: &Args) -> Result<ExperimentConfig> {
     for (k, v) in &args.sets {
         cfg.apply_override(k, v)?;
     }
+    Ok(cfg)
+}
+
+pub fn config_from(args: &Args) -> Result<ExperimentConfig> {
+    let cfg = config_from_raw(args)?;
     cfg.validate()?;
     Ok(cfg)
 }
@@ -131,18 +149,32 @@ pub fn run(argv: Vec<String>) -> Result<()> {
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
-    let cfg = config_from(args)?;
     let scheme = args
         .flags
         .get("scheme")
         .map(|s| s.as_str())
         .unwrap_or("vanilla-hfl");
+    let mut cfg = config_from_raw(args)?;
+    // arena-async picks an event mode itself; flip it before validation
+    // so an explicit --set sync.learned=true isn't bounced by the
+    // learned+synchronous check this scheme would have satisfied anyway.
+    if scheme == "arena-async" && cfg.sync.mode == SyncModeCfg::Synchronous {
+        cfg.sync.mode = SyncModeCfg::Async;
+    }
+    cfg.validate()?;
     println!(
         "running {scheme} on {} (T={}s, {} devices / {} edges)",
         cfg.hfl.dataset.name(),
         cfg.hfl.threshold_time,
         cfg.topology.devices,
         cfg.topology.edges
+    );
+    // A set-but-ignored learned flag must not end up in run provenance:
+    // only arena-async actually drives the learned controller.
+    anyhow::ensure!(
+        !cfg.sync.learned || scheme == "arena-async",
+        "sync.learned is the arena-async scheme's knob; '{scheme}' runs \
+         fixed knobs — drop the flag or use --scheme arena-async"
     );
     let hist = match scheme {
         // Event-driven schemes run on the async engine.
@@ -157,6 +189,23 @@ fn cmd_run(args: &Args) -> Result<()> {
             c.sync.mode = SyncModeCfg::Async;
             let mut engine = AsyncHflEngine::new(c, true)?;
             baselines::async_greedy::async_greedy(&mut engine)?
+        }
+        "arena-async" => {
+            // Learned per-edge (γ1_j, α_j) control of the event engine
+            // (the mode was already flipped to an event one above).
+            let mut c = cfg.clone();
+            c.sync.learned = true;
+            let mut engine = AsyncHflEngine::new(c.clone(), true)?;
+            let opts = ArenaOptions {
+                verbose: true,
+                ..ArenaOptions::arena(c.agent.episodes)
+            };
+            let (agent, sb, _) = train_arena_on(&mut engine, &opts)?;
+            // Roll out on a fresh engine: training advanced the churn
+            // process on the old one, and the reported run should be a
+            // pure function of the seed.
+            let mut engine = AsyncHflEngine::new(c, true)?;
+            run_policy_on(&mut engine, &agent, &sb, true)?
         }
         _ => {
             let mut engine = HflEngine::new(cfg.clone(), true)?;
@@ -222,8 +271,17 @@ fn cmd_train_agent(args: &Args) -> Result<()> {
         ArenaOptions::arena(cfg.agent.episodes)
     };
     opts.verbose = true;
-    let mut engine = HflEngine::new(cfg, true)?;
-    let (_, _, logs) = train_arena(&mut engine, &opts)?;
+    // sync.learned trains the per-edge (γ1_j, α_j) controller on the
+    // event engine; otherwise the paper's barrier agent.
+    let logs = if cfg.sync.learned {
+        let mut engine = AsyncHflEngine::new(cfg, true)?;
+        let (_, _, logs) = train_arena_on(&mut engine, &opts)?;
+        logs
+    } else {
+        let mut engine = HflEngine::new(cfg, true)?;
+        let (_, _, logs) = train_arena(&mut engine, &opts)?;
+        logs
+    };
     let avg_last: f64 = logs
         .iter()
         .rev()
@@ -231,7 +289,10 @@ fn cmd_train_agent(args: &Args) -> Result<()> {
         .map(|l| l.reward)
         .sum::<f64>()
         / logs.len().min(5) as f64;
-    println!("done: {} episodes, mean reward of last 5 = {avg_last:.3}", logs.len());
+    println!(
+        "done: {} episodes, mean reward of last 5 = {avg_last:.3}",
+        logs.len()
+    );
     Ok(())
 }
 
@@ -256,8 +317,10 @@ fn cmd_profile(args: &Args) -> Result<()> {
     let cfg = config_from(args)?;
     let mut rng = crate::util::rng::Rng::new(cfg.seed);
     let topo = crate::hfl::build_topology(&cfg, true, &mut rng)?;
-    println!("profiling-module clustering ({} devices -> {} edges):",
-             cfg.topology.devices, cfg.topology.edges);
+    println!(
+        "profiling-module clustering ({} devices -> {} edges):",
+        cfg.topology.devices, cfg.topology.edges
+    );
     for e in &topo.edges {
         let usages: Vec<f64> = e
             .members
@@ -278,7 +341,9 @@ fn cmd_profile(args: &Args) -> Result<()> {
 
 fn cmd_list() -> Result<()> {
     println!("presets: mnist cifar");
-    println!("schemes: vanilla-fl vanilla-hfl var-freq-a var-freq-b favor share arena hwamei semi-sync async-greedy");
+    println!(
+        "schemes: vanilla-fl vanilla-hfl var-freq-a var-freq-b favor share arena hwamei semi-sync async-greedy arena-async"
+    );
     println!("experiments:");
     for e in exp::EXPERIMENTS {
         println!("  {e}");

@@ -201,8 +201,7 @@ mod tests {
     #[test]
     fn k_equals_one() {
         let mut rng = Rng::new(6);
-        let pts: Vec<Vec<f64>> =
-            (0..10).map(|i| vec![i as f64]).collect();
+        let pts: Vec<Vec<f64>> = (0..10).map(|i| vec![i as f64]).collect();
         let c = balanced_kmeans(&pts, 1, 10, &mut rng);
         assert!(c.assignment.iter().all(|&a| a == 0));
         assert!((c.centroids[0][0] - 4.5).abs() < 1e-9);

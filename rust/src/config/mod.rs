@@ -150,9 +150,19 @@ pub struct SyncConfig {
     /// members, i.e. synchronous-per-edge behavior).
     pub quorum: usize,
     /// Async: staleness discount exponent α of 1/(1+s)^α (0 disables).
+    /// The uniform default every edge starts from; with `learned` on, the
+    /// agent re-arms per-edge α_j inside `[alpha_min, alpha_max]`.
     pub staleness_alpha: f64,
     /// SemiSync/Async: cloud aggregation timer period, simulated seconds.
     pub cloud_interval: f64,
+    /// Drive the event engine with the trained per-edge controller: the
+    /// DRL agent re-arms (γ1_j, α_j) at every cloud decision point
+    /// instead of holding the fixed `hfl.gamma1`/`staleness_alpha` knobs
+    /// (`arena run --scheme arena-async`, harness `fig_async_headtohead`).
+    pub learned: bool,
+    /// Per-edge decode bounds of the learned staleness exponent α_j.
+    pub alpha_min: f64,
+    pub alpha_max: f64,
 }
 
 impl Default for SyncConfig {
@@ -162,6 +172,9 @@ impl Default for SyncConfig {
             quorum: 2,
             staleness_alpha: 0.5,
             cloud_interval: 150.0,
+            learned: false,
+            alpha_min: 0.0,
+            alpha_max: 2.0,
         }
     }
 }
@@ -423,6 +436,13 @@ impl ExperimentConfig {
                 self.sync.staleness_alpha = parse_f()?
             }
             "sync.cloud_interval" => self.sync.cloud_interval = parse_f()?,
+            "sync.learned" => {
+                self.sync.learned = value.parse().map_err(|_| {
+                    anyhow::anyhow!("sync.learned must be true|false")
+                })?
+            }
+            "sync.alpha_min" => self.sync.alpha_min = parse_f()?,
+            "sync.alpha_max" => self.sync.alpha_max = parse_f()?,
             "link.up_bandwidth_scale" => {
                 self.link.up_bandwidth_scale = parse_f()?
             }
@@ -498,6 +518,24 @@ impl ExperimentConfig {
         if self.sync.cloud_interval <= 0.0 {
             bail!("sync.cloud_interval must be positive");
         }
+        if !(self.sync.alpha_min.is_finite()
+            && self.sync.alpha_max.is_finite()
+            && self.sync.alpha_min >= 0.0
+            && self.sync.alpha_max >= self.sync.alpha_min)
+        {
+            bail!(
+                "sync.alpha_min/alpha_max must be finite with \
+                 0 <= alpha_min <= alpha_max"
+            );
+        }
+        if self.sync.learned && self.sync.mode == SyncModeCfg::Synchronous {
+            bail!(
+                "sync.learned drives the event engine; pick sync.mode \
+                 semi-sync or async (the synchronous agent is the `arena` \
+                 scheme, and `--scheme arena-async` sets both knobs \
+                 automatically)"
+            );
+        }
         for (name, s) in [
             ("link.up_bandwidth_scale", self.link.up_bandwidth_scale),
             ("link.down_bandwidth_scale", self.link.down_bandwidth_scale),
@@ -517,7 +555,9 @@ impl ExperimentConfig {
         Ok(())
     }
 
-    /// Serialize (for run provenance in results/).
+    /// Serialize for run provenance in results/ — complete enough that
+    /// two configs with equal JSON produce the same run (the agent cache
+    /// digests this to detect any environment/normalization change).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("seed", Json::num(self.seed as f64)),
@@ -525,14 +565,51 @@ impl ExperimentConfig {
             ("partition", Json::str(self.hfl.partition.describe())),
             ("devices", Json::num(self.topology.devices as f64)),
             ("edges", Json::num(self.topology.edges as f64)),
+            ("cn_fraction", Json::num(self.topology.cn_fraction)),
+            ("nmax", Json::num(self.topology.nmax as f64)),
+            (
+                "samples_per_device",
+                Json::num(self.hfl.samples_per_device as f64),
+            ),
             ("threshold_time", Json::num(self.hfl.threshold_time)),
             ("gamma1", Json::num(self.hfl.gamma1 as f64)),
             ("gamma2", Json::num(self.hfl.gamma2 as f64)),
+            ("gamma1_max", Json::num(self.hfl.gamma1_max as f64)),
+            ("gamma2_max", Json::num(self.hfl.gamma2_max as f64)),
             ("episodes", Json::num(self.agent.episodes as f64)),
+            ("upsilon", Json::num(self.agent.upsilon)),
             ("epsilon", Json::num(self.agent.epsilon)),
+            ("xi", Json::num(self.agent.xi)),
+            ("lambda", Json::num(self.agent.lambda)),
+            (
+                "update_epochs",
+                Json::num(self.agent.update_epochs as f64),
+            ),
+            ("npca", Json::num(self.agent.npca as f64)),
             ("sync_mode", Json::str(self.sync.mode.name())),
+            ("sync_quorum", Json::num(self.sync.quorum as f64)),
+            (
+                "sync_staleness_alpha",
+                Json::num(self.sync.staleness_alpha),
+            ),
+            ("sync_cloud_interval", Json::num(self.sync.cloud_interval)),
+            ("sync_learned", Json::Bool(self.sync.learned)),
+            ("sync_alpha_min", Json::num(self.sync.alpha_min)),
+            ("sync_alpha_max", Json::num(self.sync.alpha_max)),
+            ("sgd_base_time", Json::num(self.sim.sgd_base_time)),
+            ("cpu_kappa", Json::num(self.sim.cpu_kappa)),
+            ("time_jitter", Json::num(self.sim.time_jitter)),
+            ("power_idle", Json::num(self.sim.power_idle)),
+            ("power_max", Json::num(self.sim.power_max)),
+            ("cn_latency", Json::num(self.sim.cn_latency)),
+            ("cn_bandwidth", Json::num(self.sim.cn_bandwidth)),
+            ("us_latency", Json::num(self.sim.us_latency)),
+            ("us_bandwidth", Json::num(self.sim.us_bandwidth)),
+            ("comm_jitter", Json::num(self.sim.comm_jitter)),
             ("leave_prob", Json::num(self.sim.leave_prob)),
             ("join_prob", Json::num(self.sim.join_prob)),
+            ("native_aggregation", Json::Bool(self.native_aggregation)),
+            ("artifacts_dir", Json::str(&self.artifacts_dir)),
             (
                 "recluster_threshold",
                 Json::num(self.cluster.recluster_threshold),
@@ -625,6 +702,29 @@ mod tests {
         c.apply_override("sync.mode", "async").unwrap();
         assert_eq!(c.sync.mode, SyncModeCfg::Async);
         assert!(c.apply_override("sync.mode", "bogus").is_err());
+    }
+
+    #[test]
+    fn learned_sync_overrides_and_validation() {
+        let mut c = ExperimentConfig::mnist();
+        assert!(!c.sync.learned, "learned control defaults off");
+        // Learned control requires an event-driven mode.
+        c.apply_override("sync.learned", "true").unwrap();
+        assert!(c.validate().is_err());
+        c.apply_override("sync.mode", "async").unwrap();
+        c.apply_override("sync.alpha_min", "0.1").unwrap();
+        c.apply_override("sync.alpha_max", "1.5").unwrap();
+        c.validate().unwrap();
+        assert!(c.sync.learned);
+        assert!((c.sync.alpha_min - 0.1).abs() < 1e-12);
+        assert!((c.sync.alpha_max - 1.5).abs() < 1e-12);
+        // Inverted or non-finite α bounds are rejected.
+        c.sync.alpha_min = 2.0;
+        assert!(c.validate().is_err());
+        c.sync.alpha_min = f64::NAN;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::mnist();
+        assert!(c.apply_override("sync.learned", "maybe").is_err());
     }
 
     #[test]

@@ -100,8 +100,7 @@ impl SyntheticDataset {
     /// Uniform-label test set: (flat images, labels).
     pub fn test_set(&self, n: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
         let mut rng = Rng::new(seed ^ 0x7e57_5e7);
-        let labels: Vec<usize> =
-            (0..n).map(|i| i % self.classes).collect();
+        let labels: Vec<usize> = (0..n).map(|i| i % self.classes).collect();
         let x = self.generate(&labels, &mut rng);
         (x, labels.iter().map(|&l| l as i32).collect())
     }
@@ -223,8 +222,8 @@ mod tests {
         let ds = SyntheticDataset::new(Dataset::Mnist, 7);
         let mut rng = Rng::new(11);
         let sl = ds.sample_len();
-        let a = ds.generate(&vec![0; 32], &mut rng);
-        let b = ds.generate(&vec![1; 32], &mut rng);
+        let a = ds.generate(&[0; 32], &mut rng);
+        let b = ds.generate(&[1; 32], &mut rng);
         let mean = |v: &[f32]| -> Vec<f32> {
             let n = v.len() / sl;
             let mut m = vec![0.0f32; sl];

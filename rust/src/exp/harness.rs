@@ -10,8 +10,9 @@
 use anyhow::{bail, Result};
 
 use crate::agent::{
-    arena::run_arena_policy, train_arena, ArenaOptions, PpoAgent,
-    StateBuilder,
+    arena::{agent_for, run_arena_policy},
+    run_policy_on, train_arena, train_arena_on, ArenaOptions,
+    ControlledEngine, PpoAgent, StateBuilder,
 };
 use crate::baselines::{self, favor::FavorOptions};
 use crate::config::{Dataset, ExperimentConfig, Partition, SyncModeCfg};
@@ -24,7 +25,7 @@ use crate::util::stats;
 
 pub const EXPERIMENTS: &[&str] = &[
     "fig2", "fig3", "fig4", "fig7", "fig8", "fig9", "fig10", "fig11",
-    "fig12", "table1", "table2",
+    "fig12", "table1", "table2", "fig_async_headtohead",
 ];
 
 pub fn run_experiment(name: &str, cfg: &ExperimentConfig) -> Result<()> {
@@ -40,6 +41,7 @@ pub fn run_experiment(name: &str, cfg: &ExperimentConfig) -> Result<()> {
         "fig12" => fig12(cfg),
         "table1" => table1(cfg),
         "table2" => table2(cfg),
+        "fig_async_headtohead" => fig_async_headtohead(cfg),
         other => bail!("unknown experiment '{other}' (try `arena list`)"),
     }
 }
@@ -75,42 +77,29 @@ struct TrainedAgent {
     logs: Vec<crate::agent::EpisodeLog>,
 }
 
-/// Train (or restore) an agent for this engine's config. The cache key
-/// covers everything that changes the learned policy.
-fn trained_agent(
-    engine: &mut HflEngine,
+/// Train (or restore) the agent matching `engine`'s layout — the
+/// barrier policy or the event engine's `_ctrl` controller, keyed by
+/// `agent_cache_key`. On a cache hit, agent_for rebuilds the exact
+/// training-time layout/normalization and the bootstrap interval refits
+/// the PCA; otherwise train and save.
+fn trained_on<E: ControlledEngine>(
+    engine: &mut E,
     opts: &ArenaOptions,
     tag: &str,
 ) -> Result<TrainedAgent> {
-    let cfg = engine.cfg.clone();
-    let key = format!(
-        "{}_{}_{}_d{}_t{}_np{}_{}{}",
+    let key = agent_cache_key(
         tag,
-        cfg.hfl.dataset.name(),
-        cfg.hfl.partition.describe(),
-        cfg.topology.devices,
-        cfg.hfl.threshold_time as u64,
-        cfg.agent.npca,
-        if opts.use_gae { "arena" } else { "hwamei" },
-        if engine.topo.profiled { "" } else { "_noprof" },
+        &engine.base().cfg,
+        opts,
+        engine.base().topo.profiled,
     );
     let path = std::path::PathBuf::from(format!("results/agents/{key}.bin"));
     if path.exists() {
-        // Policy restore still needs a fitted PCA: run the first fixed
-        // round and fit, then load weights.
+        let cfg = engine.base().cfg.clone();
         let rt = Runtime::load(&cfg.artifacts_dir, &[])?;
-        let mut agent = PpoAgent::new_variant(&rt, cfg.agent.npca)?;
-        let m = engine.edges();
-        let mut sb = StateBuilder::new(
-            m,
-            cfg.agent.npca,
-            cfg.hfl.threshold_time,
-        );
-        engine.reset();
-        let g1 = vec![cfg.hfl.gamma1; m];
-        let g2 = vec![cfg.hfl.gamma2; m];
-        engine.run_round(&g1, &g2, None)?;
-        sb.fit_pca(engine);
+        let (mut agent, mut sb) = agent_for(engine, &rt)?;
+        engine.begin_episode()?;
+        sb.fit_pca(engine.base());
         agent.restore(&path)?;
         println!("  [agent cache hit: {key}]");
         return Ok(TrainedAgent {
@@ -119,15 +108,56 @@ fn trained_agent(
             logs: vec![],
         });
     }
-    let (agent, sb, logs) = train_arena(engine, opts)?;
+    let (agent, sb, logs) = train_arena_on(engine, opts)?;
     agent.save(&path)?;
     Ok(TrainedAgent { agent, sb, logs })
+}
+
+/// Cache key for results/agents: human-readable dimensions plus an
+/// FNV-1a digest of the complete config provenance (`cfg.to_json` — link
+/// bandwidths, churn probabilities, every sync/sim knob), so ANY config
+/// change that alters the environment, the action decode, or the derived
+/// state normalization invalidates the cache instead of silently
+/// restoring a mismatched policy. The `sd` segment versions the
+/// derived-scales normalization era; `ctrl` in the tag distinguishes the
+/// event-engine controller.
+fn agent_cache_key(
+    tag: &str,
+    cfg: &ExperimentConfig,
+    opts: &ArenaOptions,
+    profiled: bool,
+) -> String {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in cfg.to_json().to_string().bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    format!(
+        "{}_sd_{}_{}_d{}_t{}_np{}_{}{}_{:016x}",
+        tag,
+        cfg.hfl.dataset.name(),
+        cfg.hfl.partition.describe(),
+        cfg.topology.devices,
+        cfg.hfl.threshold_time as u64,
+        cfg.agent.npca,
+        if opts.use_gae { "arena" } else { "hwamei" },
+        if profiled { "" } else { "_noprof" },
+        h,
+    )
 }
 
 fn scheme_history(
     name: &str,
     cfg: &ExperimentConfig,
 ) -> Result<RunHistory> {
+    // Every scheme here runs fixed knobs; a set-but-ignored learned flag
+    // would record provenance claiming control that never executed (the
+    // learned controller runs in fig_async_headtohead).
+    anyhow::ensure!(
+        !cfg.sync.learned,
+        "sync.learned has no effect on the '{name}' scheme — drop the \
+         flag (the learned controller runs in fig_async_headtohead)"
+    );
     match name {
         "vanilla-fl" => {
             let mut e = HflEngine::new(cfg.clone(), false)?;
@@ -174,7 +204,7 @@ fn scheme_history(
                 ArenaOptions::hwamei(cfg.agent.episodes)
             };
             let mut e = HflEngine::new(cfg.clone(), true)?;
-            let t = trained_agent(&mut e, &opts, "shared")?;
+            let t = trained_on(&mut e, &opts, "shared")?;
             run_arena_policy(&mut e, &t.agent, &t.sb, opts.nearest_solution)
         }
         other => bail!("unknown scheme {other}"),
@@ -310,13 +340,12 @@ fn fig7(cfg: &ExperimentConfig) -> Result<()> {
         ..ArenaOptions::arena(cfg.agent.episodes)
     };
     let (agent, _sb, logs) = train_arena(&mut engine, &opts)?;
+    // Save under trained_on's exact key so fig2/fig8/table2 restore
+    // this training run instead of retraining.
+    let key =
+        agent_cache_key("shared", &engine.cfg, &opts, engine.topo.profiled);
     agent.save(&std::path::PathBuf::from(format!(
-        "results/agents/shared_{}_{}_d{}_t{}_np{}_arena.bin",
-        cfg.hfl.dataset.name(),
-        cfg.hfl.partition.describe(),
-        cfg.topology.devices,
-        cfg.hfl.threshold_time as u64,
-        cfg.agent.npca,
+        "results/agents/{key}.bin"
     )))?;
     let mut w = CsvWriter::create(
         format!("{dir}/{}.csv", cfg.hfl.dataset.name()),
@@ -341,19 +370,15 @@ fn fig7(cfg: &ExperimentConfig) -> Result<()> {
         accs.first().copied().unwrap_or(0.0),
         accs.last().copied().unwrap_or(0.0),
     );
-    // Theorem 1 diagnostic: bound of the executed frequency extremes.
-    let b = crate::agent::convergence_bound(&crate::agent::bound::BoundParams {
-        gamma1_max: cfg.hfl.gamma1_max as f64,
-        gamma2_max: cfg.hfl.gamma2_max as f64,
-        m_edges: cfg.topology.edges as f64,
-        n_devices: cfg.topology.devices as f64,
-        eta: 0.003,
-        smooth_l: 1.0,
-        sigma2: 1.0,
-        grad_norm2: 1.0,
-    });
-    println!("  Theorem-1 one-round bound at (γ̃1,γ̃2)=({},{}): {b:.5} (<0 ⇒ descent)",
-             cfg.hfl.gamma1_max, cfg.hfl.gamma2_max);
+    // Theorem 1 diagnostic: bound of the executed frequency extremes, at
+    // the same constants the per-edge decode gate clamps with.
+    let b = crate::agent::convergence_bound(
+        &crate::agent::bound::BoundParams::diagnostic(&cfg),
+    );
+    println!(
+        "  Theorem-1 one-round bound at (γ̃1,γ̃2)=({},{}): {b:.5} (<0 ⇒ descent)",
+        cfg.hfl.gamma1_max, cfg.hfl.gamma2_max
+    );
     Ok(())
 }
 
@@ -562,7 +587,7 @@ fn fig12(cfg: &ExperimentConfig) -> Result<()> {
         let mut cfg = base.clone();
         cfg.agent.npca = npca;
         let mut e = HflEngine::new(cfg.clone(), true)?;
-        let t = trained_agent(
+        let t = trained_on(
             &mut e,
             &ArenaOptions::arena(cfg.agent.episodes),
             "shared",
@@ -597,7 +622,7 @@ fn table1(cfg: &ExperimentConfig) -> Result<()> {
     );
     for (variant, profiled) in [("cluster", true), ("non-cluster", false)] {
         let mut e = HflEngine::new(cfg.clone(), profiled)?;
-        let t = trained_agent(
+        let t = trained_on(
             &mut e,
             &ArenaOptions::arena(cfg.agent.episodes),
             "shared", // profiling flag is part of the cache key
@@ -615,6 +640,103 @@ fn table1(cfg: &ExperimentConfig) -> Result<()> {
                 format!("{tt:.0}"),
                 format!("{acc:.4}"),
                 format!("{e_dev:.2}"),
+            ])?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// fig_async_headtohead — ROADMAP "async baselines head-to-head": the
+// learned per-edge (γ1_j, α_j) controller vs fixed semi-sync quorum K vs
+// fixed-α async-greedy, on the same event engine and profiled topology,
+// compared at matched energy budgets.
+// ---------------------------------------------------------------------
+
+fn fig_async_headtohead(cfg: &ExperimentConfig) -> Result<()> {
+    let cfg = scaled(cfg);
+    let dir = out_dir("fig_async_headtohead");
+    let mut histories: Vec<(&str, RunHistory)> = Vec::new();
+
+    // Fixed semi-sync: quorum K edges, fixed default γ1 everywhere.
+    let mut semi = cfg.clone();
+    semi.sync.mode = SyncModeCfg::SemiSync;
+    semi.sync.learned = false;
+    let mut e = AsyncHflEngine::new(semi, true)?;
+    histories.push(("semi-sync-k", e.run_to_threshold()?));
+
+    // Fixed-α async at the greedy per-edge local-epoch counts.
+    let mut fixed = cfg.clone();
+    fixed.sync.mode = SyncModeCfg::Async;
+    fixed.sync.learned = false;
+    let mut e = AsyncHflEngine::new(fixed, true)?;
+    let h = baselines::async_greedy::async_greedy(&mut e)?;
+    histories.push(("async-fixed-alpha", h));
+
+    // Arena-learned per-edge (γ1_j, α_j) on the same async engine. The
+    // greedy rollout runs on a FRESH engine: training episodes advance
+    // the mobility/churn process on theirs, and the head-to-head must
+    // compare all three schemes from the identical seed-fresh
+    // environment the fixed baselines start in.
+    let mut learned = cfg.clone();
+    learned.sync.mode = SyncModeCfg::Async;
+    learned.sync.learned = true;
+    let mut e = AsyncHflEngine::new(learned.clone(), true)?;
+    let opts = ArenaOptions::arena(learned.agent.episodes);
+    let t = trained_on(&mut e, &opts, "ctrl")?;
+    let mut e = AsyncHflEngine::new(learned.clone(), true)?;
+    let h = run_policy_on(&mut e, &t.agent, &t.sb, true)?;
+    histories.push(("arena-learned", h));
+
+    // Matched energy budgets: fractions of the *lowest* total spend, so
+    // every scheme has actually reached each budget level.
+    let e_min = histories
+        .iter()
+        .map(|(_, h)| h.total_energy())
+        .fold(f64::INFINITY, f64::min);
+    let n_dev = cfg.topology.devices as f64;
+    let mut w = CsvWriter::create(
+        format!("{dir}/{}.csv", cfg.hfl.dataset.name()),
+        &["scheme", "energy_budget_mah", "energy_budget_per_device_mah",
+          "accuracy", "sim_time", "comm_overlap_frac", "mean_link_util",
+          "mean_staleness"],
+    )?;
+    println!(
+        "fig_async_headtohead ({}): learned (γ1_j, α_j) vs semi-sync K vs \
+         fixed-α async at matched energy budgets",
+        cfg.hfl.dataset.name()
+    );
+    for (name, h) in &histories {
+        h.write_csv(&format!("{dir}/{name}_history.csv"), name)?;
+        for &f in &[0.25, 0.5, 0.75, 1.0] {
+            let budget = f * e_min;
+            let (acc, t_at) = h.at_energy(budget);
+            if t_at <= 0.0 {
+                // Even the scheme's first cloud window costs more than
+                // this budget: there is no state to compare at it, so
+                // flag the row instead of emitting a meaningless 0.
+                println!(
+                    "  {name:<18} E={budget:>8.1} mAh  (first window \
+                     exceeds this budget; row skipped)"
+                );
+                continue;
+            }
+            let (overlap, util) = h.comm_stats_at(t_at);
+            let stale = h.mean_staleness_at(t_at);
+            println!(
+                "  {name:<18} E={budget:>8.1} mAh  acc {acc:.3}  t {t_at:>7.0}s  \
+                 overlap {overlap:.2}  util {util:.2}  staleness {stale:.2}"
+            );
+            w.row(&[
+                name.to_string(),
+                format!("{budget:.2}"),
+                format!("{:.3}", budget / n_dev),
+                format!("{acc:.4}"),
+                format!("{t_at:.1}"),
+                format!("{overlap:.4}"),
+                format!("{util:.4}"),
+                format!("{stale:.4}"),
             ])?;
         }
     }
@@ -643,7 +765,7 @@ fn table2(cfg: &ExperimentConfig) -> Result<()> {
         ("hwamei", ArenaOptions::hwamei(cfg.agent.episodes)),
     ] {
         let mut e = HflEngine::new(cfg.clone(), true)?;
-        let t = trained_agent(&mut e, &opts, "shared")?;
+        let t = trained_on(&mut e, &opts, "shared")?;
         let h =
             run_arena_policy(&mut e, &t.agent, &t.sb, opts.nearest_solution)?;
         let e_dev = h.total_energy() / cfg.topology.devices as f64;

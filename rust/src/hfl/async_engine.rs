@@ -66,6 +66,23 @@
 //! the *observed* duration of the edge's last landed transfers, and the
 //! per-edge `compute_busy`/`up_busy`/`down_busy`/`comm_overlap` fields
 //! split the window into compute vs in-flight communication time.
+//!
+//! # Learned per-edge control
+//!
+//! The timer-driven modes expose the knobs the DRL agent drives
+//! (`agent::arena`, `sync.learned`): [`AsyncHflEngine::begin_run`] /
+//! [`AsyncHflEngine::run_window`] step the run one cloud window at a
+//! time, and [`AsyncHflEngine::set_control`] swaps the per-edge
+//! local-epoch counts γ1_j (the edge-aggregation period — future
+//! dispatches pick it up) and the per-edge staleness exponents α_j
+//! (future discount computations pick them up) at the cloud-aggregation
+//! decision point. Nothing in flight is touched — no queued event,
+//! transfer, or pending training is re-timed — so re-arming with the
+//! values already in force is bitwise invisible, and every run stays a
+//! pure function of the experiment seed. The cloud decision point also
+//! stamps each edge's control observables into `EdgeStats`
+//! (`staleness`/`in_flight_up`/`quorum_fill`) — the rows the extended DRL
+//! state is built from.
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::Arc;
@@ -91,7 +108,10 @@ pub enum SyncMode {
         cloud_interval: f64,
     },
     Async {
-        /// Staleness discount exponent α of `1/(1+s)^α`.
+        /// Staleness discount exponent α of `1/(1+s)^α` — the *immutable
+        /// config default* only. The running engine discounts with its
+        /// per-edge `alpha` vector (seeded from this value, re-armed by
+        /// `set_control`); never read this field on a live run.
         staleness_alpha: f64,
         cloud_interval: f64,
     },
@@ -129,6 +149,17 @@ impl SyncMode {
     }
 }
 
+/// Effective K-quorum against `live` members: clamps to the live count
+/// (never below 1), with `quorum == 0` meaning "all live members".
+pub(crate) fn effective_quorum(quorum: usize, live: usize) -> usize {
+    let live = live.max(1);
+    if quorum == 0 {
+        live
+    } else {
+        quorum.min(live)
+    }
+}
+
 /// True when `reported` outstanding reports satisfy the K-quorum against
 /// the edge's `live` membership. The quorum clamps to the live count, so a
 /// departure that shrinks an edge below K cannot leave its round unclosable
@@ -138,9 +169,7 @@ pub(crate) fn quorum_satisfied(
     quorum: usize,
     live: usize,
 ) -> bool {
-    let live = live.max(1);
-    let eff = if quorum == 0 { live } else { quorum.min(live) };
-    reported >= eff
+    reported >= effective_quorum(quorum, live)
 }
 
 /// A dispatched-but-not-yet-completed local training run. The real compute
@@ -181,8 +210,12 @@ pub struct AsyncHflEngine {
     pub eng: HflEngine,
     pub mode: SyncMode,
     queue: EventQueue,
-    /// Per-edge local epochs for dispatched jobs.
+    /// Per-edge local epochs for dispatched jobs (the edge-aggregation
+    /// period; re-armed by `set_control` at cloud decision points).
     g1: Vec<usize>,
+    /// Per-edge staleness-discount exponents α_j (`Async` mode; default
+    /// `sync.staleness_alpha` everywhere, re-armed by `set_control`).
+    alpha: Vec<f64>,
     /// device -> owning edge.
     dev_edge: Vec<usize>,
     in_flight: Vec<Option<PendingTrain>>,
@@ -258,10 +291,12 @@ impl AsyncHflEngine {
             }
         }
         let g1 = vec![eng.cfg.hfl.gamma1; m];
+        let alpha = vec![eng.cfg.sync.staleness_alpha; m];
         let landed_w = eng.edge_w.clone();
         Ok(AsyncHflEngine {
             queue: EventQueue::new(seed ^ 0xa57c),
             g1,
+            alpha,
             dev_edge,
             in_flight: (0..n).map(|_| None).collect(),
             reported: vec![Vec::new(); m],
@@ -325,8 +360,45 @@ impl AsyncHflEngine {
                 }
                 Ok(hist)
             }
-            _ => self.run_event_loop(g1),
+            _ => {
+                self.begin_run(g1)?;
+                let mut hist = RunHistory::default();
+                while let Some(stats) = self.run_window()? {
+                    hist.push(stats);
+                }
+                Ok(hist)
+            }
         }
+    }
+
+    /// Swap the per-edge control knobs at a cloud-aggregation decision
+    /// point (the learned-sync hook): future dispatches run `g1[j]` local
+    /// epochs per report — re-arming edge j's aggregation period — and
+    /// future staleness discounts use exponent `alpha[j]`. Nothing
+    /// in flight is re-timed, so re-arming with the values already in
+    /// force leaves the run bit-for-bit unchanged.
+    pub fn set_control(&mut self, g1: &[usize], alpha: &[f64]) -> Result<()> {
+        let m = self.edges();
+        anyhow::ensure!(
+            g1.len() == m && alpha.len() == m,
+            "need {m} per-edge control values"
+        );
+        anyhow::ensure!(
+            g1.iter().all(|&g| g >= 1),
+            "per-edge gamma1 must be >= 1"
+        );
+        anyhow::ensure!(
+            alpha.iter().all(|&a| a.is_finite() && a >= 0.0),
+            "per-edge alpha must be finite and >= 0"
+        );
+        self.g1.copy_from_slice(g1);
+        self.alpha.copy_from_slice(alpha);
+        Ok(())
+    }
+
+    /// Current per-edge (γ1_j, α_j) control values.
+    pub fn control(&self) -> (&[usize], &[f64]) {
+        (&self.g1, &self.alpha)
     }
 
     // -----------------------------------------------------------------
@@ -409,8 +481,7 @@ impl AsyncHflEngine {
             // reports, at that member's completion time.
             let mut remaining = expect.iter().sum::<usize>();
             while remaining > 0 {
-                let (t, ev) =
-                    q.pop().expect("sync sub-round queue underflow");
+                let (t, ev) = q.pop().expect("sync sub-round queue underflow");
                 remaining -= 1;
                 match ev {
                     Event::DeviceTrainDone { edge, .. } => {
@@ -484,11 +555,28 @@ impl AsyncHflEngine {
     // SemiSync / Async modes: the free-running event loop.
     // -----------------------------------------------------------------
 
-    fn run_event_loop(&mut self, g1: &[usize]) -> Result<RunHistory> {
+    /// Reset and arm a fresh timer-driven run: models, event queue, link
+    /// and window state, the initial `CloudAggregate`/`MobilityFlip`
+    /// timers, and the first dispatch of every device. The run then
+    /// advances one cloud window per [`AsyncHflEngine::run_window`] call
+    /// (with optional [`AsyncHflEngine::set_control`] swaps in between);
+    /// `run_with` is the uncontrolled convenience loop over it.
+    pub fn begin_run(&mut self, g1: &[usize]) -> Result<()> {
+        anyhow::ensure!(
+            !matches!(self.mode, SyncMode::Synchronous),
+            "begin_run drives the timer modes; synchronous runs use \
+             run_round/run_with"
+        );
+        anyhow::ensure!(
+            g1.len() == self.edges(),
+            "need {} per-edge frequencies",
+            self.edges()
+        );
         let m = self.edges();
         let n = self.eng.cfg.topology.devices;
         self.eng.reset();
         self.g1 = g1.to_vec();
+        self.alpha = vec![self.eng.cfg.sync.staleness_alpha; m];
         self.queue = EventQueue::new(self.eng.cfg.seed ^ 0xa57c);
         self.in_flight = (0..n).map(|_| None).collect();
         self.reported = vec![Vec::new(); m];
@@ -525,10 +613,16 @@ impl AsyncHflEngine {
         // Mobility steps once per window, offset to avoid timer ties.
         self.queue.schedule(0.5 * interval, Event::MobilityFlip);
         let all: Vec<usize> = (0..n).collect();
-        self.dispatch(&all, 0.0)?;
+        self.dispatch(&all, 0.0)
+    }
 
+    /// Advance the armed run to its next cloud-aggregation decision point
+    /// and return that window's stats; `None` once the time budget is
+    /// exhausted and the tail has been flushed. Event order is identical
+    /// to the single-call loop — stepping changes *when the caller gets
+    /// control*, never the simulated timeline.
+    pub fn run_window(&mut self) -> Result<Option<RoundStats>> {
         let threshold = self.eng.cfg.hfl.threshold_time;
-        let mut hist = RunHistory::default();
         while let Some(t_next) = self.queue.peek_time() {
             if t_next > threshold {
                 break;
@@ -543,7 +637,7 @@ impl AsyncHflEngine {
                     self.on_edge_aggregate(edge, t)?;
                 }
                 Event::CloudAggregate => {
-                    hist.push(self.on_cloud_aggregate(t)?);
+                    return Ok(Some(self.on_cloud_aggregate(t)?));
                 }
                 Event::MobilityFlip => self.on_mobility_flip(t)?,
                 Event::Recluster => self.on_recluster(t)?,
@@ -558,10 +652,11 @@ impl AsyncHflEngine {
         // suppresses new dispatches/transfers — they could never finish.
         if self.acc.per_edge.iter().any(|e| e.active > 0) {
             self.draining = true;
-            hist.push(self.on_cloud_aggregate(threshold)?);
+            let stats = self.on_cloud_aggregate(threshold)?;
             self.draining = false;
+            return Ok(Some(stats));
         }
-        Ok(hist)
+        Ok(None)
     }
 
     /// Integrate the per-edge busy intervals up to `t`. Every state change
@@ -625,8 +720,7 @@ impl AsyncHflEngine {
         let results = self.eng.train_batch(jobs)?;
         for res in results {
             let d = res.device;
-            let (t_dev, e_dev) =
-                self.eng.simulate_train(d, res.losses.len());
+            let (t_dev, e_dev) = self.eng.simulate_train(d, res.losses.len());
             let j = self.dev_edge[d];
             self.device_version[d] = self.edge_version[j];
             self.in_flight[d] = Some(PendingTrain {
@@ -709,18 +803,19 @@ impl AsyncHflEngine {
                 // Quorum closes like a small synchronous edge round.
                 self.eng.edge_aggregate_devices(edge, &devs)?;
             }
-            SyncMode::Async { staleness_alpha, .. } => {
+            SyncMode::Async { .. } => {
                 let edge_data = self.eng.edge_data_weight(edge);
+                // Per-edge α_j: default sync.staleness_alpha, possibly
+                // re-armed by the learned controller (`set_control`).
+                let alpha_j = self.alpha[edge];
                 for &d in &devs {
                     let s = self.edge_version[edge] - self.device_version[d];
-                    let share =
-                        self.eng.topo.shards[d].n as f32 / edge_data;
-                    let beta = share * staleness_discount(s, staleness_alpha);
+                    let share = self.eng.topo.shards[d].n as f32 / edge_data;
+                    let beta = share * staleness_discount(s, alpha_j);
                     self.eng.mix_device_into_edge(edge, d, beta);
                 }
                 for &d in &devs {
-                    self.eng.device_w[d] =
-                        self.eng.edge_w[edge].clone();
+                    self.eng.device_w[d] = self.eng.edge_w[edge].clone();
                 }
             }
             SyncMode::Synchronous => unreachable!(),
@@ -853,6 +948,28 @@ impl AsyncHflEngine {
     fn on_cloud_aggregate(&mut self, t: f64) -> Result<RoundStats> {
         self.sweep(t); // a tail flush arrives outside the event loop
         let m = self.edges();
+        // Control observables at the decision point, captured before the
+        // quorum flush perturbs them: staleness of each edge's last
+        // landed upload (in windows), uploads still in flight, and the
+        // semi-sync quorum fill of the outstanding reports. These become
+        // the `EdgeStats` rows the extended DRL state reads.
+        let ctrl: Vec<(f64, usize, f64)> = (0..m)
+            .map(|j| {
+                let staleness = (self.cloud_round_idx
+                    - self.edge_last_update_round[j])
+                    as f64;
+                let in_flight = self.eng.links.active_count(j, Direction::Up);
+                let fill = match self.mode {
+                    SyncMode::SemiSync { quorum, .. } => {
+                        self.reported[j].len() as f64
+                            / effective_quorum(quorum, self.live_members(j))
+                                as f64
+                    }
+                    _ => 0.0,
+                };
+                (staleness, in_flight, fill)
+            })
+            .collect();
         // Flush partial quorums so no edge (or idle-waiting device) can
         // starve across windows; their uploads start now and land later.
         for j in 0..m {
@@ -863,16 +980,16 @@ impl AsyncHflEngine {
         // The cloud aggregates what has LANDED by its timer — not the
         // live edge models, which may still be in flight.
         match self.mode {
-            SyncMode::Async { staleness_alpha, .. } => {
+            SyncMode::Async { .. } => {
                 // All edges contribute their last landed model, discounted
                 // by how many windows ago it landed (pure echoes decay
-                // fastest).
+                // fastest) under the edge's current α_j.
                 let factors: Vec<f32> = (0..m)
                     .map(|j| {
                         staleness_discount(
                             self.cloud_round_idx
                                 - self.edge_last_update_round[j],
-                            staleness_alpha,
+                            self.alpha[j],
                         )
                     })
                     .collect();
@@ -913,6 +1030,8 @@ impl AsyncHflEngine {
                 self.win_comm_busy[j],
                 self.win_overlap[j],
             );
+            let (staleness, in_flight, fill) = ctrl[j];
+            self.acc.record_ctrl(j, staleness, in_flight, fill);
         }
         self.window_landings = vec![0; m];
         self.win_compute_busy = vec![0.0; m];
@@ -994,8 +1113,7 @@ impl AsyncHflEngine {
         // least as fresh as any migration snapshot; the pending-warm-start
         // flag was cleared in the purge loop above).
         for &d in &rejoined {
-            self.eng.device_w[d] =
-                self.eng.edge_w[self.dev_edge[d]].clone();
+            self.eng.device_w[d] = self.eng.edge_w[self.dev_edge[d]].clone();
         }
         self.dispatch(&rejoined, t)?;
         // Membership drift check: re-cluster as a scheduled event when the
@@ -1138,6 +1256,7 @@ mod tests {
             quorum: 3,
             staleness_alpha: 0.7,
             cloud_interval: 90.0,
+            ..SyncConfig::default()
         };
         assert_eq!(
             SyncMode::from_config(&sc),
@@ -1181,6 +1300,15 @@ mod tests {
             .name(),
             "async"
         );
+    }
+
+    #[test]
+    fn effective_quorum_clamps() {
+        assert_eq!(effective_quorum(3, 5), 3);
+        assert_eq!(effective_quorum(3, 2), 2);
+        assert_eq!(effective_quorum(0, 4), 4);
+        assert_eq!(effective_quorum(0, 0), 1);
+        assert_eq!(effective_quorum(3, 0), 1);
     }
 
     #[test]

@@ -290,6 +290,9 @@ impl HflEngine {
     /// Gather the training jobs of sub-round `sub` in canonical
     /// (edge-major, member-order) sequence; returns (jobs, owning edge per
     /// job). Seed forks happen here, in this exact order.
+    // Index loops: the body forks the engine RNG (&mut self), which an
+    // iterator borrow over `self.topo` would lock out.
+    #[allow(clippy::needless_range_loop)]
     pub(crate) fn gather_jobs(
         &mut self,
         sub: usize,
@@ -519,7 +522,12 @@ impl HflEngine {
                 .links
                 .poll(id, finish)
                 .expect("uncontended downlink lands at its prediction");
-            acc.record_link(j, up_dur[j], tr.finish - tr.start, edge_compute[j]);
+            acc.record_link(
+                j,
+                up_dur[j],
+                tr.finish - tr.start,
+                edge_compute[j],
+            );
         }
         t_cloud
     }
@@ -677,7 +685,10 @@ impl HflEngine {
     /// Stamp the membership fields of a finished round's stats: per-round
     /// recluster/migration counters (drained from the tracker) plus the
     /// current active-set size and the drift-relevant live imbalance.
-    pub(crate) fn finalize_membership_stats(&mut self, stats: &mut RoundStats) {
+    pub(crate) fn finalize_membership_stats(
+        &mut self,
+        stats: &mut RoundStats,
+    ) {
         let (reclusters, migrated) = self.membership.take_round_stats();
         stats.n_reclusters = reclusters;
         stats.migrated_devices = migrated;

@@ -40,6 +40,17 @@ pub struct EdgeStats {
     /// Seconds during which compute and communication were both in flight
     /// (0 under the barrier engine: it never overlaps them).
     pub comm_overlap: f64,
+    /// Observed staleness of the edge's last landed upload, in cloud
+    /// windows: how many cloud aggregations ago the cloud last saw a fresh
+    /// model from this edge, measured at the cloud's decision point
+    /// (0 under the barrier engine — every round lands every edge).
+    pub staleness: f64,
+    /// Uploads in flight on the edge's uplink at the cloud decision point.
+    pub in_flight_up: usize,
+    /// Semi-sync quorum fill at the cloud decision point: outstanding
+    /// device reports over the effective (live-clamped) quorum. 0 in the
+    /// other modes (async reports aggregate immediately).
+    pub quorum_fill: f64,
 }
 
 impl EdgeStats {
@@ -98,6 +109,17 @@ impl RoundStats {
         self.per_edge.iter().map(|e| e.comm_overlap).sum::<f64>() / comm
     }
 
+    /// Mean observed upload staleness over the edges, in cloud windows
+    /// (the per-edge control signal the DRL state feeds on; 0 under the
+    /// barrier engine).
+    pub fn mean_staleness(&self) -> f64 {
+        if self.per_edge.is_empty() {
+            return 0.0;
+        }
+        let s: f64 = self.per_edge.iter().map(|e| e.staleness).sum();
+        s / self.per_edge.len() as f64
+    }
+
     /// Mean busy fraction over all 2M directed links for the round.
     pub fn mean_link_util(&self) -> f64 {
         if self.round_time <= 0.0 || self.per_edge.is_empty() {
@@ -119,6 +141,7 @@ impl RoundStats {
             ("energy", Json::num(self.energy)),
             ("comm_overlap_frac", Json::num(self.comm_overlap_frac())),
             ("mean_link_util", Json::num(self.mean_link_util())),
+            ("mean_staleness", Json::num(self.mean_staleness())),
             ("n_reclusters", Json::num(self.n_reclusters as f64)),
             ("migrated_devices", Json::num(self.migrated_devices as f64)),
             ("active_devices", Json::num(self.active_devices as f64)),
@@ -255,6 +278,23 @@ impl RoundAccumulator {
         e.total_time = compute_busy + comm_busy - overlap;
     }
 
+    /// Record an edge's control observables at the cloud's decision point
+    /// (event-driven modes; the barrier engine leaves the defaults — it
+    /// never runs stale, holds reports, or keeps uploads in flight across
+    /// a decision point).
+    pub fn record_ctrl(
+        &mut self,
+        edge: usize,
+        staleness: f64,
+        in_flight_up: usize,
+        quorum_fill: f64,
+    ) {
+        let e = &mut self.per_edge[edge];
+        e.staleness = staleness;
+        e.in_flight_up = in_flight_up;
+        e.quorum_fill = quorum_fill;
+    }
+
     /// Straggler-path duration: max per-edge total time.
     pub fn round_time(&self) -> f64 {
         self.per_edge
@@ -377,6 +417,45 @@ impl RunHistory {
         }
     }
 
+    /// Accuracy and simulated time at cumulative device energy `e` mAh
+    /// (the state at the last round whose running energy total stays
+    /// within `e`). Lets one long run serve every energy-budget column of
+    /// the async head-to-head comparison.
+    pub fn at_energy(&self, e: f64) -> (f64, f64) {
+        let mut acc = 0.0;
+        let mut t = 0.0;
+        let mut cum = 0.0;
+        for r in &self.rounds {
+            cum += r.energy;
+            if cum > e {
+                break;
+            }
+            acc = r.accuracy;
+            t = r.sim_now;
+        }
+        (acc, t)
+    }
+
+    /// Mean per-round upload staleness over the rounds completed by
+    /// simulated time `t` — the control-signal companion of
+    /// [`RunHistory::comm_stats_at`].
+    pub fn mean_staleness_at(&self, t: f64) -> f64 {
+        let mut s = 0.0;
+        let mut n = 0.0;
+        for r in &self.rounds {
+            if r.sim_now > t {
+                break;
+            }
+            s += r.mean_staleness();
+            n += 1.0;
+        }
+        if n > 0.0 {
+            s / n
+        } else {
+            0.0
+        }
+    }
+
     /// Cumulative (re-clusterings, migrated devices) over the rounds
     /// completed by simulated time `t` — the membership companion of
     /// [`RunHistory::at_time`] for the fig9/table summaries.
@@ -399,8 +478,8 @@ impl RunHistory {
             path,
             &["scheme", "k", "sim_time", "accuracy", "round_energy",
               "cum_energy", "train_loss", "comm_overlap_frac",
-              "mean_link_util", "n_reclusters", "migrated_devices",
-              "active_devices", "edge_size_imbalance"],
+              "mean_link_util", "mean_staleness", "n_reclusters",
+              "migrated_devices", "active_devices", "edge_size_imbalance"],
         )?;
         let mut cum = 0.0;
         for r in &self.rounds {
@@ -415,6 +494,7 @@ impl RunHistory {
                 format!("{:.4}", r.train_loss),
                 format!("{:.4}", r.comm_overlap_frac()),
                 format!("{:.4}", r.mean_link_util()),
+                format!("{:.4}", r.mean_staleness()),
                 r.n_reclusters.to_string(),
                 r.migrated_devices.to_string(),
                 r.active_devices.to_string(),
@@ -526,12 +606,52 @@ mod tests {
     }
 
     #[test]
+    fn ctrl_recording_feeds_mean_staleness() {
+        let mut acc = RoundAccumulator::new(3);
+        acc.record_ctrl(0, 2.0, 1, 0.5);
+        acc.record_ctrl(1, 1.0, 0, 1.0);
+        // Edge 2 untouched: barrier defaults (never stale).
+        let s = acc.finish(1, 0.5, 1.0, 10.0, 10.0, &[1; 3], &[1; 3]);
+        assert!((s.per_edge[0].staleness - 2.0).abs() < 1e-12);
+        assert_eq!(s.per_edge[0].in_flight_up, 1);
+        assert!((s.per_edge[1].quorum_fill - 1.0).abs() < 1e-12);
+        assert_eq!(s.per_edge[2].staleness, 0.0);
+        assert!((s.mean_staleness() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn history_indexes_by_energy_budget() {
+        let mut h = RunHistory::default();
+        h.push(round(1, 0.3, 100.0, 10.0)); // cum 10, sim_now 100
+        h.push(round(2, 0.6, 100.0, 12.0)); // cum 22, sim_now 200
+        h.push(round(3, 0.7, 100.0, 9.0)); // cum 31, sim_now 300
+        assert_eq!(h.at_energy(5.0), (0.0, 0.0));
+        assert_eq!(h.at_energy(10.0), (0.3, 100.0));
+        assert_eq!(h.at_energy(25.0), (0.6, 200.0));
+        assert_eq!(h.at_energy(1e9), (0.7, 300.0));
+    }
+
+    #[test]
     fn round_json_has_fields() {
         let j = round(2, 0.5, 10.0, 1.0).to_json();
         assert_eq!(j.get("k").unwrap().as_usize().unwrap(), 2);
         assert!(j.get("gamma1").unwrap().as_arr().is_some());
         assert!(j.get("n_reclusters").is_some());
         assert!(j.get("active_devices").is_some());
+        assert!(j.get("mean_staleness").is_some());
+    }
+
+    #[test]
+    fn staleness_averages_by_time() {
+        let mut h = RunHistory::default();
+        let mut r1 = round(1, 0.3, 100.0, 10.0);
+        r1.per_edge = vec![EdgeStats { staleness: 2.0, ..Default::default() }];
+        let mut r2 = round(2, 0.4, 100.0, 10.0);
+        r2.per_edge = vec![EdgeStats { staleness: 4.0, ..Default::default() }];
+        h.push(r1);
+        h.push(r2);
+        assert!((h.mean_staleness_at(150.0) - 2.0).abs() < 1e-12);
+        assert!((h.mean_staleness_at(1e9) - 3.0).abs() < 1e-12);
     }
 
     #[test]

@@ -58,8 +58,7 @@ pub fn build_topology(
 ) -> Result<Topology> {
     let n = cfg.topology.devices;
     let m = cfg.topology.edges;
-    let n_cn_edges =
-        ((m as f64) * cfg.topology.cn_fraction).round() as usize;
+    let n_cn_edges = ((m as f64) * cfg.topology.cn_fraction).round() as usize;
     let edge_regions: Vec<Region> = (0..m)
         .map(|j| if j < n_cn_edges { Region::Cn } else { Region::Us })
         .collect();
@@ -103,7 +102,11 @@ pub fn build_topology(
         .iter()
         .enumerate()
         .map(|(i, labels)| {
-            DeviceShard::build(&dataset, labels, &mut rng.fork(0xda7a + i as u64))
+            DeviceShard::build(
+                &dataset,
+                labels,
+                &mut rng.fork(0xda7a + i as u64),
+            )
         })
         .collect();
 

@@ -122,7 +122,11 @@ impl Runtime {
             let spec = art.outputs.get(i).with_context(|| {
                 format!("{name}: more outputs than manifest lists")
             })?;
-            tensors.push(HostTensor::from_literal(lit, &spec.shape, &spec.dtype)?);
+            tensors.push(HostTensor::from_literal(
+                lit,
+                &spec.shape,
+                &spec.dtype,
+            )?);
         }
         Ok(tensors)
     }
@@ -141,7 +145,9 @@ impl Runtime {
         let expect = self.manifest.param_count(model)?;
         let n = bytes.len() / 4;
         if n != expect {
-            bail!("init params for {model}: {n} floats, manifest says {expect}");
+            bail!(
+                "init params for {model}: {n} floats, manifest says {expect}"
+            );
         }
         Ok(bytes
             .chunks_exact(4)

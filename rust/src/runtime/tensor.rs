@@ -136,7 +136,8 @@ mod tests {
 
     #[test]
     fn literal_roundtrip_f32() {
-        let t = HostTensor::f32(vec![2, 3], (0..6).map(|x| x as f32).collect());
+        let t =
+            HostTensor::f32(vec![2, 3], (0..6).map(|x| x as f32).collect());
         let lit = t.to_literal().unwrap();
         let back = HostTensor::from_literal(lit, &[2, 3], "float32").unwrap();
         assert_eq!(t, back);

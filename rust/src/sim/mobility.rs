@@ -225,10 +225,8 @@ mod tests {
             let before = m.active_set();
             let fs = m.step();
             let after = m.active_set();
-            let joins =
-                after.iter().filter(|d| !before.contains(d)).count();
-            let leaves =
-                before.iter().filter(|d| !after.contains(d)).count();
+            let joins = after.iter().filter(|d| !before.contains(d)).count();
+            let leaves = before.iter().filter(|d| !after.contains(d)).count();
             assert_eq!(fs, FlipStats { joins, leaves });
             assert_eq!(fs, m.flip_stats(), "flip_stats mirrors the step");
             assert_eq!(fs.total(), m.flipped().len());

@@ -425,7 +425,10 @@ mod tests {
         let src = r#"{"a": [1, 2.5, -3e2], "b": {"c": "x\ny", "d": null}, "e": true}"#;
         let v = Json::parse(src).unwrap();
         assert_eq!(v.path("b.c").unwrap().as_str().unwrap(), "x\ny");
-        assert_eq!(v.get("a").unwrap().at(2).unwrap().as_f64().unwrap(), -300.0);
+        assert_eq!(
+            v.get("a").unwrap().at(2).unwrap().as_f64().unwrap(),
+            -300.0
+        );
         let re = Json::parse(&v.to_string()).unwrap();
         assert_eq!(v, re);
     }
@@ -468,7 +471,10 @@ mod tests {
         let v = Json::parse(r#""é\tA""#).unwrap();
         assert_eq!(v.as_str().unwrap(), "é\tA");
         let s = Json::Str("quote\"back\\slash".into()).to_string();
-        assert_eq!(Json::parse(&s).unwrap().as_str().unwrap(), "quote\"back\\slash");
+        assert_eq!(
+            Json::parse(&s).unwrap().as_str().unwrap(),
+            "quote\"back\\slash"
+        );
     }
 
     #[test]

@@ -91,8 +91,7 @@ mod tests {
 
     #[test]
     fn maps_in_order() {
-        let mut pool: Pool<u64, u64> =
-            Pool::new(4, |_| (), |_, x| x * x);
+        let mut pool: Pool<u64, u64> = Pool::new(4, |_| (), |_, x| x * x);
         let out = pool.map((0..100).collect());
         assert_eq!(out, (0..100).map(|x| x * x).collect::<Vec<_>>());
     }

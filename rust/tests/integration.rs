@@ -146,8 +146,12 @@ fn ppo_artifacts_roundtrip() {
         }
         t
     };
-    let (adv, ret) =
-        arena::agent::gae_advantages(&traj.rewards(), &traj.values(), 0.9, 0.9);
+    let (adv, ret) = arena::agent::gae_advantages(
+        &traj.rewards(),
+        &traj.values(),
+        0.9,
+        0.9,
+    );
     let batch =
         traj.to_batch(&adv, &ret, b, agent.state_len(), agent.act_len());
     let before = agent.theta.clone();
@@ -249,8 +253,7 @@ fn npca_variant_agents_load_and_act() {
     require_artifacts!();
     let mut rt = Runtime::load(artifacts_dir(), &[]).unwrap();
     for npca in [2usize, 10] {
-        let agent =
-            arena::agent::PpoAgent::new_variant(&rt, npca).unwrap();
+        let agent = arena::agent::PpoAgent::new_variant(&rt, npca).unwrap();
         let (fwd, _) = agent.artifact_names();
         rt.compile(&fwd).unwrap();
         let state = vec![0.05f32; agent.state_len()];
@@ -566,6 +569,166 @@ fn overlap_is_realized_in_event_driven_modes() {
 }
 
 #[test]
+fn ctrl_features_deterministic_and_recorded() {
+    // The per-edge control observables (staleness of the last landed
+    // upload, in-flight uploads, semi-sync quorum fill) must replay
+    // bit-for-bit from the experiment seed and stay well-formed. A very
+    // narrow, contended uplink makes uploads outlive windows so the
+    // signals actually move.
+    require_artifacts!();
+    for mode in [SyncModeCfg::SemiSync, SyncModeCfg::Async] {
+        let mut cfg = small_cfg();
+        cfg.hfl.threshold_time = 500.0;
+        cfg.sync.mode = mode;
+        cfg.sync.quorum = 1;
+        cfg.sync.cloud_interval = 60.0;
+        cfg.link.up_bandwidth_scale = 0.002;
+        cfg.link.contention = true;
+        let run = |cfg: &ExperimentConfig| {
+            let mut e = AsyncHflEngine::new(cfg.clone(), false).unwrap();
+            let hist = e.run_to_threshold().unwrap();
+            hist.rounds
+                .iter()
+                .map(|r| {
+                    r.per_edge
+                        .iter()
+                        .map(|e| (e.staleness, e.in_flight_up, e.quorum_fill))
+                        .collect::<Vec<_>>()
+                })
+                .collect::<Vec<_>>()
+        };
+        let a = run(&cfg);
+        let b = run(&cfg);
+        assert_eq!(a, b, "{mode:?}: control features diverged across runs");
+        let mut moved = false;
+        for round in &a {
+            for &(staleness, in_flight, fill) in round {
+                assert!(staleness >= 0.0 && staleness.is_finite());
+                assert!(fill >= 0.0 && fill.is_finite());
+                if staleness > 0.0 || in_flight > 0 || fill > 0.0 {
+                    moved = true;
+                }
+            }
+        }
+        assert!(
+            moved,
+            "{mode:?}: no control signal ever left zero under a narrow \
+             contended uplink"
+        );
+        if mode == SyncModeCfg::Async {
+            for round in &a {
+                for &(_, _, fill) in round {
+                    assert_eq!(fill, 0.0, "quorum fill is semi-sync only");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn rearming_fixed_knobs_is_bitwise_noop() {
+    // Zero churn, fixed knobs: stepping the run window-by-window and
+    // re-arming (γ1_j, α_j) with the values already in force at every
+    // cloud decision point must reproduce the single-call run
+    // bit-for-bit — transfer timeline, stats, and final model.
+    require_artifacts!();
+    for mode in [SyncModeCfg::SemiSync, SyncModeCfg::Async] {
+        let mut cfg = small_cfg();
+        cfg.hfl.threshold_time = 500.0;
+        cfg.sync.mode = mode;
+        cfg.sync.cloud_interval = 120.0;
+        let m = cfg.topology.edges;
+        let g1 = vec![2usize; m];
+        let alpha = vec![cfg.sync.staleness_alpha; m];
+
+        let mut plain = AsyncHflEngine::new(cfg.clone(), false).unwrap();
+        let hist_a = plain.run_with(&g1).unwrap();
+
+        let mut stepped = AsyncHflEngine::new(cfg.clone(), false).unwrap();
+        stepped.begin_run(&g1).unwrap();
+        let mut hist_b = Vec::new();
+        while let Some(stats) = stepped.run_window().unwrap() {
+            hist_b.push(stats);
+            // Re-arm with the identical knobs at the decision point.
+            stepped.set_control(&g1, &alpha).unwrap();
+        }
+        assert_eq!(
+            plain.transfer_log, stepped.transfer_log,
+            "{mode:?}: transfer timeline diverged under re-arming"
+        );
+        assert_eq!(hist_a.rounds.len(), hist_b.len(), "{mode:?}");
+        for (ra, rb) in hist_a.rounds.iter().zip(&hist_b) {
+            assert_eq!(ra.accuracy, rb.accuracy, "{mode:?}");
+            assert_eq!(ra.energy, rb.energy, "{mode:?}");
+            assert_eq!(ra.round_time, rb.round_time, "{mode:?}");
+            assert_eq!(ra.sim_now, rb.sim_now, "{mode:?}");
+            for (ea, eb) in ra.per_edge.iter().zip(&rb.per_edge) {
+                assert_eq!(ea.t_up, eb.t_up, "{mode:?}");
+                assert_eq!(ea.staleness, eb.staleness, "{mode:?}");
+                assert_eq!(ea.in_flight_up, eb.in_flight_up, "{mode:?}");
+            }
+        }
+        assert_eq!(
+            plain.eng.cloud_w, stepped.eng.cloud_w,
+            "{mode:?}: models diverged"
+        );
+    }
+}
+
+#[test]
+fn ctrl_agent_roundtrip_if_built() {
+    // The _ctrl agent variant (extended control-state layout) loads, acts
+    // and updates like the default one. Skips on artifact sets that
+    // predate the variant.
+    require_artifacts!();
+    let mut rt = Runtime::load(artifacts_dir(), &[]).unwrap();
+    if !rt.manifest.artifacts.contains_key("ppo_actor_fwd_ctrl") {
+        eprintln!("skipping: no ppo_actor_fwd_ctrl (re-run make artifacts)");
+        return;
+    }
+    let agent = arena::agent::PpoAgent::new_ctrl_variant(&rt).unwrap();
+    let m = rt.manifest.config.m_edges;
+    let npca = rt.manifest.config.npca;
+    assert_eq!(agent.state_len(), (m + 1) * (npca + 6));
+    assert_eq!(agent.act_len(), 2 * m);
+    let (fwd, upd) = agent.artifact_names();
+    rt.compile(&fwd).unwrap();
+    rt.compile(&upd).unwrap();
+    let state = vec![0.1f32; agent.state_len()];
+    let mut rng = Rng::new(17);
+    let (raw, logp, value) = agent.act(&rt, &state, &mut rng).unwrap();
+    assert_eq!(raw.len(), agent.act_len());
+    assert!(logp.is_finite() && value.is_finite());
+    let mut agent = agent;
+    let b = agent.batch();
+    let traj = {
+        let mut t = arena::agent::Trajectory::default();
+        for i in 0..4 {
+            t.push(arena::agent::Transition {
+                state: state.clone(),
+                raw_action: raw.clone(),
+                log_prob: logp,
+                value,
+                reward: i as f64,
+            });
+        }
+        t
+    };
+    let (adv, ret) = arena::agent::gae_advantages(
+        &traj.rewards(),
+        &traj.values(),
+        0.9,
+        0.9,
+    );
+    let batch =
+        traj.to_batch(&adv, &ret, b, agent.state_len(), agent.act_len());
+    let before = agent.theta.clone();
+    let losses = agent.update(&rt, &batch).unwrap();
+    assert!(losses.policy.is_finite());
+    assert!(agent.theta != before, "ctrl update must move parameters");
+}
+
+#[test]
 fn async_modes_are_seed_deterministic() {
     require_artifacts!();
     let mut cfg = small_cfg();
@@ -632,8 +795,7 @@ fn recluster_triggers_and_warm_starts_under_churn() {
         }
         // The migrated topology stays valid: full population coverage,
         // region constraints, nmax never exceeded.
-        let total: usize =
-            e.topo.edges.iter().map(|x| x.members.len()).sum();
+        let total: usize = e.topo.edges.iter().map(|x| x.members.len()).sum();
         assert_eq!(total, n);
         for edge in &e.topo.edges {
             assert!(edge.members.len() <= cfg.topology.nmax);
@@ -668,10 +830,8 @@ fn semi_sync_quorum_liveness_across_recluster() {
     let mut e = AsyncHflEngine::new(cfg, false).unwrap();
     let hist = e.run_to_threshold().unwrap();
     assert!(!hist.rounds.is_empty(), "no cloud windows at all");
-    let reclusters: usize =
-        hist.rounds.iter().map(|r| r.n_reclusters).sum();
-    let migrated: usize =
-        hist.rounds.iter().map(|r| r.migrated_devices).sum();
+    let reclusters: usize = hist.rounds.iter().map(|r| r.n_reclusters).sum();
+    let migrated: usize = hist.rounds.iter().map(|r| r.migrated_devices).sum();
     assert!(reclusters >= 1, "no recluster in churned semi-sync run");
     assert!(migrated > 0, "live migration moved no devices");
     // Quorum liveness across the recluster: edge rounds keep closing in
