@@ -9,20 +9,22 @@ use anyhow::Result;
 use arena::config::{ExperimentConfig, SyncModeCfg};
 use arena::hfl::{AsyncHflEngine, RunHistory};
 
-fn report(label: &str, hist: &RunHistory) {
+fn report(label: &str, hist: &RunHistory, p_bytes: usize, naive: usize) {
     println!("--- {label} ---");
     for r in &hist.rounds {
         let aggs: usize = r.gamma2.iter().sum();
         println!(
             "  k={:<3} t={:>7.1}s  acc {:.3}  E {:>7.2} mAh  edge-aggs {:>3}  \
-             overlap {:.2}  link-util {:.2}",
+             overlap {:.2}  link-util {:.2}  bufs {:>3}  share {:.2}",
             r.k,
             r.sim_now,
             r.accuracy,
             r.energy,
             aggs,
             r.comm_overlap_frac(),
-            r.mean_link_util()
+            r.mean_link_util(),
+            r.live_model_buffers,
+            r.sharing_ratio
         );
     }
     println!(
@@ -31,6 +33,21 @@ fn report(label: &str, hist: &RunHistory) {
         hist.total_energy(),
         hist.total_time()
     );
+    // The model-store win, measured: the resident (between-bursts) model
+    // footprint vs one flat clone per cloud/edge/device handle. Peak
+    // counts the training bursts too (N in-flight results genuinely
+    // exist while devices train) — the win is the shared idle state.
+    if let Some(last) = hist.rounds.last() {
+        let live = last.live_model_buffers * p_bytes;
+        println!(
+            "  model memory: {} live buffers = {:.1} KiB resident \
+             (peak {:.1} KiB) vs {:.1} KiB naive O(N*p) clones",
+            last.live_model_buffers,
+            live as f64 / 1024.0,
+            last.peak_model_bytes as f64 / 1024.0,
+            naive as f64 / 1024.0,
+        );
+    }
 }
 
 fn main() -> Result<()> {
@@ -51,8 +68,17 @@ fn main() -> Result<()> {
     let mut sync_cfg = cfg.clone();
     sync_cfg.sync.mode = SyncModeCfg::Synchronous;
     let mut engine = AsyncHflEngine::new(sync_cfg, true)?;
+    // One flat clone per cloud/edge/device model — the pre-store cost.
+    let p_bytes = engine.eng.p * 4;
+    let naive =
+        (1 + cfg.topology.edges + cfg.topology.devices) * p_bytes;
     let hist = engine.run_to_threshold()?;
-    report("synchronous (event-driven barrier rounds)", &hist);
+    report(
+        "synchronous (event-driven barrier rounds)",
+        &hist,
+        p_bytes,
+        naive,
+    );
 
     // Semi-sync: edges close on a 2-report quorum, cloud on the timer.
     let mut semi_cfg = cfg.clone();
@@ -60,7 +86,12 @@ fn main() -> Result<()> {
     semi_cfg.sync.quorum = 2;
     let mut engine = AsyncHflEngine::new(semi_cfg, true)?;
     let hist = engine.run_to_threshold()?;
-    report("semi-sync (K=2 quorum edges, cloud timer)", &hist);
+    report(
+        "semi-sync (K=2 quorum edges, cloud timer)",
+        &hist,
+        p_bytes,
+        naive,
+    );
 
     // Fully async with staleness discounting, plus device churn to show
     // stragglers/leavers no longer stall anyone. Uploads are in flight
@@ -75,7 +106,12 @@ fn main() -> Result<()> {
     async_cfg.link.contention = true;
     let mut engine = AsyncHflEngine::new(async_cfg, true)?;
     let hist = engine.run_to_threshold()?;
-    report("async (staleness-discounted, churning, narrow uplink)", &hist);
+    report(
+        "async (staleness-discounted, churning, narrow uplink)",
+        &hist,
+        p_bytes,
+        naive,
+    );
 
     println!("\nall three synchronization modes ran to the time threshold.");
     Ok(())

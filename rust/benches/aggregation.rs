@@ -1,17 +1,48 @@
 //! Bench: the fedavg_reduce Pallas artifact vs a naive rust loop — the
-//! HFL synchronization hot path (paper Eq. 1/2).
+//! HFL synchronization hot path (paper Eq. 1/2) — plus the serial vs
+//! pooled-parallel A/B of the native reduction at large `p` (the
+//! deterministic chunked kernel; results are bit-identical by
+//! construction, asserted here too). The native A/B needs no artifacts.
 //! `cargo bench --bench aggregation`
 
+use arena::hfl::aggregate::{aggregate_native, aggregate_native_par};
 use arena::runtime::{HostTensor, Runtime};
 use arena::util::microbench::{bench, black_box};
 use arena::util::rng::Rng;
 
+/// Serial vs parallel native aggregation at model-store scale.
+fn native_ab() {
+    let mut rng = Rng::new(3);
+    for &p in &[1usize << 18, 1 << 21] {
+        let n_models = 8;
+        let models: Vec<Vec<f32>> = (0..n_models)
+            .map(|_| (0..p).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let refs: Vec<&[f32]> =
+            models.iter().map(|m| m.as_slice()).collect();
+        let weights: Vec<f32> =
+            (0..n_models).map(|i| 1.0 + i as f32).collect();
+        let serial = aggregate_native(&refs, &weights, p);
+        bench(&format!("aggregate/native-serial/p{p}"), || {
+            black_box(aggregate_native(&refs, &weights, p));
+        });
+        for &workers in &[2usize, 4, 8] {
+            let par = aggregate_native_par(&refs, &weights, p, workers);
+            assert_eq!(par, serial, "parallel kernel diverged bitwise");
+            bench(&format!("aggregate/native-par{workers}/p{p}"), || {
+                black_box(aggregate_native_par(&refs, &weights, p, workers));
+            });
+        }
+    }
+}
+
 fn main() {
     std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "2");
+    native_ab();
     let dir = std::env::var("ARENA_ARTIFACTS")
         .unwrap_or_else(|_| "artifacts".into());
     if !std::path::Path::new(&dir).join("manifest.json").exists() {
-        eprintln!("skipping: run `make artifacts` first");
+        eprintln!("skipping artifact A/B: run `make artifacts` first");
         return;
     }
     let rt = Runtime::load(&dir, &["mnist_aggregate", "cifar_aggregate"])

@@ -1,0 +1,168 @@
+//! Bench: the copy-on-write versioned model store under the engines'
+//! model-movement patterns at 10k–1M devices — the proof that breaking
+//! the O(N·p) device-model wall holds at scale:
+//!
+//! * `broadcast/{n}` — re-point every device handle to a fresh cloud
+//!   buffer (what used to memcpy p floats per device). Per-device cost
+//!   must stay flat from 10k to 1M devices (`broadcast_per_device/{n}`
+//!   records it explicitly so the guard pins it).
+//! * `checkout_release/{n}` — a 1k-device training burst: CoW checkout
+//!   (materialize a private pooled buffer) + release back to sharing.
+//!   Cost depends on the burst, not on the population size.
+//! * `migrate/{n}` — a 10% recluster migration wave: warm-starts are
+//!   handle re-points to the destination edges' models.
+//!
+//! No artifacts needed. `cargo bench --bench model_store` — also
+//! rewrites `BENCH_model_store.json` at the repo root with the measured
+//! numbers (guarded >2x by `.github/scripts/bench_guard.py` in CI once
+//! a recorded baseline is committed).
+
+use std::collections::BTreeMap;
+
+use arena::hfl::model_store::{ModelRef, ModelStore};
+use arena::util::json::Json;
+use arena::util::microbench::{bench, black_box, BenchResult};
+
+/// Small on purpose: handle traffic is O(1) in p by construction; a big
+/// p would only turn the CoW workload into a memcpy bench.
+const P: usize = 1024;
+
+fn main() {
+    let mut results = Vec::new();
+    for &n in &[10_000usize, 100_000, 1_000_000] {
+        // ---- broadcast: n handle re-points, zero copies ----------------
+        let mut store = ModelStore::new(P);
+        let cloud_a = store.insert(vec![0.0; P], 1);
+        let cloud_b = store.insert(vec![1.0; P], 2);
+        let mut devices: Vec<ModelRef> =
+            (0..n).map(|_| store.share(&cloud_a)).collect();
+        let mut flip = false;
+        let r = bench(&format!("model_store/broadcast/{n}"), || {
+            let src = if flip { &cloud_a } else { &cloud_b };
+            for d in devices.iter_mut() {
+                store.repoint(d, src);
+            }
+            flip = !flip;
+            black_box(store.live_buffers());
+        });
+        // The acceptance metric: flat per-device cost across n.
+        results.push(BenchResult {
+            name: format!("model_store/broadcast_per_device/{n}"),
+            iters: r.iters,
+            mean_ns: r.mean_ns / n as f64,
+            p50_ns: r.p50_ns / n as f64,
+            p99_ns: r.p99_ns / n as f64,
+        });
+        results.push(r);
+        for d in devices.drain(..) {
+            store.release(d);
+        }
+        store.release(cloud_a);
+        store.release(cloud_b);
+        store.assert_consistent();
+
+        // ---- checkout/release: CoW training burst + pool reuse ---------
+        let mut store = ModelStore::new(P);
+        let cloud = store.insert(vec![0.0; P], 1);
+        let mut devices: Vec<ModelRef> =
+            (0..n).map(|_| store.share(&cloud)).collect();
+        let burst = 1_000usize;
+        results.push(bench(
+            &format!("model_store/checkout_release/{n}"),
+            || {
+                for i in 0..burst {
+                    let d = (i * 997) % n;
+                    store.make_mut(&mut devices[d])[0] += 1.0;
+                }
+                for i in 0..burst {
+                    let d = (i * 997) % n;
+                    store.repoint(&mut devices[d], &cloud);
+                }
+                black_box(store.live_buffers());
+            },
+        ));
+        assert!(
+            store.allocated_buffers() <= burst + 2,
+            "pool failed to bound the working set: {} buffers",
+            store.allocated_buffers()
+        );
+        for d in devices.drain(..) {
+            store.release(d);
+        }
+        store.release(cloud);
+        store.assert_consistent();
+
+        // ---- recluster migration: 10% warm-start wave ------------------
+        let m = 64usize;
+        let mut store = ModelStore::new(P);
+        let edges: Vec<ModelRef> =
+            (0..m).map(|j| store.insert(vec![j as f32; P], 1)).collect();
+        let mut devices: Vec<ModelRef> =
+            (0..n).map(|d| store.share(&edges[d % m])).collect();
+        let mut round = 0usize;
+        results.push(bench(&format!("model_store/migrate/{n}"), || {
+            round += 1;
+            for d in (0..n).step_by(10) {
+                let dst = (d / 10 + round) % m;
+                store.repoint(&mut devices[d], &edges[dst]);
+            }
+            black_box(store.live_buffers());
+        }));
+        for d in devices.drain(..) {
+            store.release(d);
+        }
+        for e in edges {
+            store.release(e);
+        }
+        store.assert_consistent();
+    }
+
+    // Flatness summary for the log (the recorded JSON is the artifact).
+    println!("\nper-device broadcast cost (must stay flat in n):");
+    for r in &results {
+        if r.name.starts_with("model_store/broadcast_per_device/") {
+            println!("  {:<42} {:>8.2} ns/device", r.name, r.mean_ns);
+        }
+    }
+
+    if let Err(e) = write_json(&results) {
+        eprintln!("warning: could not write BENCH_model_store.json: {e}");
+    }
+}
+
+/// Record the run at the repo root (benches run with CWD = rust/).
+fn write_json(results: &[BenchResult]) -> std::io::Result<()> {
+    let mut root = BTreeMap::new();
+    root.insert(
+        "generated_by".to_string(),
+        Json::Str("cargo bench --bench model_store".into()),
+    );
+    root.insert(
+        "note".to_string(),
+        Json::Str(
+            "per-iteration ns; broadcast_per_device is per-device ns and \
+             must stay flat from 10k to 1M devices (O(1) handle re-point \
+             — the model-store acceptance metric)"
+                .into(),
+        ),
+    );
+    let mut arr = Vec::new();
+    for r in results {
+        let mut e = BTreeMap::new();
+        e.insert("name".to_string(), Json::Str(r.name.clone()));
+        e.insert("iters".to_string(), Json::Num(r.iters as f64));
+        e.insert("mean_ns".to_string(), Json::Num(r.mean_ns));
+        e.insert("p50_ns".to_string(), Json::Num(r.p50_ns));
+        e.insert("p99_ns".to_string(), Json::Num(r.p99_ns));
+        arr.push(Json::Obj(e));
+    }
+    root.insert("results".to_string(), Json::Arr(arr));
+    let path = if std::path::Path::new("../BENCH_model_store.json").exists()
+        || std::path::Path::new("../ROADMAP.md").exists()
+    {
+        "../BENCH_model_store.json"
+    } else {
+        "BENCH_model_store.json"
+    };
+    std::fs::write(path, Json::Obj(root).to_pretty())
+}

@@ -1,7 +1,8 @@
 //! Weighted model aggregation shared by both synchronization engines
 //! (paper Eqs. 1-2). The Pallas `fedavg_reduce` artifact path stays in the
 //! engines (it needs the runtime handle); this module owns the native CPU
-//! reference and the staleness weighting used by the asynchronous modes.
+//! reference — serial and deterministically parallel — and the staleness
+//! weighting used by the asynchronous modes.
 
 /// sum_i w_i m_i / sum_i w_i over flat models, native rust — the CPU
 /// roofline reference for the fedavg_reduce kernel (A/B'd in
@@ -11,6 +12,9 @@ pub fn aggregate_native(
     weights: &[f32],
     p: usize,
 ) -> Vec<f32> {
+    for (i, m) in models.iter().enumerate() {
+        assert_eq!(m.len(), p, "model {i} has the wrong size");
+    }
     let wsum: f32 = weights.iter().sum();
     let mut out = vec![0.0f32; p];
     for (m, &w) in models.iter().zip(weights) {
@@ -26,6 +30,69 @@ pub fn aggregate_native(
         *o *= inv;
     }
     out
+}
+
+/// Chunk width (elements) of the parallel aggregation grid. Fixed: chunk
+/// boundaries depend only on `p`, never on the worker count.
+pub const PAR_CHUNK: usize = 1 << 14;
+
+/// Total element count (models × p) below which the serial loop wins
+/// (scoped-thread spawn/join overhead dominates small reductions).
+const PAR_MIN_ELEMS: usize = 1 << 21;
+
+/// [`aggregate_native`] parallelized over `workers` threads
+/// (`util::threadpool::par_for_each`) as deterministic chunked partial
+/// sums. The output is cut into the fixed [`PAR_CHUNK`] grid and every
+/// chunk accumulates its models in the same order as the serial loop, so
+/// each output element sees the exact serial FP operation order: the
+/// result is **bit-identical** to [`aggregate_native`] for any worker
+/// count or chunk assignment.
+pub fn aggregate_native_par(
+    models: &[&[f32]],
+    weights: &[f32],
+    p: usize,
+    workers: usize,
+) -> Vec<f32> {
+    for (i, m) in models.iter().enumerate() {
+        assert_eq!(m.len(), p, "model {i} has the wrong size");
+    }
+    let wsum: f32 = weights.iter().sum();
+    let inv = 1.0 / wsum;
+    let mut out = vec![0.0f32; p];
+    let chunks: Vec<(usize, &mut [f32])> =
+        out.chunks_mut(PAR_CHUNK).enumerate().collect();
+    crate::util::threadpool::par_for_each(workers, chunks, |(ci, seg)| {
+        let lo = ci * PAR_CHUNK;
+        let hi = lo + seg.len();
+        for (m, &w) in models.iter().zip(weights) {
+            if w == 0.0 {
+                continue;
+            }
+            for (o, &x) in seg.iter_mut().zip(&m[lo..hi]) {
+                *o += w * x;
+            }
+        }
+        for o in seg.iter_mut() {
+            *o *= inv;
+        }
+    });
+    out
+}
+
+/// Serial/parallel dispatch: small reductions stay on the serial loop,
+/// large ones fan out. Both paths are bit-identical, so the threshold can
+/// never change results — only wall-clock.
+pub fn aggregate_native_auto(
+    models: &[&[f32]],
+    weights: &[f32],
+    p: usize,
+    workers: usize,
+) -> Vec<f32> {
+    if workers <= 1 || models.len().saturating_mul(p) < PAR_MIN_ELEMS {
+        aggregate_native(models, weights, p)
+    } else {
+        aggregate_native_par(models, weights, p, workers)
+    }
 }
 
 /// Staleness discount of arXiv:2107.11415 / FedAsync: an update computed
@@ -64,6 +131,38 @@ mod tests {
         let a = vec![2.0f32; 4];
         let b = vec![999.0f32; 4];
         let out = aggregate_native(&[&a, &b], &[2.0, 0.0], 4);
+        for v in out {
+            assert!((v - 2.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn parallel_aggregation_is_bit_identical_to_serial() {
+        // p deliberately not a multiple of PAR_CHUNK, with irrational-ish
+        // weights so FP ordering differences would show.
+        let p = PAR_CHUNK * 2 + 1234;
+        let mut rng = crate::util::rng::Rng::new(42);
+        let models: Vec<Vec<f32>> = (0..7)
+            .map(|_| (0..p).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let refs: Vec<&[f32]> = models.iter().map(|m| m.as_slice()).collect();
+        let weights: Vec<f32> =
+            (0..7).map(|i| 0.1 + 0.37 * i as f32).collect();
+        let serial = aggregate_native(&refs, &weights, p);
+        for workers in [1usize, 2, 3, 8] {
+            let par = aggregate_native_par(&refs, &weights, p, workers);
+            assert_eq!(par, serial, "workers={workers} diverged bitwise");
+        }
+        // The auto dispatcher is bit-stable across the threshold too.
+        assert_eq!(aggregate_native_auto(&refs, &weights, p, 4), serial);
+    }
+
+    #[test]
+    fn parallel_aggregation_skips_zero_weights() {
+        let p = PAR_CHUNK + 17;
+        let a = vec![2.0f32; p];
+        let b = vec![999.0f32; p];
+        let out = aggregate_native_par(&[&a, &b], &[2.0, 0.0], p, 4);
         for v in out {
             assert!((v - 2.0).abs() < 1e-6);
         }

@@ -67,6 +67,20 @@
 //! per-edge `compute_busy`/`up_busy`/`down_busy`/`comm_overlap` fields
 //! split the window into compute vs in-flight communication time.
 //!
+//! # Model state is shared, versioned, copy-on-write
+//!
+//! Every model buffer lives in the engine's [`crate::hfl::ModelStore`];
+//! `edge_w`/`device_w`/the landed view/in-flight payloads are all
+//! version-tagged `ModelRef` handles. Broadcast landings, edge→device
+//! sync, rejoin resets and migration warm-starts are O(1) handle
+//! re-points; upload/downlink/migration payloads are rc-held snapshots
+//! kept intact by copy-on-write while in flight. The version tags *are*
+//! the staleness bookkeeping: the FedAsync device discount is the delta
+//! between the edge handle and the version the device trained from, the
+//! cloud's out-of-order landing guards compare payload tags, and
+//! `EdgeStats::staleness` is the delta between the cloud handle's
+//! version (windows) and the window of the edge's last landed upload.
+//!
 //! # Learned per-edge control
 //!
 //! The timer-driven modes expose the knobs the DRL agent drives
@@ -85,7 +99,6 @@
 //! state is built from.
 
 use std::collections::{BTreeMap, HashMap};
-use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
@@ -96,6 +109,7 @@ use crate::sim::{Direction, Event, EventQueue};
 use super::aggregate::staleness_discount;
 use super::engine::HflEngine;
 use super::metrics::{RoundAccumulator, RoundStats, RunHistory};
+use super::model_store::ModelRef;
 
 /// Synchronization policy the event loop executes.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -174,9 +188,15 @@ pub(crate) fn quorum_satisfied(
 
 /// A dispatched-but-not-yet-completed local training run. The real compute
 /// happens eagerly at dispatch (results depend only on weights + seed, not
-/// on simulated time); the simulated completion is the queued event.
+/// on simulated time); the simulated completion is the queued event. The
+/// trained model lives IN the store while in flight (an rc-1 pooled
+/// buffer, not a raw Vec) so the memory observables count it and the
+/// free-list recycles it.
 struct PendingTrain {
-    w: Vec<f32>,
+    /// The trained result, already adopted into the store, tagged with
+    /// the edge-model version the training started from (read off the
+    /// edge's `ModelRef` at dispatch) — the FedAsync staleness base.
+    r: ModelRef,
     last_loss: Option<f64>,
     t: f64,
     energy: f64,
@@ -186,24 +206,39 @@ struct PendingTrain {
     void: bool,
 }
 
-/// Model snapshot riding an in-flight transfer. The link layer schedules
-/// pure timing; the engine owns the payloads, keyed by transfer id.
+/// Model snapshot riding an in-flight transfer: an rc-held store handle
+/// (`ModelStore::share` — no copy; copy-on-write keeps the snapshot
+/// intact if the live line mutates mid-flight). The link layer schedules
+/// pure timing; the engine owns the payloads, keyed by transfer id. The
+/// handle's version tag doubles as the ordering guard: edge-aggregation
+/// version for uploads, cloud-window version for downlinks.
 enum Payload {
-    /// Edge→cloud: the edge model as of `version` at upload start.
-    Upload { edge: usize, w: Vec<f32>, version: u64 },
-    /// Cloud→edge: the global model broadcast by cloud window `round`
-    /// (shared — one snapshot serves every edge's downlink).
-    Downlink { edge: usize, w: Arc<Vec<f32>>, round: u64 },
+    /// Edge→cloud: the edge model as of its version at upload start.
+    Upload { edge: usize, r: ModelRef },
+    /// Cloud→edge: the global model broadcast by the cloud window in
+    /// `r.version()` (one shared buffer serves every edge's downlink).
+    Downlink { edge: usize, r: ModelRef },
     /// Warm-start delivery for a re-clustering: `edge`'s model at
     /// migration time, bound for the devices migrated onto it. `seq`
     /// identifies the re-clustering; a later one (or a leave+rejoin)
     /// supersedes the pending warm-start per device.
     Migration {
         edge: usize,
-        w: Arc<Vec<f32>>,
+        r: ModelRef,
         devices: Vec<usize>,
         seq: u64,
     },
+}
+
+impl Payload {
+    /// Surrender the payload's store handle (whatever the variant).
+    fn into_ref(self) -> ModelRef {
+        match self {
+            Payload::Upload { r, .. }
+            | Payload::Downlink { r, .. }
+            | Payload::Migration { r, .. } => r,
+        }
+    }
 }
 
 pub struct AsyncHflEngine {
@@ -221,13 +256,13 @@ pub struct AsyncHflEngine {
     in_flight: Vec<Option<PendingTrain>>,
     /// Per-edge devices reported since the edge last aggregated.
     reported: Vec<Vec<usize>>,
-    /// Per-edge model version (bumped per edge aggregation).
-    edge_version: Vec<u64>,
-    /// Edge version a device's current training started from.
-    device_version: Vec<u64>,
-    /// Cloud aggregation windows completed.
-    cloud_round_idx: u64,
-    /// Window index of the edge's last *landed* upload (cloud freshness).
+    // Per-edge model versions, the per-device start versions, the landed
+    // ordering guard and the cloud window counter all used to be parallel
+    // `Vec<u64>` counters here; they now ride the `ModelRef` handles
+    // themselves (edge_w/cloud_w tags, the in-flight result's tag,
+    // landed/payload tags) — staleness is a handle version delta.
+    /// Window index (cloud version) of the edge's last *landed* upload
+    /// (cloud freshness).
     edge_last_update_round: Vec<u64>,
     /// Edge aggregations inside the current cloud window.
     window_edge_aggs: Vec<usize>,
@@ -236,10 +271,10 @@ pub struct AsyncHflEngine {
     // ---- transfer layer state ------------------------------------------
     /// Payloads of in-flight transfers, keyed by transfer id.
     payloads: HashMap<usize, Payload>,
-    /// Latest edge model that has landed at the cloud, per edge
-    /// (initial global model until anything lands).
-    landed_w: Vec<Vec<f32>>,
-    landed_version: Vec<u64>,
+    /// Latest edge model that has landed at the cloud, per edge (a share
+    /// of the initial global model until anything lands); the handle's
+    /// version is the out-of-order landing guard.
+    landed_w: Vec<ModelRef>,
     /// Uploads landed in the current cloud window, per edge.
     window_landings: Vec<usize>,
     /// Last observed transfer durations per edge (feed T_j^ec; 0 until
@@ -281,7 +316,7 @@ impl AsyncHflEngine {
     pub fn new(cfg: ExperimentConfig, use_profiling: bool) -> Result<Self> {
         let mode = SyncMode::from_config(&cfg.sync);
         let seed = cfg.seed;
-        let eng = HflEngine::new(cfg, use_profiling)?;
+        let mut eng = HflEngine::new(cfg, use_profiling)?;
         let n = eng.cfg.topology.devices;
         let m = eng.cfg.topology.edges;
         let mut dev_edge = vec![0usize; n];
@@ -292,7 +327,9 @@ impl AsyncHflEngine {
         }
         let g1 = vec![eng.cfg.hfl.gamma1; m];
         let alpha = vec![eng.cfg.sync.staleness_alpha; m];
-        let landed_w = eng.edge_w.clone();
+        // The cloud's landed view starts as rc-shares of the edge models
+        // (all still the one init buffer) — no clones.
+        let landed_w = eng.share_edge_handles();
         Ok(AsyncHflEngine {
             queue: EventQueue::new(seed ^ 0xa57c),
             g1,
@@ -300,16 +337,12 @@ impl AsyncHflEngine {
             dev_edge,
             in_flight: (0..n).map(|_| None).collect(),
             reported: vec![Vec::new(); m],
-            edge_version: vec![0; m],
-            device_version: vec![0; n],
-            cloud_round_idx: 0,
             edge_last_update_round: vec![0; m],
             window_edge_aggs: vec![0; m],
             acc: RoundAccumulator::new(m),
             window_start: 0.0,
             payloads: HashMap::new(),
             landed_w,
-            landed_version: vec![0; m],
             window_landings: vec![0; m],
             obs_up: vec![0.0; m],
             obs_down: vec![0.0; m],
@@ -475,7 +508,7 @@ impl AsyncHflEngine {
                 expect[j] += 1;
             }
             for res in results {
-                self.eng.device_w[res.device] = res.w;
+                self.eng.commit_device(res.device, res.w);
             }
             // Drain the sub-round: an edge aggregates when its last member
             // reports, at that member's completion time.
@@ -537,6 +570,7 @@ impl AsyncHflEngine {
             gamma2,
         );
         self.eng.finalize_membership_stats(&mut stats);
+        self.eng.finalize_memory_stats(&mut stats);
         self.eng.last_round = Some(stats.clone());
         Ok(stats)
     }
@@ -574,22 +608,33 @@ impl AsyncHflEngine {
         );
         let m = self.edges();
         let n = self.eng.cfg.topology.devices;
+        // Hand this engine's own store handles back before the reset
+        // rebuilds the hierarchy: stale payloads, parked in-flight
+        // results and the landed view must not keep last run's buffers
+        // alive.
+        for (_, p) in self.payloads.drain() {
+            let r = p.into_ref();
+            self.eng.store.release(r);
+        }
+        for slot in self.in_flight.iter_mut() {
+            if let Some(p) = slot.take() {
+                self.eng.store.release(p.r);
+            }
+        }
+        for r in self.landed_w.drain(..) {
+            self.eng.store.release(r);
+        }
         self.eng.reset();
         self.g1 = g1.to_vec();
         self.alpha = vec![self.eng.cfg.sync.staleness_alpha; m];
         self.queue = EventQueue::new(self.eng.cfg.seed ^ 0xa57c);
         self.in_flight = (0..n).map(|_| None).collect();
         self.reported = vec![Vec::new(); m];
-        self.edge_version = vec![0; m];
-        self.device_version = vec![0; n];
-        self.cloud_round_idx = 0;
         self.edge_last_update_round = vec![0; m];
         self.window_edge_aggs = vec![0; m];
         self.acc = RoundAccumulator::new(m);
         self.window_start = 0.0;
-        self.payloads.clear();
-        self.landed_w = self.eng.edge_w.clone();
-        self.landed_version = vec![0; m];
+        self.landed_w = self.eng.share_edge_handles();
         self.window_landings = vec![0; m];
         self.obs_up = vec![0.0; m];
         self.obs_down = vec![0.0; m];
@@ -709,7 +754,9 @@ impl AsyncHflEngine {
             let j = self.dev_edge[d];
             jobs.push(TrainJob {
                 device: d,
-                w: self.eng.device_w[d].clone(),
+                // The one materialization point: the worker pool needs an
+                // owned buffer (Send).
+                w: self.eng.store.slice(&self.eng.device_w[d]).to_vec(),
                 epochs: self.g1[j],
                 seed: self.eng.fork_job_seed(d),
             });
@@ -722,9 +769,14 @@ impl AsyncHflEngine {
             let d = res.device;
             let (t_dev, e_dev) = self.eng.simulate_train(d, res.losses.len());
             let j = self.dev_edge[d];
-            self.device_version[d] = self.edge_version[j];
+            // Adopt the trained result into the store immediately, tagged
+            // with the edge version it started from (the staleness base):
+            // the in-flight model recycles a pooled buffer and is counted
+            // by the memory observables instead of hiding in a raw Vec.
+            let version = self.eng.edge_w[j].version();
+            let r = self.eng.store.insert(res.w, version);
             self.in_flight[d] = Some(PendingTrain {
-                w: res.w,
+                r,
                 last_loss: res.losses.last().copied(),
                 t: t_dev,
                 energy: e_dev,
@@ -756,12 +808,16 @@ impl AsyncHflEngine {
             // Flipped mid-flight: the pre-departure result is stale even
             // if the device rejoined. It restarts from the model the
             // rejoin handed it (no-op if it is still departed).
+            self.eng.store.release(p.r);
             return self.dispatch(&[device], t);
         }
         if !self.eng.mobility.is_active(device) {
+            self.eng.store.release(p.r);
             return Ok(()); // departed mid-flight: result discarded
         }
-        self.eng.device_w[device] = p.w;
+        // The device line takes over the in-flight handle (already
+        // version-tagged with its staleness base at dispatch).
+        self.eng.store.adopt(&mut self.eng.device_w[device], p.r);
         self.reported[edge].push(device);
         match self.mode {
             SyncMode::SemiSync { quorum, .. } => {
@@ -800,7 +856,8 @@ impl AsyncHflEngine {
         }
         match self.mode {
             SyncMode::SemiSync { .. } => {
-                // Quorum closes like a small synchronous edge round.
+                // Quorum closes like a small synchronous edge round (the
+                // edge version advances inside).
                 self.eng.edge_aggregate_devices(edge, &devs)?;
             }
             SyncMode::Async { .. } => {
@@ -809,18 +866,26 @@ impl AsyncHflEngine {
                 // re-armed by the learned controller (`set_control`).
                 let alpha_j = self.alpha[edge];
                 for &d in &devs {
-                    let s = self.edge_version[edge] - self.device_version[d];
+                    // Staleness = version delta between the live edge
+                    // handle and the version the device trained from.
+                    let s = self.eng.edge_w[edge].version()
+                        - self.eng.device_w[d].version();
                     let share = self.eng.topo.shards[d].n as f32 / edge_data;
                     let beta = share * staleness_discount(s, alpha_j);
                     self.eng.mix_device_into_edge(edge, d, beta);
                 }
+                self.eng.edge_w[edge].bump_version();
                 for &d in &devs {
-                    self.eng.device_w[d] = self.eng.edge_w[edge].clone();
+                    // O(1) re-point: reporting devices pick up the fresh
+                    // edge model by reference (was: one clone each).
+                    self.eng.store.repoint(
+                        &mut self.eng.device_w[d],
+                        &self.eng.edge_w[edge],
+                    );
                 }
             }
             SyncMode::Synchronous => unreachable!(),
         }
-        self.edge_version[edge] += 1;
         self.window_edge_aggs[edge] += 1;
         // The fresh edge model goes up as an in-flight transfer while the
         // reporting devices restart training — the overlap the lump model
@@ -829,7 +894,8 @@ impl AsyncHflEngine {
         self.dispatch(&devs, t)
     }
 
-    /// Snapshot `edge`'s model and put it on the uplink at time `t`.
+    /// Snapshot `edge`'s model (an rc-share — CoW keeps it intact while
+    /// in flight) and put it on the uplink at time `t`.
     fn start_upload(&mut self, edge: usize, t: f64) {
         if self.draining {
             return;
@@ -839,29 +905,18 @@ impl AsyncHflEngine {
         let bytes = crate::sim::network::model_bytes(self.eng.p);
         let (id, resched) =
             self.eng.links.start(edge, Direction::Up, bytes, work, t);
-        self.payloads.insert(
-            id,
-            Payload::Upload {
-                edge,
-                w: self.eng.edge_w[edge].clone(),
-                version: self.edge_version[edge],
-            },
-        );
+        let r = self.eng.store.share(&self.eng.edge_w[edge]);
+        self.payloads.insert(id, Payload::Upload { edge, r });
         for (tid, finish) in resched {
             self.queue
                 .schedule(finish, Event::TransferDone { transfer: tid });
         }
     }
 
-    /// Put the cloud model on `edge`'s downlink at time `t`. `round` is
-    /// the broadcasting cloud window (for the out-of-order landing guard).
-    fn start_downlink(
-        &mut self,
-        edge: usize,
-        cloud: &Arc<Vec<f32>>,
-        round: u64,
-        t: f64,
-    ) {
+    /// Put the cloud model on `edge`'s downlink at time `t`: one shared
+    /// buffer serves every edge's transfer, and the handle's version (the
+    /// broadcasting cloud window) is the out-of-order landing guard.
+    fn start_downlink(&mut self, edge: usize, t: f64) {
         if self.draining {
             return;
         }
@@ -870,10 +925,8 @@ impl AsyncHflEngine {
         let bytes = crate::sim::network::model_bytes(self.eng.p);
         let (id, resched) =
             self.eng.links.start(edge, Direction::Down, bytes, work, t);
-        self.payloads.insert(
-            id,
-            Payload::Downlink { edge, w: Arc::clone(cloud), round },
-        );
+        let r = self.eng.store.share(&self.eng.cloud_w);
+        self.payloads.insert(id, Payload::Downlink { edge, r });
         for (tid, finish) in resched {
             self.queue
                 .schedule(finish, Event::TransferDone { transfer: tid });
@@ -897,29 +950,39 @@ impl AsyncHflEngine {
             .expect("live transfer without payload");
         self.transfer_log.push((tr.id, tr.edge, t));
         match payload {
-            Payload::Upload { edge, w, version } => {
+            Payload::Upload { edge, r } => {
                 self.obs_up[edge] = tr.finish - tr.start;
                 self.window_landings[edge] += 1;
-                self.edge_last_update_round[edge] = self.cloud_round_idx;
+                self.edge_last_update_round[edge] =
+                    self.eng.cloud_w.version();
                 // Latest *version* wins at the cloud: contention can land
-                // an older snapshot after a newer one.
-                if version > self.landed_version[edge] {
-                    self.landed_version[edge] = version;
-                    self.landed_w[edge] = w;
+                // an older snapshot after a newer one. The guard is the
+                // version delta between the payload and landed handles.
+                if r.version() > self.landed_w[edge].version() {
+                    self.eng.store.adopt(&mut self.landed_w[edge], r);
+                } else {
+                    self.eng.store.release(r);
                 }
             }
-            Payload::Downlink { edge, w, round } => {
+            Payload::Downlink { edge, r } => {
                 self.obs_down[edge] = tr.finish - tr.start;
                 // The edge adopts the global model only now that the
                 // broadcast landed; devices pick it up at their next edge
                 // aggregation. Contention can land broadcasts out of
-                // order — never revert to an older window's model.
-                if round > self.adopted_cloud_round[edge] {
-                    self.adopted_cloud_round[edge] = round;
-                    self.eng.edge_w[edge].clone_from(&*w);
+                // order — never revert to an older window's model. The
+                // edge keeps its own version tag: adopting a broadcast
+                // is not an edge aggregation.
+                if r.version() > self.adopted_cloud_round[edge] {
+                    self.adopted_cloud_round[edge] = r.version();
+                    self.eng.store.adopt_keep_version(
+                        &mut self.eng.edge_w[edge],
+                        r,
+                    );
+                } else {
+                    self.eng.store.release(r);
                 }
             }
-            Payload::Migration { edge, w, devices, seq } => {
+            Payload::Migration { edge, r, devices, seq } => {
                 self.obs_down[edge] = tr.finish - tr.start;
                 let mut resume = Vec::new();
                 for d in devices {
@@ -933,10 +996,13 @@ impl AsyncHflEngine {
                         "pending warm-start on the wrong edge"
                     );
                     self.migration_seq[d] = 0;
-                    self.eng.device_w[d].clone_from(&*w);
+                    // Warm start by reference: every migrant shares the
+                    // delivered snapshot (O(1) per device).
+                    self.eng.store.repoint(&mut self.eng.device_w[d], &r);
                     self.migration_log.push((seq, d, edge));
                     resume.push(d);
                 }
+                self.eng.store.release(r);
                 // Migrants resume training from the delivered model
                 // (dispatch skips any that have since departed).
                 self.dispatch(&resume, t)?;
@@ -955,7 +1021,9 @@ impl AsyncHflEngine {
         // the `EdgeStats` rows the extended DRL state reads.
         let ctrl: Vec<(f64, usize, f64)> = (0..m)
             .map(|j| {
-                let staleness = (self.cloud_round_idx
+                // Staleness in windows: version delta between the cloud
+                // handle and the window the edge's last upload landed in.
+                let staleness = (self.eng.cloud_w.version()
                     - self.edge_last_update_round[j])
                     as f64;
                 let in_flight = self.eng.links.active_count(j, Direction::Up);
@@ -978,44 +1046,55 @@ impl AsyncHflEngine {
             }
         }
         // The cloud aggregates what has LANDED by its timer — not the
-        // live edge models, which may still be in flight.
-        match self.mode {
-            SyncMode::Async { .. } => {
-                // All edges contribute their last landed model, discounted
-                // by how many windows ago it landed (pure echoes decay
-                // fastest) under the edge's current α_j.
-                let factors: Vec<f32> = (0..m)
-                    .map(|j| {
+        // live edge models, which may still be in flight. The landed
+        // views resolve to slices at the aggregation boundary; committing
+        // advances the cloud version by one (an empty semi-sync window
+        // bumps the version without a new model — the window counts).
+        let contributors: Vec<usize> = match self.mode {
+            SyncMode::Async { .. } => (0..m).collect(),
+            SyncMode::SemiSync { .. } => (0..m)
+                .filter(|&j| self.window_landings[j] > 0)
+                .collect(),
+            SyncMode::Synchronous => unreachable!(),
+        };
+        // Async: landed models are discounted by how many windows ago
+        // they landed (pure echoes decay fastest) under the edge's
+        // current α_j.
+        let factors: Option<Vec<f32>> = match self.mode {
+            SyncMode::Async { .. } => Some(
+                contributors
+                    .iter()
+                    .map(|&j| {
                         staleness_discount(
-                            self.cloud_round_idx
+                            self.eng.cloud_w.version()
                                 - self.edge_last_update_round[j],
                             self.alpha[j],
                         )
                     })
+                    .collect(),
+            ),
+            _ => None,
+        };
+        if contributors.is_empty() {
+            self.eng.bump_cloud_version();
+        } else {
+            let weights =
+                self.eng.cloud_weights(&contributors, factors.as_deref());
+            let agg = {
+                let models: Vec<&[f32]> = contributors
+                    .iter()
+                    .map(|&j| self.eng.store.slice(&self.landed_w[j]))
                     .collect();
-                let views: Vec<(usize, &[f32])> = (0..m)
-                    .map(|j| (j, self.landed_w[j].as_slice()))
-                    .collect();
-                self.eng.cloud_aggregate_views(&views, Some(&factors))?;
-            }
-            SyncMode::SemiSync { .. } => {
-                // Only edges whose upload actually landed this window.
-                let views: Vec<(usize, &[f32])> = (0..m)
-                    .filter(|&j| self.window_landings[j] > 0)
-                    .map(|j| (j, self.landed_w[j].as_slice()))
-                    .collect();
-                self.eng.cloud_aggregate_views(&views, None)?;
-            }
-            SyncMode::Synchronous => unreachable!(),
+                self.eng.aggregate(&models, &weights)?
+            };
+            self.eng.commit_cloud(agg);
         }
-        self.cloud_round_idx += 1;
         // Broadcast as in-flight downlink transfers (was: instantaneous
         // broadcast_cloud); each edge adopts the model when it lands.
-        // One shared snapshot serves all m downlinks.
-        let cloud = Arc::new(self.eng.cloud_w.clone());
-        let round = self.cloud_round_idx;
+        // One shared buffer (rc-shared, not cloned) serves all m
+        // downlinks, tagged with the new cloud version.
         for j in 0..m {
-            self.start_downlink(j, &cloud, round, t);
+            self.start_downlink(j, t);
         }
 
         // Close the window's stats from observed transfers + busy sweep.
@@ -1060,6 +1139,7 @@ impl AsyncHflEngine {
             &g2_observed,
         );
         self.eng.finalize_membership_stats(&mut stats);
+        self.eng.finalize_memory_stats(&mut stats);
         self.eng.last_round = Some(stats.clone());
         self.window_start = t;
         if !self.draining {
@@ -1111,9 +1191,13 @@ impl AsyncHflEngine {
             .collect();
         // Rejoining devices start from their edge's current model (at
         // least as fresh as any migration snapshot; the pending-warm-start
-        // flag was cleared in the purge loop above).
+        // flag was cleared in the purge loop above). O(1) re-points.
         for &d in &rejoined {
-            self.eng.device_w[d] = self.eng.edge_w[self.dev_edge[d]].clone();
+            let j = self.dev_edge[d];
+            self.eng.store.repoint(
+                &mut self.eng.device_w[d],
+                &self.eng.edge_w[j],
+            );
         }
         self.dispatch(&rejoined, t)?;
         // Membership drift check: re-cluster as a scheduled event when the
@@ -1171,10 +1255,12 @@ impl AsyncHflEngine {
             by_dest.entry(new).or_default().push(d);
         }
         // Warm-start delivery: one downlink per destination edge, carrying
-        // its model snapshot for all its migrants.
+        // its model snapshot for all its migrants. The snapshot is an
+        // rc-share — copy-on-write preserves it if the edge aggregates
+        // while the downlink is in flight.
         for (edge, devices) in by_dest {
-            let w = Arc::new(self.eng.edge_w[edge].clone());
-            self.start_migration_downlink(edge, w, devices, seq, t);
+            let r = self.eng.store.share(&self.eng.edge_w[edge]);
+            self.start_migration_downlink(edge, r, devices, seq, t);
         }
         // Re-derive semi-sync quorums against the new membership: an edge
         // that lost members may now satisfy its (live-clamped) quorum
@@ -1218,12 +1304,13 @@ impl AsyncHflEngine {
     fn start_migration_downlink(
         &mut self,
         edge: usize,
-        w: Arc<Vec<f32>>,
+        r: ModelRef,
         devices: Vec<usize>,
         seq: u64,
         t: f64,
     ) {
         if self.draining {
+            self.eng.store.release(r);
             return;
         }
         let region = self.eng.topo.edges[edge].region;
@@ -1232,7 +1319,7 @@ impl AsyncHflEngine {
         let (id, resched) =
             self.eng.links.start(edge, Direction::Down, bytes, work, t);
         self.payloads
-            .insert(id, Payload::Migration { edge, w, devices, seq });
+            .insert(id, Payload::Migration { edge, r, devices, seq });
         for (tid, finish) in resched {
             self.queue
                 .schedule(finish, Event::TransferDone { transfer: tid });

@@ -11,9 +11,10 @@ use crate::sim::{
 };
 use crate::util::rng::Rng;
 
-use super::aggregate::aggregate_native;
+use super::aggregate::aggregate_native_auto;
 use super::membership::{self, MembershipTracker, ReclusterOutcome};
 use super::metrics::{RoundAccumulator, RoundStats};
+use super::model_store::{ModelRef, ModelStore};
 use super::topology::{build_topology, Topology};
 use crate::runtime::pool::TrainResult;
 use crate::sim::Region;
@@ -39,10 +40,18 @@ pub struct HflEngine {
     rng: Rng,
     /// Flat model parameter count.
     pub p: usize,
-    pub cloud_w: Vec<f32>,
-    pub edge_w: Vec<Vec<f32>>,
-    pub device_w: Vec<Vec<f32>>,
+    /// Shared ownership layer: every model buffer in the system lives
+    /// here, and the `*_w` fields below are version-tagged handles into
+    /// it (`hfl::model_store`) — broadcast and edge→device sync are O(1)
+    /// handle re-points, mutation is copy-on-write.
+    pub store: ModelStore,
+    pub cloud_w: ModelRef,
+    pub edge_w: Vec<ModelRef>,
+    pub device_w: Vec<ModelRef>,
     init_w: Vec<f32>,
+    /// Worker count for the chunked native aggregation (`cfg.workers`
+    /// as resolved by the device pool).
+    agg_workers: usize,
     test_x: HostTensor,
     test_y: HostTensor,
     pub round: usize,
@@ -98,12 +107,24 @@ impl HflEngine {
         let mobility = MobilityModel::from_config(n, &cfg.sim, cfg.seed);
         let membership =
             MembershipTracker::from_config(&cfg.cluster, cfg.seed);
+        // One buffer serves the whole hierarchy at startup: cloud, edges
+        // and devices are all shares of the same init model (was: N+M+1
+        // full clones — the O(N·p) wall this store breaks).
+        let mut store = ModelStore::new(p);
+        let cloud_w = store.insert(init_w.clone(), 0);
+        let edge_w: Vec<ModelRef> =
+            (0..m).map(|_| store.share(&cloud_w)).collect();
+        let device_w: Vec<ModelRef> =
+            (0..n).map(|_| store.share(&cloud_w)).collect();
+        let agg_workers = pool.workers();
         Ok(HflEngine {
             p,
-            cloud_w: init_w.clone(),
-            edge_w: vec![init_w.clone(); m],
-            device_w: vec![init_w.clone(); n],
+            store,
+            cloud_w,
+            edge_w,
+            device_w,
             init_w,
+            agg_workers,
             test_x,
             test_y,
             rt,
@@ -127,12 +148,15 @@ impl HflEngine {
     /// Reset models/clock/energy for a fresh run (new DRL episode or new
     /// scheme comparison) while keeping data, clusters and CPU states.
     pub fn reset(&mut self) {
-        self.cloud_w = self.init_w.clone();
+        // Rebuild the whole hierarchy as shares of one fresh init buffer
+        // (live model buffers drop back to 1; version tags to 0).
+        let fresh = self.store.insert(self.init_w.clone(), 0);
+        self.store.adopt(&mut self.cloud_w, fresh);
         for e in self.edge_w.iter_mut() {
-            e.clone_from(&self.init_w);
+            self.store.repoint(e, &self.cloud_w);
         }
         for d in self.device_w.iter_mut() {
-            d.clone_from(&self.init_w);
+            self.store.repoint(d, &self.cloud_w);
         }
         self.clock.reset();
         self.links.reset();
@@ -161,7 +185,12 @@ impl HflEngine {
         weights: &[f32],
     ) -> Result<Vec<f32>> {
         if self.cfg.native_aggregation {
-            return Ok(aggregate_native(models, weights, self.p));
+            return Ok(aggregate_native_auto(
+                models,
+                weights,
+                self.p,
+                self.agg_workers,
+            ));
         }
         let nmax = self.rt.manifest.config.nmax;
         anyhow::ensure!(
@@ -192,7 +221,18 @@ impl HflEngine {
 
     /// Evaluate the cloud model on the held-out test set -> (acc, loss).
     pub fn evaluate(&self) -> Result<(f64, f64)> {
-        self.evaluate_model(&self.cloud_w)
+        self.evaluate_model(self.store.slice(&self.cloud_w))
+    }
+
+    /// The current cloud model, resolved through the store (the boundary
+    /// accessor for tests / examples / experiment code).
+    pub fn cloud_model(&self) -> &[f32] {
+        self.store.slice(&self.cloud_w)
+    }
+
+    /// Resolve any model handle to its buffer.
+    pub fn model(&self, r: &ModelRef) -> &[f32] {
+        self.store.slice(r)
     }
 
     pub fn evaluate_model(&self, w: &[f32]) -> Result<(f64, f64)> {
@@ -216,9 +256,9 @@ impl HflEngine {
         let m = self.edges();
         let rows = m + 1;
         let mut flat = Vec::with_capacity(rows * self.p);
-        flat.extend_from_slice(&self.cloud_w);
+        flat.extend_from_slice(self.store.slice(&self.cloud_w));
         for e in &self.edge_w {
-            flat.extend_from_slice(e);
+            flat.extend_from_slice(self.store.slice(e));
         }
         let npca = pca.npca;
         let suffix = crate::agent::ppo::npca_suffix(
@@ -242,10 +282,11 @@ impl HflEngine {
         Ok(scores.chunks(npca).map(|c| c.to_vec()).collect())
     }
 
-    /// Stack of current [cloud; edge] models (PCA fitting).
+    /// Stack of current [cloud; edge] models (PCA fitting), resolved to
+    /// slices at the boundary.
     pub fn model_stack(&self) -> Vec<&[f32]> {
-        let mut v: Vec<&[f32]> = vec![&self.cloud_w];
-        v.extend(self.edge_w.iter().map(|e| e.as_slice()));
+        let mut v: Vec<&[f32]> = vec![self.store.slice(&self.cloud_w)];
+        v.extend(self.edge_w.iter().map(|e| self.store.slice(e)));
         v
     }
 
@@ -313,7 +354,9 @@ impl HflEngine {
                 }
                 jobs.push(TrainJob {
                     device: dev,
-                    w: self.device_w[dev].clone(),
+                    // The worker pool needs an owned buffer (Send); this
+                    // is the one place a training device materializes.
+                    w: self.store.slice(&self.device_w[dev]).to_vec(),
                     epochs: gamma1[j],
                     seed: self.fork_job_seed(dev),
                 });
@@ -329,6 +372,41 @@ impl HflEngine {
         jobs: Vec<TrainJob>,
     ) -> Result<Vec<TrainResult>> {
         self.pool.train(jobs)
+    }
+
+    /// Adopt a trained model for `dev`, keeping its version tag (the
+    /// barrier training paths; the event engine instead parks trained
+    /// results in the store at dispatch and adopts the handle at the
+    /// simulated completion). The device's previous buffer returns to
+    /// the pool unless shared.
+    pub(crate) fn commit_device(&mut self, dev: usize, w: Vec<f32>) {
+        let version = self.device_w[dev].version();
+        let r = self.store.insert(w, version);
+        self.store.adopt(&mut self.device_w[dev], r);
+    }
+
+    /// One rc-share per edge handle, in edge order — the event engine's
+    /// cloud-side landed view starts as exactly this.
+    pub(crate) fn share_edge_handles(&mut self) -> Vec<ModelRef> {
+        let mut v = Vec::with_capacity(self.edge_w.len());
+        for e in &self.edge_w {
+            v.push(self.store.share(e));
+        }
+        v
+    }
+
+    /// Commit a freshly aggregated cloud model (cloud version advances
+    /// by one — the cloud handle's tag counts cloud aggregations).
+    pub(crate) fn commit_cloud(&mut self, w: Vec<f32>) {
+        let version = self.cloud_w.version() + 1;
+        let r = self.store.insert(w, version);
+        self.store.adopt(&mut self.cloud_w, r);
+    }
+
+    /// Advance the cloud version without a new model (a cloud decision
+    /// point where nothing had landed — the window still counts).
+    pub(crate) fn bump_cloud_version(&mut self) {
+        self.cloud_w.bump_version();
     }
 
     /// Simulated (time, energy) of `epochs` local epochs on `device`,
@@ -354,40 +432,45 @@ impl HflEngine {
     }
 
     /// Aggregate `devs`' models (data-size weighted, member order) into
-    /// edge `j`'s model and broadcast it to all the edge's devices.
+    /// edge `j`'s model and sync it to all the edge's devices. The sync
+    /// is O(1) per member — every device handle re-points to the shared
+    /// edge buffer (rc bump) instead of receiving a p-float memcpy — and
+    /// the edge's version tag advances by one.
     pub(crate) fn edge_aggregate_devices(
         &mut self,
         j: usize,
         devs: &[usize],
     ) -> Result<()> {
-        let mut models = Vec::new();
-        let mut weights = Vec::new();
-        for &dev in devs {
-            models.push(self.device_w[dev].as_slice());
-            weights.push(self.topo.shards[dev].n as f32);
-        }
-        let agg = self.aggregate(&models, &weights)?;
+        let agg = {
+            let mut models = Vec::new();
+            let mut weights = Vec::new();
+            for &dev in devs {
+                models.push(self.store.slice(&self.device_w[dev]));
+                weights.push(self.topo.shards[dev].n as f32);
+            }
+            self.aggregate(&models, &weights)?
+        };
+        let version = self.edge_w[j].version() + 1;
+        let r = self.store.insert(agg, version);
+        self.store.adopt(&mut self.edge_w[j], r);
         for &dev in &self.topo.edges[j].members {
-            self.device_w[dev].clone_from(&agg);
+            self.store.repoint(&mut self.device_w[dev], &self.edge_w[j]);
         }
-        self.edge_w[j] = agg;
         Ok(())
     }
 
     /// Blend device `dev`'s model into edge `j`'s with weight `beta`
     /// (asynchronous staleness-discounted update; paper-external, after
-    /// arXiv:2107.11415).
+    /// arXiv:2107.11415). Copy-on-write: sharers of the edge buffer —
+    /// device handles, in-flight upload payloads, the cloud's landed
+    /// view — keep the pre-mix values.
     pub(crate) fn mix_device_into_edge(
         &mut self,
         j: usize,
         dev: usize,
         beta: f32,
     ) {
-        super::aggregate::mix_into(
-            &mut self.edge_w[j],
-            &self.device_w[dev],
-            beta,
-        );
+        self.store.mix_into(&mut self.edge_w[j], &self.device_w[dev], beta);
     }
 
     /// Total training-data size under edge `j` (all members).
@@ -399,62 +482,64 @@ impl HflEngine {
             .sum()
     }
 
+    /// The cloud-aggregation weight of each listed edge: its data size
+    /// times an optional extra factor (e.g. a staleness discount). The
+    /// single home of the cloud weighting policy — both engines' cloud
+    /// aggregations go through this.
+    pub(crate) fn cloud_weights(
+        &self,
+        edges: &[usize],
+        factors: Option<&[f32]>,
+    ) -> Vec<f32> {
+        edges
+            .iter()
+            .enumerate()
+            .map(|(i, &j)| {
+                let mut w = self.edge_data_weight(j);
+                if let Some(f) = factors {
+                    w *= f[i];
+                }
+                w
+            })
+            .collect()
+    }
+
     /// Cloud aggregation over the listed edges (data-size weighted, with
-    /// optional per-edge extra factors, e.g. staleness discounts).
+    /// optional per-edge extra factors, e.g. staleness discounts). The
+    /// cloud version advances by one either way — an empty round still
+    /// counts as a decision point.
     pub(crate) fn cloud_aggregate_edges(
         &mut self,
         edges: &[usize],
         factors: Option<&[f32]>,
     ) -> Result<()> {
         if edges.is_empty() {
+            self.bump_cloud_version();
             return Ok(());
         }
-        let mut weights = Vec::with_capacity(edges.len());
-        for (i, &j) in edges.iter().enumerate() {
-            let mut w = self.edge_data_weight(j);
-            if let Some(f) = factors {
-                w *= f[i];
-            }
-            weights.push(w);
-        }
-        let models: Vec<&[f32]> =
-            edges.iter().map(|&j| self.edge_w[j].as_slice()).collect();
-        self.cloud_w = self.aggregate(&models, &weights)?;
+        let weights = self.cloud_weights(edges, factors);
+        let agg = {
+            let models: Vec<&[f32]> = edges
+                .iter()
+                .map(|&j| self.store.slice(&self.edge_w[j]))
+                .collect();
+            self.aggregate(&models, &weights)?
+        };
+        self.commit_cloud(agg);
         Ok(())
     }
 
-    /// Cloud aggregation over explicit per-edge model *views* (what has
-    /// landed at the cloud, not necessarily the live edge models),
-    /// data-size weighted with optional extra factors.
-    pub(crate) fn cloud_aggregate_views(
-        &mut self,
-        views: &[(usize, &[f32])],
-        factors: Option<&[f32]>,
-    ) -> Result<()> {
-        if views.is_empty() {
-            return Ok(());
-        }
-        let mut weights = Vec::with_capacity(views.len());
-        for (i, &(j, _)) in views.iter().enumerate() {
-            let mut w = self.edge_data_weight(j);
-            if let Some(f) = factors {
-                w *= f[i];
-            }
-            weights.push(w);
-        }
-        let models: Vec<&[f32]> = views.iter().map(|&(_, m)| m).collect();
-        self.cloud_w = self.aggregate(&models, &weights)?;
-        Ok(())
-    }
-
-    /// Broadcast the global model everywhere (next round starts from
-    /// w(k+1)).
+    /// Broadcast the global model everywhere: every edge and device
+    /// handle re-points to the one cloud buffer (rc bumps — O(1) per
+    /// receiver, the copy that used to cost O(N·p)). Handles keep their
+    /// own version tags: adopting a broadcast is not an aggregation on
+    /// the receiving line.
     pub(crate) fn broadcast_cloud(&mut self) {
         for e in self.edge_w.iter_mut() {
-            e.clone_from(&self.cloud_w);
+            self.store.repoint_keep_version(e, &self.cloud_w);
         }
         for d in self.device_w.iter_mut() {
-            d.clone_from(&self.cloud_w);
+            self.store.repoint_keep_version(d, &self.cloud_w);
         }
     }
 
@@ -674,7 +759,9 @@ impl HflEngine {
             }
         }
         for &(d, _, new) in &out.migrated {
-            self.device_w[d] = self.edge_w[new].clone();
+            // Warm start = handle re-point to the destination edge's
+            // model (O(1); the downlink above paid the simulated time).
+            self.store.repoint(&mut self.device_w[d], &self.edge_w[new]);
         }
         self.clock.advance(t_done);
         out.migration_downlink_time = t_done;
@@ -694,6 +781,26 @@ impl HflEngine {
         stats.migrated_devices = migrated;
         stats.active_devices = self.mobility.active_count();
         stats.edge_size_imbalance = self.membership_imbalance();
+    }
+
+    /// Stamp the model-store memory observables of a finished round:
+    /// live/peak buffer footprint and the fraction of device handles
+    /// that share their buffer (→1.0 right after a broadcast; the
+    /// measured side of the O(N·p)→O(M·p) claim).
+    pub(crate) fn finalize_memory_stats(&self, stats: &mut RoundStats) {
+        stats.live_model_buffers = self.store.live_buffers();
+        stats.peak_model_bytes = self.store.peak_model_bytes();
+        let n = self.device_w.len();
+        let shared = self
+            .device_w
+            .iter()
+            .filter(|r| self.store.is_shared(r))
+            .count();
+        stats.sharing_ratio = if n == 0 {
+            0.0
+        } else {
+            shared as f64 / n as f64
+        };
     }
 
     /// Execute one cloud round under per-edge frequencies.
@@ -742,7 +849,7 @@ impl HflEngine {
                 );
             }
             for res in results {
-                self.device_w[res.device] = res.w;
+                self.commit_device(res.device, res.w);
             }
             // Edge aggregations for the edges that trained this sub-round.
             for j in 0..m {
@@ -792,6 +899,7 @@ impl HflEngine {
             gamma2,
         );
         self.finalize_membership_stats(&mut stats);
+        self.finalize_memory_stats(&mut stats);
         self.last_round = Some(stats.clone());
         Ok(stats)
     }
@@ -803,7 +911,7 @@ impl HflEngine {
         models: &[&[f32]],
         weights: &[f32],
     ) -> Vec<f32> {
-        aggregate_native(models, weights, self.p)
+        aggregate_native_auto(models, weights, self.p, self.agg_workers)
     }
 
     /// Expected duration of edge `j`'s part of a round under (γ1, γ2) —

@@ -95,6 +95,17 @@ pub struct RoundStats {
     /// threshold is compared against (cross-region skew excluded, since
     /// region-constrained re-clustering cannot repair it).
     pub edge_size_imbalance: f64,
+    /// Model-store observables (`hfl::model_store`), stamped by the
+    /// engines at round end: distinct model buffers referenced by at
+    /// least one handle. With full sharing this is O(M), not O(N).
+    pub live_model_buffers: usize,
+    /// High-water model memory in bytes: the store's whole slab, pooled
+    /// scratch buffers included.
+    pub peak_model_bytes: usize,
+    /// Fraction of device handles whose buffer is shared (rc > 1) at
+    /// round end — →1.0 right after a cloud broadcast, the measured side
+    /// of the O(N·p) → O(M·p) claim.
+    pub sharing_ratio: f64,
 }
 
 impl RoundStats {
@@ -146,6 +157,9 @@ impl RoundStats {
             ("migrated_devices", Json::num(self.migrated_devices as f64)),
             ("active_devices", Json::num(self.active_devices as f64)),
             ("edge_size_imbalance", Json::num(self.edge_size_imbalance)),
+            ("live_model_buffers", Json::num(self.live_model_buffers as f64)),
+            ("peak_model_bytes", Json::num(self.peak_model_bytes as f64)),
+            ("sharing_ratio", Json::num(self.sharing_ratio)),
             (
                 "gamma1",
                 Json::arr_f64(
@@ -329,13 +343,17 @@ impl RoundAccumulator {
             gamma1: gamma1.to_vec(),
             gamma2: gamma2.to_vec(),
             device_losses: self.device_losses,
-            // Membership fields are stamped by the engines after `finish`
-            // (`HflEngine::finalize_membership_stats`): the accumulator
-            // only sees training/communication records.
+            // Membership and model-store fields are stamped by the
+            // engines after `finish` (`finalize_membership_stats` /
+            // `finalize_memory_stats`): the accumulator only sees
+            // training/communication records.
             n_reclusters: 0,
             migrated_devices: 0,
             active_devices: 0,
             edge_size_imbalance: 0.0,
+            live_model_buffers: 0,
+            peak_model_bytes: 0,
+            sharing_ratio: 0.0,
         }
     }
 }
@@ -479,7 +497,8 @@ impl RunHistory {
             &["scheme", "k", "sim_time", "accuracy", "round_energy",
               "cum_energy", "train_loss", "comm_overlap_frac",
               "mean_link_util", "mean_staleness", "n_reclusters",
-              "migrated_devices", "active_devices", "edge_size_imbalance"],
+              "migrated_devices", "active_devices", "edge_size_imbalance",
+              "live_model_buffers", "peak_model_bytes", "sharing_ratio"],
         )?;
         let mut cum = 0.0;
         for r in &self.rounds {
@@ -499,6 +518,9 @@ impl RunHistory {
                 r.migrated_devices.to_string(),
                 r.active_devices.to_string(),
                 format!("{:.4}", r.edge_size_imbalance),
+                r.live_model_buffers.to_string(),
+                r.peak_model_bytes.to_string(),
+                format!("{:.4}", r.sharing_ratio),
             ])?;
         }
         w.flush()
@@ -526,6 +548,9 @@ mod tests {
             migrated_devices: 0,
             active_devices: 0,
             edge_size_imbalance: 0.0,
+            live_model_buffers: 0,
+            peak_model_bytes: 0,
+            sharing_ratio: 0.0,
         }
     }
 
@@ -639,6 +664,9 @@ mod tests {
         assert!(j.get("n_reclusters").is_some());
         assert!(j.get("active_devices").is_some());
         assert!(j.get("mean_staleness").is_some());
+        assert!(j.get("live_model_buffers").is_some());
+        assert!(j.get("peak_model_bytes").is_some());
+        assert!(j.get("sharing_ratio").is_some());
     }
 
     #[test]

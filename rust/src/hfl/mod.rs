@@ -23,15 +23,55 @@
 //! balanced re-cluster, and the running topology migrates in place (both
 //! engines; the event engine does it live via a `Recluster` event).
 
+//! # Model ownership
+//!
+//! All model state lives in one [`ModelStore`] per engine
+//! (`hfl/model_store.rs`): a reference-counted, version-tagged slab of
+//! flat `f32` buffers with a free-list pool. The engines hold
+//! [`ModelRef`] handles — `cloud_w`, `edge_w[j]`, `device_w[d]`, the
+//! event engine's landed view and its in-flight transfer payloads — and
+//! the rules are:
+//!
+//! * **Who may hold a `ModelRef`:** the engine model lines (cloud, per
+//!   edge, per device), the async engine's cloud-side landed view, and
+//!   in-flight transfer payloads (upload/downlink/migration snapshots).
+//!   Each held handle owns exactly one reference; handles are duplicated
+//!   only through `ModelStore::share` and disposed of only through
+//!   `ModelStore::release` (they are not `Clone` and have no `Drop`).
+//! * **Movement is O(1):** broadcast, edge→device sync, warm-starts,
+//!   rejoin resets and transfer landings re-point handles (rc bumps) —
+//!   never copy buffers. This is what breaks the old O(N·p) per-device
+//!   clone wall: between training bursts, N device handles share M edge
+//!   buffers.
+//! * **When materialization happens:** (a) dispatching a training job —
+//!   the worker pool needs an owned `Vec<f32>`; (b) adopting a trained
+//!   result back into the store; (c) copy-on-write — the first mutation
+//!   of a shared buffer (`make_mut` / `mix_into`) re-points the writer
+//!   to a pooled copy, so sharers and in-flight snapshots never observe
+//!   the write; (d) the read-only boundary resolvers (`model_stack`,
+//!   `pca_scores`, `evaluate_model`), which borrow slices without
+//!   copying.
+//! * **Versions are the staleness bookkeeping:** a handle's tag advances
+//!   at its line's aggregations (strictly increasing per edge), and the
+//!   FedAsync discount, `EdgeStats::staleness` and the out-of-order
+//!   landing guards all read version deltas straight off the handles —
+//!   there are no parallel staleness counters.
+//!
+//! `RoundStats` carries the memory observables (`live_model_buffers`,
+//! `peak_model_bytes`, `sharing_ratio`) into the history CSVs so the
+//! sharing win is measured, not asserted.
+
 pub mod aggregate;
 pub mod async_engine;
 pub mod engine;
 pub mod membership;
 pub mod metrics;
+pub mod model_store;
 pub mod topology;
 
 pub use async_engine::{AsyncHflEngine, SyncMode};
 pub use engine::HflEngine;
 pub use membership::{MembershipTracker, ReclusterOutcome};
 pub use metrics::{EdgeStats, RoundAccumulator, RoundStats, RunHistory};
+pub use model_store::{ModelRef, ModelStore};
 pub use topology::{build_topology, Edge, Topology};

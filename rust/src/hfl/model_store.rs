@@ -1,0 +1,753 @@
+//! Copy-on-write versioned model store — the shared ownership layer
+//! behind every model buffer in the system.
+//!
+//! Both engines used to carry `device_w: Vec<Vec<f32>>`: a full flat model
+//! clone per device, re-memcpy'd by every broadcast, warm-start and
+//! recluster migration, so memory and copy traffic scaled as O(N·p) even
+//! though most devices' models are *identical* to their edge's between
+//! training bursts. Production FL systems hand devices shared, versioned
+//! model state by reference instead (arXiv:1902.01046); this module is
+//! that layer.
+//!
+//! # The store
+//!
+//! [`ModelStore`] is a reference-counted slab of `p`-length `f32` buffers
+//! with a free-list pool: released buffers keep their allocation and are
+//! reused by the next checkout, so a steady-state run allocates a bounded
+//! working set no matter how many devices cycle through training.
+//! [`ModelRef`] is the handle — a buffer id plus a **version tag**. The
+//! tag is the staleness bookkeeping that used to live in parallel
+//! counters (`edge_version` / `device_version` / `landed_version`): a
+//! line's version advances at that line's aggregations, and staleness is
+//! a version delta read straight off the handles.
+//!
+//! # Ownership rules
+//!
+//! * Every live model buffer is owned by the store; everything else holds
+//!   [`ModelRef`] handles. Each held handle owns exactly one reference.
+//! * Handles are **explicit**: they are not `Clone` and have no `Drop`.
+//!   Duplicating one is [`ModelStore::share`] (rc bump); disposing of one
+//!   is [`ModelStore::release`] (buffer returns to the pool at rc 0).
+//!   The engines' rc discipline is checked by the property tests below.
+//! * **Re-pointing is O(1)**: broadcast, edge→device sync, warm-start and
+//!   migration delivery move handles ([`ModelStore::repoint`] /
+//!   [`ModelStore::adopt`]), never bytes.
+//! * **Materialization is copy-on-write**: a writer calls
+//!   [`ModelStore::make_mut`] (or [`ModelStore::mix_into`]); if the
+//!   buffer is shared, the handle is re-pointed to a pooled copy first,
+//!   so sharers never observe the write. A checkout of a shared buffer
+//!   therefore *always* copies — the no-mutable-aliasing invariant.
+//!
+//! Everything is deterministic and RNG-free: slab ids depend only on the
+//! call sequence, and no observable value ever depends on an id.
+
+/// Handle to one model buffer in a [`ModelStore`]: slab id + version tag.
+///
+/// Deliberately neither `Clone` nor `Copy` — every duplication must go
+/// through [`ModelStore::share`] so the reference count stays truthful.
+/// The version tag rides the handle (not the buffer): re-points can keep
+/// or take versions depending on what the move means (see the engine
+/// call sites).
+#[derive(Debug)]
+pub struct ModelRef {
+    id: usize,
+    version: u64,
+}
+
+impl ModelRef {
+    /// The handle's version tag (per-line monotone; staleness = delta).
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Slab id (diagnostics only — never meaningful across stores).
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    /// Whether two handles address the same underlying buffer.
+    pub fn shares_buffer_with(&self, other: &ModelRef) -> bool {
+        self.id == other.id
+    }
+
+    /// Advance the version tag by one (an aggregation on this line).
+    /// Monotone on purpose: there is no way to move a tag backwards.
+    pub fn bump_version(&mut self) {
+        self.version += 1;
+    }
+}
+
+struct Slot {
+    w: Vec<f32>,
+    rc: usize,
+}
+
+/// Reference-counted, pooled slab of flat model buffers (see module doc).
+pub struct ModelStore {
+    /// Flat model parameter count — every buffer is exactly this long.
+    p: usize,
+    slots: Vec<Slot>,
+    /// Slot ids with rc 0; their buffers keep their allocation (the pool).
+    free: Vec<usize>,
+    live: usize,
+    peak_live: usize,
+}
+
+impl ModelStore {
+    pub fn new(p: usize) -> Self {
+        ModelStore {
+            p,
+            slots: Vec::new(),
+            free: Vec::new(),
+            live: 0,
+            peak_live: 0,
+        }
+    }
+
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    fn alloc_slot(&mut self, w: Vec<f32>) -> usize {
+        debug_assert_eq!(w.len(), self.p);
+        let id = if let Some(id) = self.free.pop() {
+            // Adopt the incoming buffer; the pooled allocation is dropped
+            // (net allocation churn identical to the pre-store engines).
+            self.slots[id].w = w;
+            self.slots[id].rc = 1;
+            id
+        } else {
+            self.slots.push(Slot { w, rc: 1 });
+            self.slots.len() - 1
+        };
+        self.live += 1;
+        if self.live > self.peak_live {
+            self.peak_live = self.live;
+        }
+        id
+    }
+
+    /// Copy slot `src` into a pooled buffer (reusing a free allocation
+    /// when one exists — the CoW fast path) and return the new live id.
+    fn alloc_copy_of(&mut self, src: usize) -> usize {
+        if let Some(id) = self.free.pop() {
+            let mut w = std::mem::take(&mut self.slots[id].w);
+            w.copy_from_slice(&self.slots[src].w);
+            self.slots[id].w = w;
+            self.slots[id].rc = 1;
+            self.live += 1;
+            if self.live > self.peak_live {
+                self.peak_live = self.live;
+            }
+            id
+        } else {
+            let w = self.slots[src].w.clone();
+            self.alloc_slot(w)
+        }
+    }
+
+    /// Move a caller-owned buffer into the store as a fresh line head.
+    pub fn insert(&mut self, w: Vec<f32>, version: u64) -> ModelRef {
+        assert_eq!(w.len(), self.p, "model buffer has the wrong size");
+        let id = self.alloc_slot(w);
+        ModelRef { id, version }
+    }
+
+    /// Duplicate a handle: O(1), rc bump, same id and version.
+    pub fn share(&mut self, r: &ModelRef) -> ModelRef {
+        self.slots[r.id].rc += 1;
+        ModelRef { id: r.id, version: r.version }
+    }
+
+    /// Dispose of a handle; the buffer returns to the pool at rc 0.
+    pub fn release(&mut self, r: ModelRef) {
+        let slot = &mut self.slots[r.id];
+        assert!(slot.rc > 0, "release of a dead handle (slot {})", r.id);
+        slot.rc -= 1;
+        if slot.rc == 0 {
+            self.free.push(r.id);
+            self.live -= 1;
+        }
+    }
+
+    /// Read access. Handles of one store never dangle: buffers only leave
+    /// the slab by pooling, which live handles (rc > 0) prevent.
+    pub fn slice(&self, r: &ModelRef) -> &[f32] {
+        &self.slots[r.id].w
+    }
+
+    /// Re-point `dst` at `src`'s buffer (rc bump + release of the old
+    /// buffer), taking `src`'s version tag. O(1) — this is a broadcast /
+    /// edge→device sync / warm-start, per receiver.
+    pub fn repoint(&mut self, dst: &mut ModelRef, src: &ModelRef) {
+        self.slots[src.id].rc += 1;
+        let old = std::mem::replace(
+            dst,
+            ModelRef { id: src.id, version: src.version },
+        );
+        self.release(old);
+    }
+
+    /// [`ModelStore::repoint`], but `dst` keeps its own version tag —
+    /// the move changes which buffer a line holds without counting as an
+    /// aggregation on that line (e.g. an edge adopting a cloud broadcast).
+    pub fn repoint_keep_version(
+        &mut self,
+        dst: &mut ModelRef,
+        src: &ModelRef,
+    ) {
+        self.slots[src.id].rc += 1;
+        let v = dst.version;
+        let old = std::mem::replace(dst, ModelRef { id: src.id, version: v });
+        self.release(old);
+    }
+
+    /// Replace `dst` with the owned handle `src` (no net rc change on
+    /// `src`'s buffer; `dst`'s old buffer is released).
+    pub fn adopt(&mut self, dst: &mut ModelRef, src: ModelRef) {
+        let old = std::mem::replace(dst, src);
+        self.release(old);
+    }
+
+    /// [`ModelStore::adopt`], but `dst` keeps its own version tag (e.g.
+    /// an edge adopting a landed downlink payload: the edge's
+    /// aggregation count did not advance).
+    pub fn adopt_keep_version(&mut self, dst: &mut ModelRef, src: ModelRef) {
+        let v = dst.version;
+        let ModelRef { id, .. } = src;
+        let old = std::mem::replace(dst, ModelRef { id, version: v });
+        self.release(old);
+    }
+
+    /// Make `r`'s buffer exclusively owned: shared buffers are copied
+    /// into a pooled scratch buffer first (CoW — sharers keep the old
+    /// values), unique buffers are handed out as-is.
+    fn ensure_unique(&mut self, r: &mut ModelRef) {
+        if self.slots[r.id].rc == 1 {
+            return;
+        }
+        let id = self.alloc_copy_of(r.id);
+        self.slots[r.id].rc -= 1;
+        // The donor stays live by construction: rc was >= 2.
+        debug_assert!(self.slots[r.id].rc > 0);
+        r.id = id;
+    }
+
+    /// Mutable checkout (CoW materialization on first write — see
+    /// [`ModelStore::ensure_unique`]).
+    pub fn make_mut(&mut self, r: &mut ModelRef) -> &mut [f32] {
+        self.ensure_unique(r);
+        &mut self.slots[r.id].w
+    }
+
+    /// In-place convex blend `dst = (1-beta)·dst + beta·src` through the
+    /// CoW checkout — the FedAsync per-report edge update
+    /// (`hfl::aggregate::mix_into`) against store-held operands.
+    pub fn mix_into(
+        &mut self,
+        dst: &mut ModelRef,
+        src: &ModelRef,
+        beta: f32,
+    ) {
+        self.ensure_unique(dst);
+        // Two live handles on one slot imply rc >= 2, which CoW just
+        // split, so the ids are distinct and the split borrow is safe.
+        debug_assert_ne!(dst.id, src.id, "mix_into on aliased handles");
+        let (lo, hi, dst_is_lo) = if dst.id < src.id {
+            (dst.id, src.id, true)
+        } else {
+            (src.id, dst.id, false)
+        };
+        let (a, b) = self.slots.split_at_mut(hi);
+        let (d, s) = if dst_is_lo {
+            (&mut a[lo].w, &b[0].w)
+        } else {
+            (&mut b[0].w, &a[lo].w)
+        };
+        super::aggregate::mix_into(d, s, beta);
+    }
+
+    // ---- observables ---------------------------------------------------
+
+    /// Distinct buffers currently referenced by at least one handle.
+    pub fn live_buffers(&self) -> usize {
+        self.live
+    }
+
+    /// High-water mark of [`ModelStore::live_buffers`] over the store's
+    /// lifetime.
+    pub fn peak_live_buffers(&self) -> usize {
+        self.peak_live
+    }
+
+    /// Slab size: every buffer ever needed simultaneously, live or pooled
+    /// (monotone — the store never frees allocations).
+    pub fn allocated_buffers(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// High-water memory footprint in bytes: the whole slab, pooled
+    /// buffers included (they keep their allocations for reuse).
+    pub fn peak_model_bytes(&self) -> usize {
+        self.slots.len() * self.p * 4
+    }
+
+    /// References held on `r`'s buffer.
+    pub fn refcount(&self, r: &ModelRef) -> usize {
+        self.slots[r.id].rc
+    }
+
+    /// Whether `r`'s buffer is shared with at least one other handle.
+    pub fn is_shared(&self, r: &ModelRef) -> bool {
+        self.slots[r.id].rc > 1
+    }
+
+    /// Total references across all live buffers (= handles outstanding).
+    pub fn total_refs(&self) -> usize {
+        self.slots.iter().map(|s| s.rc).sum()
+    }
+
+    /// Structural self-check (tests): free list and refcounts agree, no
+    /// slot is leaked (rc 0 outside the pool), buffer sizes hold.
+    pub fn assert_consistent(&self) {
+        let free: std::collections::HashSet<usize> =
+            self.free.iter().copied().collect();
+        assert_eq!(free.len(), self.free.len(), "free-list duplicates");
+        let mut live = 0;
+        for (id, s) in self.slots.iter().enumerate() {
+            assert_eq!(s.w.len(), self.p, "slot {id} wrong size");
+            if free.contains(&id) {
+                assert_eq!(s.rc, 0, "pooled slot {id} still referenced");
+            } else if s.rc > 0 {
+                live += 1;
+            } else {
+                panic!("slot {id} leaked: rc 0 but not pooled");
+            }
+        }
+        assert_eq!(live, self.live, "live-buffer counter drifted");
+        assert!(self.peak_live >= self.live);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{check, Gen};
+
+    fn store_with(p: usize) -> ModelStore {
+        ModelStore::new(p)
+    }
+
+    #[test]
+    fn insert_share_release_roundtrip() {
+        let mut st = store_with(4);
+        assert_eq!(st.p(), 4);
+        let a = st.insert(vec![1.0; 4], 0);
+        assert_eq!(st.live_buffers(), 1);
+        assert_eq!(st.refcount(&a), 1);
+        assert!(!st.is_shared(&a));
+        let b = st.share(&a);
+        assert!(a.shares_buffer_with(&b));
+        assert_eq!(st.refcount(&a), 2);
+        assert!(st.is_shared(&a));
+        st.release(b);
+        assert_eq!(st.refcount(&a), 1);
+        st.release(a);
+        assert_eq!(st.live_buffers(), 0);
+        assert_eq!(st.allocated_buffers(), 1, "pooled, not freed");
+        st.assert_consistent();
+    }
+
+    #[test]
+    fn pool_reuses_released_buffers() {
+        let mut st = store_with(8);
+        let a = st.insert(vec![1.0; 8], 0);
+        let id_a = a.id();
+        st.release(a);
+        // The next insert adopts the pooled slot id — no slab growth.
+        let b = st.insert(vec![2.0; 8], 0);
+        assert_eq!(b.id(), id_a);
+        assert_eq!(st.allocated_buffers(), 1);
+        assert_eq!(st.slice(&b), &[2.0; 8]);
+        st.release(b);
+        st.assert_consistent();
+    }
+
+    #[test]
+    fn make_mut_on_unique_is_in_place() {
+        let mut st = store_with(4);
+        let mut a = st.insert(vec![1.0; 4], 0);
+        let id = a.id();
+        st.make_mut(&mut a)[0] = 9.0;
+        assert_eq!(a.id(), id, "unique checkout must not copy");
+        assert_eq!(st.slice(&a)[0], 9.0);
+        assert_eq!(st.allocated_buffers(), 1);
+        st.release(a);
+    }
+
+    #[test]
+    fn make_mut_on_shared_copies_and_preserves_sharers() {
+        let mut st = store_with(4);
+        let a = st.insert(vec![1.0; 4], 0);
+        let mut b = st.share(&a);
+        st.make_mut(&mut b)[0] = 9.0;
+        assert!(!a.shares_buffer_with(&b), "CoW must split the buffer");
+        assert_eq!(st.slice(&a), &[1.0; 4], "sharer saw the write");
+        assert_eq!(st.slice(&b)[0], 9.0);
+        assert_eq!(st.refcount(&a), 1);
+        assert_eq!(st.refcount(&b), 1);
+        st.release(a);
+        st.release(b);
+        st.assert_consistent();
+    }
+
+    #[test]
+    fn repoint_moves_references_not_bytes() {
+        let mut st = store_with(4);
+        let cloud = st.insert(vec![7.0; 4], 3);
+        let mut dev = st.insert(vec![0.0; 4], 1);
+        st.repoint(&mut dev, &cloud);
+        assert!(dev.shares_buffer_with(&cloud));
+        assert_eq!(dev.version(), 3, "repoint takes the source version");
+        assert_eq!(st.live_buffers(), 1, "old device buffer pooled");
+        let mut dev2 = st.insert(vec![0.0; 4], 5);
+        st.repoint_keep_version(&mut dev2, &cloud);
+        assert!(dev2.shares_buffer_with(&cloud));
+        assert_eq!(dev2.version(), 5, "keep_version keeps the tag");
+        st.release(cloud);
+        st.release(dev);
+        st.release(dev2);
+        assert_eq!(st.live_buffers(), 0);
+        st.assert_consistent();
+    }
+
+    #[test]
+    fn adopt_transfers_ownership() {
+        let mut st = store_with(2);
+        let mut line = st.insert(vec![1.0; 2], 4);
+        let incoming = st.insert(vec![2.0; 2], 9);
+        st.adopt_keep_version(&mut line, incoming);
+        assert_eq!(st.slice(&line), &[2.0; 2]);
+        assert_eq!(line.version(), 4, "adopt_keep_version keeps the tag");
+        assert_eq!(st.live_buffers(), 1);
+        let incoming = st.insert(vec![3.0; 2], 11);
+        st.adopt(&mut line, incoming);
+        assert_eq!(line.version(), 11, "adopt takes the payload tag");
+        assert_eq!(st.slice(&line), &[3.0; 2]);
+        st.release(line);
+        st.assert_consistent();
+    }
+
+    #[test]
+    fn mix_into_matches_reference_and_cows() {
+        let mut st = store_with(4);
+        let edge0 = st.insert(vec![0.0; 4], 0);
+        let mut edge = st.share(&edge0);
+        let dev = st.insert(vec![2.0; 4], 0);
+        st.mix_into(&mut edge, &dev, 0.25);
+        assert_eq!(st.slice(&edge), &[0.5; 4]);
+        assert_eq!(st.slice(&edge0), &[0.0; 4], "sharer saw the mix");
+        // Unique now: the second mix stays in place.
+        let id = edge.id();
+        st.mix_into(&mut edge, &dev, 1.0);
+        assert_eq!(edge.id(), id);
+        assert_eq!(st.slice(&edge), &[2.0; 4]);
+        st.release(edge0);
+        st.release(edge);
+        st.release(dev);
+        st.assert_consistent();
+    }
+
+    #[test]
+    fn end_of_run_live_buffers_is_cloud_plus_edges() {
+        // The engine-shaped lifecycle: after a cloud round's broadcast
+        // every device handle shares its line's buffer, so exactly
+        // 1 cloud + M edge buffers stay live no matter how many devices
+        // trained during the round.
+        let (m, n, p) = (4usize, 64usize, 16usize);
+        let mut st = store_with(p);
+        let cloud = st.insert(vec![0.0; p], 0);
+        let mut edges: Vec<ModelRef> =
+            (0..m).map(|_| st.share(&cloud)).collect();
+        let mut devs: Vec<ModelRef> =
+            (0..n).map(|_| st.share(&cloud)).collect();
+        assert_eq!(st.live_buffers(), 1);
+        for round in 1..=3u64 {
+            // Devices train: checkout materializes private buffers. In
+            // round 1 the edges still share the cloud buffer; afterwards
+            // they hold their own aggregates.
+            for d in devs.iter_mut() {
+                st.make_mut(d)[0] = round as f32;
+            }
+            let expected = if round == 1 { 1 + n } else { 1 + m + n };
+            assert_eq!(st.live_buffers(), expected);
+            // Edge aggregation: new edge buffer, members re-point to it.
+            for (j, e) in edges.iter_mut().enumerate() {
+                let v = e.version() + 1;
+                let agg = st.insert(vec![j as f32; p], v);
+                st.adopt(e, agg);
+            }
+            for (d, dev) in devs.iter_mut().enumerate() {
+                st.repoint(dev, &edges[d % m]);
+            }
+            assert_eq!(
+                st.live_buffers(),
+                1 + m,
+                "after edge sync only cloud + M edge buffers are live"
+            );
+            st.assert_consistent();
+        }
+        for d in devs.drain(..) {
+            st.release(d);
+        }
+        for e in edges.drain(..) {
+            st.release(e);
+        }
+        st.release(cloud);
+        assert_eq!(st.live_buffers(), 0);
+        // The high-water mark saw the training burst even though the
+        // idle state collapses back to 1 + m.
+        assert!(st.peak_live_buffers() >= 1 + n);
+        assert_eq!(st.peak_model_bytes(), st.allocated_buffers() * p * 4);
+        st.assert_consistent();
+    }
+
+    // ---- property tests (store invariants) ---------------------------
+
+    /// A random engine-shaped op sequence over cloud/edge/device lines.
+    struct OpSeq {
+        m: usize,
+        n: usize,
+        ops: Vec<Op>,
+    }
+
+    #[derive(Clone, Copy)]
+    enum Op {
+        /// Cloud aggregation + broadcast: everything re-points to a new
+        /// cloud buffer.
+        Broadcast,
+        /// Edge j aggregates: new edge buffer, its devices re-point.
+        EdgeAgg(usize),
+        /// Device d trains: CoW checkout + write.
+        Train(usize),
+        /// FedAsync mix of device d into edge j.
+        Mix(usize, usize),
+        /// Device d warm-starts from edge j (migration / rejoin).
+        Migrate(usize, usize),
+        /// Snapshot edge j as an in-flight payload (upload); released at
+        /// the end of the run like a landed/dropped transfer.
+        Upload(usize),
+    }
+
+    fn gen_ops(g: &mut Gen) -> OpSeq {
+        let m = g.usize_in(1, 4);
+        let n = m + g.size(24);
+        let len = g.size(60);
+        let ops = (0..len)
+            .map(|_| match g.usize_in(0, 5) {
+                0 => Op::Broadcast,
+                1 => Op::EdgeAgg(g.usize_in(0, m - 1)),
+                2 => Op::Train(g.usize_in(0, n - 1)),
+                3 => Op::Mix(g.usize_in(0, n - 1), g.usize_in(0, m - 1)),
+                4 => Op::Migrate(g.usize_in(0, n - 1), g.usize_in(0, m - 1)),
+                _ => Op::Upload(g.usize_in(0, m - 1)),
+            })
+            .collect();
+        OpSeq { m, n, ops }
+    }
+
+    #[test]
+    fn refcounts_never_leak() {
+        check("store-refcounts-never-leak", 60, gen_ops, |seq| {
+            let p = 8;
+            let mut st = ModelStore::new(p);
+            let mut cloud = st.insert(vec![0.0; p], 0);
+            let mut edges: Vec<ModelRef> =
+                (0..seq.m).map(|_| st.share(&cloud)).collect();
+            let mut devs: Vec<ModelRef> =
+                (0..seq.n).map(|_| st.share(&cloud)).collect();
+            let mut payloads: Vec<ModelRef> = Vec::new();
+            let mut dev_edge: Vec<usize> =
+                (0..seq.n).map(|d| d % seq.m).collect();
+            for &op in &seq.ops {
+                match op {
+                    Op::Broadcast => {
+                        let v = cloud.version() + 1;
+                        let fresh = st.insert(vec![v as f32; p], v);
+                        st.adopt(&mut cloud, fresh);
+                        for e in edges.iter_mut() {
+                            st.repoint_keep_version(e, &cloud);
+                        }
+                        for d in devs.iter_mut() {
+                            st.repoint_keep_version(d, &cloud);
+                        }
+                    }
+                    Op::EdgeAgg(j) => {
+                        let v = edges[j].version() + 1;
+                        let agg = st.insert(vec![v as f32; p], v);
+                        st.adopt(&mut edges[j], agg);
+                        for d in 0..seq.n {
+                            if dev_edge[d] == j {
+                                st.repoint(&mut devs[d], &edges[j]);
+                            }
+                        }
+                    }
+                    Op::Train(d) => {
+                        st.make_mut(&mut devs[d])[0] += 1.0;
+                    }
+                    Op::Mix(d, j) => {
+                        if !devs[d].shares_buffer_with(&edges[j]) {
+                            st.mix_into(&mut edges[j], &devs[d], 0.5);
+                        }
+                        edges[j].bump_version();
+                    }
+                    Op::Migrate(d, j) => {
+                        st.repoint(&mut devs[d], &edges[j]);
+                        dev_edge[d] = j;
+                    }
+                    Op::Upload(j) => {
+                        payloads.push(st.share(&edges[j]));
+                    }
+                }
+                // Invariant: live buffers == distinct ids among held
+                // handles; total refs == handles outstanding.
+                let mut ids: Vec<usize> = payloads
+                    .iter()
+                    .chain(edges.iter())
+                    .chain(devs.iter())
+                    .chain(std::iter::once(&cloud))
+                    .map(|r| r.id())
+                    .collect();
+                let handles = ids.len();
+                ids.sort_unstable();
+                ids.dedup();
+                if ids.len() != st.live_buffers() {
+                    return Err(format!(
+                        "live {} != distinct held ids {}",
+                        st.live_buffers(),
+                        ids.len()
+                    ));
+                }
+                if st.total_refs() != handles {
+                    return Err(format!(
+                        "total refs {} != handles {}",
+                        st.total_refs(),
+                        handles
+                    ));
+                }
+                st.assert_consistent();
+            }
+            // End of run: transfers land/drop, devices re-point to their
+            // edges — exactly 1 cloud + M edge buffers may stay live.
+            for r in payloads.drain(..) {
+                st.release(r);
+            }
+            for d in 0..seq.n {
+                st.repoint(&mut devs[d], &edges[dev_edge[d]]);
+            }
+            if st.live_buffers() > 1 + seq.m {
+                return Err(format!(
+                    "end-of-run live buffers {} > 1 cloud + {} edges",
+                    st.live_buffers(),
+                    seq.m
+                ));
+            }
+            for d in devs.drain(..) {
+                st.release(d);
+            }
+            for e in edges.drain(..) {
+                st.release(e);
+            }
+            st.release(cloud);
+            if st.live_buffers() != 0 {
+                return Err("handles released but buffers live".into());
+            }
+            st.assert_consistent();
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn checkout_of_shared_buffer_always_copies() {
+        check("store-cow-no-mutable-aliasing", 60, gen_ops, |seq| {
+            let p = 8;
+            let mut st = ModelStore::new(p);
+            let base = st.insert(vec![1.0; p], 0);
+            let mut handles: Vec<ModelRef> =
+                (0..seq.n).map(|_| st.share(&base)).collect();
+            for (i, &op) in seq.ops.iter().enumerate() {
+                let d = match op {
+                    Op::Train(d) | Op::Mix(d, _) | Op::Migrate(d, _) => d,
+                    _ => continue,
+                };
+                let before = st.slice(&base).to_vec();
+                let shared = st.is_shared(&handles[d]);
+                let old_id = handles[d].id();
+                st.make_mut(&mut handles[d])[i % p] = i as f32;
+                if shared && handles[d].id() == old_id {
+                    return Err(format!(
+                        "checkout of shared buffer {old_id} wrote in place"
+                    ));
+                }
+                if st.slice(&base) != before.as_slice() {
+                    return Err("a sharer observed the write".into());
+                }
+            }
+            for h in handles.drain(..) {
+                st.release(h);
+            }
+            st.release(base);
+            st.assert_consistent();
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn version_tags_strictly_increase_per_edge() {
+        check("store-versions-increase-per-edge", 60, gen_ops, |seq| {
+            let p = 4;
+            let mut st = ModelStore::new(p);
+            let mut cloud = st.insert(vec![0.0; p], 0);
+            let mut edges: Vec<ModelRef> =
+                (0..seq.m).map(|_| st.share(&cloud)).collect();
+            let mut last: Vec<u64> =
+                edges.iter().map(|e| e.version()).collect();
+            for &op in &seq.ops {
+                match op {
+                    // An aggregation on edge j must strictly advance it.
+                    Op::EdgeAgg(j) | Op::Mix(_, j) => {
+                        let v = edges[j].version() + 1;
+                        let agg = st.insert(vec![0.0; p], v);
+                        st.adopt(&mut edges[j], agg);
+                        if edges[j].version() <= last[j] {
+                            return Err(format!(
+                                "edge {j} version did not increase"
+                            ));
+                        }
+                        last[j] = edges[j].version();
+                    }
+                    // A broadcast adoption moves the buffer but must
+                    // never move a version tag backwards.
+                    Op::Broadcast => {
+                        cloud.bump_version();
+                        for (j, e) in edges.iter_mut().enumerate() {
+                            st.repoint_keep_version(e, &cloud);
+                            if e.version() < last[j] {
+                                return Err(format!(
+                                    "edge {j} version went backwards"
+                                ));
+                            }
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            for e in edges.drain(..) {
+                st.release(e);
+            }
+            st.release(cloud);
+            st.assert_consistent();
+            Ok(())
+        });
+    }
+}

@@ -85,6 +85,45 @@ impl<J: Send + 'static, R: Send + 'static> Drop for Pool<J, R> {
     }
 }
 
+/// Run `f` over `items` across up to `workers` scoped threads, for side
+/// effects (items usually carry `&mut` slices into a caller buffer).
+///
+/// The borrow-friendly sibling of [`Pool`]: `Pool`'s jobs must be
+/// `'static` (they cross long-lived worker channels), which rules out
+/// borrowing the caller's data — exactly what a chunked in-place kernel
+/// like `hfl::aggregate::aggregate_native_par` needs. This helper spawns
+/// scoped threads instead, so items may borrow, and joins them all before
+/// returning. Items are dealt round-robin; callers must not depend on
+/// processing order (the aggregation kernel is order-independent by
+/// construction — fixed chunk grid, disjoint outputs).
+pub fn par_for_each<T, F>(workers: usize, items: Vec<T>, f: F)
+where
+    T: Send,
+    F: Fn(T) + Sync,
+{
+    let workers = workers.clamp(1, items.len().max(1));
+    if workers == 1 {
+        for it in items {
+            f(it);
+        }
+        return;
+    }
+    let mut queues: Vec<Vec<T>> = (0..workers).map(|_| Vec::new()).collect();
+    for (i, it) in items.into_iter().enumerate() {
+        queues[i % workers].push(it);
+    }
+    std::thread::scope(|s| {
+        let f = &f;
+        for q in queues {
+            s.spawn(move || {
+                for it in q {
+                    f(it);
+                }
+            });
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -114,5 +153,39 @@ mod tests {
     fn empty_job_list() {
         let mut pool: Pool<u32, u32> = Pool::new(2, |_| (), |_, x| x);
         assert!(pool.map(vec![]).is_empty());
+    }
+
+    #[test]
+    fn par_for_each_visits_every_item_once() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        for workers in [1usize, 2, 3, 8] {
+            let sum = AtomicU64::new(0);
+            par_for_each(workers, (1..=100u64).collect(), |x| {
+                sum.fetch_add(x, Ordering::Relaxed);
+            });
+            assert_eq!(sum.load(Ordering::Relaxed), 5050, "w={workers}");
+        }
+        // Empty and oversized worker counts are fine.
+        par_for_each(4, Vec::<u64>::new(), |_| unreachable!());
+        let sum = AtomicU64::new(0);
+        par_for_each(16, vec![1u64, 2], |x| {
+            sum.fetch_add(x, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn par_for_each_mutates_borrowed_chunks() {
+        let mut out = vec![0u64; 64];
+        let chunks: Vec<(usize, &mut [u64])> =
+            out.chunks_mut(16).enumerate().collect();
+        par_for_each(4, chunks, |(ci, seg)| {
+            for (i, v) in seg.iter_mut().enumerate() {
+                *v = (ci * 16 + i) as u64;
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i as u64);
+        }
     }
 }

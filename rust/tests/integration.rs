@@ -180,6 +180,20 @@ fn engine_round_trains_and_accounts() {
         assert!(e.t_ec > 0.0);
         assert!(e.t_sgd_slowest > 0.0);
     }
+    // Model-store observables: right after the round's broadcast every
+    // device handle shares the cloud buffer — the O(N·p) clone wall is
+    // gone and the history rows can prove it.
+    assert!(
+        stats.sharing_ratio > 0.9,
+        "post-broadcast sharing_ratio {} <= 0.9",
+        stats.sharing_ratio
+    );
+    assert!(
+        stats.live_model_buffers <= 1 + m,
+        "live buffers {} exceed 1 cloud + {m} edges",
+        stats.live_model_buffers
+    );
+    assert!(stats.peak_model_bytes > 0);
     // Training from synthetic-learnable data should beat random-init acc
     // within a few rounds.
     let mut acc = stats.accuracy;
@@ -200,14 +214,16 @@ fn engine_reset_restores_initial_state() {
     require_artifacts!();
     let cfg = small_cfg();
     let mut engine = HflEngine::new(cfg, false).unwrap();
-    let w0 = engine.cloud_w.clone();
+    let w0 = engine.cloud_model().to_vec();
     let m = engine.edges();
     engine.run_round(&vec![1; m], &vec![1; m], None).unwrap();
-    assert!(engine.cloud_w != w0);
+    assert!(engine.cloud_model() != w0.as_slice());
     engine.reset();
-    assert_eq!(engine.cloud_w, w0);
+    assert_eq!(engine.cloud_model(), w0.as_slice());
     assert_eq!(engine.round, 0);
     assert_eq!(engine.clock.now(), 0.0);
+    // Reset collapses the whole hierarchy back onto one shared buffer.
+    assert_eq!(engine.store.live_buffers(), 1);
 }
 
 #[test]
@@ -382,7 +398,11 @@ fn async_engine_sync_mode_matches_run_round_bit_for_bit() {
             assert_eq!(a.per_edge[j].active, b.per_edge[j].active);
         }
     }
-    assert_eq!(barrier.cloud_w, events.eng.cloud_w, "models diverged");
+    assert_eq!(
+        barrier.cloud_model(),
+        events.eng.cloud_model(),
+        "models diverged"
+    );
 }
 
 #[test]
@@ -433,6 +453,14 @@ fn semi_sync_and_async_modes_run_end_to_end() {
             // At least one edge aggregation per window once training flows.
             let aggs: usize = r.gamma2.iter().sum();
             assert!(aggs > 0, "{mode:?}: window {} had no edge aggs", r.k);
+            // Memory observables flow through the event engine too.
+            assert!(r.live_model_buffers >= 1, "{mode:?}");
+            assert!(r.peak_model_bytes > 0, "{mode:?}");
+            assert!(
+                (0.0..=1.0).contains(&r.sharing_ratio),
+                "{mode:?}: sharing_ratio {}",
+                r.sharing_ratio
+            );
         }
         // Event-driven runs advance the simulated clock through windows.
         assert!(hist.total_time() > 0.0);
@@ -669,7 +697,8 @@ fn rearming_fixed_knobs_is_bitwise_noop() {
             }
         }
         assert_eq!(
-            plain.eng.cloud_w, stepped.eng.cloud_w,
+            plain.eng.cloud_model(),
+            stepped.eng.cloud_model(),
             "{mode:?}: models diverged"
         );
     }
@@ -780,10 +809,15 @@ fn recluster_triggers_and_warm_starts_under_churn() {
             for &(d, old, new) in &out.migrated {
                 assert_ne!(old, new, "non-move listed as migration");
                 // Warm start: the migrated device resumed from its new
-                // edge's current model.
-                assert_eq!(
-                    e.device_w[d], e.edge_w[new],
+                // edge's current model — by reference, not by copy.
+                assert!(
+                    e.device_w[d].shares_buffer_with(&e.edge_w[new]),
                     "device {d} not warm-started from edge {new}"
+                );
+                assert_eq!(
+                    e.model(&e.device_w[d]),
+                    e.model(&e.edge_w[new]),
+                    "device {d} model differs from edge {new}"
                 );
                 assert!(e.topo.edges[new].members.contains(&d));
                 assert_eq!(
@@ -870,7 +904,7 @@ fn recluster_enabled_is_noop_without_churn() {
         for _ in 0..3 {
             rounds.push(e.run_round(&vec![2; m], &vec![1; m], None).unwrap());
         }
-        (rounds, e.cloud_w.clone())
+        (rounds, e.cloud_model().to_vec())
     };
     let (a, wa) = run(&base);
     let (b, wb) = run(&enabled);
