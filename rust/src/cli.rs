@@ -14,12 +14,14 @@ use crate::baselines;
 use crate::config::{ExperimentConfig, SyncModeCfg};
 use crate::exp;
 use crate::hfl::{AsyncHflEngine, HflEngine};
+use crate::obs::{ObsState, Observer, RunObserver, TelemetryServer};
 
 const USAGE: &str = "\
 arena — learning-based synchronization for hierarchical federated learning
 
 USAGE:
   arena run [--preset mnist|cifar] [--scheme NAME] [--set key=value ...]
+            [--serve ADDR] [--trace-out PATH]
   arena train-agent [--preset ...] [--episodes N] [--hwamei] [--set ...]
   arena experiment <ID> [--preset ...] [--set ...]    (fig2..fig12, table1, table2, all)
   arena profile [--preset ...] [--set ...]
@@ -55,6 +57,17 @@ CHURN:   with sim.leave_prob/join_prob enabled, the membership subsystem
          try 0.1-0.3) and --set cluster.recluster_min_interval=S
          (simulated seconds between re-clusterings). Migrated devices
          warm-start from their new edge's model over its downlink.
+
+OBSERVE: run --serve 127.0.0.1:9898 attaches a read-only observer and
+         serves /healthz, /metrics (Prometheus text) and /stream (one
+         NDJSON frame per closed cloud round) while the run progresses;
+         the server stays up after the run until ctrl-c. --trace-out
+         PATH writes a chrome://tracing timeline (training bursts,
+         in-flight transfers, cloud windows; one track per edge) at the
+         end. Observation never perturbs the run: an instrumented run
+         is bitwise identical to an uninstrumented one. Without the
+         compiled artifacts, --serve falls back to a sim-only demo feed
+         so the endpoints can still be scraped (CI does exactly that).
 ";
 
 pub struct Args {
@@ -176,18 +189,59 @@ fn cmd_run(args: &Args) -> Result<()> {
         "sync.learned is the arena-async scheme's knob; '{scheme}' runs \
          fixed knobs — drop the flag or use --scheme arena-async"
     );
+    // Telemetry (`obs`): --serve starts the scrape/stream server,
+    // --trace-out dumps a Chrome-trace timeline after the run. Both ride
+    // the read-only Observer, so the simulated run is bit-for-bit the
+    // same with or without them.
+    let serve = args.flags.get("serve");
+    let trace_out = args.flags.get("trace-out");
+    let mut server = None;
+    if let Some(addr) = serve {
+        let srv = TelemetryServer::bind(addr)?;
+        println!(
+            "telemetry: /healthz /metrics /stream on http://{}",
+            srv.local_addr()
+        );
+        server = Some(srv);
+    }
+    let mut observer = if server.is_some() || trace_out.is_some() {
+        Some(match &server {
+            Some(s) => RunObserver::with_sink(s.sink()),
+            None => RunObserver::new(),
+        })
+    } else {
+        None
+    };
+    let obs_state = observer.as_ref().map(|o| o.state());
+    // No compiled artifacts — no engine. When observing, fall back to a
+    // sim-only demo feed so the endpoints still serve real exposition and
+    // frames (the CI smoke path); otherwise fail as before.
+    if observer.is_some() && !artifacts_present() {
+        println!(
+            "artifacts missing (run `make artifacts` for a real run): \
+             serving a sim-only telemetry demo instead"
+        );
+        run_telemetry_demo(observer.take().unwrap(), 6);
+        return finish_observation(obs_state, trace_out, server);
+    }
     let hist = match scheme {
         // Event-driven schemes run on the async engine.
         "semi-sync" => {
             let mut c = cfg.clone();
             c.sync.mode = SyncModeCfg::SemiSync;
             let mut engine = AsyncHflEngine::new(c, true)?;
+            if let Some(o) = observer.take() {
+                engine.attach_observer(Box::new(o));
+            }
             engine.run_to_threshold()?
         }
         "async-greedy" => {
             let mut c = cfg.clone();
             c.sync.mode = SyncModeCfg::Async;
             let mut engine = AsyncHflEngine::new(c, true)?;
+            if let Some(o) = observer.take() {
+                engine.attach_observer(Box::new(o));
+            }
             baselines::async_greedy::async_greedy(&mut engine)?
         }
         "arena-async" => {
@@ -203,12 +257,19 @@ fn cmd_run(args: &Args) -> Result<()> {
             let (agent, sb, _) = train_arena_on(&mut engine, &opts)?;
             // Roll out on a fresh engine: training advanced the churn
             // process on the old one, and the reported run should be a
-            // pure function of the seed.
+            // pure function of the seed. The observer watches the
+            // reported rollout, not the training episodes.
             let mut engine = AsyncHflEngine::new(c, true)?;
+            if let Some(o) = observer.take() {
+                engine.attach_observer(Box::new(o));
+            }
             run_policy_on(&mut engine, &agent, &sb, true)?
         }
         _ => {
             let mut engine = HflEngine::new(cfg.clone(), true)?;
+            if let Some(o) = observer.take() {
+                engine.attach_observer(Box::new(o));
+            }
             match scheme {
                 "vanilla-fl" => baselines::vanilla_fl(&mut engine, 0.6)?,
                 "vanilla-hfl" => baselines::vanilla_hfl(&mut engine)?,
@@ -256,7 +317,122 @@ fn cmd_run(args: &Args) -> Result<()> {
         hist.total_energy(),
         hist.total_energy() / cfg.topology.devices as f64
     );
+    finish_observation(obs_state, trace_out, server)
+}
+
+/// True when the AOT artifact directory (env `ARENA_ARTIFACTS`, default
+/// `artifacts/`) holds a manifest — without one no engine can be built.
+fn artifacts_present() -> bool {
+    let dir = std::env::var("ARENA_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".to_string());
+    std::path::Path::new(&dir).join("manifest.json").exists()
+}
+
+/// End-of-run observability epilogue: write the Chrome trace if asked,
+/// refresh the server's scrape text one last time, and — when serving —
+/// hold the process so late scrapers still get answers (ctrl-c to exit).
+fn finish_observation(
+    state: Option<std::sync::Arc<std::sync::Mutex<ObsState>>>,
+    trace_out: Option<&String>,
+    server: Option<TelemetryServer>,
+) -> Result<()> {
+    let Some(state) = state else { return Ok(()) };
+    let st = state.lock().unwrap();
+    if let Some(path) = trace_out {
+        st.trace.write_chrome_json(path)?;
+        println!(
+            "trace: wrote {} spans to {path} (load at chrome://tracing)",
+            st.trace.len()
+        );
+    }
+    if let Some(srv) = &server {
+        // Cover runs whose last rounds closed after the final sink
+        // publish (or that never had a sink-publishing round at all).
+        srv.sink().set_metrics(st.registry.render_prometheus());
+        drop(st);
+        println!("run complete; telemetry stays up (ctrl-c to exit)");
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
     Ok(())
+}
+
+/// Sim-only telemetry feed for hosts without compiled artifacts: drain a
+/// seeded event schedule through the real observer/exporter stack so
+/// `--serve` answers with genuine exposition text and round frames. Every
+/// value is a pure function of the loop indices — no RNG, no wall-clock
+/// in the data (wall-clock is read only for the handler-cost histograms,
+/// exactly as in a real observed run).
+fn run_telemetry_demo(mut obs: RunObserver, rounds: usize) {
+    use crate::hfl::RoundAccumulator;
+    use crate::sim::{Event, EventQueue};
+    let m = 4; // edges
+    let per_edge = 3; // devices per edge
+    let interval = 60.0; // cloud window, sim seconds
+    let mut now = 0.0;
+    for k in 1..=rounds {
+        let mut q = EventQueue::new(0x0b5 ^ k as u64);
+        let mut acc = RoundAccumulator::new(m);
+        for j in 0..m {
+            for i in 0..per_edge {
+                let d = j * per_edge + i;
+                let t_dev = 5.0 + ((k + 2 * j + 3 * i) % 7) as f64;
+                q.schedule(
+                    now + t_dev,
+                    Event::DeviceTrainDone { device: d, edge: j },
+                );
+                obs.on_span(crate::obs::Span {
+                    track: format!("edge/{j}"),
+                    name: format!("train d{d}"),
+                    t0_sim: now,
+                    t1_sim: now + t_dev,
+                    wall_ns: 0,
+                });
+            }
+            q.schedule(now + 15.0, Event::EdgeAggregate { edge: j });
+        }
+        q.schedule(now + interval, Event::CloudAggregate);
+        while let Some((t, ev)) = q.pop() {
+            let t0 = std::time::Instant::now();
+            let variant = match &ev {
+                Event::DeviceTrainDone { device, edge } => {
+                    acc.record_train(
+                        *edge,
+                        *device,
+                        t - now,
+                        0.4,
+                        Some(1.0 / k as f64),
+                    );
+                    "train_done"
+                }
+                Event::EdgeAggregate { edge } => {
+                    let up = 2.0 + (*edge % 3) as f64;
+                    obs.on_transfer(*edge, "up", 1.0e6, t, t + up);
+                    "edge_aggregate"
+                }
+                Event::CloudAggregate => "cloud_aggregate",
+                _ => "other",
+            };
+            obs.on_event_handled(
+                variant,
+                t,
+                0,
+                t0.elapsed().as_nanos() as u64,
+            );
+        }
+        for j in 0..m {
+            acc.record_window(j, 2.5, 1.5, 11.0, 2.5, 1.5, 4.0, 1.0);
+        }
+        now += interval;
+        let g = vec![1usize; m];
+        let a = 0.3 + 0.6 * (k as f64 / rounds as f64);
+        let mut stats =
+            acc.finish(k, a, 1.0 - a, interval, now, &g, &g);
+        stats.active_devices = m * per_edge;
+        obs.on_store(m + 1, 1 << 20, 1.0);
+        obs.on_round(&stats);
+    }
 }
 
 fn cmd_train_agent(args: &Args) -> Result<()> {

@@ -29,6 +29,35 @@ pub const EXPERIMENTS: &[&str] = &[
 ];
 
 pub fn run_experiment(name: &str, cfg: &ExperimentConfig) -> Result<()> {
+    let t0 = std::time::Instant::now();
+    let res = dispatch_experiment(name, cfg);
+    // Per-figure wall time goes through the shared metrics registry so it
+    // lands in the same exposition format as engine telemetry: one gauge
+    // per figure plus a cross-figure histogram, re-rendered to
+    // results/harness_metrics.prom after every experiment.
+    let wall = t0.elapsed().as_secs_f64();
+    let mut reg = crate::obs::harness_registry().lock().unwrap();
+    reg.set_gauge(
+        &format!(
+            "arena_harness_{}_wall_seconds",
+            crate::obs::metric_fragment(name)
+        ),
+        wall,
+    );
+    reg.observe("arena_harness_phase_wall_seconds", wall);
+    let write = std::fs::create_dir_all("results").and_then(|()| {
+        std::fs::write(
+            "results/harness_metrics.prom",
+            reg.render_prometheus(),
+        )
+    });
+    if let Err(e) = write {
+        eprintln!("warn: could not write harness metrics: {e}");
+    }
+    res
+}
+
+fn dispatch_experiment(name: &str, cfg: &ExperimentConfig) -> Result<()> {
     match name {
         "fig2" => fig2(cfg),
         "fig3" => fig3(cfg),

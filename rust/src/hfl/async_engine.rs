@@ -186,6 +186,18 @@ pub(crate) fn quorum_satisfied(
     reported >= effective_quorum(quorum, live)
 }
 
+/// Stable per-variant label for observer hooks and metric names.
+fn event_variant(ev: &Event) -> &'static str {
+    match ev {
+        Event::DeviceTrainDone { .. } => "train_done",
+        Event::EdgeAggregate { .. } => "edge_aggregate",
+        Event::CloudAggregate => "cloud_aggregate",
+        Event::MobilityFlip => "mobility_flip",
+        Event::Recluster => "recluster",
+        Event::TransferDone { .. } => "transfer_done",
+    }
+}
+
 /// A dispatched-but-not-yet-completed local training run. The real compute
 /// happens eagerly at dispatch (results depend only on weights + seed, not
 /// on simulated time); the simulated completion is the queued event. The
@@ -366,6 +378,21 @@ impl AsyncHflEngine {
 
     pub fn edges(&self) -> usize {
         self.eng.edges()
+    }
+
+    /// Attach an [`Observer`](crate::obs::Observer) to the underlying
+    /// engine. Hooks are read-only and may never feed back into the
+    /// simulation — an instrumented run is bitwise identical to an
+    /// uninstrumented one (enforced by an integration test).
+    pub fn attach_observer(&mut self, obs: Box<dyn crate::obs::Observer>) {
+        self.eng.attach_observer(obs);
+    }
+
+    /// Detach and return the current observer, if any.
+    pub fn detach_observer(
+        &mut self,
+    ) -> Option<Box<dyn crate::obs::Observer>> {
+        self.eng.detach_observer()
     }
 
     /// Run the configured mode to the time threshold with uniform default
@@ -571,6 +598,7 @@ impl AsyncHflEngine {
         );
         self.eng.finalize_membership_stats(&mut stats);
         self.eng.finalize_memory_stats(&mut stats);
+        self.eng.emit_round_observation(&stats);
         self.eng.last_round = Some(stats.clone());
         Ok(stats)
     }
@@ -672,8 +700,21 @@ impl AsyncHflEngine {
             if t_next > threshold {
                 break;
             }
+            // Wall-clock reads are gated on an attached observer: with
+            // none, this path performs no `Instant` syscalls. Either way
+            // wall time only flows into observer records, never into the
+            // simulated timeline (the observer-on == observer-off bitwise
+            // guarantee).
+            let t_pop = self
+                .eng
+                .obs
+                .as_ref()
+                .map(|_| std::time::Instant::now());
             let (t, ev) = self.queue.pop().expect("peeked event vanished");
+            let t_handle = t_pop.map(|_| std::time::Instant::now());
+            let variant = event_variant(&ev);
             self.sweep(t);
+            let mut window = None;
             match ev {
                 Event::DeviceTrainDone { device, edge } => {
                     self.on_train_done(device, edge, t)?;
@@ -682,13 +723,26 @@ impl AsyncHflEngine {
                     self.on_edge_aggregate(edge, t)?;
                 }
                 Event::CloudAggregate => {
-                    return Ok(Some(self.on_cloud_aggregate(t)?));
+                    window = Some(self.on_cloud_aggregate(t)?);
                 }
                 Event::MobilityFlip => self.on_mobility_flip(t)?,
                 Event::Recluster => self.on_recluster(t)?,
                 Event::TransferDone { transfer } => {
                     self.on_transfer_done(transfer, t)?;
                 }
+            }
+            if let Some(o) = self.eng.obs.as_mut() {
+                let lag_ns = t_pop
+                    .zip(t_handle)
+                    .map(|(p, h)| h.duration_since(p).as_nanos() as u64)
+                    .unwrap_or(0);
+                let handler_ns = t_handle
+                    .map(|h| h.elapsed().as_nanos() as u64)
+                    .unwrap_or(0);
+                o.on_event_handled(variant, t, lag_ns, handler_ns);
+            }
+            if let Some(stats) = window {
+                return Ok(Some(stats));
             }
         }
         // Flush the tail: training completed after the last timer tick
@@ -787,6 +841,18 @@ impl AsyncHflEngine {
                 now + t_dev,
                 Event::DeviceTrainDone { device: d, edge: j },
             );
+            if let Some(o) = self.eng.obs.as_mut() {
+                // Training burst on the edge's trace track; both span
+                // endpoints are simulated times, so the trace is
+                // deterministic under a fixed seed.
+                o.on_span(crate::obs::Span {
+                    track: format!("edge/{j}"),
+                    name: format!("train d{d}"),
+                    t0_sim: now,
+                    t1_sim: now + t_dev,
+                    wall_ns: 0,
+                });
+            }
         }
         Ok(())
     }
@@ -949,6 +1015,15 @@ impl AsyncHflEngine {
             .remove(&tr.id)
             .expect("live transfer without payload");
         self.transfer_log.push((tr.id, tr.edge, t));
+        if let Some(o) = self.eng.obs.as_mut() {
+            o.on_transfer(
+                tr.edge,
+                tr.dir.name(),
+                tr.bytes as f64,
+                tr.start,
+                tr.finish,
+            );
+        }
         match payload {
             Payload::Upload { edge, r } => {
                 self.obs_up[edge] = tr.finish - tr.start;
@@ -1140,6 +1215,7 @@ impl AsyncHflEngine {
         );
         self.eng.finalize_membership_stats(&mut stats);
         self.eng.finalize_memory_stats(&mut stats);
+        self.eng.emit_round_observation(&stats);
         self.eng.last_round = Some(stats.clone());
         self.window_start = t;
         if !self.draining {
@@ -1236,6 +1312,11 @@ impl AsyncHflEngine {
         {
             return Ok(());
         }
+        let t_wall = self
+            .eng
+            .obs
+            .as_ref()
+            .map(|_| std::time::Instant::now());
         let Some(out) = self.eng.recluster_core(t)? else {
             return Ok(()); // infeasible region split; retried on later flips
         };
@@ -1272,6 +1353,12 @@ impl AsyncHflEngine {
                 .collect(),
             t,
         );
+        if let Some(o) = self.eng.obs.as_mut() {
+            let wall_ns = t_wall
+                .map(|i| i.elapsed().as_nanos() as u64)
+                .unwrap_or(0);
+            o.on_recluster(t, out.migrated.len(), wall_ns);
+        }
         self.eng.last_recluster = Some(out);
         Ok(())
     }

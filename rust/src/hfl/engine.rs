@@ -3,6 +3,7 @@
 use anyhow::{Context, Result};
 
 use crate::config::ExperimentConfig;
+use crate::obs::Observer;
 use crate::pca::PcaModel;
 use crate::runtime::{pool::TrainJob, DevicePool, HostTensor, Runtime};
 use crate::sim::{
@@ -57,6 +58,11 @@ pub struct HflEngine {
     pub round: usize,
     pub total_energy: f64,
     pub last_round: Option<RoundStats>,
+    /// Optional run instrumentation (`crate::obs`). Hooks only read;
+    /// engines gate every wall-clock read on `obs.is_some()`, so a run
+    /// with an observer attached stays bitwise identical to one without
+    /// (the observer-noop determinism guarantee).
+    pub(crate) obs: Option<Box<dyn Observer>>,
 }
 
 impl HflEngine {
@@ -141,8 +147,21 @@ impl HflEngine {
             round: 0,
             total_energy: 0.0,
             last_round: None,
+            obs: None,
             cfg,
         })
+    }
+
+    /// Attach run instrumentation. The observer only ever reads —
+    /// attaching one must not change any simulated outcome (asserted by
+    /// the `observer_attach_is_bitwise_noop` integration test).
+    pub fn attach_observer(&mut self, obs: Box<dyn Observer>) {
+        self.obs = Some(obs);
+    }
+
+    /// Detach and return the current observer, if any.
+    pub fn detach_observer(&mut self) -> Option<Box<dyn Observer>> {
+        self.obs.take()
     }
 
     /// Reset models/clock/energy for a fresh run (new DRL episode or new
@@ -732,9 +751,17 @@ impl HflEngine {
         {
             return Ok(None);
         }
+        // Wall-clock is read only when an observer is attached, and only
+        // flows into the observer record — never into sim state.
+        let t_wall = self.obs.as_ref().map(|_| std::time::Instant::now());
         let Some(mut out) = self.recluster_core(now)? else {
             return Ok(None);
         };
+        if let Some(o) = self.obs.as_mut() {
+            let wall_ns =
+                t_wall.map(|t| t.elapsed().as_nanos() as u64).unwrap_or(0);
+            o.on_recluster(now, out.migrated.len(), wall_ns);
+        }
         let dests: std::collections::BTreeSet<usize> =
             out.migrated.iter().map(|&(_, _, new)| new).collect();
         let pbytes = crate::sim::network::model_bytes(self.p);
@@ -900,8 +927,22 @@ impl HflEngine {
         );
         self.finalize_membership_stats(&mut stats);
         self.finalize_memory_stats(&mut stats);
+        self.emit_round_observation(&stats);
         self.last_round = Some(stats.clone());
         Ok(stats)
+    }
+
+    /// Publish a closed round to the attached observer, if any (store
+    /// occupancy snapshot + the round itself). Read-only by contract.
+    pub(crate) fn emit_round_observation(&mut self, stats: &RoundStats) {
+        if let Some(o) = self.obs.as_mut() {
+            o.on_store(
+                stats.live_model_buffers,
+                stats.peak_model_bytes,
+                stats.sharing_ratio,
+            );
+            o.on_round(stats);
+        }
     }
 
     /// Native weighted aggregation — the CPU roofline reference for the

@@ -4,6 +4,12 @@
 use crate::util::csv::CsvWriter;
 use crate::util::json::Json;
 
+/// Version of the emitted result schemas: the `RunHistory` CSV header
+/// comment, the per-round JSON objects and the `/stream` NDJSON frames
+/// all carry it so dashboards can evolve without silent breakage. Bump
+/// on any backwards-incompatible column/field change.
+pub const SCHEMA_VERSION: usize = 1;
+
 /// Per-edge observables h_j(k) of paper Eq. (7), plus bookkeeping.
 ///
 /// Since the transfer layer (`sim::link`) landed, communication fields are
@@ -143,6 +149,7 @@ impl RoundStats {
 
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
+            ("schema_version", Json::num(SCHEMA_VERSION as f64)),
             ("k", Json::num(self.k as f64)),
             ("accuracy", Json::num(self.accuracy)),
             ("test_loss", Json::num(self.test_loss)),
@@ -492,8 +499,9 @@ impl RunHistory {
 
     /// Write the (time, accuracy, energy, link, membership) series to CSV.
     pub fn write_csv(&self, path: &str, label: &str) -> std::io::Result<()> {
-        let mut w = CsvWriter::create(
+        let mut w = CsvWriter::create_with_comment(
             path,
+            Some(&format!("schema_version={SCHEMA_VERSION}")),
             &["scheme", "k", "sim_time", "accuracy", "round_energy",
               "cum_energy", "train_loss", "comm_overlap_frac",
               "mean_link_util", "mean_staleness", "n_reclusters",
@@ -659,6 +667,10 @@ mod tests {
     #[test]
     fn round_json_has_fields() {
         let j = round(2, 0.5, 10.0, 1.0).to_json();
+        assert_eq!(
+            j.get("schema_version").unwrap().as_usize().unwrap(),
+            SCHEMA_VERSION
+        );
         assert_eq!(j.get("k").unwrap().as_usize().unwrap(), 2);
         assert!(j.get("gamma1").unwrap().as_arr().is_some());
         assert!(j.get("n_reclusters").is_some());

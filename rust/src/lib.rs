@@ -19,6 +19,7 @@ pub mod exp;
 pub mod hfl;
 pub mod linalg;
 pub mod nn;
+pub mod obs;
 pub mod pca;
 pub mod runtime;
 pub mod sim;

@@ -1,0 +1,369 @@
+//! Metrics core: counters, gauges and log₂-bucketed histograms behind a
+//! name-keyed registry with deterministic Prometheus text exposition.
+//!
+//! Dependency-free by design (std only). Keys are flat Prometheus metric
+//! names (`[a-zA-Z_:][a-zA-Z0-9_:]*`, by caller convention); the registry
+//! stores them in `BTreeMap`s and renders them sorted, so the exposition
+//! text is a pure function of the recorded values — exact-text golden
+//! tests stay stable across runs and platforms.
+
+use std::collections::BTreeMap;
+
+/// Number of log₂ buckets in a [`Histogram`]. Bucket `i` holds values in
+/// `(2^(i-1), 2^i]` (bucket 0 holds everything ≤ 1); the last bucket also
+/// absorbs +inf / overflow.
+pub const BUCKETS: usize = 64;
+
+/// Log₂ bucket index for `v`: the smallest `i` with `v <= 2^i`, clamped
+/// to `[0, BUCKETS-1]`. NaN and values ≤ 1 land in bucket 0.
+#[inline]
+pub fn bucket_index(v: f64) -> usize {
+    if !(v > 1.0) {
+        return 0;
+    }
+    if v >= 9.0e18 {
+        return BUCKETS - 1;
+    }
+    let n = v.ceil() as u64;
+    (64 - (n - 1).leading_zeros() as usize).min(BUCKETS - 1)
+}
+
+/// Inclusive upper bound of bucket `i` (`2^i`).
+#[inline]
+pub fn bucket_upper(i: usize) -> f64 {
+    2f64.powi(i as i32)
+}
+
+/// Fixed-size log₂-bucketed histogram: O(1) record, O(1) merge, and
+/// approximate percentiles with ≤2x relative error — latency telemetry
+/// without per-sample storage on the hot path.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    counts: [u64; BUCKETS],
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            counts: [0; BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    #[inline]
+    pub fn record(&mut self, v: f64) {
+        self.counts[bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        if v < self.min {
+            self.min = v;
+        }
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn bucket_count(&self, i: usize) -> u64 {
+        self.counts[i]
+    }
+
+    /// Approximate `p`-th percentile (`p` in `[0, 100]`): the upper bound
+    /// of the bucket holding the `ceil(p/100·count)`-th smallest sample,
+    /// clamped to the observed `[min, max]` range. 0 when empty.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target =
+            ((p / 100.0 * self.count as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return bucket_upper(i).min(self.max).max(self.min);
+            }
+        }
+        self.max
+    }
+
+    /// Merge another histogram into this one (counts, sum and range).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        if other.min < self.min {
+            self.min = other.min;
+        }
+        if other.max > self.max {
+            self.max = other.max;
+        }
+    }
+}
+
+/// Format an f64 for exposition: integral values print without a
+/// fractional part so the golden text stays platform-independent.
+pub fn fmt_value(v: f64) -> String {
+    if v.is_finite() && v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Name-keyed registry of counters, gauges and histograms.
+///
+/// All maps are `BTreeMap`s, so [`Registry::render_prometheus`] output is
+/// fully ordered: counters, then gauges, then histograms, each sorted by
+/// metric name.
+#[derive(Clone, Debug, Default)]
+pub struct Registry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    hists: BTreeMap<String, Histogram>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    /// Increment counter `name` by 1 (created at 0 on first touch).
+    pub fn inc(&mut self, name: &str) {
+        self.inc_by(name, 1);
+    }
+
+    pub fn inc_by(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn set_gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    /// Record `v` into histogram `name` (created empty on first touch).
+    pub fn observe(&mut self, name: &str, v: f64) {
+        self.hists
+            .entry(name.to_string())
+            .or_insert_with(Histogram::new)
+            .record(v);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.hists.get(name)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty()
+            && self.gauges.is_empty()
+            && self.hists.is_empty()
+    }
+
+    /// Merge another registry into this one: counters add, gauges take
+    /// the other's value, histograms merge.
+    pub fn merge(&mut self, other: &Registry) {
+        for (k, v) in &other.counters {
+            self.inc_by(k, *v);
+        }
+        for (k, v) in &other.gauges {
+            self.gauges.insert(k.clone(), *v);
+        }
+        for (k, h) in &other.hists {
+            self.hists
+                .entry(k.clone())
+                .or_insert_with(Histogram::new)
+                .merge(h);
+        }
+    }
+
+    /// Prometheus text exposition (format version 0.0.4). Histograms emit
+    /// cumulative `_bucket{le=...}` series up to the highest non-empty
+    /// bucket plus `+Inf`, then `_sum` and `_count`.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, v) in &self.counters {
+            out.push_str(&format!("# TYPE {name} counter\n"));
+            out.push_str(&format!("{name} {v}\n"));
+        }
+        for (name, v) in &self.gauges {
+            out.push_str(&format!("# TYPE {name} gauge\n"));
+            out.push_str(&format!("{name} {}\n", fmt_value(*v)));
+        }
+        for (name, h) in &self.hists {
+            out.push_str(&format!("# TYPE {name} histogram\n"));
+            let top = h
+                .counts
+                .iter()
+                .rposition(|&c| c > 0)
+                .unwrap_or(0);
+            let mut cum = 0u64;
+            for (i, &c) in h.counts.iter().enumerate().take(top + 1) {
+                cum += c;
+                // Upper bounds are exact powers of two: print integral.
+                let le = 1u128 << i;
+                out.push_str(&format!(
+                    "{name}_bucket{{le=\"{le}\"}} {cum}\n"
+                ));
+            }
+            out.push_str(&format!(
+                "{name}_bucket{{le=\"+Inf\"}} {}\n",
+                h.count
+            ));
+            out.push_str(&format!(
+                "{name}_sum {}\n",
+                fmt_value(h.sum)
+            ));
+            out.push_str(&format!("{name}_count {}\n", h.count));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_are_exact_powers_of_two() {
+        // Bucket i holds (2^(i-1), 2^i]; boundary values land low.
+        assert_eq!(bucket_index(f64::NAN), 0);
+        assert_eq!(bucket_index(-3.0), 0);
+        assert_eq!(bucket_index(0.0), 0);
+        assert_eq!(bucket_index(1.0), 0);
+        assert_eq!(bucket_index(1.5), 1);
+        assert_eq!(bucket_index(2.0), 1);
+        assert_eq!(bucket_index(2.0000001), 2);
+        assert_eq!(bucket_index(4.0), 2);
+        assert_eq!(bucket_index(100.0), 7);
+        assert_eq!(bucket_index(128.0), 7);
+        assert_eq!(bucket_index(129.0), 8);
+        assert_eq!(bucket_index(1e30), BUCKETS - 1);
+        assert_eq!(bucket_upper(0), 1.0);
+        assert_eq!(bucket_upper(10), 1024.0);
+    }
+
+    #[test]
+    fn histogram_records_and_ranks() {
+        let mut h = Histogram::new();
+        for v in [1.0, 3.0, 3.5, 100.0] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert!((h.sum() - 107.5).abs() < 1e-12);
+        assert_eq!(h.bucket_count(0), 1);
+        assert_eq!(h.bucket_count(2), 2);
+        assert_eq!(h.bucket_count(7), 1);
+        // p50 falls in bucket 2 → upper bound 4.
+        assert_eq!(h.percentile(50.0), 4.0);
+        // p99 falls in the top bucket, clamped to the observed max.
+        assert_eq!(h.percentile(99.0), 100.0);
+        assert_eq!(h.percentile(0.0), 1.0);
+        assert_eq!(Histogram::new().percentile(50.0), 0.0);
+    }
+
+    #[test]
+    fn histogram_merge_adds_counts_and_range() {
+        let mut a = Histogram::new();
+        a.record(2.0);
+        a.record(10.0);
+        let mut b = Histogram::new();
+        b.record(1000.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert!((a.sum() - 1012.0).abs() < 1e-12);
+        assert_eq!(a.percentile(100.0), 1000.0);
+        assert_eq!(a.bucket_count(bucket_index(1000.0)), 1);
+    }
+
+    #[test]
+    fn registry_accessors() {
+        let mut r = Registry::new();
+        assert!(r.is_empty());
+        r.inc("a_total");
+        r.inc_by("a_total", 2);
+        r.set_gauge("g", 1.25);
+        r.observe("h", 5.0);
+        assert_eq!(r.counter("a_total"), 3);
+        assert_eq!(r.counter("missing"), 0);
+        assert_eq!(r.gauge("g"), Some(1.25));
+        assert_eq!(r.histogram("h").unwrap().count(), 1);
+        assert!(!r.is_empty());
+        let mut r2 = Registry::new();
+        r2.inc_by("a_total", 7);
+        r2.observe("h", 6.0);
+        r.merge(&r2);
+        assert_eq!(r.counter("a_total"), 10);
+        assert_eq!(r.histogram("h").unwrap().count(), 2);
+    }
+
+    #[test]
+    fn prometheus_exposition_golden_text() {
+        let mut r = Registry::new();
+        r.inc_by("arena_events_total", 41);
+        r.inc("arena_events_total");
+        r.inc("arena_rounds_total");
+        r.set_gauge("arena_accuracy", 0.5);
+        r.observe("arena_lag_ns", 1.0);
+        r.observe("arena_lag_ns", 3.0);
+        r.observe("arena_lag_ns", 100.0);
+        let want = "\
+# TYPE arena_events_total counter
+arena_events_total 42
+# TYPE arena_rounds_total counter
+arena_rounds_total 1
+# TYPE arena_accuracy gauge
+arena_accuracy 0.5
+# TYPE arena_lag_ns histogram
+arena_lag_ns_bucket{le=\"1\"} 1
+arena_lag_ns_bucket{le=\"2\"} 1
+arena_lag_ns_bucket{le=\"4\"} 2
+arena_lag_ns_bucket{le=\"8\"} 2
+arena_lag_ns_bucket{le=\"16\"} 2
+arena_lag_ns_bucket{le=\"32\"} 2
+arena_lag_ns_bucket{le=\"64\"} 2
+arena_lag_ns_bucket{le=\"128\"} 3
+arena_lag_ns_bucket{le=\"+Inf\"} 3
+arena_lag_ns_sum 104
+arena_lag_ns_count 3
+";
+        assert_eq!(r.render_prometheus(), want);
+    }
+}

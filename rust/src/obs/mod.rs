@@ -1,0 +1,401 @@
+//! # Observability: deterministic tracing, metrics, live telemetry
+//!
+//! Three std-only layers on top of `util/`:
+//!
+//! 1. **Core** ([`metrics`], [`trace`]) — a [`Registry`] of counters,
+//!    gauges and log₂-bucketed [`Histogram`]s, plus a [`TraceBuffer`] of
+//!    [`Span`]s stamped with *both* simulated time and host wall-clock.
+//! 2. **Exporters** — Prometheus text exposition
+//!    ([`Registry::render_prometheus`]) and Chrome-trace JSON
+//!    ([`TraceBuffer::to_chrome_json`], loadable at `chrome://tracing`).
+//! 3. **Server** ([`server`]) — a `TcpListener` thread serving scrapes
+//!    and an NDJSON round stream while a run is in progress.
+//!
+//! ## Observer contract (the no-feedback rule)
+//!
+//! Engines expose an optional [`Observer`]; every hook has a no-op
+//! default, and an engine with no observer attached pays nothing. The
+//! contract that makes this observability rather than logging:
+//!
+//! - **Hooks read, never mutate.** An observer receives borrowed or
+//!   copied facts about the run and has no channel back into engine
+//!   state, RNG streams, or the event queue.
+//! - **Wall-clock never feeds back.** `Instant` reads happen only when
+//!   an observer is attached and flow only into observer records; no
+//!   simulated timestamp, seed, or decision ever derives from them.
+//!
+//! Together these extend the engine's determinism guarantee family
+//! (sync-equivalence, zero-churn no-op, re-arm no-op) with a fourth:
+//! **observer-on == observer-off, bitwise** — asserted by the
+//! `observer_attach_is_bitwise_noop` integration test.
+//!
+//! ## Endpoints (`arena run --serve <addr>`)
+//!
+//! ```text
+//! curl http://127.0.0.1:9898/healthz   # -> ok
+//! curl http://127.0.0.1:9898/metrics   # Prometheus text exposition
+//! curl -sN http://127.0.0.1:9898/stream | head -n1   # one NDJSON frame
+//! ```
+//!
+//! `/stream` frames are one JSON object per line with a
+//! `"schema_version"` field (see `hfl::metrics::SCHEMA_VERSION`); new
+//! subscribers receive the most recent frame first, then live frames as
+//! cloud rounds close. `--trace-out <path>` additionally writes the
+//! Chrome-trace timeline at the end of the run.
+
+pub mod metrics;
+pub mod server;
+pub mod trace;
+
+pub use metrics::{Histogram, Registry};
+pub use server::{TelemetryServer, TelemetrySink};
+pub use trace::{Span, TraceBuffer};
+
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::hfl::metrics::RoundStats;
+use crate::util::json::Json;
+
+/// Read-only run instrumentation. Every hook defaults to a no-op so the
+/// trait doubles as its own null object; engines call hooks only when an
+/// observer is attached and skip all wall-clock reads otherwise.
+pub trait Observer: Send {
+    /// One event was popped and handled: its variant name, the simulated
+    /// time it fired at, the wall-ns between dequeue and handler entry,
+    /// and the handler's wall-ns cost.
+    fn on_event_handled(
+        &mut self,
+        _variant: &'static str,
+        _sim_time: f64,
+        _dequeue_lag_ns: u64,
+        _handler_ns: u64,
+    ) {
+    }
+
+    /// A closed interval on the sim timeline (training burst, transfer,
+    /// cloud window, harness phase).
+    fn on_span(&mut self, _span: Span) {}
+
+    /// A transfer completed its lifetime `[start, finish]` (sim
+    /// seconds) on `edge`'s `dir` link.
+    fn on_transfer(
+        &mut self,
+        _edge: usize,
+        _dir: &'static str,
+        _bytes: f64,
+        _start: f64,
+        _finish: f64,
+    ) {
+    }
+
+    /// A cloud round / window closed.
+    fn on_round(&mut self, _stats: &RoundStats) {}
+
+    /// A re-clustering executed at sim time `at`, migrating `migrated`
+    /// devices at a host cost of `wall_ns`.
+    fn on_recluster(&mut self, _at: f64, _migrated: usize, _wall_ns: u64) {}
+
+    /// Model-store occupancy snapshot at a round boundary.
+    fn on_store(
+        &mut self,
+        _live_buffers: usize,
+        _peak_bytes: usize,
+        _sharing_ratio: f64,
+    ) {
+    }
+}
+
+/// The do-nothing observer (useful as an overhead baseline in benches).
+#[derive(Default, Clone, Copy)]
+pub struct NoopObserver;
+
+impl Observer for NoopObserver {}
+
+/// Everything a [`RunObserver`] accumulates, shared behind
+/// `Arc<Mutex<_>>` so the CLI keeps a reader handle while the engine
+/// owns the observer box.
+#[derive(Default)]
+pub struct ObsState {
+    pub registry: Registry,
+    pub trace: TraceBuffer,
+}
+
+/// The standard observer: folds hooks into a metrics [`Registry`] and a
+/// [`TraceBuffer`], and (optionally) publishes round frames + fresh
+/// exposition text to a [`TelemetrySink`].
+pub struct RunObserver {
+    state: Arc<Mutex<ObsState>>,
+    sink: Option<TelemetrySink>,
+}
+
+impl Default for RunObserver {
+    fn default() -> Self {
+        RunObserver::new()
+    }
+}
+
+impl RunObserver {
+    pub fn new() -> Self {
+        RunObserver {
+            state: Arc::new(Mutex::new(ObsState::default())),
+            sink: None,
+        }
+    }
+
+    pub fn with_sink(sink: TelemetrySink) -> Self {
+        RunObserver {
+            state: Arc::new(Mutex::new(ObsState::default())),
+            sink: Some(sink),
+        }
+    }
+
+    /// Reader handle onto the accumulated registry + trace.
+    pub fn state(&self) -> Arc<Mutex<ObsState>> {
+        self.state.clone()
+    }
+}
+
+impl Observer for RunObserver {
+    fn on_event_handled(
+        &mut self,
+        variant: &'static str,
+        _sim_time: f64,
+        dequeue_lag_ns: u64,
+        handler_ns: u64,
+    ) {
+        let mut st = self.state.lock().unwrap();
+        st.registry.inc("arena_events_total");
+        st.registry
+            .inc(&format!("arena_events_{variant}_total"));
+        st.registry
+            .observe("arena_event_dequeue_lag_ns", dequeue_lag_ns as f64);
+        st.registry.observe(
+            &format!("arena_handler_wall_ns_{variant}"),
+            handler_ns as f64,
+        );
+    }
+
+    fn on_span(&mut self, span: Span) {
+        self.state.lock().unwrap().trace.push(span);
+    }
+
+    fn on_transfer(
+        &mut self,
+        edge: usize,
+        dir: &'static str,
+        _bytes: f64,
+        start: f64,
+        finish: f64,
+    ) {
+        let mut st = self.state.lock().unwrap();
+        st.registry.inc("arena_transfers_total");
+        st.registry.inc(&format!("arena_transfers_{dir}_total"));
+        st.registry.observe(
+            "arena_transfer_lifetime_seconds",
+            (finish - start).max(0.0),
+        );
+        st.trace.push(Span {
+            track: format!("edge/{edge}"),
+            name: format!("xfer {dir}"),
+            t0_sim: start,
+            t1_sim: finish,
+            wall_ns: 0,
+        });
+    }
+
+    fn on_round(&mut self, stats: &RoundStats) {
+        {
+            let mut st = self.state.lock().unwrap();
+            st.registry.inc("arena_rounds_total");
+            st.registry.set_gauge("arena_round_k", stats.k as f64);
+            st.registry
+                .set_gauge("arena_round_accuracy", stats.accuracy);
+            st.registry
+                .set_gauge("arena_round_train_loss", stats.train_loss);
+            st.registry
+                .set_gauge("arena_sim_time_seconds", stats.sim_now);
+            st.registry
+                .set_gauge("arena_round_energy_mah", stats.energy);
+            st.registry.set_gauge(
+                "arena_active_devices",
+                stats.active_devices as f64,
+            );
+            st.registry.set_gauge(
+                "arena_mean_staleness",
+                stats.mean_staleness(),
+            );
+            st.registry.set_gauge(
+                "arena_mean_link_util",
+                stats.mean_link_util(),
+            );
+            st.registry.observe(
+                "arena_round_time_seconds",
+                stats.round_time,
+            );
+            st.trace.push(Span {
+                track: "cloud".to_string(),
+                name: format!("window {}", stats.k),
+                t0_sim: stats.sim_now - stats.round_time,
+                t1_sim: stats.sim_now,
+                wall_ns: 0,
+            });
+        }
+        if let Some(sink) = &self.sink {
+            sink.push_frame(&round_frame(stats));
+            let st = self.state.lock().unwrap();
+            sink.set_metrics(st.registry.render_prometheus());
+        }
+    }
+
+    fn on_recluster(&mut self, _at: f64, migrated: usize, wall_ns: u64) {
+        let mut st = self.state.lock().unwrap();
+        st.registry.inc("arena_reclusters_total");
+        st.registry
+            .inc_by("arena_migrated_devices_total", migrated as u64);
+        st.registry
+            .observe("arena_recluster_wall_ns", wall_ns as f64);
+    }
+
+    fn on_store(
+        &mut self,
+        live_buffers: usize,
+        peak_bytes: usize,
+        sharing_ratio: f64,
+    ) {
+        let mut st = self.state.lock().unwrap();
+        st.registry
+            .set_gauge("arena_store_live_buffers", live_buffers as f64);
+        st.registry
+            .set_gauge("arena_store_peak_bytes", peak_bytes as f64);
+        st.registry
+            .set_gauge("arena_store_sharing_ratio", sharing_ratio);
+    }
+}
+
+/// One `/stream` NDJSON frame for a closed round: the round's JSON
+/// (which carries `schema_version`) plus a frame `type` tag and the
+/// per-edge link utilizations.
+pub fn round_frame(stats: &RoundStats) -> String {
+    let mut j = stats.to_json();
+    if let Json::Obj(m) = &mut j {
+        m.insert("type".to_string(), Json::str("round"));
+        let up: Vec<f64> = stats
+            .per_edge
+            .iter()
+            .map(|e| e.link_util(stats.round_time).0)
+            .collect();
+        let down: Vec<f64> = stats
+            .per_edge
+            .iter()
+            .map(|e| e.link_util(stats.round_time).1)
+            .collect();
+        m.insert("link_util_up".to_string(), Json::arr_f64(&up));
+        m.insert("link_util_down".to_string(), Json::arr_f64(&down));
+    }
+    j.to_string()
+}
+
+/// Process-wide registry for harness phase timings (`exp::harness`
+/// records per-figure wall time here so it lands in the same exposition
+/// as engine metrics).
+pub fn harness_registry() -> &'static Mutex<Registry> {
+    static HARNESS: OnceLock<Mutex<Registry>> = OnceLock::new();
+    HARNESS.get_or_init(|| Mutex::new(Registry::new()))
+}
+
+/// Sanitize an arbitrary label into a Prometheus metric-name fragment.
+pub fn metric_fragment(s: &str) -> String {
+    s.chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats() -> RoundStats {
+        use crate::hfl::metrics::EdgeStats;
+        RoundStats {
+            k: 3,
+            accuracy: 0.75,
+            test_loss: 0.5,
+            train_loss: 0.6,
+            round_time: 100.0,
+            sim_now: 300.0,
+            per_edge: vec![EdgeStats {
+                up_busy: 20.0,
+                down_busy: 10.0,
+                ..Default::default()
+            }],
+            energy: 12.0,
+            gamma1: vec![2],
+            gamma2: vec![1],
+            device_losses: vec![],
+            n_reclusters: 1,
+            migrated_devices: 2,
+            active_devices: 9,
+            edge_size_imbalance: 0.1,
+            live_model_buffers: 2,
+            peak_model_bytes: 1024,
+            sharing_ratio: 0.9,
+        }
+    }
+
+    #[test]
+    fn run_observer_accumulates_metrics_and_spans() {
+        let mut o = RunObserver::new();
+        o.on_event_handled("train_done", 10.0, 50, 1000);
+        o.on_event_handled("train_done", 11.0, 60, 2000);
+        o.on_transfer(0, "up", 4096.0, 5.0, 9.0);
+        o.on_recluster(50.0, 3, 700);
+        o.on_store(2, 1024, 0.9);
+        o.on_round(&stats());
+        let st = o.state();
+        let st = st.lock().unwrap();
+        assert_eq!(st.registry.counter("arena_events_total"), 2);
+        assert_eq!(
+            st.registry.counter("arena_events_train_done_total"),
+            2
+        );
+        assert_eq!(st.registry.counter("arena_transfers_up_total"), 1);
+        assert_eq!(st.registry.counter("arena_reclusters_total"), 1);
+        assert_eq!(
+            st.registry.counter("arena_migrated_devices_total"),
+            3
+        );
+        assert_eq!(st.registry.gauge("arena_round_accuracy"), Some(0.75));
+        assert_eq!(
+            st.registry.gauge("arena_store_live_buffers"),
+            Some(2.0)
+        );
+        let lag =
+            st.registry.histogram("arena_event_dequeue_lag_ns").unwrap();
+        assert_eq!(lag.count(), 2);
+        // Spans: one transfer + one cloud window.
+        assert_eq!(st.trace.len(), 2);
+        assert_eq!(st.trace.tracks(), &["edge/0".to_string(), "cloud".into()]);
+    }
+
+    #[test]
+    fn round_frame_is_tagged_and_versioned() {
+        let f = round_frame(&stats());
+        let j = Json::parse(&f).unwrap();
+        assert_eq!(j.get("type").unwrap().as_str().unwrap(), "round");
+        assert_eq!(
+            j.get("schema_version").unwrap().as_usize().unwrap(),
+            crate::hfl::metrics::SCHEMA_VERSION
+        );
+        assert_eq!(j.get("k").unwrap().as_usize().unwrap(), 3);
+        let up = j.get("link_util_up").unwrap().as_arr().unwrap();
+        assert_eq!(up[0].as_f64().unwrap(), 0.2);
+        assert!(!f.contains('\n'), "frames must be single-line NDJSON");
+    }
+
+    #[test]
+    fn metric_fragment_sanitizes() {
+        assert_eq!(metric_fragment("fig_async-headtohead"),
+                   "fig_async_headtohead");
+        assert_eq!(metric_fragment("table1"), "table1");
+    }
+}

@@ -1,0 +1,356 @@
+//! Live telemetry server: a std-only HTTP endpoint over `TcpListener`.
+//!
+//! Architecture follows the worker/channel executor shape (SNIPPETS.md):
+//! producer threads push strings over an `mpsc` channel, a pump thread
+//! drains it, and shared state sits behind `Arc<Mutex<_>>`. Here the
+//! producers are the engines (via [`TelemetrySink`]), the pump fans NDJSON
+//! frames out to every connected `/stream` subscriber, and an accept
+//! thread answers `/healthz` and `/metrics` scrapes.
+//!
+//! Endpoints:
+//! - `GET /healthz` — `200 ok` liveness probe.
+//! - `GET /metrics` — Prometheus text exposition (whatever the sink last
+//!   published via [`TelemetrySink::set_metrics`]).
+//! - `GET /stream` — NDJSON frames, one JSON object per line, pushed as
+//!   cloud rounds close. New subscribers first receive the most recent
+//!   frame (if any) so a late scrape still sees data.
+//!
+//! The server never touches the simulation: it only reads what the
+//! observer published. Frames with no subscriber are dropped, not
+//! buffered — telemetry must not grow unbounded state.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+/// Producer-side handle: cheap to clone, safe to hold inside an observer.
+/// All operations are fire-and-forget — a dead or absent server never
+/// blocks or fails the simulation.
+#[derive(Clone)]
+pub struct TelemetrySink {
+    frames: Sender<String>,
+    metrics: Arc<Mutex<String>>,
+}
+
+impl TelemetrySink {
+    /// Publish one NDJSON frame (without trailing newline).
+    pub fn push_frame(&self, line: &str) {
+        let _ = self.frames.send(line.to_string());
+    }
+
+    /// Replace the text served at `/metrics`.
+    pub fn set_metrics(&self, text: String) {
+        if let Ok(mut m) = self.metrics.lock() {
+            *m = text;
+        }
+    }
+}
+
+pub struct TelemetryServer {
+    addr: SocketAddr,
+    metrics: Arc<Mutex<String>>,
+    frames_tx: Sender<String>,
+    stop: Arc<AtomicBool>,
+    accept_handle: Option<JoinHandle<()>>,
+    pump_handle: Option<JoinHandle<()>>,
+}
+
+impl TelemetryServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9898`; port 0 picks a free port) and
+    /// start the accept + pump threads.
+    pub fn bind(addr: &str) -> std::io::Result<TelemetryServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let metrics = Arc::new(Mutex::new(String::new()));
+        let subscribers: Arc<Mutex<Vec<TcpStream>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let last_frame = Arc::new(Mutex::new(String::new()));
+        let stop = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = channel::<String>();
+
+        let accept_handle = {
+            let metrics = metrics.clone();
+            let subscribers = subscribers.clone();
+            let last_frame = last_frame.clone();
+            let stop = stop.clone();
+            thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => handle_conn(
+                            stream,
+                            &metrics,
+                            &subscribers,
+                            &last_frame,
+                        ),
+                        Err(_) => {
+                            thread::sleep(Duration::from_millis(20));
+                        }
+                    }
+                }
+            })
+        };
+
+        let pump_handle = {
+            let subscribers = subscribers.clone();
+            let stop = stop.clone();
+            thread::spawn(move || loop {
+                match rx.recv_timeout(Duration::from_millis(50)) {
+                    Ok(line) => {
+                        if let Ok(mut lf) = last_frame.lock() {
+                            *lf = line.clone();
+                        }
+                        if let Ok(mut subs) = subscribers.lock() {
+                            subs.retain_mut(|s| {
+                                write_frame(s, &line).is_ok()
+                            });
+                        }
+                    }
+                    Err(RecvTimeoutError::Timeout) => {
+                        if stop.load(Ordering::Relaxed) {
+                            return;
+                        }
+                    }
+                    Err(RecvTimeoutError::Disconnected) => return,
+                }
+            })
+        };
+
+        Ok(TelemetryServer {
+            addr: local,
+            metrics,
+            frames_tx: tx,
+            stop,
+            accept_handle: Some(accept_handle),
+            pump_handle: Some(pump_handle),
+        })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// A producer handle for observers / the CLI.
+    pub fn sink(&self) -> TelemetrySink {
+        TelemetrySink {
+            frames: self.frames_tx.clone(),
+            metrics: self.metrics.clone(),
+        }
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.pump_handle.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Stop the threads and release the port.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+}
+
+impl Drop for TelemetryServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn write_frame(s: &mut TcpStream, line: &str) -> std::io::Result<()> {
+    s.write_all(line.as_bytes())?;
+    s.write_all(b"\n")?;
+    s.flush()
+}
+
+fn respond(
+    mut s: TcpStream,
+    status: &str,
+    ctype: &str,
+    body: &str,
+) {
+    let _ = write!(
+        s,
+        "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    let _ = s.flush();
+}
+
+/// Read the request line + headers (bounded) and route the path.
+fn handle_conn(
+    stream: TcpStream,
+    metrics: &Arc<Mutex<String>>,
+    subscribers: &Arc<Mutex<Vec<TcpStream>>>,
+    last_frame: &Arc<Mutex<String>>,
+) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(2)));
+    let mut reader = BufReader::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    });
+    let mut request = String::new();
+    if reader.read_line(&mut request).is_err() {
+        return;
+    }
+    let path = request.split_whitespace().nth(1).unwrap_or("/");
+    // Drain headers so the peer isn't mid-write when we respond.
+    for _ in 0..64 {
+        let mut line = String::new();
+        match reader.read_line(&mut line) {
+            Ok(0) => break,
+            Ok(_) if line == "\r\n" || line == "\n" => break,
+            Ok(_) => {}
+            Err(_) => break,
+        }
+    }
+    match path {
+        "/healthz" => respond(stream, "200 OK", "text/plain", "ok\n"),
+        "/metrics" => {
+            let body = metrics
+                .lock()
+                .map(|m| m.clone())
+                .unwrap_or_default();
+            respond(
+                stream,
+                "200 OK",
+                "text/plain; version=0.0.4",
+                &body,
+            );
+        }
+        "/stream" => {
+            let mut stream = stream;
+            let header = "HTTP/1.1 200 OK\r\n\
+                          Content-Type: application/x-ndjson\r\n\
+                          Connection: close\r\n\r\n";
+            if stream.write_all(header.as_bytes()).is_err() {
+                return;
+            }
+            // Replay the latest frame so late subscribers see data.
+            if let Ok(lf) = last_frame.lock() {
+                if !lf.is_empty()
+                    && write_frame(&mut stream, &lf).is_err()
+                {
+                    return;
+                }
+            }
+            if let Ok(mut subs) = subscribers.lock() {
+                subs.push(stream);
+            }
+        }
+        _ => respond(stream, "404 Not Found", "text/plain", "not found\n"),
+    }
+}
+
+/// Blocking helper for tests and smoke probes: one HTTP GET against the
+/// server, returning the raw response (headers + body). `max_bytes`
+/// bounds the read so `/stream` probes return after one frame-sized
+/// chunk instead of blocking forever.
+pub fn http_get(
+    addr: &SocketAddr,
+    path: &str,
+    max_bytes: usize,
+) -> std::io::Result<String> {
+    let mut s = TcpStream::connect(addr)?;
+    s.set_read_timeout(Some(Duration::from_secs(5)))?;
+    write!(s, "GET {path} HTTP/1.1\r\nHost: arena\r\n\r\n")?;
+    s.flush()?;
+    let mut buf = vec![0u8; max_bytes];
+    let mut n = 0;
+    while n < max_bytes {
+        match s.read(&mut buf[n..]) {
+            Ok(0) => break,
+            Ok(k) => {
+                n += k;
+                // Headers + at least one body line is enough for a
+                // stream probe.
+                let text = String::from_utf8_lossy(&buf[..n]);
+                if let Some(split) = text.find("\r\n\r\n") {
+                    if text[split + 4..].contains('\n') {
+                        break;
+                    }
+                }
+            }
+            Err(e) => {
+                if n > 0 {
+                    break;
+                }
+                return Err(e);
+            }
+        }
+    }
+    Ok(String::from_utf8_lossy(&buf[..n]).into_owned())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn healthz_and_metrics_roundtrip() {
+        let srv = TelemetryServer::bind("127.0.0.1:0").unwrap();
+        let addr = srv.local_addr();
+        let sink = srv.sink();
+        sink.set_metrics("# TYPE a counter\na 1\n".to_string());
+        let h = http_get(&addr, "/healthz", 4096).unwrap();
+        assert!(h.starts_with("HTTP/1.1 200"), "{h}");
+        assert!(h.contains("ok"));
+        let m = http_get(&addr, "/metrics", 4096).unwrap();
+        assert!(m.contains("# TYPE a counter"), "{m}");
+        assert!(m.contains("\na 1"));
+        let nf = http_get(&addr, "/nope", 4096).unwrap();
+        assert!(nf.starts_with("HTTP/1.1 404"), "{nf}");
+        srv.stop();
+    }
+
+    #[test]
+    fn stream_replays_last_frame_to_late_subscriber() {
+        let srv = TelemetryServer::bind("127.0.0.1:0").unwrap();
+        let addr = srv.local_addr();
+        let sink = srv.sink();
+        sink.push_frame("{\"type\":\"round\",\"k\":1}");
+        // Wait for the pump to latch the frame.
+        for _ in 0..100 {
+            let r = http_get(&addr, "/stream", 8192).unwrap_or_default();
+            if r.contains("{\"type\":\"round\",\"k\":1}") {
+                srv.stop();
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        panic!("stream subscriber never received the latched frame");
+    }
+
+    #[test]
+    fn stream_receives_live_frames() {
+        let srv = TelemetryServer::bind("127.0.0.1:0").unwrap();
+        let addr = srv.local_addr();
+        let sink = srv.sink();
+        // Subscribe first, then push: the frame must be fanned out.
+        let handle = {
+            let addr = addr;
+            std::thread::spawn(move || http_get(&addr, "/stream", 8192))
+        };
+        // Give the subscriber time to register, then emit frames until
+        // the probe returns.
+        for _ in 0..100 {
+            sink.push_frame("{\"k\":2}");
+            std::thread::sleep(Duration::from_millis(20));
+            if handle.is_finished() {
+                break;
+            }
+        }
+        let got = handle.join().unwrap().unwrap();
+        assert!(got.contains("{\"k\":2}"), "{got}");
+        srv.stop();
+    }
+}

@@ -1,0 +1,174 @@
+//! Span buffer and Chrome-trace JSON exporter.
+//!
+//! Spans carry *both* clocks: simulated start/end times (the timeline the
+//! exported trace draws) and the wall-clock nanoseconds the host spent,
+//! stashed in the event `args` for profiling. The exporter emits the
+//! Chrome trace-event JSON array format — load the file at
+//! `chrome://tracing` (or <https://ui.perfetto.dev>) to see device
+//! training bursts, in-flight transfers and cloud windows on one track
+//! per edge.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// One closed interval on a named track, stamped with sim-time endpoints
+/// and the wall-clock cost of whatever produced it (0 when the work was
+/// purely simulated).
+#[derive(Clone, Debug)]
+pub struct Span {
+    /// Track name, e.g. `edge/3`, `cloud`, `harness`.
+    pub track: String,
+    /// Event name, e.g. `train d12`, `up e3`, `window 4`.
+    pub name: String,
+    /// Simulated start time, seconds.
+    pub t0_sim: f64,
+    /// Simulated end time, seconds.
+    pub t1_sim: f64,
+    /// Host wall-clock spent producing this span, nanoseconds.
+    pub wall_ns: u64,
+}
+
+/// Append-only span store. Track ids are assigned in first-seen order,
+/// which is deterministic because span emission follows the (seeded)
+/// event timeline.
+#[derive(Clone, Debug, Default)]
+pub struct TraceBuffer {
+    spans: Vec<Span>,
+    track_ids: BTreeMap<String, usize>,
+    track_order: Vec<String>,
+}
+
+impl TraceBuffer {
+    pub fn new() -> Self {
+        TraceBuffer::default()
+    }
+
+    pub fn push(&mut self, span: Span) {
+        if !self.track_ids.contains_key(&span.track) {
+            let id = self.track_order.len();
+            self.track_ids.insert(span.track.clone(), id);
+            self.track_order.push(span.track.clone());
+        }
+        self.spans.push(span);
+    }
+
+    pub fn len(&self) -> usize {
+        self.spans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    pub fn spans(&self) -> &[Span] {
+        &self.spans
+    }
+
+    pub fn tracks(&self) -> &[String] {
+        &self.track_order
+    }
+
+    /// Chrome trace-event JSON: one `thread_name` metadata event per
+    /// track, then one complete (`"ph":"X"`) event per span with `ts` /
+    /// `dur` in microseconds of *simulated* time and the wall-clock cost
+    /// in `args.wall_ns`.
+    pub fn to_chrome_json(&self) -> String {
+        let mut events = Vec::new();
+        for (tid, track) in self.track_order.iter().enumerate() {
+            events.push(Json::obj(vec![
+                ("name", Json::str("thread_name")),
+                ("ph", Json::str("M")),
+                ("pid", Json::num(1.0)),
+                ("tid", Json::num(tid as f64)),
+                (
+                    "args",
+                    Json::obj(vec![("name", Json::str(track.clone()))]),
+                ),
+            ]));
+        }
+        for s in &self.spans {
+            let tid = self.track_ids[&s.track];
+            events.push(Json::obj(vec![
+                ("name", Json::str(s.name.clone())),
+                ("ph", Json::str("X")),
+                ("pid", Json::num(1.0)),
+                ("tid", Json::num(tid as f64)),
+                ("ts", Json::num(s.t0_sim * 1e6)),
+                ("dur", Json::num((s.t1_sim - s.t0_sim).max(0.0) * 1e6)),
+                (
+                    "args",
+                    Json::obj(vec![(
+                        "wall_ns",
+                        Json::num(s.wall_ns as f64),
+                    )]),
+                ),
+            ]));
+        }
+        Json::obj(vec![("traceEvents", Json::Arr(events))]).to_string()
+    }
+
+    /// Write the Chrome-trace JSON to `path`.
+    pub fn write_chrome_json(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_chrome_json())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(track: &str, name: &str, t0: f64, t1: f64) -> Span {
+        Span {
+            track: track.to_string(),
+            name: name.to_string(),
+            t0_sim: t0,
+            t1_sim: t1,
+            wall_ns: 42,
+        }
+    }
+
+    #[test]
+    fn tracks_dedup_in_first_seen_order() {
+        let mut tb = TraceBuffer::new();
+        tb.push(span("edge/1", "a", 0.0, 1.0));
+        tb.push(span("cloud", "b", 1.0, 2.0));
+        tb.push(span("edge/1", "c", 2.0, 3.0));
+        assert_eq!(tb.len(), 3);
+        assert_eq!(tb.tracks(), &["edge/1".to_string(), "cloud".into()]);
+    }
+
+    #[test]
+    fn chrome_json_has_metadata_and_microsecond_ts() {
+        let mut tb = TraceBuffer::new();
+        tb.push(span("edge/0", "train d3", 1.5, 2.5));
+        let text = tb.to_chrome_json();
+        let j = Json::parse(&text).unwrap();
+        let events = j.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 2);
+        // Metadata event names the track.
+        assert_eq!(
+            events[0].path("args.name").unwrap().as_str().unwrap(),
+            "edge/0"
+        );
+        assert_eq!(events[0].get("ph").unwrap().as_str().unwrap(), "M");
+        // Span event: sim seconds scaled to microseconds.
+        let e = &events[1];
+        assert_eq!(e.get("ph").unwrap().as_str().unwrap(), "X");
+        assert_eq!(e.get("ts").unwrap().as_f64().unwrap(), 1.5e6);
+        assert_eq!(e.get("dur").unwrap().as_f64().unwrap(), 1e6);
+        assert_eq!(
+            e.path("args.wall_ns").unwrap().as_f64().unwrap(),
+            42.0
+        );
+    }
+
+    #[test]
+    fn negative_duration_is_clamped() {
+        let mut tb = TraceBuffer::new();
+        tb.push(span("t", "x", 5.0, 4.0));
+        let j = Json::parse(&tb.to_chrome_json()).unwrap();
+        let e = &j.get("traceEvents").unwrap().as_arr().unwrap()[1];
+        assert_eq!(e.get("dur").unwrap().as_f64().unwrap(), 0.0);
+    }
+}

@@ -16,10 +16,24 @@ impl CsvWriter {
         path: impl AsRef<Path>,
         header: &[&str],
     ) -> std::io::Result<Self> {
+        Self::create_with_comment(path, None, header)
+    }
+
+    /// Like [`CsvWriter::create`], with an optional `#`-prefixed comment
+    /// line above the header (e.g. a schema version marker). Consumers
+    /// that split on commas skip it via the leading `#`.
+    pub fn create_with_comment(
+        path: impl AsRef<Path>,
+        comment: Option<&str>,
+        header: &[&str],
+    ) -> std::io::Result<Self> {
         if let Some(dir) = path.as_ref().parent() {
             std::fs::create_dir_all(dir)?;
         }
         let mut out = BufWriter::new(File::create(path)?);
+        if let Some(c) = comment {
+            writeln!(out, "# {c}")?;
+        }
         writeln!(out, "{}", header.join(","))?;
         Ok(CsvWriter {
             out,
@@ -79,6 +93,23 @@ mod tests {
         w.flush().unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         assert_eq!(text, "a,b\n\"x,y\",1\nplain,2.500000\n");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn comment_line_precedes_header() {
+        let dir = std::env::temp_dir().join("arena_csv_test3");
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create_with_comment(
+            &path,
+            Some("schema_version=1"),
+            &["a"],
+        )
+        .unwrap();
+        w.row(&["1".into()]).unwrap();
+        w.flush().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "# schema_version=1\na\n1\n");
         std::fs::remove_dir_all(dir).ok();
     }
 

@@ -976,6 +976,71 @@ fn recluster_runs_are_seed_deterministic() {
 }
 
 #[test]
+fn observer_attach_is_bitwise_noop() {
+    // The fourth determinism guarantee (observability subsystem): an
+    // instrumented run is bitwise identical to an uninstrumented one —
+    // hooks read, never mutate, and wall-clock flows only into observer
+    // records. Churn-heavy semi-sync with contention and re-clustering
+    // exercises every hook site (events, transfers, recluster, rounds,
+    // store snapshots).
+    require_artifacts!();
+    let mut cfg = small_cfg();
+    cfg.hfl.threshold_time = 500.0;
+    cfg.sync.mode = SyncModeCfg::SemiSync;
+    cfg.sync.quorum = 1;
+    cfg.sync.cloud_interval = 100.0;
+    cfg.link.contention = true;
+    cfg.sim.leave_prob = 0.25;
+    cfg.sim.join_prob = 0.5;
+    cfg.cluster.recluster_threshold = 0.1;
+    cfg.cluster.recluster_min_interval = 0.0;
+    let run = |obs: Option<Box<dyn arena::obs::Observer>>| {
+        let mut e = AsyncHflEngine::new(cfg.clone(), false).unwrap();
+        if let Some(o) = obs {
+            e.attach_observer(o);
+        }
+        let hist = e.run_to_threshold().unwrap();
+        (
+            e.transfer_log.clone(),
+            e.migration_log.clone(),
+            hist,
+            e.eng.cloud_model().to_vec(),
+        )
+    };
+    let (t_off, m_off, h_off, w_off) = run(None);
+    let observer = arena::obs::RunObserver::new();
+    let state = observer.state();
+    let (t_on, m_on, h_on, w_on) = run(Some(Box::new(observer)));
+    assert_eq!(t_off, t_on, "observer perturbed the transfer timeline");
+    assert_eq!(m_off, m_on, "observer perturbed migration landings");
+    assert_eq!(w_off, w_on, "observer perturbed the final model");
+    // The histories export byte-for-byte identical CSVs (including the
+    // schema_version header line and every per-edge column).
+    let dir = std::env::temp_dir().join("arena_obs_noop");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p_off = dir.join("off.csv");
+    let p_on = dir.join("on.csv");
+    h_off
+        .write_csv(p_off.to_str().unwrap(), "semi-sync")
+        .unwrap();
+    h_on.write_csv(p_on.to_str().unwrap(), "semi-sync").unwrap();
+    let b_off = std::fs::read(&p_off).unwrap();
+    let b_on = std::fs::read(&p_on).unwrap();
+    assert!(!b_off.is_empty(), "empty history CSV");
+    assert_eq!(b_off, b_on, "history CSVs differ observer-on vs -off");
+    std::fs::remove_dir_all(dir).ok();
+    // Not vacuous: the attached observer actually saw the run.
+    let st = state.lock().unwrap();
+    assert!(st.registry.counter("arena_events_total") > 0);
+    assert!(st.registry.counter("arena_transfers_total") > 0);
+    assert_eq!(
+        st.registry.counter("arena_rounds_total"),
+        h_on.rounds.len() as u64
+    );
+    assert!(!st.trace.is_empty(), "no spans recorded");
+}
+
+#[test]
 fn pca_scores_via_artifact_match_cpu() {
     require_artifacts!();
     let cfg = small_cfg();

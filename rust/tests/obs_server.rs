@@ -1,0 +1,122 @@
+//! Loopback tests of the telemetry stack through the public API only.
+//!
+//! The `obs` subsystem is simulation-independent, so unlike
+//! `tests/integration.rs` these need no compiled artifacts: a
+//! [`arena::obs::RunObserver`] is fed synthetic hook calls and the
+//! served endpoints are scraped over 127.0.0.1.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use arena::hfl::{EdgeStats, RoundStats};
+use arena::obs::server::http_get;
+use arena::obs::{Observer, RunObserver, TelemetryServer};
+
+fn stats(k: usize) -> RoundStats {
+    RoundStats {
+        k,
+        accuracy: 0.5 + 0.01 * k as f64,
+        test_loss: 0.9,
+        train_loss: 0.8,
+        round_time: 60.0,
+        sim_now: 60.0 * k as f64,
+        per_edge: vec![EdgeStats::default(); 2],
+        energy: 3.0,
+        gamma1: vec![1, 1],
+        gamma2: vec![1, 1],
+        device_losses: vec![],
+        n_reclusters: 0,
+        migrated_devices: 0,
+        active_devices: 6,
+        edge_size_imbalance: 0.0,
+        live_model_buffers: 3,
+        peak_model_bytes: 4096,
+        sharing_ratio: 1.0,
+    }
+}
+
+/// Full-body GET for the connection-closing endpoints (`/healthz`,
+/// `/metrics`, 404). `/stream` keeps its connection open — probe that
+/// one with [`http_get`], which returns after the first frame line.
+fn get_full(addr: &SocketAddr, path: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    write!(s, "GET {path} HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+    s.flush().unwrap();
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).unwrap();
+    buf
+}
+
+#[test]
+fn observer_publishes_scrapeable_telemetry() {
+    let server = TelemetryServer::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+    let mut obs = RunObserver::with_sink(server.sink());
+
+    obs.on_event_handled("train_done", 5.0, 120, 8_000);
+    obs.on_transfer(0, "up", 1.0e6, 5.0, 9.0);
+    obs.on_round(&stats(1));
+    obs.on_round(&stats(2));
+
+    let health = get_full(&addr, "/healthz");
+    assert!(health.starts_with("HTTP/1.1 200"), "{health}");
+    assert!(health.contains("ok"), "{health}");
+
+    // `/metrics` serves the exposition the observer published at the
+    // last closed round (set_metrics is synchronous — no pump race).
+    let metrics = get_full(&addr, "/metrics");
+    assert!(metrics.starts_with("HTTP/1.1 200"), "{metrics}");
+    assert!(
+        metrics.contains("text/plain; version=0.0.4"),
+        "{metrics}"
+    );
+    assert!(metrics.contains("arena_events_total 1"), "{metrics}");
+    assert!(metrics.contains("arena_rounds_total 2"), "{metrics}");
+    assert!(metrics.contains("arena_round_accuracy"), "{metrics}");
+    assert!(
+        metrics.contains("arena_event_dequeue_lag_ns_bucket"),
+        "{metrics}"
+    );
+
+    // A subscriber connecting after the last round still gets the
+    // latched final frame (what keeps a post-run `curl /stream`
+    // useful). The latch is filled by the pump thread — retry briefly.
+    let mut frame = String::new();
+    for _ in 0..100 {
+        frame = http_get(&addr, "/stream", 1 << 20).unwrap_or_default();
+        if frame.contains("\"type\":\"round\"") {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let body = frame
+        .lines()
+        .find(|l| l.starts_with('{'))
+        .expect("no NDJSON frame in /stream response");
+    let j = arena::util::json::Json::parse(body).unwrap();
+    assert_eq!(j.get("type").unwrap().as_str().unwrap(), "round");
+    assert_eq!(j.get("k").unwrap().as_usize().unwrap(), 2);
+    assert!(j.get("schema_version").is_some());
+
+    let missing = get_full(&addr, "/nope");
+    assert!(missing.starts_with("HTTP/1.1 404"), "{missing}");
+
+    server.stop();
+}
+
+#[test]
+fn trace_export_covers_observed_spans() {
+    let mut obs = RunObserver::new();
+    obs.on_transfer(1, "down", 2.0e6, 10.0, 14.0);
+    obs.on_round(&stats(1));
+    let state = obs.state();
+    let st = state.lock().unwrap();
+    assert_eq!(st.trace.len(), 2);
+    let json = st.trace.to_chrome_json();
+    assert!(json.contains("\"xfer down\""), "{json}");
+    assert!(json.contains("\"window 1\""), "{json}");
+    // Chrome-trace ts is microseconds of sim time: 10 s -> 10_000_000.
+    assert!(json.contains("\"ts\":10000000"), "{json}");
+}
