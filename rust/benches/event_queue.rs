@@ -17,7 +17,9 @@ use std::collections::BTreeMap;
 
 use arena::hfl::membership::plan_recluster;
 use arena::obs::Histogram;
-use arena::sim::{Event, EventQueue, Region};
+use arena::sim::{
+    Event, EventQueue, QueueBackend, Region, ShardSpec, ShardedDeviceSim,
+};
 use arena::util::json::Json;
 use arena::util::microbench::{bench, black_box, BenchResult};
 use arena::util::rng::Rng;
@@ -157,6 +159,87 @@ fn main() {
         }));
     }
 
+    // Re-push hot path, per backend: `Event` is `Copy`, so re-pushing a
+    // popped event allocates nothing (the old re-box showed up here).
+    // Also the binary-vs-calendar head-to-head on an identical stream —
+    // the two backends pop identical sequences by construction, so any
+    // delta is pure data-structure cost.
+    for backend in [QueueBackend::Binary, QueueBackend::Calendar] {
+        let n = 100_000usize;
+        results.push(bench(
+            &format!("event_queue/push_pop/{}/{n}", backend.name()),
+            || {
+                let mut q = EventQueue::for_scale(31, n, backend);
+                for i in 0..n {
+                    q.schedule(
+                        ((i * 37) % 4000) as f64 * 0.25,
+                        Event::DeviceTrainDone {
+                            device: i,
+                            edge: i % 16,
+                        },
+                    );
+                }
+                for _ in 0..n {
+                    let (t, ev) = q.pop().unwrap();
+                    q.schedule(t + 1000.0, ev);
+                }
+                while let Some((_, ev)) = q.pop() {
+                    black_box(ev);
+                }
+            },
+        ));
+    }
+
+    // Sharded parallel engine at 1M+ devices (ARENA_BENCH_FAST shrinks
+    // the population so CI stays a smoke): one timed run per worker
+    // count, construction excluded. `workers/{w}` records per-event ns;
+    // `threads_speedup/{w}` records run(1)/run(w) wall ratio as a
+    // dimensionless number in the mean_ns field (see JSON note). The
+    // merged trajectory is bitwise identical at every worker count —
+    // the sweep only measures wall-clock.
+    {
+        let fast = std::env::var("ARENA_BENCH_FAST").is_ok();
+        let devices = if fast { 1 << 16 } else { 1_048_576 };
+        let mut base_ns = 1.0f64;
+        for &w in &[1usize, 2, 4, 8] {
+            let spec = ShardSpec {
+                devices,
+                edges: 64,
+                windows: 2,
+                workers: w,
+                ..ShardSpec::default()
+            };
+            let mut sim = ShardedDeviceSim::new(&spec);
+            let t0 = std::time::Instant::now();
+            sim.run();
+            let ns = (t0.elapsed().as_nanos() as f64).max(1.0);
+            let events = sim.stats().events.max(1);
+            if w == 1 {
+                base_ns = ns;
+            }
+            let r = BenchResult {
+                name: format!("event_queue/sharded_sim/workers/{w}"),
+                iters: events,
+                mean_ns: ns / events as f64,
+                p50_ns: ns / events as f64,
+                p99_ns: ns / events as f64,
+            };
+            r.report();
+            results.push(r);
+            let sp = BenchResult {
+                name: format!(
+                    "event_queue/sharded_sim/threads_speedup/{w}"
+                ),
+                iters: 1,
+                mean_ns: base_ns / ns,
+                p50_ns: base_ns / ns,
+                p99_ns: base_ns / ns,
+            };
+            sp.report();
+            results.push(sp);
+        }
+    }
+
     // Observer overhead on the drain hot path — the exact engine
     // pattern. `drain_bare` is the observer-detached loop (no clock
     // reads at all); `drain_observed` pays the full instrumentation
@@ -291,7 +374,11 @@ fn write_json(results: &[BenchResult]) -> std::io::Result<()> {
              membership/plan_recluster record the re-clustering-on-churn \
              cost; drain_bare vs drain_observed is the observer-overhead \
              pair (dequeue_lag_ns percentiles come straight from the \
-             obs::Histogram)"
+             obs::Histogram); push_pop/{backend} is the Copy-event \
+             re-push hot path per queue backend; sharded_sim/workers/W \
+             is per-event ns of the sharded 1M+-device engine (65k \
+             under ARENA_BENCH_FAST) and threads_speedup/W stores the \
+             run(1)/run(W) wall ratio — dimensionless — in mean_ns"
                 .into(),
         ),
     );

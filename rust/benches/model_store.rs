@@ -19,9 +19,10 @@
 
 use std::collections::BTreeMap;
 
-use arena::hfl::model_store::{ModelRef, ModelStore};
+use arena::hfl::model_store::{ModelRef, ModelStore, ShardedModelStore};
 use arena::util::json::Json;
 use arena::util::microbench::{bench, black_box, BenchResult};
+use arena::util::threadpool::par_for_each;
 
 /// Small on purpose: handle traffic is O(1) in p by construction; a big
 /// p would only turn the CoW workload into a memcpy bench.
@@ -117,6 +118,82 @@ fn main() {
         store.assert_consistent();
     }
 
+    // ---- sharded store: per-shard slabs under a worker sweep -----------
+    // 1M+ device handles (65k under ARENA_BENCH_FAST) split over 64
+    // shard slabs; each worker broadcasts its shards' handles — the
+    // slabs are disjoint, so there is no synchronization on the hot
+    // path. `workers/{w}` records per-repoint ns; `threads_speedup/{w}`
+    // stores the run(1)/run(w) wall ratio (dimensionless) in mean_ns.
+    {
+        let fast = std::env::var("ARENA_BENCH_FAST").is_ok();
+        let n = if fast { 1 << 16 } else { 1_048_576 };
+        let s_n = 64usize;
+        let per = n / s_n;
+        let mut st = ShardedModelStore::new(P, s_n);
+        // Per shard: an (a, b) cloud pair plus its device handles, all
+        // living in that shard's slab.
+        let mut ctx: Vec<(ModelRef, ModelRef, Vec<ModelRef>)> = st
+            .shards_mut()
+            .iter_mut()
+            .map(|ms| {
+                let a = ms.insert(vec![0.0; P], 1);
+                let b = ms.insert(vec![1.0; P], 2);
+                let devs = (0..per).map(|_| ms.share(&a)).collect();
+                (a, b, devs)
+            })
+            .collect();
+        let mut base_ns = 1.0f64;
+        for &w in &[1usize, 2, 4, 8] {
+            let t0 = std::time::Instant::now();
+            let items: Vec<_> =
+                st.shards_mut().iter_mut().zip(ctx.iter_mut()).collect();
+            // There-and-back: state is identical before and after, so
+            // every worker count measures the same workload.
+            par_for_each(w, items, |(ms, (a, b, devs))| {
+                for d in devs.iter_mut() {
+                    ms.repoint(d, b);
+                }
+                for d in devs.iter_mut() {
+                    ms.repoint(d, a);
+                }
+            });
+            let ns = (t0.elapsed().as_nanos() as f64).max(1.0);
+            if w == 1 {
+                base_ns = ns;
+            }
+            let repoints = (2 * s_n * per) as f64;
+            let r = BenchResult {
+                name: format!("model_store/sharded_broadcast/workers/{w}"),
+                iters: repoints as u64,
+                mean_ns: ns / repoints,
+                p50_ns: ns / repoints,
+                p99_ns: ns / repoints,
+            };
+            r.report();
+            results.push(r);
+            let sp = BenchResult {
+                name: format!(
+                    "model_store/sharded_broadcast/threads_speedup/{w}"
+                ),
+                iters: 1,
+                mean_ns: base_ns / ns,
+                p50_ns: base_ns / ns,
+                p99_ns: base_ns / ns,
+            };
+            sp.report();
+            results.push(sp);
+        }
+        for (s, (a, b, devs)) in ctx.into_iter().enumerate() {
+            let ms = &mut st.shards_mut()[s];
+            for d in devs {
+                ms.release(d);
+            }
+            ms.release(a);
+            ms.release(b);
+        }
+        st.assert_consistent();
+    }
+
     // Flatness summary for the log (the recorded JSON is the artifact).
     println!("\nper-device broadcast cost (must stay flat in n):");
     for r in &results {
@@ -142,7 +219,11 @@ fn write_json(results: &[BenchResult]) -> std::io::Result<()> {
         Json::Str(
             "per-iteration ns; broadcast_per_device is per-device ns and \
              must stay flat from 10k to 1M devices (O(1) handle re-point \
-             — the model-store acceptance metric)"
+             — the model-store acceptance metric); \
+             sharded_broadcast/workers/W is per-repoint ns over 64 \
+             disjoint shard slabs on W threads and threads_speedup/W \
+             stores the run(1)/run(W) wall ratio — dimensionless — in \
+             mean_ns"
                 .into(),
         ),
     );

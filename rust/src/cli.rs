@@ -58,6 +58,15 @@ CHURN:   with sim.leave_prob/join_prob enabled, the membership subsystem
          (simulated seconds between re-clusterings). Migrated devices
          warm-start from their new edge's model over its downlink.
 
+SCALE:   --set sim.workers=W runs the simulation layers (per-device
+         time/energy draws, sharded event shards) on W threads (0 = all
+         cores); --set sim.queue_backend=auto|binary|calendar picks the
+         event-queue backend (auto switches to the calendar queue above
+         ~1M expected events). Both are execution details: any W and any
+         backend produce bitwise identical trajectories, so neither is
+         part of the run identity (config digest). The sharded 1M+
+         device path is exercised by examples/sharded_scale.rs.
+
 OBSERVE: run --serve 127.0.0.1:9898 attaches a read-only observer and
          serves /healthz, /metrics (Prometheus text) and /stream (one
          NDJSON frame per closed cloud round) while the run progresses;

@@ -252,6 +252,16 @@ pub struct SimConfig {
     /// leaves, and a departed one rejoins. Defaults (0 / 1) disable churn.
     pub leave_prob: f64,
     pub join_prob: f64,
+    /// Worker threads for the sharded simulation layer and the engines'
+    /// parallel device-simulation/materialization paths (0 = available
+    /// parallelism, 1 = serial). Execution detail: any value replays the
+    /// same run bit-for-bit, so this is deliberately absent from
+    /// `to_json` (the run-identity digest).
+    pub workers: usize,
+    /// Event-queue backend (`auto`/`binary`/`calendar`). Also bitwise
+    /// invisible — backends share one total event order — and likewise
+    /// excluded from the run-identity digest.
+    pub queue_backend: crate::sim::event::QueueBackend,
 }
 
 #[derive(Clone, Debug)]
@@ -326,6 +336,8 @@ impl ExperimentConfig {
                 comm_jitter: 0.15,
                 leave_prob: 0.0,
                 join_prob: 1.0,
+                workers: 1,
+                queue_backend: crate::sim::event::QueueBackend::Auto,
             },
             sync: SyncConfig::default(),
             link: LinkConfig::default(),
@@ -430,6 +442,11 @@ impl ExperimentConfig {
             "sim.power_max" => self.sim.power_max = parse_f()?,
             "sim.leave_prob" => self.sim.leave_prob = parse_f()?,
             "sim.join_prob" => self.sim.join_prob = parse_f()?,
+            "sim.workers" => self.sim.workers = parse_u()?,
+            "sim.queue_backend" => {
+                self.sim.queue_backend =
+                    crate::sim::event::QueueBackend::parse(value)?
+            }
             "sync.mode" => self.sync.mode = SyncModeCfg::parse(value)?,
             "sync.quorum" => self.sync.quorum = parse_u()?,
             "sync.staleness_alpha" => {
@@ -781,6 +798,26 @@ mod tests {
     fn unknown_key_rejected() {
         let mut c = ExperimentConfig::mnist();
         assert!(c.apply_override("no.such.key", "1").is_err());
+    }
+
+    #[test]
+    fn parallelism_overrides() {
+        use crate::sim::event::QueueBackend;
+        let mut c = ExperimentConfig::mnist();
+        assert_eq!(c.sim.workers, 1, "serial by default");
+        assert_eq!(c.sim.queue_backend, QueueBackend::Auto);
+        c.apply_override("sim.workers", "8").unwrap();
+        c.apply_override("sim.queue_backend", "calendar").unwrap();
+        assert_eq!(c.sim.workers, 8);
+        assert_eq!(c.sim.queue_backend, QueueBackend::Calendar);
+        c.apply_override("sim.queue_backend", "heap").unwrap();
+        assert_eq!(c.sim.queue_backend, QueueBackend::Binary);
+        c.validate().unwrap();
+        assert!(c.apply_override("sim.queue_backend", "bogus").is_err());
+        assert!(c.apply_override("sim.workers", "-1").is_err());
+        // Execution details must stay out of the run-identity digest.
+        let base = ExperimentConfig::mnist().to_json().to_string();
+        assert_eq!(c.to_json().to_string(), base);
     }
 
     #[test]

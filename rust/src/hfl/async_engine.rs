@@ -343,7 +343,13 @@ impl AsyncHflEngine {
         // (all still the one init buffer) — no clones.
         let landed_w = eng.share_edge_handles();
         Ok(AsyncHflEngine {
-            queue: EventQueue::new(seed ^ 0xa57c),
+            // Same seed as ever (the tie-break stream is part of the
+            // trajectory); capacity/backend are bitwise invisible.
+            queue: EventQueue::for_scale(
+                seed ^ 0xa57c,
+                n * 4 + 64,
+                eng.cfg.sim.queue_backend,
+            ),
             g1,
             alpha,
             dev_edge,
@@ -500,11 +506,13 @@ impl AsyncHflEngine {
             // each drain unit gets its own timeline (and its events carry
             // the per-edge clock, matching run_round's accumulators
             // bit-for-bit).
-            let mut q = EventQueue::new(
+            let mut q = EventQueue::for_scale(
                 self.eng.cfg.seed
                     ^ 0x51ac
                     ^ ((self.eng.round as u64) << 8)
                     ^ ((sub as u64) << 40),
+                self.eng.cfg.topology.devices * 2 + 16,
+                self.eng.cfg.sim.queue_backend,
             );
             let (jobs, job_edges) =
                 self.eng.gather_jobs(sub, gamma1, gamma2, participation);
@@ -513,11 +521,18 @@ impl AsyncHflEngine {
             }
             let results = self.eng.train_batch(jobs)?;
             // Schedule every member's completion; count expected reports.
+            // The per-device simulation is batched over the sim worker
+            // pool (bit-identical to the serial loop at any sim.workers).
+            let reqs: Vec<(usize, usize)> = results
+                .iter()
+                .map(|res| (res.device, res.losses.len()))
+                .collect();
+            let sims = self.eng.simulate_train_batch(&reqs);
             let mut expect = vec![0usize; m];
             let mut seen = vec![0usize; m];
-            for (res, &j) in results.iter().zip(&job_edges) {
-                let (t_dev, e_dev) =
-                    self.eng.simulate_train(res.device, res.losses.len());
+            for ((res, &j), &(t_dev, e_dev)) in
+                results.iter().zip(&job_edges).zip(&sims)
+            {
                 acc.record_train(
                     j,
                     res.device,
@@ -655,7 +670,11 @@ impl AsyncHflEngine {
         self.eng.reset();
         self.g1 = g1.to_vec();
         self.alpha = vec![self.eng.cfg.sync.staleness_alpha; m];
-        self.queue = EventQueue::new(self.eng.cfg.seed ^ 0xa57c);
+        self.queue = EventQueue::for_scale(
+            self.eng.cfg.seed ^ 0xa57c,
+            n * 4 + 64,
+            self.eng.cfg.sim.queue_backend,
+        );
         self.in_flight = (0..n).map(|_| None).collect();
         self.reported = vec![Vec::new(); m];
         self.edge_last_update_round = vec![0; m];
@@ -819,9 +838,15 @@ impl AsyncHflEngine {
             return Ok(());
         }
         let results = self.eng.train_batch(jobs)?;
-        for res in results {
+        // Batched simulated time/energy (parallel across sim.workers,
+        // bit-identical to per-device serial calls).
+        let reqs: Vec<(usize, usize)> = results
+            .iter()
+            .map(|res| (res.device, res.losses.len()))
+            .collect();
+        let sims = self.eng.simulate_train_batch(&reqs);
+        for (res, &(t_dev, e_dev)) in results.into_iter().zip(&sims) {
             let d = res.device;
-            let (t_dev, e_dev) = self.eng.simulate_train(d, res.losses.len());
             let j = self.dev_edge[d];
             // Adopt the trained result into the store immediately, tagged
             // with the edge version it started from (the staleness base):

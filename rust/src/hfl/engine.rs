@@ -7,10 +7,11 @@ use crate::obs::Observer;
 use crate::pca::PcaModel;
 use crate::runtime::{pool::TrainJob, DevicePool, HostTensor, Runtime};
 use crate::sim::{
-    Direction, EnergyModel, LinkManager, MobilityModel, NetworkModel,
-    SimClock,
+    CpuModel, Direction, EnergyModel, LinkManager, MobilityModel,
+    NetworkModel, SimClock,
 };
 use crate::util::rng::Rng;
+use crate::util::threadpool::par_for_each;
 
 use super::aggregate::aggregate_native_auto;
 use super::membership::{self, MembershipTracker, ReclusterOutcome};
@@ -436,18 +437,72 @@ impl HflEngine {
         epochs: usize,
     ) -> (f64, f64) {
         let nb = self.rt.manifest.config.nb;
-        let cpu = &mut self.topo.cpus[device];
-        let mut t_dev = 0.0;
-        let mut e_dev = 0.0;
-        for _ in 0..epochs {
-            cpu.step_usage();
-            for _ in 0..nb {
-                let t = cpu.sgd_time();
-                t_dev += t;
-                e_dev += self.energy_model.sgd_energy(cpu, t);
-            }
+        simulate_device(
+            &mut self.topo.cpus[device],
+            &self.energy_model,
+            nb,
+            epochs,
+        )
+    }
+
+    /// Effective worker count for the parallel *simulation* paths:
+    /// `sim.workers`, with 0 meaning all available cores. Distinct from
+    /// `cfg.workers` (the real-compute training pool).
+    pub(crate) fn sim_workers(&self) -> usize {
+        match self.cfg.sim.workers {
+            0 => std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+            w => w,
         }
-        (t_dev, e_dev)
+    }
+
+    /// Simulated (time, energy) for a batch of `(device, epochs)`
+    /// requests, in request order. Bit-identical to calling
+    /// [`Self::simulate_train`] once per request — in any order, at any
+    /// `sim.workers` — because every `CpuModel` draws from its own RNG
+    /// stream, so per-device draw sequences are independent of
+    /// scheduling. Devices must be distinct within one batch.
+    pub(crate) fn simulate_train_batch(
+        &mut self,
+        reqs: &[(usize, usize)],
+    ) -> Vec<(f64, f64)> {
+        let workers = self.sim_workers();
+        if workers <= 1 || reqs.len() <= 1 {
+            return reqs
+                .iter()
+                .map(|&(d, e)| self.simulate_train(d, e))
+                .collect();
+        }
+        let nb = self.rt.manifest.config.nb;
+        // Request index per device, to pair each `&mut CpuModel` from a
+        // single `iter_mut` pass with its output slot.
+        let mut req_of: Vec<Option<usize>> =
+            vec![None; self.topo.cpus.len()];
+        for (i, &(d, _)) in reqs.iter().enumerate() {
+            debug_assert!(
+                req_of[d].is_none(),
+                "duplicate device {d} in simulate_train_batch"
+            );
+            req_of[d] = Some(i);
+        }
+        let mut out = vec![(0.0, 0.0); reqs.len()];
+        {
+            let mut slots: Vec<Option<&mut (f64, f64)>> =
+                out.iter_mut().map(Some).collect();
+            let energy = &self.energy_model;
+            let mut items: Vec<(&mut CpuModel, usize, &mut (f64, f64))> =
+                Vec::with_capacity(reqs.len());
+            for (d, cpu) in self.topo.cpus.iter_mut().enumerate() {
+                if let Some(i) = req_of[d] {
+                    items.push((cpu, reqs[i].1, slots[i].take().unwrap()));
+                }
+            }
+            par_for_each(workers, items, |(cpu, epochs, slot)| {
+                *slot = simulate_device(cpu, energy, nb, epochs);
+            });
+        }
+        out
     }
 
     /// Aggregate `devs`' models (data-size weighted, member order) into
@@ -859,11 +914,18 @@ impl HflEngine {
             }
             // Real compute: parallel local training.
             let results = self.train_batch(jobs)?;
-            // Simulated time/energy per device + apply new weights.
+            // Simulated time/energy per device (batched across the
+            // sim worker pool — bitwise identical to the serial loop
+            // at any `sim.workers`) + apply new weights.
+            let reqs: Vec<(usize, usize)> = results
+                .iter()
+                .map(|res| (res.device, res.losses.len()))
+                .collect();
+            let sims = self.simulate_train_batch(&reqs);
             let mut sub_slowest = vec![0.0f64; m];
-            for (res, &j) in results.iter().zip(&job_edges) {
-                let (t_dev, e_dev) =
-                    self.simulate_train(res.device, res.losses.len());
+            for ((res, &j), &(t_dev, e_dev)) in
+                results.iter().zip(&job_edges).zip(&sims)
+            {
                 if t_dev > sub_slowest[j] {
                     sub_slowest[j] = t_dev;
                 }
@@ -1013,4 +1075,27 @@ impl HflEngine {
             .map(|j| self.predict_edge_time(j, gamma1[j], gamma2[j]))
             .fold(0.0, f64::max)
     }
+}
+
+/// Core of [`HflEngine::simulate_train`], shared with the parallel batch
+/// path: advance one device's CPU state through `epochs` local epochs of
+/// `nb` batches, returning the simulated (time, energy). All randomness
+/// comes from the device's own `CpuModel` stream.
+fn simulate_device(
+    cpu: &mut CpuModel,
+    energy: &EnergyModel,
+    nb: usize,
+    epochs: usize,
+) -> (f64, f64) {
+    let mut t_dev = 0.0;
+    let mut e_dev = 0.0;
+    for _ in 0..epochs {
+        cpu.step_usage();
+        for _ in 0..nb {
+            let t = cpu.sgd_time();
+            t_dev += t;
+            e_dev += energy.sgd_energy(cpu, t);
+        }
+    }
+    (t_dev, e_dev)
 }

@@ -73,5 +73,7 @@ pub use async_engine::{AsyncHflEngine, SyncMode};
 pub use engine::HflEngine;
 pub use membership::{MembershipTracker, ReclusterOutcome};
 pub use metrics::{EdgeStats, RoundAccumulator, RoundStats, RunHistory};
-pub use model_store::{ModelRef, ModelStore};
+pub use model_store::{
+    ModelRef, ModelStore, ShardedModelRef, ShardedModelStore,
+};
 pub use topology::{build_topology, Edge, Topology};

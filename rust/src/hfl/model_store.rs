@@ -329,6 +329,215 @@ impl ModelStore {
     }
 }
 
+/// Handle into a [`ShardedModelStore`]: which shard's slab, plus the
+/// ordinary [`ModelRef`] within it. Like `ModelRef`, deliberately
+/// neither `Clone` nor `Copy`.
+#[derive(Debug)]
+pub struct ShardedModelRef {
+    shard: usize,
+    r: ModelRef,
+}
+
+impl ShardedModelRef {
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    pub fn version(&self) -> u64 {
+        self.r.version()
+    }
+
+    pub fn bump_version(&mut self) {
+        self.r.bump_version()
+    }
+
+    /// Same buffer ⇔ same shard *and* same slab id (ids are only
+    /// meaningful within one shard's slab).
+    pub fn shares_buffer_with(&self, other: &ShardedModelRef) -> bool {
+        self.shard == other.shard && self.r.shares_buffer_with(&other.r)
+    }
+}
+
+/// Device-sharded model store: one independent [`ModelStore`] slab per
+/// shard of the sharded execution layer (`sim::shard`).
+///
+/// Within a shard everything is the ordinary CoW store — O(1) re-points,
+/// rc'd sharing, pooled buffers — and a worker thread that owns a shard
+/// touches only its own slab (grab disjoint `&mut ModelStore`s via
+/// [`ShardedModelStore::shards_mut`] + `util::threadpool::par_for_each`;
+/// the slabs are plain data, so they are `Send`). **No buffer is ever
+/// shared across slabs**: cross-shard movement happens only at
+/// conservative barriers, by copying bytes once per receiving shard —
+/// [`ShardedModelStore::adopt_across`] for a single handle (e.g. a
+/// migration landing on another shard) and
+/// [`ShardedModelStore::replicate_at_barrier`] for the cloud broadcast
+/// (one copy per shard, then every device re-points shard-locally —
+/// O(shards) copies instead of O(devices)).
+pub struct ShardedModelStore {
+    shards: Vec<ModelStore>,
+}
+
+impl ShardedModelStore {
+    pub fn new(p: usize, n_shards: usize) -> Self {
+        assert!(n_shards > 0, "need at least one shard");
+        ShardedModelStore {
+            shards: (0..n_shards).map(|_| ModelStore::new(p)).collect(),
+        }
+    }
+
+    /// Rewrap per-shard slabs recovered from a worker pool.
+    pub fn from_shards(shards: Vec<ModelStore>) -> Self {
+        assert!(!shards.is_empty());
+        assert!(
+            shards.windows(2).all(|w| w[0].p() == w[1].p()),
+            "shard slabs disagree on p"
+        );
+        ShardedModelStore { shards }
+    }
+
+    /// Split into owned per-shard slabs (to move into a `ShardPool`).
+    pub fn into_shards(self) -> Vec<ModelStore> {
+        self.shards
+    }
+
+    pub fn p(&self) -> usize {
+        self.shards[0].p()
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The canonical device→shard map (fixed by topology, never by
+    /// worker count).
+    pub fn shard_of(&self, device: usize) -> usize {
+        device % self.shards.len()
+    }
+
+    pub fn shard(&self, s: usize) -> &ModelStore {
+        &self.shards[s]
+    }
+
+    /// Disjoint mutable slabs — feed to `par_for_each` so each worker
+    /// mutates only its own shard's region.
+    pub fn shards_mut(&mut self) -> &mut [ModelStore] {
+        &mut self.shards
+    }
+
+    pub fn insert(
+        &mut self,
+        shard: usize,
+        w: Vec<f32>,
+        version: u64,
+    ) -> ShardedModelRef {
+        ShardedModelRef {
+            shard,
+            r: self.shards[shard].insert(w, version),
+        }
+    }
+
+    pub fn share(&mut self, r: &ShardedModelRef) -> ShardedModelRef {
+        ShardedModelRef {
+            shard: r.shard,
+            r: self.shards[r.shard].share(&r.r),
+        }
+    }
+
+    pub fn release(&mut self, r: ShardedModelRef) {
+        self.shards[r.shard].release(r.r);
+    }
+
+    pub fn slice(&self, r: &ShardedModelRef) -> &[f32] {
+        self.shards[r.shard].slice(&r.r)
+    }
+
+    pub fn make_mut(&mut self, r: &mut ShardedModelRef) -> &mut [f32] {
+        self.shards[r.shard].make_mut(&mut r.r)
+    }
+
+    /// Shard-local re-point (both handles must live in one slab —
+    /// cross-shard sharing does not exist by construction).
+    pub fn repoint(
+        &mut self,
+        dst: &mut ShardedModelRef,
+        src: &ShardedModelRef,
+    ) {
+        assert_eq!(
+            dst.shard, src.shard,
+            "repoint across shards: use adopt_across at a barrier"
+        );
+        self.shards[dst.shard].repoint(&mut dst.r, &src.r);
+    }
+
+    /// Barrier-time handle adoption. Same shard: an O(1) adopt. Across
+    /// shards: `src`'s bytes are copied once into `dst`'s slab (taking
+    /// `src`'s version) and `src` is released in its own slab — the only
+    /// way bytes ever cross a shard boundary.
+    pub fn adopt_across(
+        &mut self,
+        dst: &mut ShardedModelRef,
+        src: ShardedModelRef,
+    ) {
+        if dst.shard == src.shard {
+            self.shards[dst.shard].adopt(&mut dst.r, src.r);
+            return;
+        }
+        let v = src.version();
+        let w = self.shards[src.shard].slice(&src.r).to_vec();
+        self.shards[src.shard].release(src.r);
+        let fresh = self.shards[dst.shard].insert(w, v);
+        self.shards[dst.shard].adopt(&mut dst.r, fresh);
+    }
+
+    /// Replicate a barrier payload (e.g. the cloud model) into every
+    /// shard: the source shard shares the existing buffer, every other
+    /// shard gets one copy. Returns one handle per shard, in shard
+    /// order; devices then re-point shard-locally (O(1) each).
+    pub fn replicate_at_barrier(
+        &mut self,
+        src: &ShardedModelRef,
+    ) -> Vec<ShardedModelRef> {
+        let w = self.shards[src.shard].slice(&src.r).to_vec();
+        let v = src.version();
+        (0..self.shards.len())
+            .map(|s| {
+                if s == src.shard {
+                    self.share(src)
+                } else {
+                    ShardedModelRef {
+                        shard: s,
+                        r: self.shards[s].insert(w.clone(), v),
+                    }
+                }
+            })
+            .collect()
+    }
+
+    // ---- observables (sums of the per-shard slabs) --------------------
+
+    pub fn live_buffers(&self) -> usize {
+        self.shards.iter().map(|s| s.live_buffers()).sum()
+    }
+
+    pub fn allocated_buffers(&self) -> usize {
+        self.shards.iter().map(|s| s.allocated_buffers()).sum()
+    }
+
+    pub fn peak_model_bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.peak_model_bytes()).sum()
+    }
+
+    pub fn total_refs(&self) -> usize {
+        self.shards.iter().map(|s| s.total_refs()).sum()
+    }
+
+    pub fn assert_consistent(&self) {
+        for s in &self.shards {
+            s.assert_consistent();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -746,6 +955,180 @@ mod tests {
                 st.release(e);
             }
             st.release(cloud);
+            st.assert_consistent();
+            Ok(())
+        });
+    }
+
+    // ---- sharded store ------------------------------------------------
+
+    #[test]
+    fn sharded_single_shard_behaves_like_plain_store() {
+        let mut st = ShardedModelStore::new(4, 1);
+        assert_eq!(st.p(), 4);
+        assert_eq!(st.shard_of(17), 0);
+        let a = st.insert(0, vec![1.0; 4], 0);
+        let mut b = st.share(&a);
+        assert!(a.shares_buffer_with(&b));
+        st.make_mut(&mut b)[0] = 9.0;
+        assert!(!a.shares_buffer_with(&b), "CoW must split");
+        assert_eq!(st.slice(&a), &[1.0; 4]);
+        assert_eq!(st.live_buffers(), 2);
+        st.release(a);
+        st.release(b);
+        assert_eq!(st.live_buffers(), 0);
+        st.assert_consistent();
+    }
+
+    #[test]
+    fn adopt_across_copies_bytes_between_slabs() {
+        let mut st = ShardedModelStore::new(2, 3);
+        let mut dev = st.insert(1, vec![0.0; 2], 0);
+        let payload = st.insert(2, vec![7.0; 2], 5);
+        st.adopt_across(&mut dev, payload);
+        assert_eq!(dev.shard(), 1, "handle stays in its shard");
+        assert_eq!(st.slice(&dev), &[7.0; 2]);
+        assert_eq!(dev.version(), 5, "adoption takes the payload tag");
+        assert_eq!(st.shard(2).live_buffers(), 0, "source released");
+        assert_eq!(st.live_buffers(), 1);
+        // Same-shard adoption is the O(1) path.
+        let local = st.insert(1, vec![3.0; 2], 9);
+        st.adopt_across(&mut dev, local);
+        assert_eq!(st.slice(&dev), &[3.0; 2]);
+        assert_eq!(dev.version(), 9);
+        st.release(dev);
+        st.assert_consistent();
+    }
+
+    #[test]
+    fn replicate_at_barrier_copies_once_per_shard() {
+        let (s_n, p) = (4usize, 8usize);
+        let mut st = ShardedModelStore::new(p, s_n);
+        let cloud = st.insert(0, vec![2.5; p], 3);
+        let heads = st.replicate_at_barrier(&cloud);
+        assert_eq!(heads.len(), s_n);
+        assert!(heads[0].shares_buffer_with(&cloud), "src shard shares");
+        for (s, h) in heads.iter().enumerate() {
+            assert_eq!(h.shard(), s);
+            assert_eq!(st.slice(h), &[2.5; p]);
+            assert_eq!(h.version(), 3);
+        }
+        // One buffer in the source shard, one copy in each other shard.
+        assert_eq!(st.live_buffers(), s_n);
+        // Devices re-point shard-locally: no further copies.
+        let mut devs: Vec<ShardedModelRef> = (0..32)
+            .map(|d| {
+                let s = st.shard_of(d);
+                let mut h = st.insert(s, vec![0.0; p], 0);
+                st.repoint(&mut h, &heads[s]);
+                h
+            })
+            .collect();
+        assert_eq!(st.live_buffers(), s_n);
+        for d in devs.drain(..) {
+            st.release(d);
+        }
+        for h in heads {
+            st.release(h);
+        }
+        st.release(cloud);
+        assert_eq!(st.live_buffers(), 0);
+        st.assert_consistent();
+    }
+
+    #[test]
+    fn sharded_store_splits_and_reassembles() {
+        let mut st = ShardedModelStore::new(4, 3);
+        let a = st.insert(2, vec![1.5; 4], 1);
+        let shards = st.into_shards();
+        assert_eq!(shards.len(), 3);
+        let mut st = ShardedModelStore::from_shards(shards);
+        assert_eq!(st.slice(&a), &[1.5; 4]);
+        assert_eq!(st.n_shards(), 3);
+        st.release(a);
+        st.assert_consistent();
+    }
+
+    #[test]
+    fn sharded_refcounts_never_leak() {
+        // The engine-shaped op mix replayed against a sharded store:
+        // edges/devices live in their canonical shards, broadcasts go
+        // through replicate_at_barrier, cross-shard syncs through
+        // adopt_across. Per-slab invariants must hold throughout.
+        check("sharded-store-refcounts-never-leak", 40, gen_ops, |seq| {
+            let p = 8;
+            let s_n = 1 + seq.m.min(3);
+            let mut st = ShardedModelStore::new(p, s_n);
+            let mut cloud = st.insert(0, vec![0.0; p], 0);
+            let mut edges: Vec<ShardedModelRef> = (0..seq.m)
+                .map(|j| st.insert(j % s_n, vec![0.0; p], 0))
+                .collect();
+            let mut devs: Vec<ShardedModelRef> = (0..seq.n)
+                .map(|d| {
+                    let s = st.shard_of(d);
+                    st.insert(s, vec![0.0; p], 0)
+                })
+                .collect();
+            for &op in &seq.ops {
+                match op {
+                    Op::Broadcast => {
+                        cloud.bump_version();
+                        let heads = st.replicate_at_barrier(&cloud);
+                        for e in edges.iter_mut() {
+                            let src = st.share(&heads[e.shard()]);
+                            st.adopt_across(e, src);
+                        }
+                        for d in devs.iter_mut() {
+                            let src = st.share(&heads[d.shard()]);
+                            st.adopt_across(d, src);
+                        }
+                        for h in heads {
+                            st.release(h);
+                        }
+                    }
+                    Op::EdgeAgg(j) => {
+                        let v = edges[j].version() + 1;
+                        let s = edges[j].shard();
+                        let agg = st.insert(s, vec![v as f32; p], v);
+                        st.adopt_across(&mut edges[j], agg);
+                    }
+                    Op::Train(d) => {
+                        st.make_mut(&mut devs[d])[0] += 1.0;
+                    }
+                    Op::Mix(d, j) | Op::Migrate(d, j) => {
+                        // Cross-shard sync: one copy lands in d's slab.
+                        let src = st.share(&edges[j]);
+                        st.adopt_across(&mut devs[d], src);
+                    }
+                    Op::Upload(j) => {
+                        // Snapshot rides to the cloud shard (shard 0).
+                        let src = st.share(&edges[j]);
+                        let mut payload =
+                            st.insert(0, vec![0.0; p], 0);
+                        st.adopt_across(&mut payload, src);
+                        st.release(payload);
+                    }
+                }
+                let handles = 1 + edges.len() + devs.len();
+                if st.total_refs() != handles {
+                    return Err(format!(
+                        "total refs {} != handles {}",
+                        st.total_refs(),
+                        handles
+                    ));
+                }
+                st.assert_consistent();
+            }
+            for d in devs.drain(..) {
+                st.release(d);
+            }
+            for e in edges.drain(..) {
+                st.release(e);
+            }
+            st.release(cloud);
+            if st.live_buffers() != 0 {
+                return Err("handles released but buffers live".into());
+            }
             st.assert_consistent();
             Ok(())
         });

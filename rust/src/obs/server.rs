@@ -78,6 +78,9 @@ impl TelemetryServer {
             let subscribers = subscribers.clone();
             let last_frame = last_frame.clone();
             let stop = stop.clone();
+            // Sanctioned spawn: the accept loop blocks on the socket, so
+            // it cannot ride the simulation thread pools.
+            #[allow(clippy::disallowed_methods)]
             thread::spawn(move || {
                 while !stop.load(Ordering::Relaxed) {
                     match listener.accept() {
@@ -98,6 +101,8 @@ impl TelemetryServer {
         let pump_handle = {
             let subscribers = subscribers.clone();
             let stop = stop.clone();
+            // Sanctioned spawn: ditto — the pump blocks on the channel.
+            #[allow(clippy::disallowed_methods)]
             thread::spawn(move || loop {
                 match rx.recv_timeout(Duration::from_millis(50)) {
                     Ok(line) => {
@@ -338,6 +343,8 @@ mod tests {
         // Subscribe first, then push: the frame must be fanned out.
         let handle = {
             let addr = addr;
+            // Sanctioned spawn: blocking test probe, not simulation work.
+            #[allow(clippy::disallowed_methods)]
             std::thread::spawn(move || http_get(&addr, "/stream", 8192))
         };
         // Give the subscriber time to register, then emit frames until

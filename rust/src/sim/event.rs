@@ -1,15 +1,32 @@
 //! Deterministic discrete-event scheduler — the timing core of the
-//! asynchronous HFL engine (`hfl::async_engine`).
+//! asynchronous HFL engine (`hfl::async_engine`) and the sharded
+//! execution layer (`sim::shard`).
 //!
-//! A binary heap of timestamped [`Event`]s popped in simulated-time order.
-//! Equal-timestamp events are ordered by a *seeded* tie-break key drawn at
-//! schedule time (plus a monotone insertion sequence as the last resort),
-//! so the pop order is a pure function of the queue's seed and the schedule
-//! call sequence: two queues built the same way replay identically, while
-//! different seeds explore different-but-valid interleavings of simultaneous
-//! events. This is what makes asynchronous runs reproducible from the single
-//! experiment seed, the same property the synchronous engine gets from
-//! threading one `Rng` everywhere.
+//! A priority queue of timestamped [`Event`]s popped in simulated-time
+//! order. Equal-timestamp events are ordered by a *seeded* tie-break key
+//! drawn at schedule time (plus a monotone insertion sequence as the last
+//! resort), so the pop order is a pure function of the queue's seed and
+//! the schedule call sequence: two queues built the same way replay
+//! identically, while different seeds explore different-but-valid
+//! interleavings of simultaneous events. This is what makes asynchronous
+//! runs reproducible from the single experiment seed, the same property
+//! the synchronous engine gets from threading one `Rng` everywhere.
+//!
+//! # Backends
+//!
+//! The `(time, tie, seq)` key is a *total* order, so any correct priority
+//! queue yields the same pop sequence — the storage backend is bitwise
+//! invisible. Two are provided behind the one [`EventQueue`] API
+//! (selected by [`QueueBackend`], config knob `sim.queue_backend`):
+//!
+//! * **Binary** — `std::collections::BinaryHeap`. O(log n) everywhere;
+//!   the right default at engine scale (thousands of events).
+//! * **Calendar** — a calendar queue: events bucketed by coarse time
+//!   slot, buckets sorted lazily when the cursor reaches them. Past ~1M
+//!   pending events the binary heap's cache-hostile sift dominates an
+//!   async-run profile; the calendar's bucket-local sorts stay cache
+//!   resident. `Auto` picks it above [`CALENDAR_THRESHOLD`] expected
+//!   events.
 //!
 //! Event kinds mirror the actors of the HFL hierarchy:
 //!  * `DeviceTrainDone`  — a device finished its local epochs and reports
@@ -28,13 +45,16 @@
 //!    through `LinkManager::poll` and drop the `None`s.
 
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+use std::collections::{BTreeMap, BinaryHeap};
 
 use crate::util::rng::Rng;
 
 /// A simulation event. Payloads are indices into the engine's topology;
-/// all model/metric state lives in the engine, not the queue.
-#[derive(Clone, Debug, PartialEq, Eq)]
+/// all model/metric state lives in the engine, not the queue. `Copy` on
+/// purpose: events move through schedule/pop/re-schedule cycles (the
+/// link layer's re-prediction pattern) as plain registers — no boxing,
+/// no per-hop allocation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Event {
     DeviceTrainDone { device: usize, edge: usize },
     EdgeAggregate { edge: usize },
@@ -47,8 +67,45 @@ pub enum Event {
     TransferDone { transfer: usize },
 }
 
+/// Storage backend selector for [`EventQueue`] (`sim.queue_backend`).
+/// Backend choice never changes a pop sequence — only its speed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueueBackend {
+    /// Binary below [`CALENDAR_THRESHOLD`] expected events, calendar
+    /// above (the default).
+    Auto,
+    Binary,
+    Calendar,
+}
+
+impl QueueBackend {
+    pub fn name(self) -> &'static str {
+        match self {
+            QueueBackend::Auto => "auto",
+            QueueBackend::Binary => "binary",
+            QueueBackend::Calendar => "calendar",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "auto" => Ok(QueueBackend::Auto),
+            "binary" | "heap" => Ok(QueueBackend::Binary),
+            "calendar" => Ok(QueueBackend::Calendar),
+            _ => anyhow::bail!(
+                "unknown queue backend '{s}' (auto|binary|calendar)"
+            ),
+        }
+    }
+}
+
+/// Pending-event count above which `QueueBackend::Auto` picks the
+/// calendar backend (the profile point where `BinaryHeap` sift traffic
+/// starts dominating a 1M+-device drain).
+pub const CALENDAR_THRESHOLD: usize = 1 << 20;
+
 /// Heap entry: min-ordered by (time, tie, seq).
-#[derive(Clone, Debug)]
+#[derive(Clone, Copy, Debug)]
 struct Scheduled {
     time: f64,
     /// Seed-derived tie-break among equal timestamps.
@@ -84,10 +141,128 @@ impl PartialOrd for Scheduled {
     }
 }
 
-/// Seeded, deterministic event queue.
+/// One calendar day: events of one coarse time slot. Unsorted while the
+/// cursor is elsewhere (O(1) push); sorted once when the slot becomes
+/// the front, after which the earliest entry sits at the *end* of the
+/// Vec (the [`Scheduled`] order is reversed) and pops are O(1).
+#[derive(Clone, Debug, Default)]
+struct Bucket {
+    items: Vec<Scheduled>,
+    sorted: bool,
+    /// Earliest time in the bucket — maintained on every push/pop so
+    /// `peek_time` needs no sort and no scan.
+    min_time: f64,
+}
+
+/// Calendar-queue backend: buckets keyed by `floor(time / width)` in a
+/// `BTreeMap`, so the first entry always holds the globally earliest
+/// event (the bucket index is monotone in time) and far-future or
+/// sparse schedules cost one map insert instead of a ring resize.
+#[derive(Clone, Debug)]
+struct CalendarQueue {
+    buckets: BTreeMap<u64, Bucket>,
+    /// Coarse slot width in simulated seconds.
+    width: f64,
+    len: usize,
+    /// Emptied bucket Vecs, kept warm for reuse (drain scratch pool —
+    /// steady-state drains allocate nothing).
+    spare: Vec<Vec<Scheduled>>,
+}
+
+/// Bucket-Vec pool cap: enough to absorb a drain wave without holding
+/// unbounded memory afterwards.
+const SPARE_BUCKETS: usize = 32;
+
+impl CalendarQueue {
+    fn new() -> Self {
+        CalendarQueue {
+            buckets: BTreeMap::new(),
+            width: 1.0,
+            len: 0,
+            spare: Vec::new(),
+        }
+    }
+
+    fn slot(&self, time: f64) -> u64 {
+        // Saturating float->int cast; monotone, so bucket order is time
+        // order even at the clamp.
+        (time / self.width) as u64
+    }
+
+    fn push(&mut self, s: Scheduled) {
+        let key = self.slot(s.time);
+        let spare = &mut self.spare;
+        let b = self.buckets.entry(key).or_insert_with(|| Bucket {
+            items: spare.pop().unwrap_or_default(),
+            sorted: false,
+            min_time: f64::INFINITY,
+        });
+        if s.time < b.min_time {
+            b.min_time = s.time;
+        }
+        if b.sorted {
+            // Active (front) bucket: keep it sorted. Near-now inserts
+            // land near the tail, so the memmove is short.
+            let at = match b.items.binary_search(&s) {
+                Ok(i) | Err(i) => i,
+            };
+            b.items.insert(at, s);
+        } else {
+            b.items.push(s);
+        }
+        self.len += 1;
+    }
+
+    fn peek_time(&self) -> Option<f64> {
+        self.buckets.values().next().map(|b| b.min_time)
+    }
+
+    fn pop(&mut self) -> Option<Scheduled> {
+        let mut entry = self.buckets.first_entry()?;
+        let b = entry.get_mut();
+        if !b.sorted {
+            // First visit: one bucket-local sort. The reversed Scheduled
+            // order puts the earliest event last, so pops are Vec::pop.
+            b.items.sort_unstable();
+            b.sorted = true;
+        }
+        let s = b.items.pop().expect("empty bucket left in calendar");
+        if let Some(next) = b.items.last() {
+            b.min_time = next.time;
+        } else {
+            let mut v = entry.remove().items;
+            if self.spare.len() < SPARE_BUCKETS {
+                v.clear();
+                self.spare.push(v);
+            }
+        }
+        self.len -= 1;
+        Some(s)
+    }
+
+    fn clear(&mut self) {
+        while let Some((_, b)) = self.buckets.pop_first() {
+            if self.spare.len() < SPARE_BUCKETS {
+                let mut v = b.items;
+                v.clear();
+                self.spare.push(v);
+            }
+        }
+        self.len = 0;
+    }
+}
+
+#[derive(Clone, Debug)]
+enum Heap {
+    Binary(BinaryHeap<Scheduled>),
+    Calendar(CalendarQueue),
+}
+
+/// Seeded, deterministic event queue (see module doc for the ordering
+/// contract and the backend choices).
 #[derive(Clone, Debug)]
 pub struct EventQueue {
-    heap: BinaryHeap<Scheduled>,
+    heap: Heap,
     rng: Rng,
     seq: u64,
     /// High-water mark of popped time; schedules may not precede it.
@@ -96,11 +271,53 @@ pub struct EventQueue {
 
 impl EventQueue {
     pub fn new(seed: u64) -> Self {
+        Self::with_capacity(seed, 0)
+    }
+
+    /// Binary-backed queue with `capacity` preallocated entries — size it
+    /// from the topology (≈ devices + edges + in-flight transfers) so a
+    /// dispatch wave never reallocates mid-drain.
+    pub fn with_capacity(seed: u64, capacity: usize) -> Self {
         EventQueue {
-            heap: BinaryHeap::new(),
+            heap: Heap::Binary(BinaryHeap::with_capacity(capacity)),
             rng: Rng::new(seed ^ 0xe7e47),
             seq: 0,
             now: 0.0,
+        }
+    }
+
+    /// Queue sized and backed for an expected event population:
+    /// `Auto` switches to the calendar backend at
+    /// [`CALENDAR_THRESHOLD`] expected events. The seeded tie-break
+    /// stream is identical across backends, so the choice is bitwise
+    /// invisible to the simulation.
+    pub fn for_scale(
+        seed: u64,
+        expected_events: usize,
+        backend: QueueBackend,
+    ) -> Self {
+        let calendar = match backend {
+            QueueBackend::Auto => expected_events >= CALENDAR_THRESHOLD,
+            QueueBackend::Binary => false,
+            QueueBackend::Calendar => true,
+        };
+        if calendar {
+            EventQueue {
+                heap: Heap::Calendar(CalendarQueue::new()),
+                rng: Rng::new(seed ^ 0xe7e47),
+                seq: 0,
+                now: 0.0,
+            }
+        } else {
+            Self::with_capacity(seed, expected_events)
+        }
+    }
+
+    /// Active backend ("binary" | "calendar") — diagnostics only.
+    pub fn backend_name(&self) -> &'static str {
+        match self.heap {
+            Heap::Binary(_) => "binary",
+            Heap::Calendar(_) => "calendar",
         }
     }
 
@@ -115,22 +332,32 @@ impl EventQueue {
         let tie = self.rng.next_u64();
         let seq = self.seq;
         self.seq += 1;
-        self.heap.push(Scheduled {
+        let s = Scheduled {
             time,
             tie,
             seq,
             event,
-        });
+        };
+        match &mut self.heap {
+            Heap::Binary(h) => h.push(s),
+            Heap::Calendar(c) => c.push(s),
+        }
     }
 
     /// Earliest pending event time, if any.
     pub fn peek_time(&self) -> Option<f64> {
-        self.heap.peek().map(|s| s.time)
+        match &self.heap {
+            Heap::Binary(h) => h.peek().map(|s| s.time),
+            Heap::Calendar(c) => c.peek_time(),
+        }
     }
 
     /// Pop the earliest event; advances the queue's notion of `now`.
     pub fn pop(&mut self) -> Option<(f64, Event)> {
-        let s = self.heap.pop()?;
+        let s = match &mut self.heap {
+            Heap::Binary(h) => h.pop()?,
+            Heap::Calendar(c) => c.pop()?,
+        };
         self.now = s.time;
         Some((s.time, s.event))
     }
@@ -140,16 +367,22 @@ impl EventQueue {
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        match &self.heap {
+            Heap::Binary(h) => h.len(),
+            Heap::Calendar(c) => c.len,
+        }
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len() == 0
     }
 
     /// Drop all pending events (keeps seed stream and `now`).
     pub fn clear(&mut self) {
-        self.heap.clear();
+        match &mut self.heap {
+            Heap::Binary(h) => h.clear(),
+            Heap::Calendar(c) => c.clear(),
+        }
     }
 }
 
@@ -262,5 +495,140 @@ mod tests {
             n += 1;
         }
         assert_eq!(n, 10_000);
+    }
+
+    /// The backend contract: a binary and a calendar queue fed the same
+    /// seed and schedule sequence pop the same events at the same times
+    /// in the same order — including through interleaved pops, ties,
+    /// and the link layer's re-prediction pattern.
+    #[test]
+    fn backends_are_bitwise_equivalent() {
+        let run = |backend: QueueBackend| {
+            let mut q = EventQueue::for_scale(99, 4096, backend);
+            let mut out = Vec::new();
+            // Dense tie-heavy fill.
+            for i in 0..2000usize {
+                let t = ((i * 7919) % 37) as f64 * 0.5;
+                q.schedule(
+                    t,
+                    Event::DeviceTrainDone {
+                        device: i,
+                        edge: i % 8,
+                    },
+                );
+            }
+            // Interleave pops with re-predictions (pop one, push one at
+            // t + delta) and far-future sparse events.
+            q.schedule(1.0e7, Event::CloudAggregate);
+            q.schedule(2.5e4, Event::MobilityFlip);
+            let mut budget = 1500usize;
+            while let Some((t, ev)) = q.pop() {
+                out.push((t, ev));
+                if budget > 0 {
+                    if let Event::DeviceTrainDone { device, edge } = ev {
+                        q.schedule(
+                            t + 0.25 * ((device % 5) as f64),
+                            Event::TransferDone {
+                                transfer: device ^ edge,
+                            },
+                        );
+                        budget -= 1;
+                    }
+                }
+            }
+            out
+        };
+        let a = run(QueueBackend::Binary);
+        let b = run(QueueBackend::Calendar);
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(
+                x.0.to_bits(),
+                y.0.to_bits(),
+                "time diverged at pop {i}"
+            );
+            assert_eq!(x.1, y.1, "event diverged at pop {i}");
+        }
+    }
+
+    #[test]
+    fn calendar_handles_same_slot_inserts_after_activation() {
+        // Push into the *front* (already sorted) bucket mid-drain: the
+        // sorted-insert path must keep the order exact.
+        let mut q = EventQueue::for_scale(5, 0, QueueBackend::Calendar);
+        for d in 0..16 {
+            q.schedule(0.5, Event::DeviceTrainDone { device: d, edge: 0 });
+        }
+        let (t, _) = q.pop().unwrap();
+        assert_eq!(t, 0.5);
+        // Same slot, later time; and same slot, same time (tie).
+        q.schedule(0.9, Event::EdgeAggregate { edge: 1 });
+        q.schedule(0.5, Event::EdgeAggregate { edge: 2 });
+        let rest = drain(&mut q);
+        assert_eq!(rest.len(), 17);
+        let mut last = 0.0f64;
+        for (t, _) in &rest {
+            assert!(*t >= last);
+            last = *t;
+        }
+        assert_eq!(rest.last().unwrap().0, 0.9);
+    }
+
+    #[test]
+    fn for_scale_auto_selects_by_threshold() {
+        let small = EventQueue::for_scale(1, 1024, QueueBackend::Auto);
+        assert_eq!(small.backend_name(), "binary");
+        let big =
+            EventQueue::for_scale(1, CALENDAR_THRESHOLD, QueueBackend::Auto);
+        assert_eq!(big.backend_name(), "calendar");
+        assert_eq!(
+            EventQueue::for_scale(1, 0, QueueBackend::Calendar)
+                .backend_name(),
+            "calendar"
+        );
+        // Capacity/backend choice never touches the tie-break stream:
+        // all constructions replay the same order.
+        let fill = |mut q: EventQueue| {
+            for d in 0..64 {
+                q.schedule(
+                    1.0,
+                    Event::DeviceTrainDone { device: d, edge: 0 },
+                );
+            }
+            drain(&mut q)
+        };
+        let a = fill(EventQueue::new(7));
+        let b = fill(EventQueue::with_capacity(7, 4096));
+        let c = fill(EventQueue::for_scale(7, 1 << 21, QueueBackend::Auto));
+        assert_eq!(a, b);
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn queue_backend_parse_roundtrip() {
+        for b in
+            [QueueBackend::Auto, QueueBackend::Binary, QueueBackend::Calendar]
+        {
+            assert_eq!(QueueBackend::parse(b.name()).unwrap(), b);
+        }
+        assert_eq!(
+            QueueBackend::parse("heap").unwrap(),
+            QueueBackend::Binary
+        );
+        assert!(QueueBackend::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn calendar_clear_and_reuse() {
+        let mut q = EventQueue::for_scale(3, 0, QueueBackend::Calendar);
+        for i in 0..100 {
+            q.schedule(i as f64, Event::TransferDone { transfer: i });
+        }
+        q.clear();
+        assert!(q.is_empty());
+        assert_eq!(q.peek_time(), None);
+        q.schedule(5.0, Event::CloudAggregate);
+        assert_eq!(q.pop().unwrap().0, 5.0);
+        assert!(q.pop().is_none());
     }
 }

@@ -13,11 +13,13 @@ pub mod event;
 pub mod link;
 pub mod mobility;
 pub mod network;
+pub mod shard;
 
 pub use clock::SimClock;
 pub use cpu::CpuModel;
 pub use energy::EnergyModel;
-pub use event::{Event, EventQueue};
+pub use event::{CALENDAR_THRESHOLD, Event, EventQueue, QueueBackend};
 pub use link::{Direction, LinkManager, Transfer};
 pub use mobility::{FlipStats, MobilityModel};
 pub use network::{NetworkModel, Region};
+pub use shard::{MergedStats, ShardSpec, ShardedDeviceSim, WindowRow};

@@ -7,6 +7,7 @@
 //! returned in submission order.
 
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 pub struct Pool<J: Send + 'static, R: Send + 'static> {
@@ -35,6 +36,10 @@ impl<J: Send + 'static, R: Send + 'static> Pool<J, R> {
             let res_tx = res_tx.clone();
             let init = init.clone();
             let work = work.clone();
+            // The one sanctioned spawn site (with ShardPool below):
+            // everything else must go through this module so thread
+            // lifetimes stay owned and joined.
+            #[allow(clippy::disallowed_methods)]
             handles.push(std::thread::spawn(move || {
                 let mut state = init(w);
                 while let Ok((id, job)) = rx.recv() {
@@ -124,6 +129,214 @@ where
     });
 }
 
+/// A shard-advance job: runs against one shard's owned state, returns
+/// that shard's report for the window.
+pub type ShardJob<S, R> = Arc<dyn Fn(usize, &mut S) -> R + Send + Sync>;
+
+enum ShardMsg<S, R> {
+    Run(ShardJob<S, R>),
+    /// Hand every owned shard back (shutdown protocol for
+    /// [`ShardPool::into_shards`]).
+    Take(mpsc::Sender<(usize, S)>),
+}
+
+enum ShardInner<S: Send + 'static, R: Send + 'static> {
+    /// `workers <= 1`: shards live on the caller's thread and every
+    /// window advances serially in shard order — zero thread, channel,
+    /// or `Arc` overhead, so the single-worker path costs exactly what
+    /// the pre-shard serial loop did.
+    Inline { shards: Vec<S> },
+    Threads {
+        job_tx: Vec<mpsc::Sender<ShardMsg<S, R>>>,
+        res_rx: mpsc::Receiver<(usize, R)>,
+        handles: Vec<JoinHandle<()>>,
+        n_shards: usize,
+    },
+}
+
+/// Long-lived worker pool over *partitioned owned state* — the engine
+/// room of the sharded simulation layer (`sim::shard`).
+///
+/// Where [`Pool`] deals independent jobs round-robin, `ShardPool` pins
+/// each shard to one worker for the pool's whole life (shard `i` →
+/// worker `i % workers`, fixed at construction): shard state never
+/// crosses a thread boundary after setup, so per-shard RNGs, event
+/// queues, and model slabs stay warm in one worker's cache across every
+/// window of a run. Each [`run`](ShardPool::run) call is one
+/// conservative time-window: all workers advance their shards
+/// independently, reports come home over mpsc in whatever order threads
+/// finish, and the caller receives them **re-ordered by shard index** —
+/// the fixed-shard-order merge that makes the parallel trajectory
+/// bit-identical for any worker count (including 1, which runs inline
+/// with no threads at all).
+pub struct ShardPool<S: Send + 'static, R: Send + 'static> {
+    inner: ShardInner<S, R>,
+}
+
+impl<S: Send + 'static, R: Send + 'static> ShardPool<S, R> {
+    /// Distribute `shards` across up to `workers` long-lived threads
+    /// (clamped to the shard count; `<= 1` runs inline, threadless).
+    pub fn new(workers: usize, shards: Vec<S>) -> Self {
+        let w = workers.max(1).min(shards.len().max(1));
+        if w <= 1 {
+            return ShardPool {
+                inner: ShardInner::Inline { shards },
+            };
+        }
+        let n_shards = shards.len();
+        let (res_tx, res_rx) = mpsc::channel::<(usize, R)>();
+        let mut job_tx = Vec::with_capacity(w);
+        let mut rxs = Vec::with_capacity(w);
+        for _ in 0..w {
+            let (tx, rx) = mpsc::channel::<ShardMsg<S, R>>();
+            job_tx.push(tx);
+            rxs.push(rx);
+        }
+        let mut owned: Vec<Vec<(usize, S)>> =
+            (0..w).map(|_| Vec::new()).collect();
+        for (i, s) in shards.into_iter().enumerate() {
+            owned[i % w].push((i, s));
+        }
+        let mut handles = Vec::with_capacity(w);
+        for (rx, mut mine) in rxs.into_iter().zip(owned) {
+            let res_tx = res_tx.clone();
+            // See Pool::new: this module is the sanctioned spawn site.
+            #[allow(clippy::disallowed_methods)]
+            handles.push(std::thread::spawn(move || {
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        ShardMsg::Run(f) => {
+                            for (idx, s) in mine.iter_mut() {
+                                let r = f(*idx, s);
+                                if res_tx.send((*idx, r)).is_err() {
+                                    return;
+                                }
+                            }
+                        }
+                        ShardMsg::Take(back) => {
+                            for pair in mine.drain(..) {
+                                let _ = back.send(pair);
+                            }
+                            return;
+                        }
+                    }
+                }
+            }));
+        }
+        ShardPool {
+            inner: ShardInner::Threads {
+                job_tx,
+                res_rx,
+                handles,
+                n_shards,
+            },
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        match &self.inner {
+            ShardInner::Inline { .. } => 1,
+            ShardInner::Threads { job_tx, .. } => job_tx.len(),
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        match &self.inner {
+            ShardInner::Inline { shards } => shards.len(),
+            ShardInner::Threads { n_shards, .. } => *n_shards,
+        }
+    }
+
+    /// Advance every shard through one window with `f(shard_idx, state)`
+    /// and return the reports **in shard order**, whatever order worker
+    /// threads finished in. `f` must depend only on its shard's index
+    /// and state (no ambient mutability), which is what makes the
+    /// result independent of thread interleaving.
+    pub fn run<F>(&mut self, f: F) -> Vec<R>
+    where
+        F: Fn(usize, &mut S) -> R + Send + Sync + 'static,
+    {
+        match &mut self.inner {
+            ShardInner::Inline { shards } => shards
+                .iter_mut()
+                .enumerate()
+                .map(|(i, s)| f(i, s))
+                .collect(),
+            ShardInner::Threads {
+                job_tx,
+                res_rx,
+                n_shards,
+                ..
+            } => {
+                let job: ShardJob<S, R> = Arc::new(f);
+                for tx in job_tx.iter() {
+                    tx.send(ShardMsg::Run(Arc::clone(&job)))
+                        .expect("shard worker died");
+                }
+                let mut slots: Vec<Option<R>> =
+                    (0..*n_shards).map(|_| None).collect();
+                for _ in 0..*n_shards {
+                    let (idx, r) =
+                        res_rx.recv().expect("shard worker died");
+                    slots[idx] = Some(r);
+                }
+                slots.into_iter().map(|s| s.unwrap()).collect()
+            }
+        }
+    }
+
+    /// Tear the pool down and hand back every shard's final state, in
+    /// shard order.
+    pub fn into_shards(mut self) -> Vec<S> {
+        let inner = std::mem::replace(
+            &mut self.inner,
+            ShardInner::Inline { shards: Vec::new() },
+        );
+        match inner {
+            ShardInner::Inline { shards } => shards,
+            ShardInner::Threads {
+                mut job_tx,
+                mut handles,
+                n_shards,
+                ..
+            } => {
+                let (back_tx, back_rx) = mpsc::channel::<(usize, S)>();
+                for tx in &job_tx {
+                    let _ = tx.send(ShardMsg::Take(back_tx.clone()));
+                }
+                drop(back_tx);
+                let mut slots: Vec<Option<S>> =
+                    (0..n_shards).map(|_| None).collect();
+                while let Ok((idx, s)) = back_rx.recv() {
+                    slots[idx] = Some(s);
+                }
+                job_tx.clear();
+                for h in handles.drain(..) {
+                    let _ = h.join();
+                }
+                slots
+                    .into_iter()
+                    .map(|s| s.expect("worker lost a shard"))
+                    .collect()
+            }
+        }
+    }
+}
+
+impl<S: Send + 'static, R: Send + 'static> Drop for ShardPool<S, R> {
+    fn drop(&mut self) {
+        if let ShardInner::Threads {
+            job_tx, handles, ..
+        } = &mut self.inner
+        {
+            job_tx.clear(); // closes channels, workers exit
+            for h in handles.drain(..) {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -172,6 +385,77 @@ mod tests {
             sum.fetch_add(x, Ordering::Relaxed);
         });
         assert_eq!(sum.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn shard_pool_merges_in_shard_order_for_any_worker_count() {
+        // Each shard accumulates its own counter across windows; the
+        // report stream must come back [shard 0, shard 1, ...] for every
+        // worker count, and state must persist across run() calls.
+        let reference: Vec<Vec<u64>> = {
+            let mut pool: ShardPool<u64, u64> =
+                ShardPool::new(1, vec![0; 7]);
+            (0..3)
+                .map(|w| {
+                    pool.run(move |idx, c| {
+                        *c += (idx as u64 + 1) * (w + 1);
+                        *c
+                    })
+                })
+                .collect()
+        };
+        for workers in [2usize, 3, 8, 16] {
+            let mut pool: ShardPool<u64, u64> =
+                ShardPool::new(workers, vec![0; 7]);
+            for (w, want) in reference.iter().enumerate() {
+                let w = w as u64;
+                let got = pool.run(move |idx, c| {
+                    *c += (idx as u64 + 1) * (w + 1);
+                    *c
+                });
+                assert_eq!(&got, want, "workers={workers} window={w}");
+            }
+            assert_eq!(
+                pool.into_shards(),
+                reference.last().unwrap().clone(),
+                "workers={workers}"
+            );
+        }
+    }
+
+    #[test]
+    fn shard_pool_order_survives_adversarial_delays() {
+        // Seeded per-shard sleeps scramble the mpsc arrival order; the
+        // merged report order must not move.
+        let mut pool: ShardPool<crate::util::rng::Rng, usize> =
+            ShardPool::new(
+                4,
+                (0..8).map(|i| crate::util::rng::Rng::new(i)).collect(),
+            );
+        for _ in 0..3 {
+            let got = pool.run(|idx, rng| {
+                let us = rng.below(500) as u64;
+                std::thread::sleep(std::time::Duration::from_micros(us));
+                idx
+            });
+            assert_eq!(got, (0..8).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn shard_pool_inline_when_single_worker_or_shard() {
+        let mut p: ShardPool<u32, u32> = ShardPool::new(1, vec![5, 6]);
+        assert_eq!(p.workers(), 1);
+        assert_eq!(p.run(|_, s| *s), vec![5, 6]);
+        // More workers than shards clamps; one shard runs inline.
+        let p2: ShardPool<u32, u32> = ShardPool::new(8, vec![9]);
+        assert_eq!(p2.workers(), 1);
+        assert_eq!(p2.n_shards(), 1);
+        assert_eq!(p2.into_shards(), vec![9]);
+        // Empty shard list is fine too.
+        let mut p3: ShardPool<u32, u32> = ShardPool::new(4, vec![]);
+        assert!(p3.run(|_, s| *s).is_empty());
+        assert!(p3.into_shards().is_empty());
     }
 
     #[test]

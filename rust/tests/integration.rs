@@ -6,6 +6,7 @@
 use arena::config::{ExperimentConfig, SyncModeCfg};
 use arena::hfl::{AsyncHflEngine, HflEngine};
 use arena::runtime::{HostTensor, Runtime};
+use arena::sim::QueueBackend;
 use arena::util::rng::Rng;
 
 fn artifacts_dir() -> String {
@@ -1038,6 +1039,141 @@ fn observer_attach_is_bitwise_noop() {
         h_on.rounds.len() as u64
     );
     assert!(!st.trace.is_empty(), "no spans recorded");
+}
+
+#[test]
+fn sim_workers_and_backend_are_bitwise_invisible_in_sync_equivalence() {
+    // The parallel simulation layer's core contract: any `sim.workers`
+    // and either queue backend reproduce the serial trajectory exactly
+    // — exercised here on the sync-equivalence surface (barrier vs
+    // event engine, zero churn), at workers ∈ {1, 2, 8}.
+    require_artifacts!();
+    let run = |workers: usize, backend: QueueBackend| {
+        let mut cfg = small_cfg();
+        cfg.sim.workers = workers;
+        cfg.sim.queue_backend = backend;
+        let mut barrier = HflEngine::new(cfg.clone(), false).unwrap();
+        let mut events = AsyncHflEngine::new(cfg, false).unwrap();
+        let m = barrier.edges();
+        let g1 = vec![2; m];
+        let g2 = vec![2; m];
+        let mut rows = Vec::new();
+        for _ in 0..2 {
+            let a = barrier.run_round(&g1, &g2, None).unwrap();
+            let b = events.run_round(&g1, &g2, None).unwrap();
+            assert_eq!(a.accuracy, b.accuracy);
+            assert_eq!(a.round_time, b.round_time);
+            assert_eq!(a.energy, b.energy);
+            rows.push((a.accuracy, a.round_time, a.energy, a.sim_now));
+        }
+        (rows, barrier.cloud_model().to_vec())
+    };
+    let reference = run(1, QueueBackend::Binary);
+    for workers in [2usize, 8] {
+        assert_eq!(
+            run(workers, QueueBackend::Binary),
+            reference,
+            "trajectory changed at sim.workers={workers}"
+        );
+    }
+    assert_eq!(
+        run(8, QueueBackend::Calendar),
+        reference,
+        "trajectory changed under the calendar backend"
+    );
+}
+
+#[test]
+fn history_csvs_byte_equal_across_sim_workers_under_churn() {
+    // A churn-heavy semi-sync run's exported history CSV must be
+    // byte-identical at sim.workers ∈ {1, 2, 8}, under either queue
+    // backend, with or without an observer attached — the bitwise
+    // surface CI's multithread-determinism job diffs.
+    require_artifacts!();
+    let csv = |workers: usize, backend: QueueBackend, observe: bool| {
+        let mut cfg = small_cfg();
+        cfg.hfl.threshold_time = 500.0;
+        cfg.sync.mode = SyncModeCfg::SemiSync;
+        cfg.sync.quorum = 1;
+        cfg.sync.cloud_interval = 100.0;
+        cfg.link.contention = true;
+        cfg.sim.leave_prob = 0.25;
+        cfg.sim.join_prob = 0.5;
+        cfg.sim.workers = workers;
+        cfg.sim.queue_backend = backend;
+        let mut e = AsyncHflEngine::new(cfg, false).unwrap();
+        if observe {
+            e.attach_observer(Box::new(arena::obs::RunObserver::new()));
+        }
+        let hist = e.run_to_threshold().unwrap();
+        let path = std::env::temp_dir().join(format!(
+            "arena_w{workers}_{}_{observe}.csv",
+            backend.name()
+        ));
+        hist.write_csv(path.to_str().unwrap(), "semi-sync").unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        bytes
+    };
+    let reference = csv(1, QueueBackend::Auto, false);
+    assert!(!reference.is_empty(), "empty history CSV");
+    for workers in [2usize, 8] {
+        assert_eq!(
+            csv(workers, QueueBackend::Auto, false),
+            reference,
+            "history CSV changed at sim.workers={workers}"
+        );
+    }
+    assert_eq!(
+        csv(8, QueueBackend::Calendar, false),
+        reference,
+        "history CSV changed under the calendar backend"
+    );
+    assert_eq!(
+        csv(8, QueueBackend::Auto, true),
+        reference,
+        "history CSV changed with an observer at sim.workers=8"
+    );
+}
+
+#[test]
+fn rearm_noop_holds_at_any_sim_workers() {
+    // The fixed-knob re-arm no-op guarantee, re-run on the parallel
+    // simulation path: stepping window-by-window and re-arming the
+    // in-force knobs reproduces the single-call run bit-for-bit at
+    // sim.workers ∈ {2, 8} too.
+    require_artifacts!();
+    for workers in [2usize, 8] {
+        let mut cfg = small_cfg();
+        cfg.hfl.threshold_time = 400.0;
+        cfg.sync.mode = SyncModeCfg::SemiSync;
+        cfg.sync.cloud_interval = 120.0;
+        cfg.sim.workers = workers;
+        let m = cfg.topology.edges;
+        let g1 = vec![2usize; m];
+        let alpha = vec![cfg.sync.staleness_alpha; m];
+
+        let mut plain = AsyncHflEngine::new(cfg.clone(), false).unwrap();
+        let hist_a = plain.run_with(&g1).unwrap();
+
+        let mut stepped = AsyncHflEngine::new(cfg, false).unwrap();
+        stepped.begin_run(&g1).unwrap();
+        let mut windows = 0usize;
+        while stepped.run_window().unwrap().is_some() {
+            windows += 1;
+            stepped.set_control(&g1, &alpha).unwrap();
+        }
+        assert_eq!(
+            plain.transfer_log, stepped.transfer_log,
+            "workers={workers}: transfer timeline diverged"
+        );
+        assert_eq!(hist_a.rounds.len(), windows, "workers={workers}");
+        assert_eq!(
+            plain.eng.cloud_model(),
+            stepped.eng.cloud_model(),
+            "workers={workers}: models diverged"
+        );
+    }
 }
 
 #[test]
