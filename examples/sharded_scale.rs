@@ -12,9 +12,15 @@
 //!
 //! `cargo run --release --example sharded_scale -- \
 //!     --devices 1000000 --edges 64 --windows 3 --workers 8 \
-//!     --backend auto --csv /tmp/sharded.csv`
+//!     --backend auto --csv /tmp/sharded.csv --profile`
+//!
+//! `--profile` attaches the read-only `RunObserver` with the per-shard
+//! profiler on and prints barrier-stall percentiles, the shard
+//! imbalance and worker occupancy after the run — without changing a
+//! single output bit (the fifth determinism guarantee, tested).
 
 use anyhow::{bail, Result};
+use arena::obs::RunObserver;
 use arena::sim::{QueueBackend, ShardSpec, ShardedDeviceSim};
 
 fn main() -> Result<()> {
@@ -25,6 +31,7 @@ fn main() -> Result<()> {
         ..ShardSpec::default()
     };
     let mut csv: Option<String> = None;
+    let mut profile = false;
 
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let mut i = 0;
@@ -33,6 +40,12 @@ fn main() -> Result<()> {
             argv.get(i + 1)
                 .ok_or_else(|| anyhow::anyhow!("{} needs a value", argv[i]))
         };
+        // Valueless switches first; everything below takes a value.
+        if argv[i] == "--profile" {
+            profile = true;
+            i += 1;
+            continue;
+        }
         match argv[i].as_str() {
             "--devices" => spec.devices = need(i)?.parse()?,
             "--edges" => spec.edges = need(i)?.parse()?,
@@ -64,6 +77,14 @@ fn main() -> Result<()> {
     let t0 = std::time::Instant::now();
     let mut sim = ShardedDeviceSim::new(&spec);
     let built = t0.elapsed();
+    let obs_state = if profile {
+        let obs = RunObserver::new();
+        let state = obs.state();
+        sim.attach_observer(Box::new(obs));
+        Some(state)
+    } else {
+        None
+    };
     let t1 = std::time::Instant::now();
     sim.run();
     let ran = t1.elapsed();
@@ -99,6 +120,27 @@ fn main() -> Result<()> {
         ran.as_secs_f64(),
         evs,
     );
+
+    if let Some(state) = obs_state {
+        let st = state.lock().unwrap();
+        let r = &st.registry;
+        if let Some(h) = r.histogram("arena_shard_barrier_stall_ns") {
+            println!(
+                "profile: barrier stall p50={:.0}ns p99={:.0}ns \
+                 (n={})",
+                h.percentile(50.0),
+                h.percentile(99.0),
+                h.count(),
+            );
+        }
+        println!(
+            "profile: imbalance={:.3} (max/mean events), \
+             occupancy={:.3} @ {} workers",
+            r.gauge("arena_shard_imbalance").unwrap_or(1.0),
+            r.gauge("arena_pool_occupancy").unwrap_or(0.0),
+            r.gauge("arena_pool_workers").unwrap_or(0.0),
+        );
+    }
 
     if let Some(path) = csv {
         sim.write_csv(&path)?;

@@ -16,7 +16,7 @@
 use std::collections::BTreeMap;
 
 use arena::hfl::membership::plan_recluster;
-use arena::obs::Histogram;
+use arena::obs::{Histogram, RunObserver};
 use arena::sim::{
     Event, EventQueue, QueueBackend, Region, ShardSpec, ShardedDeviceSim,
 };
@@ -240,6 +240,100 @@ fn main() {
         }
     }
 
+    // Profiler overhead on the sharded engine: the same spec run bare
+    // (profiler off, no observer) vs fully profiled (RunObserver
+    // attached, per-shard profiler recording on the hot path and the
+    // registry folding at every barrier). `profiler_overhead/{w}`
+    // stores the profiled/bare wall ratio — dimensionless, target
+    // <1.05 — in mean_ns; `barrier_stall_ns/{w}` reports the profiled
+    // run's stall distribution (arrival spread at the window barrier)
+    // and `shard_imbalance_x1000/{w}` the final max/mean events gauge.
+    {
+        let fast = std::env::var("ARENA_BENCH_FAST").is_ok();
+        let devices = if fast { 1 << 16 } else { 1_048_576 };
+        for &w in &[1usize, 8] {
+            let spec = ShardSpec {
+                devices,
+                edges: 64,
+                windows: 2,
+                workers: w,
+                ..ShardSpec::default()
+            };
+            let mut bare = ShardedDeviceSim::new(&spec);
+            bare.set_profiler(false);
+            let t0 = std::time::Instant::now();
+            bare.run();
+            let bare_ns = (t0.elapsed().as_nanos() as f64).max(1.0);
+            let events = bare.stats().events.max(1);
+
+            let obs = RunObserver::new();
+            let state = obs.state();
+            let mut prof = ShardedDeviceSim::new(&spec);
+            prof.attach_observer(Box::new(obs));
+            let t0 = std::time::Instant::now();
+            prof.run();
+            let prof_ns = (t0.elapsed().as_nanos() as f64).max(1.0);
+            assert_eq!(
+                bare.csv_string(),
+                prof.csv_string(),
+                "profiler must be bitwise invisible (workers={w})"
+            );
+
+            let r = BenchResult {
+                name: format!("event_queue/sharded_sim/profiled/{w}"),
+                iters: events,
+                mean_ns: prof_ns / events as f64,
+                p50_ns: prof_ns / events as f64,
+                p99_ns: prof_ns / events as f64,
+            };
+            r.report();
+            results.push(r);
+            let ov = BenchResult {
+                name: format!(
+                    "event_queue/sharded_sim/profiler_overhead/{w}"
+                ),
+                iters: 1,
+                mean_ns: prof_ns / bare_ns,
+                p50_ns: prof_ns / bare_ns,
+                p99_ns: prof_ns / bare_ns,
+            };
+            ov.report();
+            results.push(ov);
+
+            let st = state.lock().unwrap();
+            if let Some(h) =
+                st.registry.histogram("arena_shard_barrier_stall_ns")
+            {
+                let s = BenchResult {
+                    name: format!(
+                        "event_queue/sharded_sim/barrier_stall_ns/{w}"
+                    ),
+                    iters: h.count(),
+                    mean_ns: h.mean(),
+                    p50_ns: h.percentile(50.0),
+                    p99_ns: h.percentile(99.0),
+                };
+                s.report();
+                results.push(s);
+            }
+            let imb = st
+                .registry
+                .gauge("arena_shard_imbalance")
+                .unwrap_or(1.0);
+            let ib = BenchResult {
+                name: format!(
+                    "event_queue/sharded_sim/shard_imbalance_x1000/{w}"
+                ),
+                iters: 1,
+                mean_ns: imb * 1000.0,
+                p50_ns: imb * 1000.0,
+                p99_ns: imb * 1000.0,
+            };
+            ib.report();
+            results.push(ib);
+        }
+    }
+
     // Observer overhead on the drain hot path — the exact engine
     // pattern. `drain_bare` is the observer-detached loop (no clock
     // reads at all); `drain_observed` pays the full instrumentation
@@ -378,7 +472,15 @@ fn write_json(results: &[BenchResult]) -> std::io::Result<()> {
              re-push hot path per queue backend; sharded_sim/workers/W \
              is per-event ns of the sharded 1M+-device engine (65k \
              under ARENA_BENCH_FAST) and threads_speedup/W stores the \
-             run(1)/run(W) wall ratio — dimensionless — in mean_ns"
+             run(1)/run(W) wall ratio — dimensionless — in mean_ns; \
+             sharded_sim/profiled/W is the same engine with the \
+             per-shard profiler + RunObserver attached, \
+             profiler_overhead/W stores the profiled/bare wall ratio \
+             (dimensionless, <1.05 target) in mean_ns, \
+             barrier_stall_ns/W carries the profiled run's \
+             barrier-arrival spread percentiles and \
+             shard_imbalance_x1000/W the final max/mean-events gauge \
+             scaled by 1000"
                 .into(),
         ),
     );

@@ -68,15 +68,24 @@ SCALE:   --set sim.workers=W runs the simulation layers (per-device
          device path is exercised by examples/sharded_scale.rs.
 
 OBSERVE: run --serve 127.0.0.1:9898 attaches a read-only observer and
-         serves /healthz, /metrics (Prometheus text) and /stream (one
-         NDJSON frame per closed cloud round) while the run progresses;
-         the server stays up after the run until ctrl-c. --trace-out
-         PATH writes a chrome://tracing timeline (training bursts,
-         in-flight transfers, cloud windows; one track per edge) at the
-         end. Observation never perturbs the run: an instrumented run
-         is bitwise identical to an uninstrumented one. Without the
-         compiled artifacts, --serve falls back to a sim-only demo feed
-         so the endpoints can still be scraped (CI does exactly that).
+         serves GET / (a self-contained live dashboard: round progress,
+         per-edge staleness bars, shard-imbalance and barrier-stall
+         sparklines — plain HTML+JS, no external assets), /healthz,
+         /metrics (Prometheus text, incl. the arena_shard_* /
+         arena_pool_* parallel-runtime series), /stream (NDJSON: one
+         \"round\" frame per closed cloud round plus one \"shard_window\"
+         frame per sharded barrier) and /trace (the current
+         chrome://tracing JSON) while the run progresses; the server
+         stays up after the run until ctrl-c. --trace-out PATH writes
+         the same timeline to a file (one track per edge, plus shard/N
+         and worker/N tracks when the sharded runtime is profiled).
+         Observation never perturbs the run: profiler-on is bitwise
+         identical to profiler-off at any worker count (turn the
+         per-shard profiler off with --set sim.profiler=false).
+         Without the compiled artifacts, --serve falls back to a
+         sim-only demo feed — a profiled sharded run, a sharded-store
+         walkthrough, then synthetic rounds — so every endpoint serves
+         genuine data (CI does exactly that).
 ";
 
 pub struct Args {
@@ -230,7 +239,7 @@ fn cmd_run(args: &Args) -> Result<()> {
             "artifacts missing (run `make artifacts` for a real run): \
              serving a sim-only telemetry demo instead"
         );
-        run_telemetry_demo(observer.take().unwrap(), 6);
+        run_telemetry_demo(observer.take().unwrap(), 6, &cfg);
         return finish_observation(obs_state, trace_out, server);
     }
     let hist = match scheme {
@@ -358,6 +367,7 @@ fn finish_observation(
         // Cover runs whose last rounds closed after the final sink
         // publish (or that never had a sink-publishing round at all).
         srv.sink().set_metrics(st.registry.render_prometheus());
+        srv.sink().set_trace(st.trace.to_chrome_json());
         drop(st);
         println!("run complete; telemetry stays up (ctrl-c to exit)");
         loop {
@@ -367,15 +377,62 @@ fn finish_observation(
     Ok(())
 }
 
-/// Sim-only telemetry feed for hosts without compiled artifacts: drain a
-/// seeded event schedule through the real observer/exporter stack so
-/// `--serve` answers with genuine exposition text and round frames. Every
-/// value is a pure function of the loop indices — no RNG, no wall-clock
-/// in the data (wall-clock is read only for the handler-cost histograms,
-/// exactly as in a real observed run).
-fn run_telemetry_demo(mut obs: RunObserver, rounds: usize) {
-    use crate::hfl::RoundAccumulator;
-    use crate::sim::{Event, EventQueue};
+/// Sim-only telemetry feed for hosts without compiled artifacts: a real
+/// profiled sharded run, a sharded-store walkthrough, then a seeded event
+/// schedule — all through the real observer/exporter stack, so `--serve`
+/// answers with genuine exposition text, shard_window frames, a live
+/// trace and round frames. The synthetic rounds run last so the stream's
+/// replay latch holds a "round" frame for late subscribers (CI). The
+/// sharded phase is seed-deterministic; the synthetic rounds are a pure
+/// function of the loop indices — no wall-clock in the data (wall-clock
+/// feeds only the handler-cost and profiler histograms, exactly as in a
+/// real observed run).
+fn run_telemetry_demo(
+    obs: RunObserver,
+    rounds: usize,
+    cfg: &ExperimentConfig,
+) {
+    use crate::hfl::{RoundAccumulator, ShardedModelStore};
+    use crate::sim::{Event, EventQueue, ShardSpec, ShardedDeviceSim};
+
+    // Phase 1 — the parallel runtime, for real: a small churny sharded
+    // sim under the configured worker count/backend, profiler feeding
+    // arena_shard_*/arena_pool_* series and shard/worker trace tracks.
+    let spec = ShardSpec {
+        devices: 96,
+        edges: 8,
+        shards: 8,
+        p: 16,
+        windows: 4,
+        workers: cfg.sim.workers,
+        backend: cfg.sim.queue_backend,
+        ..Default::default()
+    };
+    let mut sim = ShardedDeviceSim::new(&spec);
+    sim.set_profiler(cfg.sim.profiler);
+    sim.attach_observer(Box::new(obs));
+    sim.run();
+    let mut obs = sim.detach_observer().expect("observer was attached");
+
+    // Phase 2 — sharded-store observables: replicate a cloud model to
+    // every shard, adopt one trained result across a shard boundary,
+    // and snapshot the traffic/sharing gauges.
+    let mut store = ShardedModelStore::new(16, 4);
+    let cloud = store.insert(0, vec![1.0; 16], 1);
+    let replicas = store.replicate_at_barrier(&cloud);
+    let mut dev = store.insert(3, vec![0.0; 16], 0);
+    let head = store.share(&replicas[3]);
+    let trained = store.insert(1, vec![2.0; 16], 2);
+    store.adopt_across(&mut dev, trained);
+    obs.on_sharded_store(&store.stats());
+    store.release(head);
+    store.release(dev);
+    for r in replicas {
+        store.release(r);
+    }
+    store.release(cloud);
+
+    // Phase 3 — synthetic cloud rounds (as before).
     let m = 4; // edges
     let per_edge = 3; // devices per edge
     let interval = 60.0; // cloud window, sim seconds

@@ -262,6 +262,13 @@ pub struct SimConfig {
     /// invisible — backends share one total event order — and likewise
     /// excluded from the run-identity digest.
     pub queue_backend: crate::sim::event::QueueBackend,
+    /// Per-shard profiler for the parallel runtime: with an observer
+    /// attached, shards record event counts, queue depths, wall times
+    /// and barrier stalls into `Observer::on_shard_barrier` (and the
+    /// engines time their simulation batches). Profiler-on is bitwise
+    /// identical to profiler-off — the fifth determinism guarantee —
+    /// so this too is excluded from the run-identity digest.
+    pub profiler: bool,
 }
 
 #[derive(Clone, Debug)]
@@ -338,6 +345,7 @@ impl ExperimentConfig {
                 join_prob: 1.0,
                 workers: 1,
                 queue_backend: crate::sim::event::QueueBackend::Auto,
+                profiler: true,
             },
             sync: SyncConfig::default(),
             link: LinkConfig::default(),
@@ -446,6 +454,11 @@ impl ExperimentConfig {
             "sim.queue_backend" => {
                 self.sim.queue_backend =
                     crate::sim::event::QueueBackend::parse(value)?
+            }
+            "sim.profiler" => {
+                self.sim.profiler = value.parse().map_err(|_| {
+                    anyhow::anyhow!("sim.profiler must be true|false")
+                })?
             }
             "sync.mode" => self.sync.mode = SyncModeCfg::parse(value)?,
             "sync.quorum" => self.sync.quorum = parse_u()?,
@@ -812,9 +825,13 @@ mod tests {
         assert_eq!(c.sim.queue_backend, QueueBackend::Calendar);
         c.apply_override("sim.queue_backend", "heap").unwrap();
         assert_eq!(c.sim.queue_backend, QueueBackend::Binary);
+        assert!(c.sim.profiler, "profiler defaults on");
+        c.apply_override("sim.profiler", "false").unwrap();
+        assert!(!c.sim.profiler);
         c.validate().unwrap();
         assert!(c.apply_override("sim.queue_backend", "bogus").is_err());
         assert!(c.apply_override("sim.workers", "-1").is_err());
+        assert!(c.apply_override("sim.profiler", "maybe").is_err());
         // Execution details must stay out of the run-identity digest.
         let base = ExperimentConfig::mnist().to_json().to_string();
         assert_eq!(c.to_json().to_string(), base);

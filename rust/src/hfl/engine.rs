@@ -463,7 +463,34 @@ impl HflEngine {
     /// `sim.workers` — because every `CpuModel` draws from its own RNG
     /// stream, so per-device draw sequences are independent of
     /// scheduling. Devices must be distinct within one batch.
+    ///
+    /// With an observer attached and `sim.profiler` on, the batch's
+    /// wall time lands in `Observer::on_sim_batch` — the wall-clock
+    /// read is gated exactly like every other profiler read, so
+    /// profiler-on stays bitwise identical to profiler-off.
     pub(crate) fn simulate_train_batch(
+        &mut self,
+        reqs: &[(usize, usize)],
+    ) -> Vec<(f64, f64)> {
+        let t0 = if self.obs.is_some() && self.cfg.sim.profiler {
+            Some(std::time::Instant::now())
+        } else {
+            None
+        };
+        let out = self.simulate_train_batch_inner(reqs);
+        if let Some(t0) = t0 {
+            if !reqs.is_empty() {
+                let workers = self.sim_workers();
+                let wall = t0.elapsed().as_nanos() as u64;
+                if let Some(obs) = self.obs.as_mut() {
+                    obs.on_sim_batch(reqs.len(), workers, wall);
+                }
+            }
+        }
+        out
+    }
+
+    fn simulate_train_batch_inner(
         &mut self,
         reqs: &[(usize, usize)],
     ) -> Vec<(f64, f64)> {

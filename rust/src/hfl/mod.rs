@@ -74,6 +74,7 @@ pub use engine::HflEngine;
 pub use membership::{MembershipTracker, ReclusterOutcome};
 pub use metrics::{EdgeStats, RoundAccumulator, RoundStats, RunHistory};
 pub use model_store::{
-    ModelRef, ModelStore, ShardedModelRef, ShardedModelStore,
+    ModelRef, ModelStore, ShardSlabStats, ShardedModelRef,
+    ShardedModelStore, ShardedStoreStats,
 };
 pub use topology::{build_topology, Edge, Topology};

@@ -375,6 +375,12 @@ impl ShardedModelRef {
 /// O(shards) copies instead of O(devices)).
 pub struct ShardedModelStore {
     shards: Vec<ModelStore>,
+    // Cumulative cross-shard traffic (deterministic: pure function of
+    // the call sequence). Surfaced via `stats()` for the observer.
+    adopt_across: u64,
+    adopt_bytes: u64,
+    replicate: u64,
+    replicate_bytes: u64,
 }
 
 impl ShardedModelStore {
@@ -382,17 +388,28 @@ impl ShardedModelStore {
         assert!(n_shards > 0, "need at least one shard");
         ShardedModelStore {
             shards: (0..n_shards).map(|_| ModelStore::new(p)).collect(),
+            adopt_across: 0,
+            adopt_bytes: 0,
+            replicate: 0,
+            replicate_bytes: 0,
         }
     }
 
-    /// Rewrap per-shard slabs recovered from a worker pool.
+    /// Rewrap per-shard slabs recovered from a worker pool. Traffic
+    /// counters restart at zero (the slabs carry no traffic history).
     pub fn from_shards(shards: Vec<ModelStore>) -> Self {
         assert!(!shards.is_empty());
         assert!(
             shards.windows(2).all(|w| w[0].p() == w[1].p()),
             "shard slabs disagree on p"
         );
-        ShardedModelStore { shards }
+        ShardedModelStore {
+            shards,
+            adopt_across: 0,
+            adopt_bytes: 0,
+            replicate: 0,
+            replicate_bytes: 0,
+        }
     }
 
     /// Split into owned per-shard slabs (to move into a `ShardPool`).
@@ -484,6 +501,8 @@ impl ShardedModelStore {
         }
         let v = src.version();
         let w = self.shards[src.shard].slice(&src.r).to_vec();
+        self.adopt_across += 1;
+        self.adopt_bytes += (w.len() * std::mem::size_of::<f32>()) as u64;
         self.shards[src.shard].release(src.r);
         let fresh = self.shards[dst.shard].insert(w, v);
         self.shards[dst.shard].adopt(&mut dst.r, fresh);
@@ -499,6 +518,10 @@ impl ShardedModelStore {
     ) -> Vec<ShardedModelRef> {
         let w = self.shards[src.shard].slice(&src.r).to_vec();
         let v = src.version();
+        let copies = (self.shards.len() - 1) as u64;
+        self.replicate += copies;
+        self.replicate_bytes +=
+            copies * (w.len() * std::mem::size_of::<f32>()) as u64;
         (0..self.shards.len())
             .map(|s| {
                 if s == src.shard {
@@ -534,6 +557,77 @@ impl ShardedModelStore {
     pub fn assert_consistent(&self) {
         for s in &self.shards {
             s.assert_consistent();
+        }
+    }
+
+    /// Deterministic observables snapshot: per-shard slab occupancy,
+    /// totals, and the cumulative cross-shard traffic counters — what
+    /// `Observer::on_sharded_store` folds into the registry and the
+    /// `/stream` frames.
+    pub fn stats(&self) -> ShardedStoreStats {
+        let per_shard: Vec<ShardSlabStats> = self
+            .shards
+            .iter()
+            .map(|s| ShardSlabStats {
+                live_buffers: s.live_buffers(),
+                peak_model_bytes: s.peak_model_bytes(),
+                total_refs: s.total_refs(),
+            })
+            .collect();
+        ShardedStoreStats {
+            live_buffers: per_shard.iter().map(|s| s.live_buffers).sum(),
+            peak_model_bytes: per_shard
+                .iter()
+                .map(|s| s.peak_model_bytes)
+                .sum(),
+            total_refs: per_shard.iter().map(|s| s.total_refs).sum(),
+            adopt_across: self.adopt_across,
+            adopt_bytes: self.adopt_bytes,
+            replicate: self.replicate,
+            replicate_bytes: self.replicate_bytes,
+            per_shard,
+        }
+    }
+}
+
+/// One shard slab's occupancy inside a [`ShardedStoreStats`] snapshot.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ShardSlabStats {
+    pub live_buffers: usize,
+    pub peak_model_bytes: usize,
+    pub total_refs: usize,
+}
+
+/// Snapshot of a [`ShardedModelStore`]'s observables (see
+/// [`ShardedModelStore::stats`]). All fields are deterministic — pure
+/// functions of the store's call sequence, never of worker timing.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ShardedStoreStats {
+    /// Per-shard slab occupancy, in shard order.
+    pub per_shard: Vec<ShardSlabStats>,
+    pub live_buffers: usize,
+    pub peak_model_bytes: usize,
+    pub total_refs: usize,
+    /// Cross-shard adoptions since construction (same-shard adopts are
+    /// O(1) re-points and not counted).
+    pub adopt_across: u64,
+    /// Bytes copied across shard boundaries by those adoptions.
+    pub adopt_bytes: u64,
+    /// Copies made by `replicate_at_barrier` (the source shard's O(1)
+    /// share is not counted).
+    pub replicate: u64,
+    pub replicate_bytes: u64,
+}
+
+impl ShardedStoreStats {
+    /// Fraction of outstanding handles that share a buffer with another
+    /// handle (0 when no handles exist).
+    pub fn sharing_ratio(&self) -> f64 {
+        if self.total_refs == 0 {
+            0.0
+        } else {
+            (self.total_refs - self.live_buffers) as f64
+                / self.total_refs as f64
         }
     }
 }
@@ -1033,6 +1127,42 @@ mod tests {
         }
         st.release(cloud);
         assert_eq!(st.live_buffers(), 0);
+        st.assert_consistent();
+    }
+
+    #[test]
+    fn traffic_counters_track_cross_shard_bytes() {
+        let (s_n, p) = (3usize, 4usize);
+        let mut st = ShardedModelStore::new(p, s_n);
+        assert_eq!(st.stats(), ShardedStoreStats::default());
+        let cloud = st.insert(0, vec![1.0; p], 1);
+        let heads = st.replicate_at_barrier(&cloud);
+        let mut dev = st.insert(1, vec![0.0; p], 0);
+        let payload = st.insert(2, vec![9.0; p], 7);
+        st.adopt_across(&mut dev, payload);
+        // Same-shard adoption is O(1) and must not count as traffic.
+        let local = st.insert(1, vec![3.0; p], 8);
+        st.adopt_across(&mut dev, local);
+        let s = st.stats();
+        assert_eq!(s.per_shard.len(), s_n);
+        assert_eq!(s.adopt_across, 1);
+        assert_eq!(s.adopt_bytes, (p * 4) as u64);
+        assert_eq!(s.replicate, (s_n - 1) as u64);
+        assert_eq!(s.replicate_bytes, ((s_n - 1) * p * 4) as u64);
+        assert_eq!(
+            s.live_buffers,
+            st.live_buffers(),
+            "snapshot totals must match the ambient observables"
+        );
+        assert_eq!(s.total_refs, st.total_refs());
+        // cloud + its source-shard share are the only shared handles.
+        let shared = (s.total_refs - s.live_buffers) as f64;
+        assert_eq!(s.sharing_ratio(), shared / s.total_refs as f64);
+        st.release(dev);
+        for h in heads {
+            st.release(h);
+        }
+        st.release(cloud);
         st.assert_consistent();
     }
 

@@ -27,33 +27,81 @@
 //! Together these extend the engine's determinism guarantee family
 //! (sync-equivalence, zero-churn no-op, re-arm no-op) with a fourth:
 //! **observer-on == observer-off, bitwise** — asserted by the
-//! `observer_attach_is_bitwise_noop` integration test.
+//! `observer_attach_is_bitwise_noop` integration test — and, since the
+//! [`profiler`] landed, a fifth: **profiler-on == profiler-off** on the
+//! sharded parallel runtime (`tests/obs_profiler.rs`).
+//!
+//! ## Parallel-runtime shard metrics
+//!
+//! With an observer attached to a `ShardedDeviceSim` (and
+//! `sim.profiler` on, the default), every window barrier folds the
+//! per-shard [`ShardWindowProfile`]s into the registry **in fixed shard
+//! order** — the exposition's metric-name set and every sim-derived
+//! value are identical at any `sim.workers`; wall-clock values flow
+//! only into observer records. The catalog:
+//!
+//! - counters (sim-derived): `arena_shard_windows_total`,
+//!   `arena_shard_events_total`, `arena_shard_voided_total`,
+//!   `arena_shard_aggregates_total`, `arena_shard_flips_total`,
+//!   `arena_shard_adopt_across_total`, `arena_shard_replicate_total`
+//! - gauges (sim-derived): `arena_shard_count`,
+//!   `arena_shard_live_devices`, `arena_shard_queue_depth_peak`,
+//!   `arena_shard_imbalance` (max/mean per-shard events),
+//!   `arena_sharded_store_live_buffers` / `_peak_bytes` /
+//!   `_sharing_ratio` (+ `_total_refs`, `_adopt_across`, `_adopt_bytes`,
+//!   `_replicate`, `_replicate_bytes` from
+//!   [`Observer::on_sharded_store`])
+//! - histograms (sim-derived): `arena_shard_events_per_window`,
+//!   `arena_shard_queue_depth`
+//! - wall-clock (observer records only): `arena_shard_advance_wall_ns`,
+//!   `arena_shard_barrier_stall_ns`, `arena_pool_window_wall_ns`,
+//!   `arena_pool_worker_busy_ns`, `arena_pool_sim_batch_wall_ns`
+//!   histograms; `arena_pool_workers` / `arena_pool_occupancy` gauges;
+//!   `arena_pool_sim_batches_total` / `arena_pool_sim_batch_items_total`
+//!   counters
+//!
+//! Each barrier also emits one `"type":"shard_window"` NDJSON frame
+//! (see [`shard_window_frame`]) and per-shard / per-worker trace spans
+//! on the [`trace::shard_track`] / [`trace::worker_track`] tracks.
 //!
 //! ## Endpoints (`arena run --serve <addr>`)
 //!
 //! ```text
-//! curl http://127.0.0.1:9898/healthz   # -> ok
-//! curl http://127.0.0.1:9898/metrics   # Prometheus text exposition
-//! curl -sN http://127.0.0.1:9898/stream | head -n1   # one NDJSON frame
+//! curl http://127.0.0.1:9898/            # live dashboard (HTML+JS)
+//! curl http://127.0.0.1:9898/healthz     # -> ok
+//! curl http://127.0.0.1:9898/metrics     # Prometheus text exposition
+//! curl -sN http://127.0.0.1:9898/stream | head -n1  # one NDJSON frame
+//! curl http://127.0.0.1:9898/trace > trace.json  # current Chrome trace
 //! ```
 //!
 //! `/stream` frames are one JSON object per line with a
 //! `"schema_version"` field (see `hfl::metrics::SCHEMA_VERSION`); new
 //! subscribers receive the most recent frame first, then live frames as
-//! cloud rounds close. `--trace-out <path>` additionally writes the
-//! Chrome-trace timeline at the end of the run.
+//! cloud rounds close (and, on the sharded runtime, as window barriers
+//! close). `GET /` serves a self-contained dashboard (embedded HTML+JS,
+//! no external assets) that consumes `/stream` + `/metrics` and renders
+//! round progress, per-edge staleness, shard imbalance and
+//! barrier-stall sparklines live. `/trace` serves the current
+//! Chrome-trace JSON; `--trace-out <path>` additionally writes the
+//! final timeline to a file at the end of the run.
 
 pub mod metrics;
+pub mod profiler;
 pub mod server;
 pub mod trace;
 
 pub use metrics::{Histogram, Registry};
+pub use profiler::{
+    shard_imbalance, PoolWindowProfile, ShardProfiler, ShardWindowProfile,
+};
 pub use server::{TelemetryServer, TelemetrySink};
 pub use trace::{Span, TraceBuffer};
 
 use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::hfl::metrics::RoundStats;
+use crate::hfl::model_store::ShardedStoreStats;
+use crate::sim::shard::WindowRow;
 use crate::util::json::Json;
 
 /// Read-only run instrumentation. Every hook defaults to a no-op so the
@@ -103,6 +151,26 @@ pub trait Observer: Send {
         _sharing_ratio: f64,
     ) {
     }
+
+    /// A sharded-runtime window barrier closed: the merged `row` plus
+    /// the per-shard profiles (**fixed shard order**, whatever order
+    /// worker threads finished in) and the pool-side occupancy view.
+    fn on_shard_barrier(
+        &mut self,
+        _row: &WindowRow,
+        _shards: &[ShardWindowProfile],
+        _pool: &PoolWindowProfile,
+    ) {
+    }
+
+    /// One parallel per-device simulation batch completed on the
+    /// engines' shared `ShardPool` (`items` requests over `workers`).
+    fn on_sim_batch(&mut self, _items: usize, _workers: usize, _wall_ns: u64) {
+    }
+
+    /// Sharded model-store observables snapshot (per-shard slab
+    /// occupancy + cumulative cross-shard traffic).
+    fn on_sharded_store(&mut self, _stats: &ShardedStoreStats) {}
 }
 
 /// The do-nothing observer (useful as an overhead baseline in benches).
@@ -270,11 +338,182 @@ impl Observer for RunObserver {
         st.registry
             .set_gauge("arena_store_sharing_ratio", sharing_ratio);
     }
+
+    fn on_shard_barrier(
+        &mut self,
+        row: &WindowRow,
+        shards: &[ShardWindowProfile],
+        pool: &PoolWindowProfile,
+    ) {
+        let imbalance = shard_imbalance(shards);
+        {
+            let mut st = self.state.lock().unwrap();
+            st.registry.inc("arena_shard_windows_total");
+            let mut events = 0u64;
+            let mut voided = 0u64;
+            let mut aggregates = 0u64;
+            let mut flips = 0u64;
+            let mut adopt = 0u64;
+            let mut replicate = 0u64;
+            let mut live = 0usize;
+            let mut depth_peak = 0usize;
+            let mut store_live = 0usize;
+            let mut store_peak = 0usize;
+            let mut shared = 0usize;
+            let mut handles = 0usize;
+            for p in shards {
+                events += p.events;
+                voided += p.voided;
+                aggregates += p.aggregates;
+                flips += p.flips;
+                adopt += p.adopt_across;
+                replicate += p.replicate;
+                live += p.live_devices;
+                depth_peak = depth_peak.max(p.queue_depth_peak);
+                store_live += p.store_live_buffers;
+                store_peak += p.store_peak_bytes;
+                shared += p.store_shared_handles;
+                handles += p.store_handles;
+                st.registry.observe(
+                    "arena_shard_events_per_window",
+                    p.events as f64,
+                );
+                st.registry.observe(
+                    "arena_shard_queue_depth",
+                    p.queue_depth_peak as f64,
+                );
+                st.registry.observe(
+                    "arena_shard_advance_wall_ns",
+                    p.advance_wall_ns as f64,
+                );
+                st.registry.observe(
+                    "arena_shard_barrier_stall_ns",
+                    p.barrier_stall_ns as f64,
+                );
+            }
+            st.registry.inc_by("arena_shard_events_total", events);
+            st.registry.inc_by("arena_shard_voided_total", voided);
+            st.registry
+                .inc_by("arena_shard_aggregates_total", aggregates);
+            st.registry.inc_by("arena_shard_flips_total", flips);
+            st.registry.inc_by("arena_shard_adopt_across_total", adopt);
+            st.registry
+                .inc_by("arena_shard_replicate_total", replicate);
+            st.registry
+                .set_gauge("arena_shard_count", shards.len() as f64);
+            st.registry
+                .set_gauge("arena_shard_live_devices", live as f64);
+            st.registry.set_gauge(
+                "arena_shard_queue_depth_peak",
+                depth_peak as f64,
+            );
+            st.registry.set_gauge("arena_shard_imbalance", imbalance);
+            st.registry.set_gauge(
+                "arena_sharded_store_live_buffers",
+                store_live as f64,
+            );
+            st.registry.set_gauge(
+                "arena_sharded_store_peak_bytes",
+                store_peak as f64,
+            );
+            let ratio = if handles == 0 {
+                0.0
+            } else {
+                shared as f64 / handles as f64
+            };
+            st.registry
+                .set_gauge("arena_sharded_store_sharing_ratio", ratio);
+            st.registry
+                .set_gauge("arena_pool_workers", pool.workers as f64);
+            st.registry
+                .set_gauge("arena_pool_occupancy", pool.occupancy());
+            st.registry.observe(
+                "arena_pool_window_wall_ns",
+                pool.window_wall_ns as f64,
+            );
+            for &busy in &pool.worker_busy_ns {
+                st.registry
+                    .observe("arena_pool_worker_busy_ns", busy as f64);
+            }
+            for p in shards {
+                st.trace.push(Span {
+                    track: trace::shard_track(p.shard),
+                    name: format!("w{} {}ev", row.window, p.events),
+                    t0_sim: pool.t0_sim,
+                    t1_sim: row.sim_time,
+                    wall_ns: p.advance_wall_ns,
+                });
+            }
+            for (wk, &busy) in pool.worker_busy_ns.iter().enumerate() {
+                st.trace.push(Span {
+                    track: trace::worker_track(wk),
+                    name: format!("window {}", row.window),
+                    t0_sim: pool.t0_sim,
+                    t1_sim: row.sim_time,
+                    wall_ns: busy,
+                });
+            }
+        }
+        if let Some(sink) = &self.sink {
+            sink.push_frame(&shard_window_frame(row, shards, pool));
+            let st = self.state.lock().unwrap();
+            sink.set_metrics(st.registry.render_prometheus());
+            sink.set_trace(st.trace.to_chrome_json());
+        }
+    }
+
+    fn on_sim_batch(&mut self, items: usize, workers: usize, wall_ns: u64) {
+        let mut st = self.state.lock().unwrap();
+        st.registry.inc("arena_pool_sim_batches_total");
+        st.registry
+            .inc_by("arena_pool_sim_batch_items_total", items as u64);
+        st.registry
+            .set_gauge("arena_pool_workers", workers as f64);
+        st.registry
+            .observe("arena_pool_sim_batch_wall_ns", wall_ns as f64);
+    }
+
+    fn on_sharded_store(&mut self, stats: &ShardedStoreStats) {
+        let mut st = self.state.lock().unwrap();
+        st.registry.set_gauge(
+            "arena_sharded_store_live_buffers",
+            stats.live_buffers as f64,
+        );
+        st.registry.set_gauge(
+            "arena_sharded_store_peak_bytes",
+            stats.peak_model_bytes as f64,
+        );
+        st.registry.set_gauge(
+            "arena_sharded_store_total_refs",
+            stats.total_refs as f64,
+        );
+        st.registry.set_gauge(
+            "arena_sharded_store_sharing_ratio",
+            stats.sharing_ratio(),
+        );
+        st.registry.set_gauge(
+            "arena_sharded_store_adopt_across",
+            stats.adopt_across as f64,
+        );
+        st.registry.set_gauge(
+            "arena_sharded_store_adopt_bytes",
+            stats.adopt_bytes as f64,
+        );
+        st.registry.set_gauge(
+            "arena_sharded_store_replicate",
+            stats.replicate as f64,
+        );
+        st.registry.set_gauge(
+            "arena_sharded_store_replicate_bytes",
+            stats.replicate_bytes as f64,
+        );
+    }
 }
 
 /// One `/stream` NDJSON frame for a closed round: the round's JSON
-/// (which carries `schema_version`) plus a frame `type` tag and the
-/// per-edge link utilizations.
+/// (which carries `schema_version`) plus a frame `type` tag, the
+/// per-edge link utilizations and per-edge staleness (in cloud
+/// windows) — the dashboard's staleness bars read the latter.
 pub fn round_frame(stats: &RoundStats) -> String {
     let mut j = stats.to_json();
     if let Json::Obj(m) = &mut j {
@@ -289,10 +528,54 @@ pub fn round_frame(stats: &RoundStats) -> String {
             .iter()
             .map(|e| e.link_util(stats.round_time).1)
             .collect();
+        let stale: Vec<f64> =
+            stats.per_edge.iter().map(|e| e.staleness).collect();
         m.insert("link_util_up".to_string(), Json::arr_f64(&up));
         m.insert("link_util_down".to_string(), Json::arr_f64(&down));
+        m.insert("staleness".to_string(), Json::arr_f64(&stale));
     }
     j.to_string()
+}
+
+/// One `/stream` NDJSON frame for a sharded-runtime window barrier:
+/// merged-row scalars plus per-shard arrays in **fixed shard order**.
+/// The `*_ns` arrays and `occupancy`/`workers` are wall-clock observer
+/// records (execution detail); everything else is sim-derived and
+/// worker-count invariant.
+pub fn shard_window_frame(
+    row: &WindowRow,
+    shards: &[ShardWindowProfile],
+    pool: &PoolWindowProfile,
+) -> String {
+    let events: Vec<f64> =
+        shards.iter().map(|p| p.events as f64).collect();
+    let depth: Vec<f64> =
+        shards.iter().map(|p| p.queue_depth_peak as f64).collect();
+    let live: Vec<f64> =
+        shards.iter().map(|p| p.live_devices as f64).collect();
+    let stall: Vec<f64> =
+        shards.iter().map(|p| p.barrier_stall_ns as f64).collect();
+    let wall: Vec<f64> =
+        shards.iter().map(|p| p.advance_wall_ns as f64).collect();
+    Json::obj(vec![
+        ("type", Json::str("shard_window")),
+        (
+            "schema_version",
+            Json::num(crate::hfl::metrics::SCHEMA_VERSION as f64),
+        ),
+        ("window", Json::num(row.window as f64)),
+        ("sim_time", Json::num(row.sim_time)),
+        ("events", Json::arr_f64(&events)),
+        ("queue_depth_peak", Json::arr_f64(&depth)),
+        ("live", Json::arr_f64(&live)),
+        ("barrier_stall_ns", Json::arr_f64(&stall)),
+        ("advance_wall_ns", Json::arr_f64(&wall)),
+        ("imbalance", Json::num(shard_imbalance(shards))),
+        ("occupancy", Json::num(pool.occupancy())),
+        ("workers", Json::num(pool.workers as f64)),
+        ("n_shards", Json::num(pool.n_shards as f64)),
+    ])
+    .to_string()
 }
 
 /// Process-wide registry for harness phase timings (`exp::harness`
@@ -390,6 +673,140 @@ mod tests {
         let up = j.get("link_util_up").unwrap().as_arr().unwrap();
         assert_eq!(up[0].as_f64().unwrap(), 0.2);
         assert!(!f.contains('\n'), "frames must be single-line NDJSON");
+    }
+
+    fn profile(shard: usize, events: u64) -> ShardWindowProfile {
+        ShardWindowProfile {
+            shard,
+            events,
+            live_devices: 10,
+            queue_depth_peak: 4 + shard,
+            store_live_buffers: 3,
+            store_peak_bytes: 256,
+            store_shared_handles: 2,
+            store_handles: 4,
+            advance_wall_ns: 1000,
+            done_at_ns: 2000,
+            barrier_stall_ns: 500,
+            ..Default::default()
+        }
+    }
+
+    fn pool_profile() -> PoolWindowProfile {
+        PoolWindowProfile {
+            window: 1,
+            t0_sim: 60.0,
+            t1_sim: 120.0,
+            workers: 2,
+            n_shards: 2,
+            window_wall_ns: 4000,
+            worker_busy_ns: vec![1000, 1000],
+        }
+    }
+
+    fn row() -> WindowRow {
+        WindowRow {
+            window: 1,
+            sim_time: 120.0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn shard_barrier_folds_profiles_in_fixed_order() {
+        let mut o = RunObserver::new();
+        let shards = vec![profile(0, 6), profile(1, 2)];
+        o.on_shard_barrier(&row(), &shards, &pool_profile());
+        let st = o.state();
+        let st = st.lock().unwrap();
+        assert_eq!(st.registry.counter("arena_shard_windows_total"), 1);
+        assert_eq!(st.registry.counter("arena_shard_events_total"), 8);
+        assert_eq!(st.registry.gauge("arena_shard_count"), Some(2.0));
+        assert_eq!(
+            st.registry.gauge("arena_shard_queue_depth_peak"),
+            Some(5.0)
+        );
+        // max=6, mean=4 -> 1.5
+        assert_eq!(st.registry.gauge("arena_shard_imbalance"), Some(1.5));
+        assert_eq!(
+            st.registry.gauge("arena_sharded_store_sharing_ratio"),
+            Some(0.5)
+        );
+        assert_eq!(st.registry.gauge("arena_pool_workers"), Some(2.0));
+        let h =
+            st.registry.histogram("arena_shard_barrier_stall_ns").unwrap();
+        assert_eq!(h.count(), 2);
+        // One span per shard, then one per worker, fixed order.
+        assert_eq!(
+            st.trace.tracks(),
+            &[
+                "shard/0".to_string(),
+                "shard/1".into(),
+                "worker/0".into(),
+                "worker/1".into()
+            ]
+        );
+    }
+
+    #[test]
+    fn shard_window_frame_is_single_line_and_typed() {
+        let shards = vec![profile(0, 6), profile(1, 2)];
+        let f = shard_window_frame(&row(), &shards, &pool_profile());
+        assert!(!f.contains('\n'), "frames must be single-line NDJSON");
+        let j = Json::parse(&f).unwrap();
+        assert_eq!(
+            j.get("type").unwrap().as_str().unwrap(),
+            "shard_window"
+        );
+        assert_eq!(
+            j.get("schema_version").unwrap().as_usize().unwrap(),
+            crate::hfl::metrics::SCHEMA_VERSION
+        );
+        let ev = j.get("events").unwrap().as_arr().unwrap();
+        assert_eq!(ev.len(), 2);
+        assert_eq!(ev[0].as_f64().unwrap(), 6.0);
+        assert_eq!(
+            j.get("imbalance").unwrap().as_f64().unwrap(),
+            1.5
+        );
+    }
+
+    #[test]
+    fn round_frame_carries_per_edge_staleness() {
+        let f = round_frame(&stats());
+        let j = Json::parse(&f).unwrap();
+        let s = j.get("staleness").unwrap().as_arr().unwrap();
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn sharded_store_snapshot_lands_as_gauges() {
+        let mut o = RunObserver::new();
+        let stats = ShardedStoreStats {
+            live_buffers: 4,
+            total_refs: 8,
+            peak_model_bytes: 2048,
+            adopt_across: 3,
+            adopt_bytes: 192,
+            replicate: 6,
+            replicate_bytes: 384,
+            ..Default::default()
+        };
+        o.on_sharded_store(&stats);
+        let st = o.state();
+        let st = st.lock().unwrap();
+        assert_eq!(
+            st.registry.gauge("arena_sharded_store_total_refs"),
+            Some(8.0)
+        );
+        assert_eq!(
+            st.registry.gauge("arena_sharded_store_sharing_ratio"),
+            Some(0.5)
+        );
+        assert_eq!(
+            st.registry.gauge("arena_sharded_store_adopt_bytes"),
+            Some(192.0)
+        );
     }
 
     #[test]

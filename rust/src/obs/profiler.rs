@@ -1,0 +1,276 @@
+//! Per-shard profiler for the parallel runtime (`sim::shard` +
+//! `util::threadpool::ShardPool`).
+//!
+//! Each shard owns a [`ShardProfiler`] — a plain struct of counters with
+//! no locks, atomics or channels on the hot path. During a window the
+//! shard samples into it (queue-depth high-water, cross-shard store
+//! traffic); at the barrier the worker drains it into a
+//! [`ShardWindowProfile`] that rides home with the shard's
+//! `WindowReport`. The coordinator then:
+//!
+//! 1. computes per-shard **barrier stall** (`max(done_at) - done_at`,
+//!    i.e. how long each shard's worker sat waiting for the straggler),
+//! 2. attributes per-worker busy time via `ShardPool::shard_worker` into
+//!    a [`PoolWindowProfile`],
+//! 3. hands both to `Observer::on_shard_barrier` **in fixed shard
+//!    order**, whatever order worker threads finished in.
+//!
+//! Determinism contract (the fifth bitwise-guarantee family member,
+//! profiler-on == profiler-off): the sim-derived fields (event counts,
+//! queue depths, store occupancy, traffic counters) are pure functions
+//! of the seeded trajectory and therefore identical at any worker count
+//! and queue backend; the wall-clock fields (`advance_wall_ns`,
+//! `done_at_ns`, `barrier_stall_ns`) are read only when an observer is
+//! attached and flow only into observer records — never into simulated
+//! state, metric *names*, or any value a test byte-compares.
+
+/// One shard's profile of one conservative time window. Everything
+/// except the three `*_ns` fields is sim-derived and bit-identical at
+/// any worker count.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ShardWindowProfile {
+    /// Shard index (fixed by topology).
+    pub shard: usize,
+    /// Events handled this window.
+    pub events: u64,
+    /// Straggler results voided by departures this window.
+    pub voided: u64,
+    /// Edge aggregations this window.
+    pub aggregates: u64,
+    /// Mobility flips this window.
+    pub flips: u64,
+    /// Live devices at the barrier.
+    pub live_devices: usize,
+    /// Queue-depth high-water mark observed during the window.
+    pub queue_depth_peak: usize,
+    /// Events still queued at the barrier (future-window events).
+    pub queue_len_end: usize,
+    /// Live buffers in the shard's model-store slab at the barrier.
+    pub store_live_buffers: usize,
+    /// High-water bytes of the shard's slab (pooled scratch included).
+    pub store_peak_bytes: usize,
+    /// Device handles whose buffer is shared (rc > 1) at the barrier.
+    pub store_shared_handles: usize,
+    /// Total device handles in the shard.
+    pub store_handles: usize,
+    /// Cross-shard handle adoptions charged to this shard this window.
+    pub adopt_across: u64,
+    /// Bytes copied by those adoptions.
+    pub adopt_bytes: u64,
+    /// Barrier replications charged to this shard this window.
+    pub replicate: u64,
+    /// Bytes copied by those replications.
+    pub replicate_bytes: u64,
+    /// Wall time of this shard's `advance` call (observer-only).
+    pub advance_wall_ns: u64,
+    /// Wall time from window start to this shard's arrival at the
+    /// barrier (observer-only).
+    pub done_at_ns: u64,
+    /// `max(done_at_ns) - done_at_ns` over the window's shards: how
+    /// long this shard's result waited for the straggler
+    /// (observer-only; filled by the coordinator).
+    pub barrier_stall_ns: u64,
+}
+
+impl ShardWindowProfile {
+    /// Fraction of device handles sharing a buffer at the barrier.
+    pub fn sharing_ratio(&self) -> f64 {
+        if self.store_handles == 0 {
+            0.0
+        } else {
+            self.store_shared_handles as f64 / self.store_handles as f64
+        }
+    }
+}
+
+/// The pool-side view of one window: worker occupancy and wall extent.
+/// All fields except `window`, `t0_sim`, `t1_sim`, `workers` and
+/// `n_shards` are wall-clock (observer-only).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PoolWindowProfile {
+    pub window: usize,
+    /// Simulated window extent (for trace spans).
+    pub t0_sim: f64,
+    pub t1_sim: f64,
+    pub workers: usize,
+    pub n_shards: usize,
+    /// Wall time from window start to the last shard's arrival.
+    pub window_wall_ns: u64,
+    /// Per-worker busy wall-ns this window (sum of owned shards'
+    /// `advance_wall_ns`), indexed by worker.
+    pub worker_busy_ns: Vec<u64>,
+}
+
+impl PoolWindowProfile {
+    /// Mean fraction of the window's wall time the workers spent
+    /// advancing shards (1.0 = perfectly balanced, no barrier idle).
+    pub fn occupancy(&self) -> f64 {
+        if self.workers == 0 || self.window_wall_ns == 0 {
+            return 0.0;
+        }
+        let busy: u64 = self.worker_busy_ns.iter().sum();
+        busy as f64 / (self.workers as f64 * self.window_wall_ns as f64)
+    }
+}
+
+/// Shard-owned hot-path accumulator. Disabled (the default) every
+/// sampling call is a single predictable branch; enabled it is plain
+/// integer arithmetic on shard-private memory — no locks anywhere.
+#[derive(Clone, Debug, Default)]
+pub struct ShardProfiler {
+    enabled: bool,
+    queue_depth_peak: usize,
+    adopt_across: u64,
+    adopt_bytes: u64,
+    replicate: u64,
+    replicate_bytes: u64,
+}
+
+impl ShardProfiler {
+    pub fn new() -> Self {
+        ShardProfiler::default()
+    }
+
+    /// Toggle sampling for the coming window (set by the worker closure
+    /// at window start — shards live inside worker threads).
+    pub fn set_enabled(&mut self, on: bool) {
+        self.enabled = on;
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Record the queue length after an event was handled.
+    #[inline]
+    pub fn sample_queue_depth(&mut self, len: usize) {
+        if self.enabled && len > self.queue_depth_peak {
+            self.queue_depth_peak = len;
+        }
+    }
+
+    /// Record one cross-shard adoption of `bytes` payload bytes.
+    #[inline]
+    pub fn count_adopt(&mut self, bytes: usize) {
+        if self.enabled {
+            self.adopt_across += 1;
+            self.adopt_bytes += bytes as u64;
+        }
+    }
+
+    /// Record one barrier replication of `bytes` payload bytes.
+    #[inline]
+    pub fn count_replicate(&mut self, bytes: usize) {
+        if self.enabled {
+            self.replicate += 1;
+            self.replicate_bytes += bytes as u64;
+        }
+    }
+
+    /// Drain the window's accumulators into `p` and reset for the next
+    /// window.
+    pub fn drain_into(&mut self, p: &mut ShardWindowProfile) {
+        p.queue_depth_peak = self.queue_depth_peak;
+        p.adopt_across = self.adopt_across;
+        p.adopt_bytes = self.adopt_bytes;
+        p.replicate = self.replicate;
+        p.replicate_bytes = self.replicate_bytes;
+        self.queue_depth_peak = 0;
+        self.adopt_across = 0;
+        self.adopt_bytes = 0;
+        self.replicate = 0;
+        self.replicate_bytes = 0;
+    }
+}
+
+/// Deterministic shard-imbalance for one window: `max / mean` of
+/// per-shard event counts (1.0 = perfectly even; 0 shards or an idle
+/// window report 1.0). Sim-derived, so identical at any worker count.
+pub fn shard_imbalance(shards: &[ShardWindowProfile]) -> f64 {
+    if shards.is_empty() {
+        return 1.0;
+    }
+    let total: u64 = shards.iter().map(|p| p.events).sum();
+    if total == 0 {
+        return 1.0;
+    }
+    let max = shards.iter().map(|p| p.events).max().unwrap_or(0);
+    max as f64 * shards.len() as f64 / total as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_profiler_samples_nothing() {
+        let mut pr = ShardProfiler::new();
+        pr.sample_queue_depth(100);
+        pr.count_adopt(64);
+        pr.count_replicate(64);
+        let mut p = ShardWindowProfile::default();
+        pr.drain_into(&mut p);
+        assert_eq!(p.queue_depth_peak, 0);
+        assert_eq!(p.adopt_across, 0);
+        assert_eq!(p.replicate, 0);
+    }
+
+    #[test]
+    fn drain_resets_for_the_next_window() {
+        let mut pr = ShardProfiler::new();
+        pr.set_enabled(true);
+        pr.sample_queue_depth(7);
+        pr.sample_queue_depth(3);
+        pr.count_adopt(16);
+        pr.count_adopt(16);
+        pr.count_replicate(8);
+        let mut p = ShardWindowProfile::default();
+        pr.drain_into(&mut p);
+        assert_eq!(p.queue_depth_peak, 7);
+        assert_eq!(p.adopt_across, 2);
+        assert_eq!(p.adopt_bytes, 32);
+        assert_eq!(p.replicate, 1);
+        assert_eq!(p.replicate_bytes, 8);
+        let mut p2 = ShardWindowProfile::default();
+        pr.drain_into(&mut p2);
+        assert_eq!(p2.queue_depth_peak, 0);
+        assert_eq!(p2.adopt_across, 0);
+    }
+
+    #[test]
+    fn sharing_ratio_and_imbalance() {
+        let p = ShardWindowProfile {
+            store_shared_handles: 3,
+            store_handles: 4,
+            ..Default::default()
+        };
+        assert!((p.sharing_ratio() - 0.75).abs() < 1e-12);
+        assert_eq!(ShardWindowProfile::default().sharing_ratio(), 0.0);
+
+        let mk = |events| ShardWindowProfile {
+            events,
+            ..Default::default()
+        };
+        assert_eq!(shard_imbalance(&[]), 1.0);
+        assert_eq!(shard_imbalance(&[mk(0), mk(0)]), 1.0);
+        assert_eq!(shard_imbalance(&[mk(5), mk(5)]), 1.0);
+        // max=6, mean=4 -> 1.5
+        let got = shard_imbalance(&[mk(6), mk(2)]);
+        assert!((got - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn occupancy_is_busy_over_workers_times_wall() {
+        let p = PoolWindowProfile {
+            window: 0,
+            t0_sim: 0.0,
+            t1_sim: 60.0,
+            workers: 2,
+            n_shards: 4,
+            window_wall_ns: 1000,
+            worker_busy_ns: vec![1000, 500],
+        };
+        assert!((p.occupancy() - 0.75).abs() < 1e-12);
+        assert_eq!(PoolWindowProfile::default().occupancy(), 0.0);
+    }
+}

@@ -8,12 +8,20 @@
 //! thread answers `/healthz` and `/metrics` scrapes.
 //!
 //! Endpoints:
+//! - `GET /` — the live dashboard: one self-contained embedded HTML+JS
+//!   page (no external assets) that subscribes to `/stream`, polls
+//!   `/metrics`, and renders round progress, per-edge staleness, shard
+//!   imbalance and barrier-stall sparklines.
 //! - `GET /healthz` — `200 ok` liveness probe.
 //! - `GET /metrics` — Prometheus text exposition (whatever the sink last
 //!   published via [`TelemetrySink::set_metrics`]).
 //! - `GET /stream` — NDJSON frames, one JSON object per line, pushed as
-//!   cloud rounds close. New subscribers first receive the most recent
-//!   frame (if any) so a late scrape still sees data.
+//!   cloud rounds close (and, on the sharded runtime, as window barriers
+//!   close). New subscribers first receive the most recent frame (if
+//!   any) so a late scrape still sees data.
+//! - `GET /trace` — the current Chrome-trace JSON (whatever the sink
+//!   last published via [`TelemetrySink::set_trace`]; an empty-but-valid
+//!   `{"traceEvents":[]}` before the first publish).
 //!
 //! The server never touches the simulation: it only reads what the
 //! observer published. Frames with no subscriber are dropped, not
@@ -27,6 +35,10 @@ use std::sync::{Arc, Mutex};
 use std::thread::{self, JoinHandle};
 use std::time::Duration;
 
+/// The dashboard page served at `GET /` — a single self-contained
+/// HTML+JS file embedded at compile time (no external assets, no deps).
+pub const DASHBOARD_HTML: &str = include_str!("dashboard.html");
+
 /// Producer-side handle: cheap to clone, safe to hold inside an observer.
 /// All operations are fire-and-forget — a dead or absent server never
 /// blocks or fails the simulation.
@@ -34,6 +46,7 @@ use std::time::Duration;
 pub struct TelemetrySink {
     frames: Sender<String>,
     metrics: Arc<Mutex<String>>,
+    trace: Arc<Mutex<String>>,
 }
 
 impl TelemetrySink {
@@ -48,11 +61,19 @@ impl TelemetrySink {
             *m = text;
         }
     }
+
+    /// Replace the Chrome-trace JSON served at `/trace`.
+    pub fn set_trace(&self, text: String) {
+        if let Ok(mut t) = self.trace.lock() {
+            *t = text;
+        }
+    }
 }
 
 pub struct TelemetryServer {
     addr: SocketAddr,
     metrics: Arc<Mutex<String>>,
+    trace: Arc<Mutex<String>>,
     frames_tx: Sender<String>,
     stop: Arc<AtomicBool>,
     accept_handle: Option<JoinHandle<()>>,
@@ -67,6 +88,7 @@ impl TelemetryServer {
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let metrics = Arc::new(Mutex::new(String::new()));
+        let trace = Arc::new(Mutex::new(String::new()));
         let subscribers: Arc<Mutex<Vec<TcpStream>>> =
             Arc::new(Mutex::new(Vec::new()));
         let last_frame = Arc::new(Mutex::new(String::new()));
@@ -75,6 +97,7 @@ impl TelemetryServer {
 
         let accept_handle = {
             let metrics = metrics.clone();
+            let trace = trace.clone();
             let subscribers = subscribers.clone();
             let last_frame = last_frame.clone();
             let stop = stop.clone();
@@ -87,6 +110,7 @@ impl TelemetryServer {
                         Ok((stream, _)) => handle_conn(
                             stream,
                             &metrics,
+                            &trace,
                             &subscribers,
                             &last_frame,
                         ),
@@ -128,6 +152,7 @@ impl TelemetryServer {
         Ok(TelemetryServer {
             addr: local,
             metrics,
+            trace,
             frames_tx: tx,
             stop,
             accept_handle: Some(accept_handle),
@@ -144,6 +169,7 @@ impl TelemetryServer {
         TelemetrySink {
             frames: self.frames_tx.clone(),
             metrics: self.metrics.clone(),
+            trace: self.trace.clone(),
         }
     }
 
@@ -194,6 +220,7 @@ fn respond(
 fn handle_conn(
     stream: TcpStream,
     metrics: &Arc<Mutex<String>>,
+    trace: &Arc<Mutex<String>>,
     subscribers: &Arc<Mutex<Vec<TcpStream>>>,
     last_frame: &Arc<Mutex<String>>,
 ) {
@@ -219,7 +246,25 @@ fn handle_conn(
         }
     }
     match path {
+        "/" | "/index.html" => respond(
+            stream,
+            "200 OK",
+            "text/html; charset=utf-8",
+            DASHBOARD_HTML,
+        ),
         "/healthz" => respond(stream, "200 OK", "text/plain", "ok\n"),
+        "/trace" => {
+            let body = trace
+                .lock()
+                .map(|t| t.clone())
+                .unwrap_or_default();
+            let body = if body.is_empty() {
+                "{\"traceEvents\":[]}".to_string()
+            } else {
+                body
+            };
+            respond(stream, "200 OK", "application/json", &body);
+        }
         "/metrics" => {
             let body = metrics
                 .lock()

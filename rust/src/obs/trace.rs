@@ -29,6 +29,18 @@ pub struct Span {
     pub wall_ns: u64,
 }
 
+/// Canonical track name for shard `i` of the parallel runtime. The
+/// sharded sim emits one span per shard per window on these tracks.
+pub fn shard_track(i: usize) -> String {
+    format!("shard/{i}")
+}
+
+/// Canonical track name for worker `i` of a `ShardPool` — spans carry
+/// the worker's busy wall-ns per window in `args.wall_ns`.
+pub fn worker_track(i: usize) -> String {
+    format!("worker/{i}")
+}
+
 /// Append-only span store. Track ids are assigned in first-seen order,
 /// which is deterministic because span emission follows the (seeded)
 /// event timeline.
@@ -161,6 +173,12 @@ mod tests {
             e.path("args.wall_ns").unwrap().as_f64().unwrap(),
             42.0
         );
+    }
+
+    #[test]
+    fn shard_and_worker_track_names() {
+        assert_eq!(shard_track(3), "shard/3");
+        assert_eq!(worker_track(0), "worker/0");
     }
 
     #[test]

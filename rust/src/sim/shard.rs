@@ -39,6 +39,14 @@
 //!     threads race; simulated time comes only from seeded draws and
 //!     the event queue. (The adversarial-delay test hook injects real
 //!     sleeps precisely to prove they cannot matter.)
+//!  5. **Profiling is read-only.** With an observer attached (see
+//!     [`ShardedDeviceSim::attach_observer`]) each shard's
+//!     [`ShardProfiler`] samples into shard-private counters and the
+//!     coordinator folds the per-window profiles — in fixed shard
+//!     order, at barriers only — into `Observer::on_shard_barrier`.
+//!     Wall-clock is read only when profiling and flows only into
+//!     observer records, so profiler-on == profiler-off, bitwise
+//!     (`tests/obs_profiler.rs`).
 //!
 //! This is the same discipline as PR 5's fixed-chunk
 //! `aggregate_native_par` — a fixed work grid with order-independent
@@ -48,6 +56,10 @@
 use std::io::Write as _;
 
 use crate::hfl::model_store::{ModelRef, ModelStore};
+use crate::obs::profiler::{
+    PoolWindowProfile, ShardProfiler, ShardWindowProfile,
+};
+use crate::obs::Observer;
 use crate::sim::event::{Event, EventQueue, QueueBackend};
 use crate::util::rng::Rng;
 use crate::util::threadpool::ShardPool;
@@ -166,6 +178,9 @@ struct Shard {
     loss_sum: f64,
     loss_n: u64,
     energy: f64,
+    /// Shard-owned hot-path profiler (rule 5) — disabled unless an
+    /// observer is attached to the coordinator.
+    prof: ShardProfiler,
 }
 
 /// What one shard reports home at a barrier. Plain data; the
@@ -187,7 +202,7 @@ pub struct WindowReport {
 }
 
 /// One merged row of the run history (what lands in the CSV).
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct WindowRow {
     pub window: usize,
     pub sim_time: f64,
@@ -345,6 +360,7 @@ impl Shard {
                 Event::MobilityFlip => self.on_flip(t),
                 _ => {}
             }
+            self.prof.sample_queue_depth(self.queue.len());
         }
         let mut h = 0x9e37_79b9_7f4a_7c15u64;
         for e in &self.edges {
@@ -375,12 +391,49 @@ impl Shard {
         self.energy = 0.0;
         report
     }
+
+    /// Build this window's profile from the just-produced report plus
+    /// the profiler's drained accumulators. Runs on the worker thread,
+    /// after `advance`; `t0` is the window's start on this worker and
+    /// `epoch` the coordinator's window start (for `done_at_ns`).
+    fn window_profile(
+        &mut self,
+        shard: usize,
+        rep: &WindowReport,
+        t0: std::time::Instant,
+        epoch: std::time::Instant,
+    ) -> ShardWindowProfile {
+        let advance_wall_ns = t0.elapsed().as_nanos() as u64;
+        let shared = self
+            .devices
+            .iter()
+            .filter(|d| self.store.is_shared(&d.w))
+            .count();
+        let mut p = ShardWindowProfile {
+            shard,
+            events: rep.events,
+            voided: rep.voided,
+            aggregates: rep.aggregates,
+            flips: rep.flips,
+            live_devices: rep.live,
+            queue_len_end: rep.queue_len,
+            store_live_buffers: rep.store_live,
+            store_peak_bytes: self.store.peak_model_bytes(),
+            store_shared_handles: shared,
+            store_handles: self.devices.len(),
+            advance_wall_ns,
+            done_at_ns: epoch.elapsed().as_nanos() as u64,
+            ..Default::default()
+        };
+        self.prof.drain_into(&mut p);
+        p
+    }
 }
 
 /// The sharded simulation: a [`ShardPool`] of private shard worlds plus
 /// the cloud-side merge state and run history.
 pub struct ShardedDeviceSim {
-    pool: ShardPool<Shard, WindowReport>,
+    pool: ShardPool<Shard, (WindowReport, Option<ShardWindowProfile>)>,
     window: f64,
     windows: usize,
     next_window: usize,
@@ -390,6 +443,11 @@ pub struct ShardedDeviceSim {
     delay_us: u64,
     history: Vec<WindowRow>,
     stats: MergedStats,
+    /// Read-only instrumentation; profiles flow here at barriers only.
+    obs: Option<Box<dyn Observer>>,
+    /// Per-shard profiling toggle (`sim.profiler`). Only meaningful
+    /// with an observer attached; on by default.
+    profiler: bool,
 }
 
 impl ShardedDeviceSim {
@@ -433,6 +491,7 @@ impl ShardedDeviceSim {
                 loss_sum: 0.0,
                 loss_n: 0,
                 energy: 0.0,
+                prof: ShardProfiler::new(),
             };
             for &ge in &owned {
                 let init = ((ge + 1) as f32) * 0.01;
@@ -480,6 +539,8 @@ impl ShardedDeviceSim {
             delay_us: spec.adversarial_delay_us,
             history: Vec::with_capacity(spec.windows),
             stats: MergedStats::default(),
+            obs: None,
+            profiler: true,
         }
     }
 
@@ -491,6 +552,27 @@ impl ShardedDeviceSim {
         self.pool.n_shards()
     }
 
+    /// Attach a read-only observer. With the profiler on (the default)
+    /// every barrier hands it the per-shard window profiles and the
+    /// pool occupancy view via `Observer::on_shard_barrier` — in fixed
+    /// shard order, bitwise invisible to the trajectory (rule 5).
+    pub fn attach_observer(&mut self, obs: Box<dyn Observer>) {
+        self.obs = Some(obs);
+    }
+
+    /// Detach and return the observer (e.g. to hand it to another
+    /// engine phase or read its accumulated state).
+    pub fn detach_observer(&mut self) -> Option<Box<dyn Observer>> {
+        self.obs.take()
+    }
+
+    /// Toggle per-shard profiling (`sim.profiler`). Off, an attached
+    /// observer still exists but no wall-clock is read and no
+    /// `on_shard_barrier` fires.
+    pub fn set_profiler(&mut self, on: bool) {
+        self.profiler = on;
+    }
+
     /// Advance every shard to the next barrier and merge. Returns the
     /// merged row (also appended to the history).
     pub fn run_window(&mut self) -> &WindowRow {
@@ -500,7 +582,17 @@ impl ShardedDeviceSim {
         let b = self.broadcast;
         let delay = self.delay_us;
         let first = w == 0;
-        let reports = self.pool.run(move |_idx, shard: &mut Shard| {
+        // Wall-clock is read only when profiling (rules 4 + 5): with no
+        // observer attached, or the profiler off, no `Instant` exists.
+        let profile = self.profiler && self.obs.is_some();
+        let epoch = if profile {
+            Some(std::time::Instant::now())
+        } else {
+            None
+        };
+        let reports = self.pool.run(move |idx, shard: &mut Shard| {
+            shard.prof.set_enabled(profile);
+            let t0 = epoch.map(|_| std::time::Instant::now());
             if delay > 0 {
                 // Real-time jitter only — rule 4: the simulated
                 // timeline cannot see it.
@@ -512,7 +604,11 @@ impl ShardedDeviceSim {
             if !first {
                 shard.apply_broadcast(b);
             }
-            shard.advance(barrier)
+            let rep = shard.advance(barrier);
+            let prof = t0.map(|t0| {
+                shard.window_profile(idx, &rep, t0, epoch.unwrap())
+            });
+            (rep, prof)
         });
         // Fixed-shard-order merge (reports arrive already ordered).
         self.cloud_version += 1;
@@ -531,7 +627,7 @@ impl ShardedDeviceSim {
         let mut loss_sum = 0.0;
         let mut loss_n = 0u64;
         let mut store_live = 0usize;
-        for r in &reports {
+        for (r, _) in &reports {
             h = h.rotate_left(11) ^ r.checksum;
             row.events += r.events;
             row.live += r.live;
@@ -555,6 +651,38 @@ impl ShardedDeviceSim {
         self.broadcast = (h >> 40) as f64 * 1e-9
             + self.cloud_version as f64 * 1e-3;
         self.history.push(row);
+        // Profile hand-off: fixed shard order (the pool re-ordered the
+        // results), barrier stall relative to the straggler, busy time
+        // attributed to each shard's owning worker. Observer-only.
+        if profile {
+            let mut profs: Vec<ShardWindowProfile> = reports
+                .into_iter()
+                .filter_map(|(_, p)| p)
+                .collect();
+            let last_done =
+                profs.iter().map(|p| p.done_at_ns).max().unwrap_or(0);
+            let mut busy = vec![0u64; self.pool.workers()];
+            for p in &mut profs {
+                p.barrier_stall_ns = last_done - p.done_at_ns;
+                busy[self.pool.shard_worker(p.shard)] +=
+                    p.advance_wall_ns;
+            }
+            let pool_profile = PoolWindowProfile {
+                window: w,
+                t0_sim: w as f64 * self.window,
+                t1_sim: barrier,
+                workers: self.pool.workers(),
+                n_shards: self.pool.n_shards(),
+                window_wall_ns: epoch
+                    .map(|e| e.elapsed().as_nanos() as u64)
+                    .unwrap_or(0),
+                worker_busy_ns: busy,
+            };
+            let row = self.history.last().unwrap();
+            if let Some(obs) = self.obs.as_mut() {
+                obs.on_shard_barrier(row, &profs, &pool_profile);
+            }
+        }
         self.history.last().unwrap()
     }
 

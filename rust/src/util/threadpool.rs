@@ -247,6 +247,16 @@ impl<S: Send + 'static, R: Send + 'static> ShardPool<S, R> {
         }
     }
 
+    /// The worker that owns `shard` for the pool's whole life (the
+    /// `shard % workers` pinning above; 0 on the inline pool). Lets
+    /// observers attribute per-shard work to the worker that ran it.
+    pub fn shard_worker(&self, shard: usize) -> usize {
+        match &self.inner {
+            ShardInner::Inline { .. } => 0,
+            ShardInner::Threads { job_tx, .. } => shard % job_tx.len(),
+        }
+    }
+
     /// Advance every shard through one window with `f(shard_idx, state)`
     /// and return the reports **in shard order**, whatever order worker
     /// threads finished in. `f` must depend only on its shard's index
@@ -440,6 +450,17 @@ mod tests {
             });
             assert_eq!(got, (0..8).collect::<Vec<_>>());
         }
+    }
+
+    #[test]
+    fn shard_worker_matches_the_pinning() {
+        let p: ShardPool<u32, u32> = ShardPool::new(3, vec![0; 7]);
+        assert_eq!(p.workers(), 3);
+        for shard in 0..7 {
+            assert_eq!(p.shard_worker(shard), shard % 3);
+        }
+        let inline: ShardPool<u32, u32> = ShardPool::new(1, vec![0; 4]);
+        assert_eq!(inline.shard_worker(3), 0);
     }
 
     #[test]

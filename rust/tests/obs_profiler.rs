@@ -1,0 +1,221 @@
+//! Parallel-runtime profiler guarantees (artifact-free).
+//!
+//! The fifth bitwise guarantee: a profiled sharded run (observer
+//! attached, `ShardProfiler` recording on the hot path) produces
+//! byte-identical trajectory CSVs to an unprofiled one at every worker
+//! count and queue backend. On top of that, the merged exposition must
+//! keep one stable metric key set across worker counts, and every
+//! sim-derived series (event counts, queue depths, imbalance, store
+//! observables) must be byte-identical — only wall-clock series
+//! (`*_wall_ns`, stalls, busy, occupancy) and the worker-count gauges
+//! may differ between runs.
+
+use arena::obs::RunObserver;
+use arena::sim::{QueueBackend, ShardSpec, ShardedDeviceSim};
+
+/// Small but churny sharded topology: joins/leaves every window, a few
+/// devices per shard, cross-shard traffic at every barrier.
+fn churny_spec(workers: usize, backend: QueueBackend) -> ShardSpec {
+    ShardSpec {
+        devices: 96,
+        edges: 8,
+        shards: 4,
+        p: 16,
+        windows: 4,
+        leave_prob: 0.1,
+        join_prob: 0.4,
+        workers,
+        backend,
+        ..Default::default()
+    }
+}
+
+/// Metric families whose values are pure functions of the simulated
+/// trajectory — byte-identical at any worker count. Everything else in
+/// the shard/pool families carries wall-clock or the worker count.
+const SIM_DERIVED: &[&str] = &[
+    "arena_shard_windows_total",
+    "arena_shard_events_total",
+    "arena_shard_voided_total",
+    "arena_shard_aggregates_total",
+    "arena_shard_flips_total",
+    "arena_shard_adopt_across_total",
+    "arena_shard_replicate_total",
+    "arena_shard_count",
+    "arena_shard_live_devices",
+    "arena_shard_queue_depth_peak",
+    "arena_shard_imbalance",
+    "arena_sharded_store_live_buffers",
+    "arena_sharded_store_peak_bytes",
+    "arena_sharded_store_sharing_ratio",
+    "arena_shard_events_per_window",
+    "arena_shard_queue_depth",
+];
+
+/// Base metric name of an exposition line (`# TYPE` comment, plain
+/// sample, labeled sample or histogram series line).
+fn base_name(line: &str) -> Option<&str> {
+    if let Some(rest) = line.strip_prefix("# TYPE ") {
+        return rest.split_whitespace().next();
+    }
+    let tok = line.split_whitespace().next()?;
+    tok.split('{').next()
+}
+
+/// Membership check runs BEFORE suffix stripping so gauge names that
+/// happen to end in a histogram suffix (`arena_shard_count`) are not
+/// mangled into a different family.
+fn is_sim_derived(name: &str) -> bool {
+    if SIM_DERIVED.contains(&name) {
+        return true;
+    }
+    ["_bucket", "_sum", "_count"].iter().any(|suf| {
+        name.strip_suffix(suf)
+            .is_some_and(|b| SIM_DERIVED.contains(&b))
+    })
+}
+
+/// Run a profiled sharded sim and return (trajectory CSV, exposition).
+fn profiled_run(workers: usize, backend: QueueBackend) -> (String, String) {
+    let obs = RunObserver::new();
+    let state = obs.state();
+    let mut sim = ShardedDeviceSim::new(&churny_spec(workers, backend));
+    sim.attach_observer(Box::new(obs));
+    sim.run();
+    let exposition = state.lock().unwrap().registry.render_prometheus();
+    (sim.csv_string(), exposition)
+}
+
+#[test]
+fn profiler_is_bitwise_invisible_across_workers_and_backends() {
+    // Reference: serial, unprofiled, binary heap.
+    let mut sim =
+        ShardedDeviceSim::new(&churny_spec(1, QueueBackend::Binary));
+    sim.set_profiler(false);
+    sim.run();
+    let reference = sim.csv_string();
+    assert!(reference.contains('\n'), "reference run produced no rows");
+
+    for backend in [QueueBackend::Binary, QueueBackend::Calendar] {
+        for workers in [1usize, 2, 8] {
+            let (profiled, _) = profiled_run(workers, backend);
+            assert_eq!(
+                profiled, reference,
+                "profiled run diverged at workers={workers} {backend:?}"
+            );
+            let mut bare =
+                ShardedDeviceSim::new(&churny_spec(workers, backend));
+            bare.set_profiler(false);
+            bare.run();
+            assert_eq!(
+                bare.csv_string(),
+                reference,
+                "unprofiled run diverged at workers={workers} {backend:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn exposition_structure_is_stable_across_worker_counts() {
+    let runs: Vec<(usize, String)> = [1usize, 2, 8]
+        .iter()
+        .map(|&w| (w, profiled_run(w, QueueBackend::Auto).1))
+        .collect();
+
+    // Same metric key set everywhere (the `# TYPE` lines name every
+    // exported family exactly once).
+    let key_set = |text: &str| -> Vec<String> {
+        text.lines()
+            .filter(|l| l.starts_with("# TYPE "))
+            .filter_map(base_name)
+            .map(str::to_string)
+            .collect()
+    };
+    let reference_keys = key_set(&runs[0].1);
+    assert!(
+        reference_keys.iter().any(|k| k == "arena_shard_events_total"),
+        "shard metrics missing from exposition: {reference_keys:?}"
+    );
+    assert!(
+        reference_keys.iter().any(|k| k == "arena_pool_occupancy"),
+        "pool metrics missing from exposition: {reference_keys:?}"
+    );
+    for (w, text) in &runs[1..] {
+        assert_eq!(
+            key_set(text),
+            reference_keys,
+            "metric key set changed at workers={w}"
+        );
+    }
+
+    // Sim-derived series — values included — are byte-identical.
+    let sim_lines = |text: &str| -> String {
+        text.lines()
+            .filter(|l| base_name(l).is_some_and(is_sim_derived))
+            .collect::<Vec<_>>()
+            .join("\n")
+    };
+    let reference_lines = sim_lines(&runs[0].1);
+    assert!(
+        reference_lines.contains("arena_shard_imbalance"),
+        "sim-derived filter matched nothing"
+    );
+    for (w, text) in &runs[1..] {
+        assert_eq!(
+            sim_lines(text),
+            reference_lines,
+            "sim-derived metric values changed at workers={w}"
+        );
+    }
+}
+
+#[test]
+fn profiled_run_reports_consistent_shard_metrics() {
+    let obs = RunObserver::new();
+    let state = obs.state();
+    let spec = churny_spec(2, QueueBackend::Auto);
+    let mut sim = ShardedDeviceSim::new(&spec);
+    sim.attach_observer(Box::new(obs));
+    sim.run();
+
+    let st = state.lock().unwrap();
+    let r = &st.registry;
+    assert_eq!(
+        r.counter("arena_shard_windows_total"),
+        spec.windows as u64
+    );
+    assert_eq!(r.counter("arena_shard_events_total"), sim.stats().events);
+    assert_eq!(
+        r.counter("arena_shard_aggregates_total"),
+        sim.stats().aggregates
+    );
+    assert_eq!(r.gauge("arena_pool_workers"), Some(2.0));
+    assert_eq!(r.gauge("arena_shard_count"), Some(4.0));
+    // One advance-wall sample per shard per window.
+    let h = r.histogram("arena_shard_advance_wall_ns").unwrap();
+    assert_eq!(h.count(), (spec.windows * 4) as u64);
+    let stalls = r.histogram("arena_shard_barrier_stall_ns").unwrap();
+    assert_eq!(stalls.count(), (spec.windows * 4) as u64);
+    // Shard and worker tracks landed in the trace.
+    let tracks = st.trace.tracks();
+    assert!(tracks.iter().any(|t| t == "shard/0"), "{tracks:?}");
+    assert!(
+        tracks.iter().any(|t| t.starts_with("worker/")),
+        "{tracks:?}"
+    );
+}
+
+#[test]
+fn profiler_toggle_controls_shard_metrics() {
+    let obs = RunObserver::new();
+    let state = obs.state();
+    let mut sim =
+        ShardedDeviceSim::new(&churny_spec(2, QueueBackend::Auto));
+    sim.set_profiler(false);
+    sim.attach_observer(Box::new(obs));
+    sim.run();
+    let st = state.lock().unwrap();
+    assert_eq!(st.registry.counter("arena_shard_windows_total"), 0);
+    assert!(st.trace.is_empty(), "profiler off must add no spans");
+}

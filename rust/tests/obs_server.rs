@@ -107,6 +107,53 @@ fn observer_publishes_scrapeable_telemetry() {
 }
 
 #[test]
+fn dashboard_is_served_at_root() {
+    let server = TelemetryServer::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+    let page = get_full(&addr, "/");
+    assert!(page.starts_with("HTTP/1.1 200"), "{page}");
+    assert!(page.contains("text/html"), "{page}");
+    assert!(page.contains("arena dashboard"), "{page}");
+    // Self-contained live view: it must consume the sibling endpoints
+    // (streamed frames + scraped exposition), not bundle data.
+    assert!(page.contains("fetch(\"/stream\")"), "{page}");
+    assert!(page.contains("fetch(\"/metrics\")"), "{page}");
+    assert!(page.contains("shard_window"), "{page}");
+    // /index.html is the same document.
+    let alias = get_full(&addr, "/index.html");
+    assert!(alias.contains("arena dashboard"), "{alias}");
+    server.stop();
+}
+
+#[test]
+fn trace_endpoint_serves_current_trace_json() {
+    let server = TelemetryServer::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+
+    // Before any publish: an empty but valid Chrome trace document.
+    let empty = get_full(&addr, "/trace");
+    assert!(empty.starts_with("HTTP/1.1 200"), "{empty}");
+    assert!(empty.contains("application/json"), "{empty}");
+    assert!(empty.contains("{\"traceEvents\":[]}"), "{empty}");
+
+    // After the observer publishes: the live spans, parseable JSON.
+    let mut obs = RunObserver::with_sink(server.sink());
+    obs.on_transfer(0, "up", 1.0e6, 5.0, 9.0);
+    let state = obs.state();
+    let json = state.lock().unwrap().trace.to_chrome_json();
+    server.sink().set_trace(json);
+    let live = get_full(&addr, "/trace");
+    let body = live
+        .lines()
+        .find(|l| l.starts_with('{'))
+        .expect("no JSON body in /trace response");
+    let j = arena::util::json::Json::parse(body).unwrap();
+    let events = j.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty(), "{live}");
+    server.stop();
+}
+
+#[test]
 fn trace_export_covers_observed_spans() {
     let mut obs = RunObserver::new();
     obs.on_transfer(1, "down", 2.0e6, 10.0, 14.0);
