@@ -47,8 +47,14 @@ def main():
     for name, base_ns in sorted(baseline.items()):
         cur_ns = current.get(name)
         if cur_ns is None:
-            print(f"bench guard: workload '{name}' missing from current run")
-            failed.append(name)
+            # A baseline entry with no matching current workload is a
+            # renamed/retired bench, not a regression: warn so the noise
+            # is visible, and let the record-baselines merge step drop
+            # the stale entry on the next main push.
+            print(
+                f"bench guard: WARN — baseline workload '{name}' missing "
+                "from current run (renamed or retired?); not failing"
+            )
             continue
         ratio = cur_ns / base_ns if base_ns > 0 else float("inf")
         marker = "FAIL" if ratio > max_ratio else "ok"

@@ -18,6 +18,15 @@
 //! profiler on and prints barrier-stall percentiles, the shard
 //! imbalance and worker occupancy after the run — without changing a
 //! single output bit (the fifth determinism guarantee, tested).
+//!
+//! Fault injection (`--outages N --outage-duration S --partitions N
+//! --partition-duration S --crash-storms N --crash-frac F
+//! --rejoin-delay S`) expands a seeded `FaultPlan` into scheduled
+//! events: edge outages void stragglers, partitions sever edge→cloud
+//! uploads, crash storms kill a deterministic device subset and rejoin
+//! it later. The injected trajectory — faults column included — stays
+//! bitwise identical at any worker count; the CI chaos job diffs
+//! exactly this.
 
 use anyhow::{bail, Result};
 use arena::obs::RunObserver;
@@ -56,6 +65,15 @@ fn main() -> Result<()> {
             "--leave-prob" => spec.leave_prob = need(i)?.parse()?,
             "--join-prob" => spec.join_prob = need(i)?.parse()?,
             "--backend" => spec.backend = QueueBackend::parse(need(i)?)?,
+            "--outages" => spec.outages = need(i)?.parse()?,
+            "--outage-duration" => spec.outage_duration = need(i)?.parse()?,
+            "--partitions" => spec.partitions = need(i)?.parse()?,
+            "--partition-duration" => {
+                spec.partition_duration = need(i)?.parse()?
+            }
+            "--crash-storms" => spec.crash_storms = need(i)?.parse()?,
+            "--crash-frac" => spec.crash_frac = need(i)?.parse()?,
+            "--rejoin-delay" => spec.rejoin_delay = need(i)?.parse()?,
             "--csv" => csv = Some(need(i)?.clone()),
             other => bail!("unknown flag {other} (see module doc)"),
         }
@@ -113,6 +131,15 @@ fn main() -> Result<()> {
         st.peak_queue_len,
         st.store_live,
     );
+    if spec.outages > 0 || spec.partitions > 0 || spec.crash_storms > 0 {
+        println!(
+            "faults: {} outage downs, {} severed edges, {} crashed \
+             devices (seeded plan — identical at any worker count)",
+            st.outages,
+            st.partitions,
+            st.crashes,
+        );
+    }
     let evs = st.events as f64 / ran.as_secs_f64().max(1e-9);
     println!(
         "built in {:.2}s, ran in {:.2}s ({:.0} events/s)",

@@ -29,8 +29,10 @@ def ppo_layout(m_edges, npca, extra=0):
     """[(name, shape, offset)] for the flat PPO parameter vector.
 
     `extra` appends state columns beyond the paper's npca+3 — the control
-    layout (extra=3) carries per-edge staleness / in-flight / quorum-fill
-    features for the event-driven engine (rust: agent/state.rs `ctrl`).
+    layout (extra=5) carries per-edge staleness / in-flight / quorum-fill
+    features plus the lifecycle observables (abandonment rate, diurnal
+    availability) for the event-driven engine (rust: agent/state.rs
+    `ctrl`).
     """
     rows, cols = m_edges + 1, npca + 3 + extra
     flat_dim = rows * cols * CONV_CH[1]

@@ -127,15 +127,16 @@ def build_agent(b, cfg, use_pallas, npca=None, datasets=(), ctrl=False):
     one n_PCA value. npca=None uses the default (no name suffix); other
     values get an `_npca<k>` suffix — the Fig. 12 state-dimension ablation.
     ctrl=True emits the `_ctrl` variant instead: the extended
-    (M+1) x (npca+6) control state whose per-edge rows carry the event
-    engine's staleness / in-flight / quorum-fill features (rust:
-    agent/state.rs, decoded to per-edge (gamma1_j, alpha_j)).
+    (M+1) x (npca+8) control state whose per-edge rows carry the event
+    engine's staleness / in-flight / quorum-fill features plus the
+    lifecycle observables (abandonment rate, diurnal availability)
+    (rust: agent/state.rs, decoded to per-edge (gamma1_j, alpha_j)).
     """
     m, bt = cfg["m_edges"], cfg["traj_batch"]
     default = npca is None
     npca = cfg["npca"] if default else npca
     assert not (ctrl and not default), "ctrl variant only at default n_PCA"
-    extra = 3 if ctrl else 0
+    extra = 5 if ctrl else 0
     suffix = "_ctrl" if ctrl else ("" if default else f"_npca{npca}")
     pp = agent_mod.ppo_param_count(m, npca, extra)
     rows, cols = m + 1, npca + 3 + extra

@@ -121,10 +121,10 @@ def test_value_loss_decreases_with_repeated_updates():
 
 
 def test_ctrl_layout_extends_state_columns():
-    # The control variant widens every state row by 3 feature columns
-    # (staleness / in-flight / quorum fill) and grows fc0 accordingly,
-    # while the action head stays 2M wide.
-    extra = 3
+    # The control variant widens every state row by 5 feature columns
+    # (staleness / in-flight / quorum fill / abandon rate / availability)
+    # and grows fc0 accordingly, while the action head stays 2M wide.
+    extra = 5
     layout = A.ppo_layout(M_EDGES, NPCA, extra)
     total = sum(int(np.prod(s)) for _, s, _ in layout)
     assert total == A.ppo_param_count(M_EDGES, NPCA, extra)

@@ -334,6 +334,57 @@ fn main() {
         }
     }
 
+    // Fault storm on the sharded engine at 1M+ devices: two edge
+    // outages, a partition and a crash/rejoin storm layered on the
+    // churny population — the injected-fault handlers (straggler voids,
+    // severed uploads, mass rejoin re-dispatch) priced on the same
+    // per-event scale as the clean runs. `fault_storm/{w}` records
+    // per-event ns; the merged trajectory (faults column included) must
+    // stay byte-identical across worker counts, asserted here.
+    {
+        let fast = std::env::var("ARENA_BENCH_FAST").is_ok();
+        let devices = if fast { 1 << 16 } else { 1_048_576 };
+        let mut csv1: Option<String> = None;
+        for &w in &[1usize, 8] {
+            let spec = ShardSpec {
+                devices,
+                edges: 64,
+                windows: 3,
+                workers: w,
+                outages: 2,
+                outage_duration: 70.0,
+                partitions: 1,
+                partition_duration: 100.0,
+                crash_storms: 1,
+                crash_frac: 0.4,
+                rejoin_delay: 50.0,
+                ..ShardSpec::default()
+            };
+            let mut sim = ShardedDeviceSim::new(&spec);
+            let t0 = std::time::Instant::now();
+            sim.run();
+            let ns = (t0.elapsed().as_nanos() as f64).max(1.0);
+            let events = sim.stats().events.max(1);
+            match &csv1 {
+                None => csv1 = Some(sim.csv_string()),
+                Some(base) => assert_eq!(
+                    base,
+                    &sim.csv_string(),
+                    "fault storm must be bitwise identical (workers={w})"
+                ),
+            }
+            let r = BenchResult {
+                name: format!("event_queue/fault_storm/{w}"),
+                iters: events,
+                mean_ns: ns / events as f64,
+                p50_ns: ns / events as f64,
+                p99_ns: ns / events as f64,
+            };
+            r.report();
+            results.push(r);
+        }
+    }
+
     // Observer overhead on the drain hot path — the exact engine
     // pattern. `drain_bare` is the observer-detached loop (no clock
     // reads at all); `drain_observed` pays the full instrumentation
@@ -480,7 +531,9 @@ fn write_json(results: &[BenchResult]) -> std::io::Result<()> {
              barrier_stall_ns/W carries the profiled run's \
              barrier-arrival spread percentiles and \
              shard_imbalance_x1000/W the final max/mean-events gauge \
-             scaled by 1000"
+             scaled by 1000; fault_storm/W is per-event ns of the \
+             sharded engine under injected outage+partition+crash \
+             faults (trajectory asserted byte-identical across W)"
                 .into(),
         ),
     );

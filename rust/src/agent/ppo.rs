@@ -69,11 +69,13 @@ impl PpoAgent {
     }
 
     /// Variant over the extended control-state layout — an
-    /// (M+1) x (n_pca + 6) state whose rows carry the per-edge staleness
-    /// features of the event-driven engine (`agent::state` ctrl layout).
-    /// Requires the `_ctrl` artifacts (aot.py emits them next to the
-    /// defaults); the action head stays 2M wide, decoded as per-edge
-    /// (γ1_j, α_j) instead of (γ1_j, γ2_j).
+    /// (M+1) x (n_pca + 8) state whose rows carry the per-edge staleness
+    /// / in-flight / quorum-fill features plus the lifecycle observables
+    /// (abandonment rate, diurnal availability) of the event-driven
+    /// engine (`agent::state` ctrl layout). Requires the `_ctrl`
+    /// artifacts (aot.py emits them next to the defaults); the action
+    /// head stays 2M wide, decoded as per-edge (γ1_j, α_j) instead of
+    /// (γ1_j, γ2_j).
     pub fn new_ctrl_variant(rt: &Runtime) -> Result<Self> {
         let c = &rt.manifest.config;
         anyhow::ensure!(
@@ -91,7 +93,7 @@ impl PpoAgent {
             step_t: 0.0,
             m: c.m_edges,
             npca: c.npca,
-            state_len: (c.m_edges + 1) * (c.npca + 6),
+            state_len: (c.m_edges + 1) * (c.npca + 8),
             act_len: 2 * c.m_edges,
             batch: c.traj_batch,
             suffix: "_ctrl".into(),

@@ -5,17 +5,22 @@
 //!   row 0:      [ PCA(cloud model)  |  k, T_re(k), A_test(k-1) ]
 //!   row j=1..M: [ PCA(edge_j model) |  T_j^SGD,  T_j^ec,  E_j  ]
 //! When the builder drives the event-driven engine (`ctrl` layout,
-//! C = n_pca + 6) every row gains three control columns, sourced from the
-//! [`crate::hfl::EdgeStats`] control observables the async engine records
-//! at each cloud decision point:
-//!   row 0:      [ ... | mean staleness, mean in-flight, mean quorum fill ]
-//!   row j=1..M: [ ... | s_j, u_j, q_j ]
+//! C = n_pca + 8) every row gains five control columns, sourced from the
+//! [`crate::hfl::EdgeStats`] control + lifecycle observables the async
+//! engine records at each cloud decision point:
+//!   row 0:      [ ... | mean staleness, mean in-flight, mean quorum fill,
+//!                       mean abandon rate, mean availability ]
+//!   row j=1..M: [ ... | s_j, u_j, q_j, b_j, v_j ]
 //! where s_j is the observed staleness of edge j's last landed upload (in
-//! cloud windows), u_j the uploads still in flight on its uplink, and q_j
-//! its semi-sync quorum fill. These are what the per-edge (γ1_j, α_j)
-//! policy reacts to: a persistently stale edge wants lighter local work
-//! and a harsher discount, a saturated uplink wants a longer aggregation
-//! period.
+//! cloud windows), u_j the uploads still in flight on its uplink, q_j
+//! its semi-sync quorum fill, b_j the window's abandonment rate
+//! (over-selected stragglers + fault-voided work over all dispatched
+//! work) and v_j its membership's diurnal availability. These are what
+//! the per-edge (γ1_j, α_j) policy reacts to: a persistently stale edge
+//! wants lighter local work and a harsher discount, a saturated uplink
+//! wants a longer aggregation period, and an edge burning energy on
+//! abandoned stragglers in its availability trough wants its pace
+//! steered down.
 //!
 //! The PCA loading vectors are fit once after the first cloud aggregation
 //! (on the cloud, Gram trick — see pca/) and reused; the projection itself
@@ -152,7 +157,7 @@ impl StateBuilder {
         }
     }
 
-    /// Switch to the extended (n_pca + 6 column) control layout; the
+    /// Switch to the extended (n_pca + 8 column) control layout; the
     /// matching `_ctrl` PPO artifacts must be built for it.
     pub fn with_ctrl(mut self, ctrl: bool) -> Self {
         self.ctrl = ctrl;
@@ -164,7 +169,7 @@ impl StateBuilder {
     }
 
     pub fn cols(&self) -> usize {
-        self.npca + if self.ctrl { 6 } else { 3 }
+        self.npca + if self.ctrl { 8 } else { 3 }
     }
 
     pub fn pca_ready(&self) -> bool {
@@ -217,6 +222,11 @@ impl StateBuilder {
                 s[base + self.npca + 4] =
                     (e.in_flight_up as f64 / sc.in_flight) as f32;
                 s[base + self.npca + 5] = e.quorum_fill as f32;
+                // Lifecycle observables (already in [0, 1]): the edge's
+                // abandonment rate this window and its membership's
+                // diurnal availability at the decision point.
+                s[base + self.npca + 6] = e.abandon_rate() as f32;
+                s[base + self.npca + 7] = e.availability as f32;
             }
         }
         if self.ctrl {
@@ -224,7 +234,7 @@ impl StateBuilder {
             // signals (the cloud's aggregate view of how stale its inputs
             // run).
             let m = self.m.max(1) as f32;
-            for off in 0..3 {
+            for off in 0..5 {
                 let mut sum = 0.0f32;
                 for j in 0..self.m {
                     sum += s[(j + 1) * cols + self.npca + 3 + off];
@@ -253,7 +263,7 @@ mod tests {
         assert_eq!(b.cols(), 9);
         assert!(!b.pca_ready());
         let b = b.with_ctrl(true);
-        assert_eq!(b.cols(), 12, "ctrl layout adds 3 columns");
+        assert_eq!(b.cols(), 14, "ctrl layout adds 5 columns");
     }
 
     #[test]

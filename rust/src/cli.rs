@@ -58,6 +58,31 @@ CHURN:   with sim.leave_prob/join_prob enabled, the membership subsystem
          (simulated seconds between re-clusterings). Migrated devices
          warm-start from their new edge's model over its downlink.
 
+FAULTS:  deterministic failure injection (hfl::lifecycle): faults are
+         *scheduled events*, expanded once from the experiment seed, so
+         every fault run is reproducible and bitwise identical at any
+         sim.workers / queue backend.
+         --set fault.outages=N / fault.outage_duration=S        edge-
+         aggregator outages (reports die, members idle, warm rejoin);
+         --set fault.partitions=N / fault.partition_duration=S  edge<->
+         cloud partitions (local training continues, uploads dropped);
+         --set fault.crash_storms=N / fault.crash_frac=F /
+         fault.rejoin_delay=S        mass device crashes + delayed rejoin.
+         Counters surface as the arena_fault_* series in /metrics.
+
+LIFECYCLE: production client-lifecycle knobs (event modes):
+         --set lifecycle.overselect=F dispatches ceil(K*F) devices per
+         semi-sync edge round and abandons the stragglers once the
+         first K land (the classic 130% over-selection is F=1.3);
+         --set lifecycle.pace_day=S / lifecycle.avail_frac=F give every
+         device a seeded diurnal availability window: the event engine
+         *defers* dispatches to the window's edge (pace steering — never
+         skips), the barrier engine selects by availability at round
+         boundaries. Abandonment rate and availability feed the history
+         CSV (schema v2) and the extended DRL state; the fig_lifecycle
+         experiment compares learned vs fixed policies under a fault
+         storm at matched energy.
+
 SCALE:   --set sim.workers=W runs the simulation layers (per-device
          time/energy draws, sharded event shards) on W threads (0 = all
          cores); --set sim.queue_backend=auto|binary|calendar picks the
@@ -398,6 +423,8 @@ fn run_telemetry_demo(
     // Phase 1 — the parallel runtime, for real: a small churny sharded
     // sim under the configured worker count/backend, profiler feeding
     // arena_shard_*/arena_pool_* series and shard/worker trace tracks.
+    // The fault plan (seeded, scheduled events) makes the arena_fault_*
+    // series carry real injections — the CI smoke greps for them.
     let spec = ShardSpec {
         devices: 96,
         edges: 8,
@@ -406,6 +433,12 @@ fn run_telemetry_demo(
         windows: 4,
         workers: cfg.sim.workers,
         backend: cfg.sim.queue_backend,
+        outages: 2,
+        outage_duration: 30.0,
+        partitions: 1,
+        partition_duration: 40.0,
+        crash_storms: 1,
+        rejoin_delay: 25.0,
         ..Default::default()
     };
     let mut sim = ShardedDeviceSim::new(&spec);

@@ -204,6 +204,76 @@ impl Default for ClusterConfig {
     }
 }
 
+/// Knobs of the client-lifecycle subsystem (`hfl::lifecycle`):
+/// over-selection with straggler abandonment and diurnal pace steering
+/// ("Towards Federated Learning at Scale", arXiv:1902.01046). Defaults
+/// are inert: the engines behave exactly as before the subsystem landed.
+#[derive(Clone, Debug)]
+pub struct LifecycleConfig {
+    /// Over-selection factor: each edge dispatches
+    /// `ceil(K * overselect)` devices (K = the edge's quorum target)
+    /// and closes its round on the first K landings, voiding the
+    /// stragglers through the stale-result path. `0` disables (every
+    /// active member is dispatched and none are abandoned); enabled
+    /// values must be `>= 1` (Google's 130% is `1.3`).
+    pub overselect: f64,
+    /// Diurnal day length in simulated seconds for pace steering:
+    /// devices carry seeded availability windows and dispatches outside
+    /// a device's window are deferred to its next window start (arrival
+    /// shaping, never a stall). `0` disables.
+    pub pace_day: f64,
+    /// Mean fraction of the day each device is available.
+    pub avail_frac: f64,
+}
+
+impl Default for LifecycleConfig {
+    fn default() -> Self {
+        LifecycleConfig {
+            overselect: 0.0,
+            pace_day: 0.0,
+            avail_frac: 0.5,
+        }
+    }
+}
+
+/// Knobs of deterministic failure injection (`hfl::lifecycle::FaultPlan`):
+/// event counts are drawn over the run horizon from a dedicated seeded
+/// stream and land as first-class scheduled `Event`s. All counts default
+/// to 0 — a zero-fault plan schedules nothing, so the fault layer is
+/// bitwise invisible when disabled (the sixth determinism guarantee).
+#[derive(Clone, Debug)]
+pub struct FaultConfig {
+    /// Edge-server outages over the run (each picks a seeded edge+time).
+    pub outages: usize,
+    /// Seconds a downed edge stays down before recovering.
+    pub outage_duration: f64,
+    /// Edge↔cloud network partitions over the run (each severs a seeded
+    /// bitmask of edges).
+    pub partitions: usize,
+    /// Seconds a partition lasts before healing.
+    pub partition_duration: f64,
+    /// Mid-round device crash/rejoin storms over the run.
+    pub crash_storms: usize,
+    /// Fraction of devices hit by each crash storm.
+    pub crash_frac: f64,
+    /// Seconds until a storm's crashed devices rejoin.
+    pub rejoin_delay: f64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            outages: 0,
+            outage_duration: 120.0,
+            partitions: 0,
+            partition_duration: 180.0,
+            crash_storms: 0,
+            crash_frac: 0.3,
+            rejoin_delay: 90.0,
+        }
+    }
+}
+
 /// Knobs of the edge↔cloud transfer layer (`sim::link`). Bandwidth scales
 /// multiply the region bandwidth of `SimConfig` per direction, so uplinks
 /// and downlinks can be provisioned asymmetrically (consumer uplinks are
@@ -281,6 +351,8 @@ pub struct ExperimentConfig {
     pub sync: SyncConfig,
     pub link: LinkConfig,
     pub cluster: ClusterConfig,
+    pub lifecycle: LifecycleConfig,
+    pub fault: FaultConfig,
     /// Worker threads for parallel device training (0 = auto).
     pub workers: usize,
     /// Run model aggregation natively in rust instead of through the
@@ -350,6 +422,8 @@ impl ExperimentConfig {
             sync: SyncConfig::default(),
             link: LinkConfig::default(),
             cluster: ClusterConfig::default(),
+            lifecycle: LifecycleConfig::default(),
+            fault: FaultConfig::default(),
             workers: 0,
             native_aggregation: false,
             artifacts_dir: "artifacts".into(),
@@ -490,6 +564,20 @@ impl ExperimentConfig {
                     anyhow::anyhow!("link.contention must be true|false")
                 })?
             }
+            "lifecycle.overselect" => self.lifecycle.overselect = parse_f()?,
+            "lifecycle.pace_day" => self.lifecycle.pace_day = parse_f()?,
+            "lifecycle.avail_frac" => self.lifecycle.avail_frac = parse_f()?,
+            "fault.outages" => self.fault.outages = parse_u()?,
+            "fault.outage_duration" => {
+                self.fault.outage_duration = parse_f()?
+            }
+            "fault.partitions" => self.fault.partitions = parse_u()?,
+            "fault.partition_duration" => {
+                self.fault.partition_duration = parse_f()?
+            }
+            "fault.crash_storms" => self.fault.crash_storms = parse_u()?,
+            "fault.crash_frac" => self.fault.crash_frac = parse_f()?,
+            "fault.rejoin_delay" => self.fault.rejoin_delay = parse_f()?,
             _ => bail!("unknown config key '{key}'"),
         }
         Ok(())
@@ -582,6 +670,35 @@ impl ExperimentConfig {
         {
             bail!("cluster.recluster_min_interval must be >= 0 and finite");
         }
+        let lc = &self.lifecycle;
+        if !lc.overselect.is_finite()
+            || (lc.overselect != 0.0 && lc.overselect < 1.0)
+        {
+            bail!(
+                "lifecycle.overselect must be 0 (off) or >= 1 \
+                 (got {})",
+                lc.overselect
+            );
+        }
+        if !(lc.pace_day.is_finite() && lc.pace_day >= 0.0) {
+            bail!("lifecycle.pace_day must be >= 0 and finite");
+        }
+        if !(0.0 < lc.avail_frac && lc.avail_frac <= 1.0) {
+            bail!("lifecycle.avail_frac must be in (0,1]");
+        }
+        let fc = &self.fault;
+        for (name, v) in [
+            ("fault.outage_duration", fc.outage_duration),
+            ("fault.partition_duration", fc.partition_duration),
+            ("fault.rejoin_delay", fc.rejoin_delay),
+        ] {
+            if !(v.is_finite() && v > 0.0) {
+                bail!("{name} must be a positive finite number (got {v})");
+            }
+        }
+        if !(0.0..=1.0).contains(&fc.crash_frac) {
+            bail!("fault.crash_frac must be in [0,1]");
+        }
         Ok(())
     }
 
@@ -651,6 +768,33 @@ impl ExperimentConfig {
             ("link_up_scale", Json::num(self.link.up_bandwidth_scale)),
             ("link_down_scale", Json::num(self.link.down_bandwidth_scale)),
             ("link_contention", Json::Bool(self.link.contention)),
+            // Lifecycle + fault knobs are trajectory-affecting (unlike
+            // sim.workers/queue_backend/profiler, which stay excluded).
+            (
+                "lifecycle_overselect",
+                Json::num(self.lifecycle.overselect),
+            ),
+            ("lifecycle_pace_day", Json::num(self.lifecycle.pace_day)),
+            (
+                "lifecycle_avail_frac",
+                Json::num(self.lifecycle.avail_frac),
+            ),
+            ("fault_outages", Json::num(self.fault.outages as f64)),
+            (
+                "fault_outage_duration",
+                Json::num(self.fault.outage_duration),
+            ),
+            ("fault_partitions", Json::num(self.fault.partitions as f64)),
+            (
+                "fault_partition_duration",
+                Json::num(self.fault.partition_duration),
+            ),
+            (
+                "fault_crash_storms",
+                Json::num(self.fault.crash_storms as f64),
+            ),
+            ("fault_crash_frac", Json::num(self.fault.crash_frac)),
+            ("fault_rejoin_delay", Json::num(self.fault.rejoin_delay)),
         ])
     }
 }
@@ -805,6 +949,47 @@ mod tests {
         c.cluster.recluster_min_interval = 120.0;
         c.cluster.recluster_threshold = f64::NAN;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn lifecycle_and_fault_overrides_and_validation() {
+        let mut c = ExperimentConfig::mnist();
+        assert_eq!(c.lifecycle.overselect, 0.0, "over-selection defaults off");
+        assert_eq!(c.lifecycle.pace_day, 0.0, "pace steering defaults off");
+        assert_eq!(c.fault.outages, 0, "fault injection defaults off");
+        c.apply_override("lifecycle.overselect", "1.3").unwrap();
+        c.apply_override("lifecycle.pace_day", "3600").unwrap();
+        c.apply_override("lifecycle.avail_frac", "0.6").unwrap();
+        c.apply_override("fault.outages", "2").unwrap();
+        c.apply_override("fault.outage_duration", "90").unwrap();
+        c.apply_override("fault.partitions", "1").unwrap();
+        c.apply_override("fault.partition_duration", "150").unwrap();
+        c.apply_override("fault.crash_storms", "1").unwrap();
+        c.apply_override("fault.crash_frac", "0.25").unwrap();
+        c.apply_override("fault.rejoin_delay", "45").unwrap();
+        assert!((c.lifecycle.overselect - 1.3).abs() < 1e-12);
+        assert_eq!(c.fault.outages, 2);
+        assert_eq!(c.fault.crash_storms, 1);
+        c.validate().unwrap();
+        // Over-selection factors between 0 and 1 would under-dispatch.
+        c.lifecycle.overselect = 0.5;
+        assert!(c.validate().is_err());
+        c.lifecycle.overselect = 1.3;
+        c.lifecycle.avail_frac = 0.0;
+        assert!(c.validate().is_err());
+        c.lifecycle.avail_frac = 0.6;
+        c.fault.crash_frac = 1.5;
+        assert!(c.validate().is_err());
+        c.fault.crash_frac = 0.25;
+        c.fault.rejoin_delay = 0.0;
+        assert!(c.validate().is_err());
+        c.fault.rejoin_delay = 45.0;
+        c.validate().unwrap();
+        // The new knobs are trajectory-affecting: they must show up in
+        // the run-identity digest.
+        let j = c.to_json().to_string();
+        assert!(j.contains("lifecycle_overselect"));
+        assert!(j.contains("fault_crash_storms"));
     }
 
     #[test]

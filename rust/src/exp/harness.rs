@@ -25,7 +25,7 @@ use crate::util::stats;
 
 pub const EXPERIMENTS: &[&str] = &[
     "fig2", "fig3", "fig4", "fig7", "fig8", "fig9", "fig10", "fig11",
-    "fig12", "table1", "table2", "fig_async_headtohead",
+    "fig12", "table1", "table2", "fig_async_headtohead", "fig_lifecycle",
 ];
 
 pub fn run_experiment(name: &str, cfg: &ExperimentConfig) -> Result<()> {
@@ -71,6 +71,7 @@ fn dispatch_experiment(name: &str, cfg: &ExperimentConfig) -> Result<()> {
         "table1" => table1(cfg),
         "table2" => table2(cfg),
         "fig_async_headtohead" => fig_async_headtohead(cfg),
+        "fig_lifecycle" => fig_lifecycle(cfg),
         other => bail!("unknown experiment '{other}' (try `arena list`)"),
     }
 }
@@ -766,6 +767,135 @@ fn fig_async_headtohead(cfg: &ExperimentConfig) -> Result<()> {
                 format!("{overlap:.4}"),
                 format!("{util:.4}"),
                 format!("{stale:.4}"),
+            ])?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// fig_lifecycle — production client lifecycle under injected failures:
+// the learned per-edge (γ1_j, α_j) controller vs fixed semi-sync quorum
+// K vs fixed-α async-greedy, all on the same event engine with the SAME
+// seeded fault plan (edge outages + an edge↔cloud partition + a device
+// crash storm), over-selection and diurnal pace steering enabled,
+// compared at matched energy budgets with abandonment/availability/
+// fault columns.
+// ---------------------------------------------------------------------
+
+fn fig_lifecycle(cfg: &ExperimentConfig) -> Result<()> {
+    let mut cfg = scaled(cfg);
+    // Default chaos setting when the user didn't bring their own fault
+    // plan via --set: two edge outages, one partition, one crash storm,
+    // durations scaled to the simulated budget so every event both
+    // lands and recovers inside the run.
+    if cfg.fault.outages == 0
+        && cfg.fault.partitions == 0
+        && cfg.fault.crash_storms == 0
+    {
+        let t = cfg.hfl.threshold_time;
+        cfg.fault.outages = 2;
+        cfg.fault.outage_duration = 0.06 * t;
+        cfg.fault.partitions = 1;
+        cfg.fault.partition_duration = 0.08 * t;
+        cfg.fault.crash_storms = 1;
+        cfg.fault.crash_frac = 0.3;
+        cfg.fault.rejoin_delay = 0.05 * t;
+    }
+    if cfg.lifecycle.overselect == 0.0 {
+        cfg.lifecycle.overselect = 1.3; // the classic 130% over-selection
+    }
+    if cfg.lifecycle.pace_day == 0.0 {
+        // Diurnal period = a quarter of the budget: every device cycles
+        // through its availability window a few times per run.
+        cfg.lifecycle.pace_day = 0.25 * cfg.hfl.threshold_time;
+    }
+    let dir = out_dir("fig_lifecycle");
+    let mut histories: Vec<(&str, RunHistory)> = Vec::new();
+
+    // Fixed semi-sync: quorum K with first-K-of-N over-selection closes.
+    let mut semi = cfg.clone();
+    semi.sync.mode = SyncModeCfg::SemiSync;
+    semi.sync.learned = false;
+    let mut e = AsyncHflEngine::new(semi, true)?;
+    histories.push(("semi-sync-k", e.run_to_threshold()?));
+
+    // Fixed-α async at the greedy per-edge local-epoch counts.
+    let mut fixed = cfg.clone();
+    fixed.sync.mode = SyncModeCfg::Async;
+    fixed.sync.learned = false;
+    let mut e = AsyncHflEngine::new(fixed, true)?;
+    let h = baselines::async_greedy::async_greedy(&mut e)?;
+    histories.push(("async-fixed-alpha", h));
+
+    // Arena-learned per-edge (γ1_j, α_j), trained under the same fault
+    // plan (the ctrl state carries the abandonment-rate and availability
+    // observables). Fresh engine for the rollout, same as the
+    // head-to-head: all three schemes start from the identical
+    // seed-fresh environment, so the fault plan fires identically.
+    let mut learned = cfg.clone();
+    learned.sync.mode = SyncModeCfg::Async;
+    learned.sync.learned = true;
+    let mut e = AsyncHflEngine::new(learned.clone(), true)?;
+    let opts = ArenaOptions::arena(learned.agent.episodes);
+    let t = trained_on(&mut e, &opts, "ctrl")?;
+    let mut e = AsyncHflEngine::new(learned.clone(), true)?;
+    let h = run_policy_on(&mut e, &t.agent, &t.sb, true)?;
+    histories.push(("arena-learned", h));
+
+    // Matched energy budgets: fractions of the lowest total spend, so
+    // every scheme has actually reached each budget level.
+    let e_min = histories
+        .iter()
+        .map(|(_, h)| h.total_energy())
+        .fold(f64::INFINITY, f64::min);
+    let n_dev = cfg.topology.devices as f64;
+    let mut w = CsvWriter::create(
+        format!("{dir}/{}.csv", cfg.hfl.dataset.name()),
+        &["scheme", "energy_budget_mah", "energy_budget_per_device_mah",
+          "accuracy", "sim_time", "mean_staleness", "abandoned",
+          "mean_availability", "fault_events"],
+    )?;
+    println!(
+        "fig_lifecycle ({}): learned (γ1_j, α_j) vs semi-sync K vs \
+         fixed-α async under {} outage(s) / {} partition(s) / {} crash \
+         storm(s), overselect {:.2}, at matched energy budgets",
+        cfg.hfl.dataset.name(),
+        cfg.fault.outages,
+        cfg.fault.partitions,
+        cfg.fault.crash_storms,
+        cfg.lifecycle.overselect,
+    );
+    for (name, h) in &histories {
+        h.write_csv(&format!("{dir}/{name}_history.csv"), name)?;
+        for &f in &[0.25, 0.5, 0.75, 1.0] {
+            let budget = f * e_min;
+            let (acc, t_at) = h.at_energy(budget);
+            if t_at <= 0.0 {
+                println!(
+                    "  {name:<18} E={budget:>8.1} mAh  (first window \
+                     exceeds this budget; row skipped)"
+                );
+                continue;
+            }
+            let stale = h.mean_staleness_at(t_at);
+            let (abandoned, avail, faults) = h.lifecycle_stats_at(t_at);
+            println!(
+                "  {name:<18} E={budget:>8.1} mAh  acc {acc:.3}  t \
+                 {t_at:>7.0}s  abandoned {abandoned}  avail {avail:.2}  \
+                 faults {faults}"
+            );
+            w.row(&[
+                name.to_string(),
+                format!("{budget:.2}"),
+                format!("{:.3}", budget / n_dev),
+                format!("{acc:.4}"),
+                format!("{t_at:.1}"),
+                format!("{stale:.4}"),
+                abandoned.to_string(),
+                format!("{avail:.4}"),
+                faults.to_string(),
             ])?;
         }
     }

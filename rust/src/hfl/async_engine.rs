@@ -108,6 +108,9 @@ use crate::sim::{Direction, Event, EventQueue};
 
 use super::aggregate::staleness_discount;
 use super::engine::HflEngine;
+use super::lifecycle::{
+    overselect_count, select_dispatch, storm_hits, FaultPlan,
+};
 use super::metrics::{RoundAccumulator, RoundStats, RunHistory};
 use super::model_store::ModelRef;
 
@@ -195,6 +198,9 @@ fn event_variant(ev: &Event) -> &'static str {
         Event::MobilityFlip => "mobility_flip",
         Event::Recluster => "recluster",
         Event::TransferDone { .. } => "transfer_done",
+        Event::EdgeOutage { .. } => "edge_outage",
+        Event::Partition { .. } => "partition",
+        Event::CrashStorm { .. } => "crash_storm",
     }
 }
 
@@ -322,6 +328,23 @@ pub struct AsyncHflEngine {
     /// training dispatches and transfers could never complete — skip them
     /// instead of burning real compute on dead work.
     draining: bool,
+    // ---- lifecycle / fault state (`hfl::lifecycle`) --------------------
+    /// Injected-outage flag per edge (`Event::EdgeOutage`): a down edge
+    /// dispatches nothing, its pending reports die with it, and its
+    /// cloud transfers are dropped until the recovery event.
+    edge_faulted: Vec<bool>,
+    /// Injected-partition flag per edge (`Event::Partition`): a
+    /// partitioned edge keeps training and aggregating locally, but its
+    /// uplink/downlink to the cloud is severed until the heal.
+    edge_partitioned: Vec<bool>,
+    /// Stragglers abandoned this window, per edge: over-selection's
+    /// first-K close plus fault-voided in-flight work. Drained into
+    /// `EdgeStats::abandoned` at each cloud decision point.
+    win_abandoned: Vec<usize>,
+    /// Injected fault events handled this window (down and up edges of
+    /// outages, partitions and storms); stamped into
+    /// `RoundStats::fault_events`.
+    win_fault_events: usize,
 }
 
 impl AsyncHflEngine {
@@ -377,6 +400,10 @@ impl AsyncHflEngine {
             recluster_seq: 0,
             migration_log: Vec::new(),
             draining: false,
+            edge_faulted: vec![false; m],
+            edge_partitioned: vec![false; m],
+            win_abandoned: vec![0; m],
+            win_fault_events: 0,
             mode,
             eng,
         })
@@ -600,6 +627,8 @@ impl AsyncHflEngine {
             round_time += out.migration_downlink_time;
             self.refresh_dev_edge();
         }
+        self.eng
+            .record_lifecycle_baseline(&mut acc, self.eng.clock.now());
 
         let (accuracy, test_loss) = self.eng.evaluate()?;
         let mut stats = acc.finish(
@@ -699,13 +728,72 @@ impl AsyncHflEngine {
         self.migration_log.clear();
         self.refresh_dev_edge();
         self.draining = false;
+        self.edge_faulted = vec![false; m];
+        self.edge_partitioned = vec![false; m];
+        self.win_abandoned = vec![0; m];
+        self.win_fault_events = 0;
 
         let interval = self.mode.cloud_interval();
         self.queue.schedule(interval, Event::CloudAggregate);
         // Mobility steps once per window, offset to avoid timer ties.
         self.queue.schedule(0.5 * interval, Event::MobilityFlip);
-        let all: Vec<usize> = (0..n).collect();
-        self.dispatch(&all, 0.0)
+        // Injected faults are scheduled events, never ambient state
+        // (`hfl::lifecycle` determinism rules): the plan expands the
+        // `fault.*` knobs once from a dedicated stream and lands in the
+        // queue like any other event. A zero-count plan is empty —
+        // no schedule calls, no tie-break draws — so a fault-free run
+        // is bitwise identical to one built before faults existed.
+        let plan = FaultPlan::build(
+            &self.eng.cfg.fault,
+            m,
+            self.eng.cfg.hfl.threshold_time,
+            self.eng.cfg.seed,
+        );
+        for &(t, ev) in plan.events() {
+            self.queue.schedule(t, ev);
+        }
+        let cohort = self.initial_cohort();
+        self.dispatch(&cohort, 0.0)
+    }
+
+    /// Devices to dispatch at run start: everyone — unless semi-sync
+    /// over-selection is on, in which case each edge fields its
+    /// `ceil(K·overselect)` cohort (currently-available members first,
+    /// so pace steering shapes who leads the wave).
+    fn initial_cohort(&self) -> Vec<usize> {
+        let factor = self.eng.cfg.lifecycle.overselect;
+        match self.mode {
+            SyncMode::SemiSync { quorum, .. } if factor > 0.0 => {
+                let mut out = Vec::new();
+                for j in 0..self.edges() {
+                    out.extend(self.edge_cohort(j, quorum, factor, 0.0));
+                }
+                out
+            }
+            _ => (0..self.eng.cfg.topology.devices).collect(),
+        }
+    }
+
+    /// Edge `j`'s over-selected dispatch cohort at time `t`:
+    /// `ceil(K·factor)` of its live members where K is the effective
+    /// quorum, preferring members inside their availability window
+    /// (`lifecycle::select_dispatch` — deterministic, draw-free).
+    fn edge_cohort(
+        &self,
+        j: usize,
+        quorum: usize,
+        factor: f64,
+        t: f64,
+    ) -> Vec<usize> {
+        let live: Vec<usize> = self.eng.topo.edges[j]
+            .members
+            .iter()
+            .copied()
+            .filter(|&d| self.eng.mobility.is_active(d))
+            .collect();
+        let k = effective_quorum(quorum, live.len());
+        let n = overselect_count(k, factor, live.len());
+        select_dispatch(&live, n, self.eng.avail.as_ref(), t)
     }
 
     /// Advance the armed run to its next cloud-aggregation decision point
@@ -748,6 +836,13 @@ impl AsyncHflEngine {
                 Event::Recluster => self.on_recluster(t)?,
                 Event::TransferDone { transfer } => {
                     self.on_transfer_done(transfer, t)?;
+                }
+                Event::EdgeOutage { edge, up } => {
+                    self.on_edge_outage(edge, up, t)?;
+                }
+                Event::Partition { mask, up } => self.on_partition(mask, up),
+                Event::CrashStorm { seed, frac_bits, up } => {
+                    self.on_crash_storm(seed, frac_bits, up, t)?;
                 }
             }
             if let Some(o) = self.eng.obs.as_mut() {
@@ -825,6 +920,11 @@ impl AsyncHflEngine {
                 continue;
             }
             let j = self.dev_edge[d];
+            // A downed aggregator has nobody to report to; its members
+            // idle until the recovery event re-dispatches them.
+            if self.edge_faulted[j] {
+                continue;
+            }
             jobs.push(TrainJob {
                 device: d,
                 // The one materialization point: the worker pool needs an
@@ -862,8 +962,21 @@ impl AsyncHflEngine {
                 void: false,
             });
             self.training_count[j] += 1;
+            // Pace steering: a device outside its availability window
+            // *defers* its start to the window's edge (never skips —
+            // a skipped device could stall its edge forever, since no
+            // future event would close the round). The lag is pure
+            // arithmetic from the seeded diurnal model, so it is
+            // identical at any worker count; with pace steering off the
+            // lag is exactly 0.0 and the timeline is unchanged.
+            let lag = self
+                .eng
+                .avail
+                .as_ref()
+                .map(|a| a.delay_until(d, now))
+                .unwrap_or(0.0);
             self.queue.schedule(
-                now + t_dev,
+                now + lag + t_dev,
                 Event::DeviceTrainDone { device: d, edge: j },
             );
             if let Some(o) = self.eng.obs.as_mut() {
@@ -874,7 +987,7 @@ impl AsyncHflEngine {
                     track: format!("edge/{j}"),
                     name: format!("train d{d}"),
                     t0_sim: now,
-                    t1_sim: now + t_dev,
+                    t1_sim: now + lag + t_dev,
                     wall_ns: 0,
                 });
             }
@@ -945,6 +1058,15 @@ impl AsyncHflEngine {
         if devs.is_empty() {
             return Ok(()); // already flushed (duplicate trigger)
         }
+        // Over-selection's first-K close: the quorum landed, so every
+        // cohort member still in flight is abandoned through the
+        // stale-result void path — its completion discards the result
+        // (energy already spent) and re-enters dispatch selection.
+        if matches!(self.mode, SyncMode::SemiSync { .. })
+            && self.eng.cfg.lifecycle.overselect > 0.0
+        {
+            self.abandon_stragglers(edge);
+        }
         match self.mode {
             SyncMode::SemiSync { .. } => {
                 // Quorum closes like a small synchronous edge round (the
@@ -982,13 +1104,54 @@ impl AsyncHflEngine {
         // reporting devices restart training — the overlap the lump model
         // could never express.
         self.start_upload(edge, t);
-        self.dispatch(&devs, t)
+        // Over-selection fields a fresh ceil(K·factor) cohort for the
+        // next edge round (abandoned stragglers are still busy and are
+        // filtered by dispatch; they re-enter selection once their void
+        // completion lands). Off, the reporters restart — the
+        // historical path, byte for byte.
+        let next = match self.mode {
+            SyncMode::SemiSync { quorum, .. }
+                if self.eng.cfg.lifecycle.overselect > 0.0 =>
+            {
+                self.edge_cohort(
+                    edge,
+                    quorum,
+                    self.eng.cfg.lifecycle.overselect,
+                    t,
+                )
+            }
+            _ => devs,
+        };
+        self.dispatch(&next, t)
+    }
+
+    /// Void every in-flight training run of `edge`'s members and count
+    /// the newly-abandoned ones into the window's lifecycle observables
+    /// (first-K close and edge-outage both route through here).
+    fn abandon_stragglers(&mut self, edge: usize) {
+        let mut dropped = 0usize;
+        for idx in 0..self.eng.topo.edges[edge].members.len() {
+            let d = self.eng.topo.edges[edge].members[idx];
+            if let Some(p) = self.in_flight[d].as_mut() {
+                if !p.void {
+                    p.void = true;
+                    dropped += 1;
+                }
+            }
+        }
+        self.win_abandoned[edge] += dropped;
     }
 
     /// Snapshot `edge`'s model (an rc-share — CoW keeps it intact while
     /// in flight) and put it on the uplink at time `t`.
     fn start_upload(&mut self, edge: usize, t: f64) {
         if self.draining {
+            return;
+        }
+        // A downed or partitioned edge cannot reach the cloud: the
+        // upload is dropped (the cloud aggregates without this edge,
+        // and its staleness observable grows until the heal).
+        if self.edge_faulted[edge] || self.edge_partitioned[edge] {
             return;
         }
         let region = self.eng.topo.edges[edge].region;
@@ -1009,6 +1172,11 @@ impl AsyncHflEngine {
     /// broadcasting cloud window) is the out-of-order landing guard.
     fn start_downlink(&mut self, edge: usize, t: f64) {
         if self.draining {
+            return;
+        }
+        // No broadcast reaches a downed or partitioned edge; it keeps
+        // its older global model until a post-heal window's downlink.
+        if self.edge_faulted[edge] || self.edge_partitioned[edge] {
             return;
         }
         let region = self.eng.topo.edges[edge].region;
@@ -1211,6 +1379,14 @@ impl AsyncHflEngine {
             );
             let (staleness, in_flight, fill) = ctrl[j];
             self.acc.record_ctrl(j, staleness, in_flight, fill);
+            // Lifecycle observables at the decision point: stragglers
+            // abandoned this window (first-K close + fault voids) and
+            // the edge's membership availability right now. Recorded
+            // unconditionally — lifecycle-off yields the (0, 1.0)
+            // baseline — so schema-v2 rows are uniform across runs.
+            let dropped = std::mem::take(&mut self.win_abandoned[j]);
+            let avail_j = self.eng.edge_availability(j, t);
+            self.acc.record_lifecycle(j, dropped, avail_j);
         }
         self.window_landings = vec![0; m];
         self.win_compute_busy = vec![0.0; m];
@@ -1240,6 +1416,7 @@ impl AsyncHflEngine {
         );
         self.eng.finalize_membership_stats(&mut stats);
         self.eng.finalize_memory_stats(&mut stats);
+        stats.fault_events = std::mem::take(&mut self.win_fault_events);
         self.eng.emit_round_observation(&stats);
         self.eng.last_round = Some(stats.clone());
         self.window_start = t;
@@ -1410,6 +1587,158 @@ impl AsyncHflEngine {
                 self.queue.schedule(t, Event::EdgeAggregate { edge: j });
             }
         }
+    }
+
+    /// `Event::EdgeOutage`: sever (down) or restore (up) one edge
+    /// aggregator. Down, the edge's pending reports die with it and all
+    /// in-flight member work is voided (stale-result protocol — the
+    /// edge model those runs trained against is lost); members idle
+    /// until recovery. Up, live idle members warm-restart from the
+    /// edge's current model, exactly like a churn rejoin.
+    fn on_edge_outage(
+        &mut self,
+        edge: usize,
+        up: bool,
+        t: f64,
+    ) -> Result<()> {
+        self.win_fault_events += 1;
+        if !up {
+            if !self.edge_faulted[edge] {
+                self.edge_faulted[edge] = true;
+                self.reported[edge].clear();
+                self.abandon_stragglers(edge);
+                if let Some(o) = self.eng.obs.as_mut() {
+                    o.on_fault("outage");
+                }
+            }
+            return Ok(());
+        }
+        if !self.edge_faulted[edge] {
+            return Ok(()); // overlapping plans: already recovered
+        }
+        self.edge_faulted[edge] = false;
+        if let Some(o) = self.eng.obs.as_mut() {
+            o.on_fault("recovery");
+        }
+        let mut idle = Vec::new();
+        for idx in 0..self.eng.topo.edges[edge].members.len() {
+            let d = self.eng.topo.edges[edge].members[idx];
+            if self.eng.mobility.is_active(d) && self.in_flight[d].is_none()
+            {
+                // O(1) re-point: the pre-outage device line is stale.
+                self.eng.store.repoint(
+                    &mut self.eng.device_w[d],
+                    &self.eng.edge_w[edge],
+                );
+                idle.push(d);
+            }
+        }
+        let resume = match self.mode {
+            SyncMode::SemiSync { quorum, .. }
+                if self.eng.cfg.lifecycle.overselect > 0.0 =>
+            {
+                self.edge_cohort(
+                    edge,
+                    quorum,
+                    self.eng.cfg.lifecycle.overselect,
+                    t,
+                )
+            }
+            _ => idle,
+        };
+        self.dispatch(&resume, t)
+    }
+
+    /// `Event::Partition`: sever (down) or heal (up) the cloud links of
+    /// every edge whose bit is set in `mask` (edge `j` maps to bit
+    /// `j % 64`). Partitioned edges keep training and aggregating
+    /// locally — only their uplink/downlink transfers are dropped, so
+    /// the cloud ages them (staleness grows) until the heal.
+    fn on_partition(&mut self, mask: u64, up: bool) {
+        self.win_fault_events += 1;
+        let mut touched = false;
+        for j in 0..self.edges() {
+            if (mask >> (j % 64)) & 1 == 0 {
+                continue;
+            }
+            touched = touched || self.edge_partitioned[j] == up;
+            self.edge_partitioned[j] = !up;
+        }
+        if touched {
+            if let Some(o) = self.eng.obs.as_mut() {
+                o.on_fault(if up { "recovery" } else { "partition" });
+            }
+        }
+    }
+
+    /// `Event::CrashStorm`: crash the storm's device set, or revive it
+    /// `fault.rejoin_delay` later. Membership is the pure predicate
+    /// `lifecycle::storm_hits(seed, device, frac_bits)` — no draws, so
+    /// the crash and rejoin events recompute exactly the same set and
+    /// the storm is identical at any worker count. Crashing routes
+    /// through the churn machinery: reports purged, in-flight work
+    /// voided, pending warm-starts cleared, quorum liveness re-checked.
+    fn on_crash_storm(
+        &mut self,
+        storm: u64,
+        frac_bits: u32,
+        up: bool,
+        t: f64,
+    ) -> Result<()> {
+        self.win_fault_events += 1;
+        let n = self.eng.cfg.topology.devices;
+        if !up {
+            let mut hit_edges = Vec::new();
+            let mut crashed = false;
+            for d in 0..n {
+                if !storm_hits(storm, d, frac_bits)
+                    || !self.eng.mobility.is_active(d)
+                {
+                    continue;
+                }
+                self.eng.mobility.set_active(d, false);
+                crashed = true;
+                let j = self.dev_edge[d];
+                self.reported[j].retain(|&x| x != d);
+                if let Some(p) = self.in_flight[d].as_mut() {
+                    if !p.void {
+                        p.void = true;
+                        self.win_abandoned[j] += 1;
+                    }
+                }
+                self.migration_seq[d] = 0;
+                hit_edges.push(j);
+            }
+            if crashed {
+                if let Some(o) = self.eng.obs.as_mut() {
+                    o.on_fault("crash");
+                }
+            }
+            // A storm can shrink an edge's live set to (or below) its
+            // outstanding reports — same liveness re-check as churn.
+            self.recheck_quorums(hit_edges, t);
+            return Ok(());
+        }
+        let mut revived = Vec::new();
+        for d in 0..n {
+            if storm_hits(storm, d, frac_bits)
+                && !self.eng.mobility.is_active(d)
+            {
+                self.eng.mobility.set_active(d, true);
+                let j = self.dev_edge[d];
+                self.eng.store.repoint(
+                    &mut self.eng.device_w[d],
+                    &self.eng.edge_w[j],
+                );
+                revived.push(d);
+            }
+        }
+        if !revived.is_empty() {
+            if let Some(o) = self.eng.obs.as_mut() {
+                o.on_fault("recovery");
+            }
+        }
+        self.dispatch(&revived, t)
     }
 
     /// Put `edge`'s warm-start snapshot on its downlink for its migrants.

@@ -7,8 +7,8 @@ use crate::obs::Observer;
 use crate::pca::PcaModel;
 use crate::runtime::{pool::TrainJob, DevicePool, HostTensor, Runtime};
 use crate::sim::{
-    CpuModel, Direction, EnergyModel, LinkManager, MobilityModel,
-    NetworkModel, SimClock,
+    AvailabilityModel, CpuModel, Direction, EnergyModel, LinkManager,
+    MobilityModel, NetworkModel, SimClock,
 };
 use crate::util::rng::Rng;
 use crate::util::threadpool::par_for_each;
@@ -39,6 +39,12 @@ pub struct HflEngine {
     pub membership: MembershipTracker,
     /// Outcome of the most recent re-clustering, if any ran this run.
     pub last_recluster: Option<ReclusterOutcome>,
+    /// Diurnal availability windows (`lifecycle.pace_day` > 0): pace
+    /// steering's substrate. `None` keeps every selection path bitwise
+    /// identical to the pre-lifecycle engine — the model draws from its
+    /// own stream (`seed ^ 0xd1a1`) only at construction, never during
+    /// a run.
+    pub avail: Option<AvailabilityModel>,
     rng: Rng,
     /// Flat model parameter count.
     pub p: usize,
@@ -114,6 +120,16 @@ impl HflEngine {
         let mobility = MobilityModel::from_config(n, &cfg.sim, cfg.seed);
         let membership =
             MembershipTracker::from_config(&cfg.cluster, cfg.seed);
+        let avail = if cfg.lifecycle.pace_day > 0.0 {
+            Some(AvailabilityModel::new(
+                n,
+                cfg.lifecycle.pace_day,
+                cfg.lifecycle.avail_frac,
+                cfg.seed,
+            ))
+        } else {
+            None
+        };
         // One buffer serves the whole hierarchy at startup: cloud, edges
         // and devices are all shares of the same init model (was: N+M+1
         // full clones — the O(N·p) wall this store breaks).
@@ -144,6 +160,7 @@ impl HflEngine {
             mobility,
             membership,
             last_recluster: None,
+            avail,
             rng,
             round: 0,
             total_energy: 0.0,
@@ -324,7 +341,13 @@ impl HflEngine {
             .next_u64()
     }
 
-    /// Whether `device` trains this round (mobility + participation mask).
+    /// Whether `device` trains this round (mobility + participation mask
+    /// + availability window). A lock-step barrier cannot *defer* a
+    /// dispatch the way the event loop does, so pace steering here is
+    /// selection at the round boundary: an out-of-window device sits the
+    /// round out and rejoins when its diurnal window and a later round
+    /// line up. Availability is read at the frozen round-start clock, so
+    /// every sub-round of one round sees the same answer.
     pub(crate) fn trains_this_round(
         &self,
         device: usize,
@@ -332,6 +355,11 @@ impl HflEngine {
     ) -> bool {
         self.mobility.is_active(device)
             && participation.map(|p| p[device]).unwrap_or(true)
+            && self
+                .avail
+                .as_ref()
+                .map(|a| a.is_available(device, self.clock.now()))
+                .unwrap_or(true)
     }
 
     /// Edge `j`'s members that train this round, in member order.
@@ -912,6 +940,36 @@ impl HflEngine {
         };
     }
 
+    /// Mean availability of edge `j`'s members at `now` (1.0 when pace
+    /// steering is off — the lifecycle-off baseline the schema-v2 CSV
+    /// columns record on every run).
+    pub(crate) fn edge_availability(&self, j: usize, now: f64) -> f64 {
+        match &self.avail {
+            Some(a) => {
+                a.fraction_available(&self.topo.edges[j].members, now)
+            }
+            None => 1.0,
+        }
+    }
+
+    /// Record the lifecycle observables of a barrier round: zero
+    /// abandoned (a barrier waits for every participant — nothing is
+    /// ever cut loose mid-flight) and each edge's membership
+    /// availability at the round boundary. The event engine records
+    /// real abandonment counts through the same accumulator hook, so
+    /// both engines emit identical schema-v2 rows. Called at the same
+    /// position by `HflEngine::run_round` and the event engine's
+    /// synchronous `run_round` — part of their bit-for-bit contract.
+    pub(crate) fn record_lifecycle_baseline(
+        &self,
+        acc: &mut RoundAccumulator,
+        now: f64,
+    ) {
+        for j in 0..self.edges() {
+            acc.record_lifecycle(j, 0, self.edge_availability(j, now));
+        }
+    }
+
     /// Execute one cloud round under per-edge frequencies.
     /// `participation`: per-device mask (None = all mobility-active devices
     /// train). Devices that skip keep their model and spend nothing.
@@ -1003,6 +1061,7 @@ impl HflEngine {
         if let Some(out) = self.maybe_recluster_barrier(&mut acc)? {
             round_time += out.migration_downlink_time;
         }
+        self.record_lifecycle_baseline(&mut acc, self.clock.now());
 
         let (accuracy, test_loss) = self.evaluate()?;
         let mut stats = acc.finish(

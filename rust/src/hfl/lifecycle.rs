@@ -1,0 +1,379 @@
+//! Production client lifecycle: over-selection, pace steering, and
+//! deterministic failure injection ("Towards Federated Learning at
+//! Scale", arXiv:1902.01046 — the machinery a real million-device HFL
+//! deployment runs under).
+//!
+//! # Determinism rules
+//!
+//! Faults are **scheduled events, never ambient state**. A seeded
+//! [`FaultPlan`] is expanded once, up front, into a time-sorted list of
+//! [`Event::EdgeOutage`] / [`Event::Partition`] / [`Event::CrashStorm`]
+//! entries; engines schedule them into the same [`EventQueue`] as every
+//! other event and mutate lifecycle state only inside the handler. No
+//! clock reads, no per-handler draws, no thread-local coin flips — so a
+//! chaos run replays bitwise at any worker count and with either queue
+//! backend, and the worker-count byte-equality CI gate extends to
+//! fault-injected runs unchanged.
+//!
+//! Three corollaries, each load-bearing:
+//!
+//! * **Plan expansion draws from a dedicated stream** (`seed ^
+//!   0xfa0175`), the same isolation discipline as mobility and
+//!   availability. A zero-count [`FaultPlan`] is *empty*: nothing is
+//!   scheduled, no tie-break draws are consumed, and a run with the
+//!   fault layer compiled-in-but-disabled is bitwise identical to one
+//!   that predates it (the sixth no-op guarantee, tested in
+//!   `tests/integration.rs`).
+//! * **Crash membership is a pure predicate.** A storm carries a seed
+//!   and a fixed-point fraction; device `d` is hit iff
+//!   [`storm_hits`]`(seed, d, frac_bits)`. The crash set and the rejoin
+//!   set are computed, not sampled — identical by construction, and
+//!   independent of which shard or worker evaluates them.
+//! * **Over-selection closes on landing order, which is total.** The
+//!   queue's `(time, tie, seq)` order is backend- and worker-invariant,
+//!   so "the first K of N dispatched" is a deterministic set per seed
+//!   (tested against both queue backends below).
+//!
+//! Pace steering *defers* dispatches by
+//! [`AvailabilityModel::delay_until`](crate::sim::AvailabilityModel);
+//! it never filters a device out entirely — a fully-skipped member
+//! would leave its edge with no future event to close the round.
+
+use crate::config::FaultConfig;
+use crate::sim::event::Event;
+use crate::sim::AvailabilityModel;
+use crate::util::rng::Rng;
+
+/// A seeded, pre-expanded schedule of fault events. Built once per run;
+/// engines drain it into their event queue (event engine) or apply
+/// entries at round boundaries (barrier engine).
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    events: Vec<(f64, Event)>,
+}
+
+impl FaultPlan {
+    /// Expand `fault.*` knobs into a time-sorted event list over
+    /// `[0, horizon)`. Injection times draw from `seed ^ 0xfa0175`;
+    /// with all counts zero the plan is empty and **no RNG state is
+    /// consumed** — the disabled fault layer is bitwise invisible.
+    pub fn build(
+        cfg: &FaultConfig,
+        edges: usize,
+        horizon: f64,
+        seed: u64,
+    ) -> Self {
+        let mut events = Vec::new();
+        if cfg.outages + cfg.partitions + cfg.crash_storms == 0
+            || edges == 0
+            || !(horizon.is_finite() && horizon > 0.0)
+        {
+            return FaultPlan { events };
+        }
+        let mut rng = Rng::new(seed ^ 0xfa0175);
+        // Keep injections inside the first 80% of the horizon so the
+        // matching recovery usually lands before the run ends (a
+        // recovery past the horizon is legal — it just never fires).
+        let window = horizon * 0.8;
+        for _ in 0..cfg.outages {
+            let t = rng.uniform() * window;
+            let edge = rng.below(edges);
+            events.push((t, Event::EdgeOutage { edge, up: false }));
+            events.push((
+                t + cfg.outage_duration,
+                Event::EdgeOutage { edge, up: true },
+            ));
+        }
+        let edge_mask = if edges >= 64 {
+            u64::MAX
+        } else {
+            (1u64 << edges) - 1
+        };
+        for _ in 0..cfg.partitions {
+            let t = rng.uniform() * window;
+            // AND of two draws severs ~25% of edges; rejection keeps
+            // the mask non-empty (deterministic: pure function of the
+            // stream position).
+            let mut mask = rng.next_u64() & rng.next_u64() & edge_mask;
+            while mask == 0 {
+                mask = rng.next_u64() & edge_mask;
+            }
+            events.push((t, Event::Partition { mask, up: false }));
+            events.push((
+                t + cfg.partition_duration,
+                Event::Partition { mask, up: true },
+            ));
+        }
+        let frac_bits = frac_to_bits(cfg.crash_frac);
+        for _ in 0..cfg.crash_storms {
+            let t = rng.uniform() * window;
+            let storm = rng.next_u64();
+            events.push((
+                t,
+                Event::CrashStorm { seed: storm, frac_bits, up: false },
+            ));
+            events.push((
+                t + cfg.rejoin_delay,
+                Event::CrashStorm { seed: storm, frac_bits, up: true },
+            ));
+        }
+        // Stable sort: simultaneous faults keep expansion order, so the
+        // plan itself is a total order before the queue ever sees it.
+        events.sort_by(|a, b| a.0.total_cmp(&b.0));
+        FaultPlan { events }
+    }
+
+    pub fn events(&self) -> &[(f64, Event)] {
+        &self.events
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+}
+
+/// Map a crash fraction in `[0,1]` to the fixed-point threshold carried
+/// by [`Event::CrashStorm`] (`Event` is `Eq`, so no `f64` payloads).
+/// `0.0` hits nobody; `1.0` hits all but a 2^-32 sliver.
+pub fn frac_to_bits(frac: f64) -> u32 {
+    (frac.clamp(0.0, 1.0) * u32::MAX as f64) as u32
+}
+
+/// Is `device` in the storm's crash set? Pure splitmix64-style integer
+/// hash of `(seed, device)` against the fixed-point threshold — the
+/// rejoin handler recomputes the identical set, on any worker.
+pub fn storm_hits(seed: u64, device: usize, frac_bits: u32) -> bool {
+    let mut z = seed
+        .wrapping_add((device as u64).wrapping_mul(0x9e3779b97f4a7c15));
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^= z >> 31;
+    ((z >> 32) as u32) < frac_bits
+}
+
+/// How many devices to dispatch for a round that closes on `k`
+/// landings. `factor <= 0` disables over-selection (dispatch the whole
+/// pool, the pre-lifecycle behavior); an enabled factor dispatches
+/// `ceil(k * factor)`, clamped so we never dispatch fewer than the
+/// quorum needs nor more than the pool holds.
+pub fn overselect_count(k: usize, factor: f64, pool: usize) -> usize {
+    if factor <= 0.0 || pool == 0 {
+        return pool;
+    }
+    let want = (k as f64 * factor).ceil() as usize;
+    want.clamp(k.min(pool), pool)
+}
+
+/// Pick `n` members to dispatch, preferring devices currently inside
+/// their availability window; order within each class follows `members`
+/// (canonical member order), so the selection is a pure function of
+/// `(members, availability, now)`.
+pub fn select_dispatch(
+    members: &[usize],
+    n: usize,
+    avail: Option<&AvailabilityModel>,
+    now: f64,
+) -> Vec<usize> {
+    let n = n.min(members.len());
+    let Some(am) = avail else {
+        return members[..n].to_vec();
+    };
+    let mut picked = Vec::with_capacity(n);
+    for &d in members {
+        if picked.len() == n {
+            return picked;
+        }
+        if am.is_available(d, now) {
+            picked.push(d);
+        }
+    }
+    for &d in members {
+        if picked.len() == n {
+            break;
+        }
+        if !am.is_available(d, now) {
+            picked.push(d);
+        }
+    }
+    picked
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::event::{EventQueue, QueueBackend};
+
+    fn chaos_cfg() -> FaultConfig {
+        FaultConfig {
+            outages: 3,
+            outage_duration: 50.0,
+            partitions: 2,
+            partition_duration: 80.0,
+            crash_storms: 2,
+            crash_frac: 0.3,
+            rejoin_delay: 40.0,
+        }
+    }
+
+    #[test]
+    fn zero_count_plan_is_empty() {
+        let plan = FaultPlan::build(&FaultConfig::default(), 8, 1000.0, 7);
+        assert!(plan.is_empty());
+        assert_eq!(plan.len(), 0);
+    }
+
+    #[test]
+    fn plan_is_reproducible_and_seed_sensitive() {
+        let a = FaultPlan::build(&chaos_cfg(), 8, 1000.0, 7);
+        let b = FaultPlan::build(&chaos_cfg(), 8, 1000.0, 7);
+        let c = FaultPlan::build(&chaos_cfg(), 8, 1000.0, 8);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.events().iter().zip(b.events()) {
+            assert_eq!(x.0.to_bits(), y.0.to_bits());
+            assert_eq!(x.1, y.1);
+        }
+        assert!(
+            a.events().iter().zip(c.events()).any(|(x, y)| x.1 != y.1
+                || x.0.to_bits() != y.0.to_bits()),
+            "different seeds must produce different plans"
+        );
+    }
+
+    #[test]
+    fn plan_is_sorted_and_faults_pair_up() {
+        let plan = FaultPlan::build(&chaos_cfg(), 8, 1000.0, 11);
+        assert_eq!(plan.len(), 2 * (3 + 2 + 2));
+        let ev = plan.events();
+        for w in ev.windows(2) {
+            assert!(w[0].0 <= w[1].0, "plan must be time-sorted");
+        }
+        // Every down has a matching up at the configured offset.
+        for &(t, e) in ev {
+            match e {
+                Event::EdgeOutage { edge, up: false } => {
+                    assert!(ev.iter().any(|&(t2, e2)| e2
+                        == Event::EdgeOutage { edge, up: true }
+                        && (t2 - t - 50.0).abs() < 1e-9));
+                }
+                Event::Partition { mask, up: false } => {
+                    assert_ne!(mask, 0, "partition mask must be non-empty");
+                    assert!(ev.iter().any(|&(t2, e2)| e2
+                        == Event::Partition { mask, up: true }
+                        && (t2 - t - 80.0).abs() < 1e-9));
+                }
+                Event::CrashStorm { seed, frac_bits, up: false } => {
+                    assert!(ev.iter().any(|&(t2, e2)| e2
+                        == Event::CrashStorm { seed, frac_bits, up: true }
+                        && (t2 - t - 40.0).abs() < 1e-9));
+                }
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn partition_masks_stay_inside_the_edge_set() {
+        let cfg = FaultConfig { partitions: 20, ..chaos_cfg() };
+        let plan = FaultPlan::build(&cfg, 5, 1000.0, 3);
+        for &(_, e) in plan.events() {
+            if let Event::Partition { mask, .. } = e {
+                assert_eq!(mask & !0b11111, 0, "mask {mask:b} beyond edge 4");
+            }
+        }
+    }
+
+    #[test]
+    fn storm_predicate_is_pure_and_hits_the_fraction() {
+        let bits = frac_to_bits(0.3);
+        let n = 100_000usize;
+        let hits = (0..n).filter(|&d| storm_hits(42, d, bits)).count();
+        let frac = hits as f64 / n as f64;
+        assert!((frac - 0.3).abs() < 0.02, "storm hit fraction {frac}");
+        for d in 0..1000 {
+            assert_eq!(
+                storm_hits(42, d, bits),
+                storm_hits(42, d, bits),
+                "predicate must be pure (crash set == rejoin set)"
+            );
+        }
+        assert_eq!(frac_to_bits(0.0), 0);
+        assert!((0..1000).all(|d| !storm_hits(7, d, 0)));
+    }
+
+    #[test]
+    fn overselect_count_bounds() {
+        // Disabled → whole pool (pre-lifecycle behavior).
+        assert_eq!(overselect_count(5, 0.0, 20), 20);
+        // Google's 130%: close on 10, dispatch 13.
+        assert_eq!(overselect_count(10, 1.3, 20), 13);
+        // Never below the quorum, never above the pool.
+        assert_eq!(overselect_count(10, 1.0, 20), 10);
+        assert_eq!(overselect_count(10, 5.0, 12), 12);
+        assert_eq!(overselect_count(10, 1.3, 8), 8);
+        assert_eq!(overselect_count(0, 1.3, 20), 0);
+    }
+
+    #[test]
+    fn select_dispatch_prefers_available_members() {
+        let am = AvailabilityModel::new(40, 1000.0, 0.5, 9);
+        let members: Vec<usize> = (0..40).collect();
+        let t = 333.0;
+        let picked = select_dispatch(&members, 10, Some(&am), t);
+        assert_eq!(picked.len(), 10);
+        let n_avail =
+            members.iter().filter(|&&d| am.is_available(d, t)).count();
+        let picked_avail =
+            picked.iter().filter(|&&d| am.is_available(d, t)).count();
+        assert_eq!(
+            picked_avail,
+            n_avail.min(10),
+            "available members must be taken first"
+        );
+        // No model → canonical prefix.
+        assert_eq!(select_dispatch(&members, 3, None, t), vec![0, 1, 2]);
+        // Deterministic.
+        assert_eq!(picked, select_dispatch(&members, 10, Some(&am), t));
+    }
+
+    /// Satellite: the first-K-of-N landing set is deterministic per
+    /// seed and identical under both queue backends — the property the
+    /// over-selection close relies on.
+    #[test]
+    fn first_k_landings_deterministic_across_backends() {
+        let landings = |backend: QueueBackend| -> Vec<(u64, usize)> {
+            let mut q = EventQueue::for_scale(77, 64, backend);
+            let mut rng = Rng::new(99);
+            // Dispatch N = 13, close on K = 10 (overselect 1.3).
+            for d in 0..13usize {
+                let dur = 10.0 + 40.0 * rng.uniform();
+                q.schedule(
+                    dur,
+                    Event::DeviceTrainDone { device: d, edge: 0 },
+                );
+            }
+            let mut landed = Vec::new();
+            while landed.len() < 10 {
+                let (t, e) = q.pop().expect("13 scheduled, 10 popped");
+                if let Event::DeviceTrainDone { device, .. } = e {
+                    landed.push((t.to_bits(), device));
+                }
+            }
+            landed
+        };
+        let heap = landings(QueueBackend::Binary);
+        let cal = landings(QueueBackend::Calendar);
+        assert_eq!(
+            heap, cal,
+            "landing order (and thus the abandoned straggler set) must \
+             be queue-backend invariant"
+        );
+        assert_eq!(heap, landings(QueueBackend::Binary), "and seed-stable");
+        let set: std::collections::BTreeSet<usize> =
+            heap.iter().map(|&(_, d)| d).collect();
+        assert_eq!(set.len(), 10, "10 distinct first landings");
+    }
+}

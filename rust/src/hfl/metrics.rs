@@ -8,7 +8,10 @@ use crate::util::json::Json;
 /// comment, the per-round JSON objects and the `/stream` NDJSON frames
 /// all carry it so dashboards can evolve without silent breakage. Bump
 /// on any backwards-incompatible column/field change.
-pub const SCHEMA_VERSION: usize = 1;
+///
+/// v2: client-lifecycle columns (`abandoned`, `mean_availability`,
+/// `fault_events`) appended to the history CSV and round JSON.
+pub const SCHEMA_VERSION: usize = 2;
 
 /// Per-edge observables h_j(k) of paper Eq. (7), plus bookkeeping.
 ///
@@ -57,6 +60,14 @@ pub struct EdgeStats {
     /// device reports over the effective (live-clamped) quorum. 0 in the
     /// other modes (async reports aggregate immediately).
     pub quorum_fill: f64,
+    /// Over-selected stragglers abandoned (voided after the first-K
+    /// close) at this edge this round (`hfl::lifecycle`). 0 with
+    /// over-selection off.
+    pub abandoned: usize,
+    /// Fraction of the edge's members inside their availability window
+    /// at the cloud decision point. Engines record 1.0 when pace
+    /// steering is off (every device always available).
+    pub availability: f64,
 }
 
 impl EdgeStats {
@@ -66,6 +77,17 @@ impl EdgeStats {
             return (0.0, 0.0);
         }
         (self.up_busy / window, self.down_busy / window)
+    }
+
+    /// Fraction of this edge's dispatched work abandoned by the
+    /// over-selection close (0 when nothing was dispatched).
+    pub fn abandon_rate(&self) -> f64 {
+        let total = self.active + self.abandoned;
+        if total == 0 {
+            0.0
+        } else {
+            self.abandoned as f64 / total as f64
+        }
     }
 }
 
@@ -112,6 +134,11 @@ pub struct RoundStats {
     /// round end — →1.0 right after a cloud broadcast, the measured side
     /// of the O(N·p) → O(M·p) claim.
     pub sharing_ratio: f64,
+    /// Injected fault events (`hfl::lifecycle::FaultPlan`) applied
+    /// during this round/window — outage/partition transitions and
+    /// crash/rejoin storms. Stamped by the engines; 0 on fault-free
+    /// runs.
+    pub fault_events: usize,
 }
 
 impl RoundStats {
@@ -134,6 +161,34 @@ impl RoundStats {
             return 0.0;
         }
         let s: f64 = self.per_edge.iter().map(|e| e.staleness).sum();
+        s / self.per_edge.len() as f64
+    }
+
+    /// Total over-selected stragglers abandoned this round.
+    pub fn total_abandoned(&self) -> usize {
+        self.per_edge.iter().map(|e| e.abandoned).sum()
+    }
+
+    /// Fraction of dispatched work abandoned by over-selection closes
+    /// this round (0 with over-selection off — nothing is abandoned).
+    pub fn abandon_rate(&self) -> f64 {
+        let active: usize = self.per_edge.iter().map(|e| e.active).sum();
+        let abandoned = self.total_abandoned();
+        let total = active + abandoned;
+        if total == 0 {
+            0.0
+        } else {
+            abandoned as f64 / total as f64
+        }
+    }
+
+    /// Mean member availability over the edges at the decision point
+    /// (1.0 with pace steering off).
+    pub fn mean_availability(&self) -> f64 {
+        if self.per_edge.is_empty() {
+            return 1.0;
+        }
+        let s: f64 = self.per_edge.iter().map(|e| e.availability).sum();
         s / self.per_edge.len() as f64
     }
 
@@ -167,6 +222,9 @@ impl RoundStats {
             ("live_model_buffers", Json::num(self.live_model_buffers as f64)),
             ("peak_model_bytes", Json::num(self.peak_model_bytes as f64)),
             ("sharing_ratio", Json::num(self.sharing_ratio)),
+            ("abandoned", Json::num(self.total_abandoned() as f64)),
+            ("mean_availability", Json::num(self.mean_availability())),
+            ("fault_events", Json::num(self.fault_events as f64)),
             (
                 "gamma1",
                 Json::arr_f64(
@@ -316,6 +374,22 @@ impl RoundAccumulator {
         e.quorum_fill = quorum_fill;
     }
 
+    /// Record an edge's client-lifecycle observables at the decision
+    /// point: stragglers abandoned by the over-selection close and the
+    /// member availability fraction (`hfl::lifecycle`). Engines call
+    /// this unconditionally — with the lifecycle off it records
+    /// `(0, 1.0)`, the "everyone landed, everyone available" baseline.
+    pub fn record_lifecycle(
+        &mut self,
+        edge: usize,
+        abandoned: usize,
+        availability: f64,
+    ) {
+        let e = &mut self.per_edge[edge];
+        e.abandoned = abandoned;
+        e.availability = availability;
+    }
+
     /// Straggler-path duration: max per-edge total time.
     pub fn round_time(&self) -> f64 {
         self.per_edge
@@ -361,6 +435,7 @@ impl RoundAccumulator {
             live_model_buffers: 0,
             peak_model_bytes: 0,
             sharing_ratio: 0.0,
+            fault_events: 0,
         }
     }
 }
@@ -481,6 +556,27 @@ impl RunHistory {
         }
     }
 
+    /// Client-lifecycle summary over the rounds completed by simulated
+    /// time `t`: cumulative abandoned stragglers, mean member
+    /// availability, and cumulative injected fault events — the
+    /// lifecycle companion of [`RunHistory::at_time`].
+    pub fn lifecycle_stats_at(&self, t: f64) -> (usize, f64, usize) {
+        let mut abandoned = 0;
+        let mut avail = 0.0;
+        let mut faults = 0;
+        let mut n = 0.0;
+        for r in &self.rounds {
+            if r.sim_now > t {
+                break;
+            }
+            abandoned += r.total_abandoned();
+            avail += r.mean_availability();
+            faults += r.fault_events;
+            n += 1.0;
+        }
+        (abandoned, if n > 0.0 { avail / n } else { 1.0 }, faults)
+    }
+
     /// Cumulative (re-clusterings, migrated devices) over the rounds
     /// completed by simulated time `t` — the membership companion of
     /// [`RunHistory::at_time`] for the fig9/table summaries.
@@ -506,7 +602,8 @@ impl RunHistory {
               "cum_energy", "train_loss", "comm_overlap_frac",
               "mean_link_util", "mean_staleness", "n_reclusters",
               "migrated_devices", "active_devices", "edge_size_imbalance",
-              "live_model_buffers", "peak_model_bytes", "sharing_ratio"],
+              "live_model_buffers", "peak_model_bytes", "sharing_ratio",
+              "abandoned", "mean_availability", "fault_events"],
         )?;
         let mut cum = 0.0;
         for r in &self.rounds {
@@ -529,6 +626,9 @@ impl RunHistory {
                 r.live_model_buffers.to_string(),
                 r.peak_model_bytes.to_string(),
                 format!("{:.4}", r.sharing_ratio),
+                r.total_abandoned().to_string(),
+                format!("{:.4}", r.mean_availability()),
+                r.fault_events.to_string(),
             ])?;
         }
         w.flush()
@@ -559,6 +659,7 @@ mod tests {
             live_model_buffers: 0,
             peak_model_bytes: 0,
             sharing_ratio: 0.0,
+            fault_events: 0,
         }
     }
 
@@ -653,6 +754,29 @@ mod tests {
     }
 
     #[test]
+    fn lifecycle_recording_feeds_abandonment_and_availability() {
+        let mut acc = RoundAccumulator::new(3);
+        acc.record_train(0, 1, 10.0, 1.0, None);
+        acc.record_train(0, 2, 11.0, 1.0, None);
+        acc.record_train(1, 5, 12.0, 1.0, None);
+        // Edge 0 over-selected: 2 landed, 1 abandoned; 60% available.
+        acc.record_lifecycle(0, 1, 0.6);
+        acc.record_lifecycle(1, 0, 1.0);
+        acc.record_lifecycle(2, 0, 1.0);
+        let s = acc.finish(1, 0.5, 1.0, 12.0, 12.0, &[1; 3], &[1; 3]);
+        assert_eq!(s.per_edge[0].abandoned, 1);
+        assert!((s.per_edge[0].abandon_rate() - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.per_edge[1].abandon_rate(), 0.0);
+        assert_eq!(s.total_abandoned(), 1);
+        assert!((s.abandon_rate() - 0.25).abs() < 1e-12, "1 of 4 dispatched");
+        assert!((s.mean_availability() - 2.6 / 3.0).abs() < 1e-12);
+        let j = s.to_json();
+        assert_eq!(j.get("abandoned").unwrap().as_usize().unwrap(), 1);
+        assert!(j.get("mean_availability").is_some());
+        assert!(j.get("fault_events").is_some());
+    }
+
+    #[test]
     fn history_indexes_by_energy_budget() {
         let mut h = RunHistory::default();
         h.push(round(1, 0.3, 100.0, 10.0)); // cum 10, sim_now 100
@@ -712,5 +836,34 @@ mod tests {
         assert_eq!(h.membership_stats_at(50.0), (0, 0));
         assert_eq!(h.membership_stats_at(250.0), (1, 4));
         assert_eq!(h.membership_stats_at(1e9), (3, 7));
+    }
+
+    #[test]
+    fn lifecycle_stats_accumulate_by_time() {
+        let mut h = RunHistory::default();
+        let mut r1 = round(1, 0.3, 100.0, 10.0); // sim_now 100
+        r1.per_edge = vec![EdgeStats {
+            abandoned: 2,
+            availability: 0.5,
+            ..Default::default()
+        }];
+        r1.fault_events = 1;
+        let mut r2 = round(2, 0.4, 100.0, 10.0); // sim_now 200
+        r2.per_edge = vec![EdgeStats {
+            abandoned: 1,
+            availability: 1.0,
+            ..Default::default()
+        }];
+        r2.fault_events = 3;
+        h.push(r1);
+        h.push(r2);
+        // Before any round: the "everyone available" baseline.
+        assert_eq!(h.lifecycle_stats_at(50.0), (0, 1.0, 0));
+        let (ab, av, fe) = h.lifecycle_stats_at(150.0);
+        assert_eq!((ab, fe), (2, 1));
+        assert!((av - 0.5).abs() < 1e-12);
+        let (ab, av, fe) = h.lifecycle_stats_at(1e9);
+        assert_eq!((ab, fe), (3, 4));
+        assert!((av - 0.75).abs() < 1e-12);
     }
 }

@@ -17,6 +17,13 @@
 //! fair-share contention), so upload time can overlap the next local
 //! round and metrics report compute vs in-flight comm time separately.
 
+//! The lifecycle subsystem (`hfl/lifecycle.rs`) adds the production
+//! client machinery: over-selection (dispatch ceil(K·factor), close on
+//! the first K landings, abandon stragglers through the stale-result
+//! void path), availability-aware pace steering, and seeded fault
+//! injection (`FaultPlan` → `EdgeOutage`/`Partition`/`CrashStorm`
+//! events) — all bitwise deterministic at any worker count.
+
 //! The membership subsystem (`hfl/membership.rs`) keeps the clustered
 //! topology aligned with the *live* population: churn drift past
 //! `cluster.recluster_threshold` triggers a re-profile + region-constrained
@@ -64,6 +71,7 @@
 pub mod aggregate;
 pub mod async_engine;
 pub mod engine;
+pub mod lifecycle;
 pub mod membership;
 pub mod metrics;
 pub mod model_store;
@@ -71,6 +79,9 @@ pub mod topology;
 
 pub use async_engine::{AsyncHflEngine, SyncMode};
 pub use engine::HflEngine;
+pub use lifecycle::{
+    frac_to_bits, overselect_count, select_dispatch, storm_hits, FaultPlan,
+};
 pub use membership::{MembershipTracker, ReclusterOutcome};
 pub use metrics::{EdgeStats, RoundAccumulator, RoundStats, RunHistory};
 pub use model_store::{

@@ -43,7 +43,11 @@
 //! - counters (sim-derived): `arena_shard_windows_total`,
 //!   `arena_shard_events_total`, `arena_shard_voided_total`,
 //!   `arena_shard_aggregates_total`, `arena_shard_flips_total`,
-//!   `arena_shard_adopt_across_total`, `arena_shard_replicate_total`
+//!   `arena_shard_adopt_across_total`, `arena_shard_replicate_total`;
+//!   injected-fault counters `arena_fault_outage_total`,
+//!   `arena_fault_partition_total`, `arena_fault_crash_total` and the
+//!   roll-up `arena_fault_events_total` (also fed per-event by
+//!   [`Observer::on_fault`] on the event engines)
 //! - gauges (sim-derived): `arena_shard_count`,
 //!   `arena_shard_live_devices`, `arena_shard_queue_depth_peak`,
 //!   `arena_shard_imbalance` (max/mean per-shard events),
@@ -142,6 +146,10 @@ pub trait Observer: Send {
     /// A re-clustering executed at sim time `at`, migrating `migrated`
     /// devices at a host cost of `wall_ns`.
     fn on_recluster(&mut self, _at: f64, _migrated: usize, _wall_ns: u64) {}
+
+    /// An injected fault event was applied (`kind` ∈ `"outage"`,
+    /// `"partition"`, `"crash"`, `"recovery"`).
+    fn on_fault(&mut self, _kind: &'static str) {}
 
     /// Model-store occupancy snapshot at a round boundary.
     fn on_store(
@@ -324,6 +332,12 @@ impl Observer for RunObserver {
             .observe("arena_recluster_wall_ns", wall_ns as f64);
     }
 
+    fn on_fault(&mut self, kind: &'static str) {
+        let mut st = self.state.lock().unwrap();
+        st.registry.inc("arena_fault_events_total");
+        st.registry.inc(&format!("arena_fault_{kind}_total"));
+    }
+
     fn on_store(
         &mut self,
         live_buffers: usize,
@@ -355,6 +369,9 @@ impl Observer for RunObserver {
             let mut flips = 0u64;
             let mut adopt = 0u64;
             let mut replicate = 0u64;
+            let mut outages = 0u64;
+            let mut partitions = 0u64;
+            let mut crashes = 0u64;
             let mut live = 0usize;
             let mut depth_peak = 0usize;
             let mut store_live = 0usize;
@@ -368,6 +385,9 @@ impl Observer for RunObserver {
                 flips += p.flips;
                 adopt += p.adopt_across;
                 replicate += p.replicate;
+                outages += p.outages;
+                partitions += p.partitions;
+                crashes += p.crashes;
                 live += p.live_devices;
                 depth_peak = depth_peak.max(p.queue_depth_peak);
                 store_live += p.store_live_buffers;
@@ -399,6 +419,14 @@ impl Observer for RunObserver {
             st.registry.inc_by("arena_shard_adopt_across_total", adopt);
             st.registry
                 .inc_by("arena_shard_replicate_total", replicate);
+            st.registry.inc_by("arena_fault_outage_total", outages);
+            st.registry
+                .inc_by("arena_fault_partition_total", partitions);
+            st.registry.inc_by("arena_fault_crash_total", crashes);
+            st.registry.inc_by(
+                "arena_fault_events_total",
+                outages + partitions + crashes,
+            );
             st.registry
                 .set_gauge("arena_shard_count", shards.len() as f64);
             st.registry
@@ -622,6 +650,7 @@ mod tests {
             live_model_buffers: 2,
             peak_model_bytes: 1024,
             sharing_ratio: 0.9,
+            fault_events: 0,
         }
     }
 
@@ -746,6 +775,35 @@ mod tests {
                 "worker/1".into()
             ]
         );
+    }
+
+    #[test]
+    fn fault_counters_fold_at_barriers_and_per_event() {
+        let mut o = RunObserver::new();
+        let shards = vec![
+            ShardWindowProfile {
+                outages: 1,
+                partitions: 2,
+                crashes: 5,
+                ..profile(0, 6)
+            },
+            profile(1, 2),
+        ];
+        o.on_shard_barrier(&row(), &shards, &pool_profile());
+        o.on_fault("outage");
+        o.on_fault("recovery");
+        let st = o.state();
+        let st = st.lock().unwrap();
+        assert_eq!(st.registry.counter("arena_fault_outage_total"), 2);
+        assert_eq!(st.registry.counter("arena_fault_partition_total"), 2);
+        assert_eq!(st.registry.counter("arena_fault_crash_total"), 5);
+        assert_eq!(st.registry.counter("arena_fault_recovery_total"), 1);
+        assert_eq!(st.registry.counter("arena_fault_events_total"), 10);
+        // The series render (at zero too) as soon as a barrier closes —
+        // the telemetry-smoke grep in CI relies on this.
+        let text = st.registry.render_prometheus();
+        assert!(text.contains("arena_fault_outage_total"));
+        assert!(text.contains("arena_fault_events_total"));
     }
 
     #[test]

@@ -61,6 +61,12 @@ pub struct ShardWindowProfile {
     pub replicate: u64,
     /// Bytes copied by those replications.
     pub replicate_bytes: u64,
+    /// Injected edge-outage events (down only) handled this window.
+    pub outages: u64,
+    /// Owned edges severed by injected partitions this window.
+    pub partitions: u64,
+    /// Devices crashed by injected storms this window.
+    pub crashes: u64,
     /// Wall time of this shard's `advance` call (observer-only).
     pub advance_wall_ns: u64,
     /// Wall time from window start to this shard's arrival at the

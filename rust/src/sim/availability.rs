@@ -1,0 +1,175 @@
+//! Deterministic diurnal device availability — the pace-steering
+//! substrate ("Towards Federated Learning at Scale", arXiv:1902.01046:
+//! devices check in on diurnal waves; the selector shapes the arrival
+//! rate instead of dispatching into the trough).
+//!
+//! Each device owns one availability window inside a configurable day:
+//! a start phase and a length drawn once at construction from a
+//! dedicated stream (`seed ^ 0xd1a1`), the same isolation discipline as
+//! [`crate::sim::mobility::MobilityModel`] — enabling pace steering
+//! never perturbs training, communication or churn draws. After
+//! construction the model consumes no RNG at all: availability is a
+//! pure function of `(device, sim_time)`, so both engines (barrier and
+//! event loop) and every worker count read identical answers.
+//!
+//! The engines never *skip* an unavailable device (that could stall an
+//! edge forever); they defer its dispatch by
+//! [`AvailabilityModel::delay_until`] — arrival-rate shaping, not
+//! participation filtering — and prefer currently-available devices
+//! when over-selection picks a subset.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct AvailabilityModel {
+    /// Diurnal period in simulated seconds.
+    day: f64,
+    /// Per-device window start phase in `[0, day)`.
+    start: Vec<f64>,
+    /// Per-device window length in `(0, day]`.
+    len: Vec<f64>,
+}
+
+impl AvailabilityModel {
+    /// Seeded diurnal model: every device is available for roughly
+    /// `avail_frac` of each `day` (per-device length jittered ±25% and
+    /// clamped to `(0, day]`), with a uniform start phase.
+    pub fn new(n: usize, day: f64, avail_frac: f64, seed: u64) -> Self {
+        assert!(day > 0.0, "diurnal day must be positive ({day})");
+        let frac = avail_frac.clamp(0.01, 1.0);
+        let mut rng = Rng::new(seed ^ 0xd1a1);
+        let mut start = Vec::with_capacity(n);
+        let mut len = Vec::with_capacity(n);
+        for _ in 0..n {
+            start.push(rng.uniform() * day);
+            let jitter = 0.75 + 0.5 * rng.uniform();
+            len.push((day * frac * jitter).clamp(day * 1e-3, day));
+        }
+        AvailabilityModel { day, start, len }
+    }
+
+    pub fn day(&self) -> f64 {
+        self.day
+    }
+
+    /// Is `device` inside its window at simulated time `t`?
+    pub fn is_available(&self, device: usize, t: f64) -> bool {
+        let phase = t.rem_euclid(self.day);
+        let s = self.start[device];
+        let e = s + self.len[device];
+        if e <= self.day {
+            phase >= s && phase < e
+        } else {
+            // Window wraps midnight.
+            phase >= s || phase < e - self.day
+        }
+    }
+
+    /// Seconds until `device` next enters its window (0 if available
+    /// now). Pure arithmetic — no draws — so deferring a dispatch by
+    /// this delay is deterministic at any worker count.
+    pub fn delay_until(&self, device: usize, t: f64) -> f64 {
+        if self.is_available(device, t) {
+            return 0.0;
+        }
+        let phase = t.rem_euclid(self.day);
+        let s = self.start[device];
+        if phase < s {
+            s - phase
+        } else {
+            self.day - phase + s
+        }
+    }
+
+    /// Mean availability of `devices` at time `t` — the DRL observable
+    /// (`agent/state.rs` availability column).
+    pub fn fraction_available(&self, devices: &[usize], t: f64) -> f64 {
+        if devices.is_empty() {
+            return 1.0;
+        }
+        let n = devices
+            .iter()
+            .filter(|&&d| self.is_available(d, t))
+            .count();
+        n as f64 / devices.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_is_reproducible() {
+        let a = AvailabilityModel::new(64, 3600.0, 0.5, 7);
+        let b = AvailabilityModel::new(64, 3600.0, 0.5, 7);
+        for d in 0..64 {
+            for k in 0..20 {
+                let t = k as f64 * 137.5;
+                assert_eq!(a.is_available(d, t), b.is_available(d, t));
+                assert_eq!(
+                    a.delay_until(d, t).to_bits(),
+                    b.delay_until(d, t).to_bits()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn windows_cover_roughly_the_requested_fraction() {
+        let m = AvailabilityModel::new(200, 1000.0, 0.5, 3);
+        let mut avail = 0usize;
+        let mut total = 0usize;
+        for d in 0..200 {
+            for k in 0..100 {
+                total += 1;
+                if m.is_available(d, k as f64 * 10.0) {
+                    avail += 1;
+                }
+            }
+        }
+        let frac = avail as f64 / total as f64;
+        assert!((frac - 0.5).abs() < 0.1, "availability frac {frac}");
+    }
+
+    #[test]
+    fn delay_lands_inside_the_window() {
+        let m = AvailabilityModel::new(32, 500.0, 0.3, 11);
+        for d in 0..32 {
+            for k in 0..40 {
+                let t = k as f64 * 61.7;
+                let delay = m.delay_until(d, t);
+                assert!(delay >= 0.0 && delay < 500.0);
+                assert!(
+                    m.is_available(d, t + delay + 1e-9),
+                    "device {d} still unavailable after its delay"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn availability_is_periodic() {
+        let m = AvailabilityModel::new(16, 250.0, 0.4, 5);
+        for d in 0..16 {
+            for k in 0..25 {
+                let t = k as f64 * 13.0;
+                assert_eq!(
+                    m.is_available(d, t),
+                    m.is_available(d, t + 250.0 * 3.0)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fraction_available_bounds() {
+        let m = AvailabilityModel::new(50, 800.0, 0.5, 9);
+        let devs: Vec<usize> = (0..50).collect();
+        for k in 0..30 {
+            let f = m.fraction_available(&devs, k as f64 * 97.0);
+            assert!((0.0..=1.0).contains(&f));
+        }
+        assert_eq!(m.fraction_available(&[], 0.0), 1.0);
+    }
+}

@@ -42,7 +42,13 @@
 //!    `sim::link::LinkManager` lands. Contention re-predictions leave
 //!    stale `TransferDone`s in the queue; the link layer identifies the
 //!    live one by bit-exact timestamp match, so poppers must route these
-//!    through `LinkManager::poll` and drop the `None`s.
+//!    through `LinkManager::poll` and drop the `None`s;
+//!  * `EdgeOutage` / `Partition` / `CrashStorm` — injected failures
+//!    scheduled from a seeded `hfl::lifecycle::FaultPlan`: an edge
+//!    server going down/up, an edge↔cloud partition over a bitmask of
+//!    edges, and a mid-round device crash/rejoin wave selected by a
+//!    pure integer predicate. Faults are scheduled events, never
+//!    ambient state, so chaos runs stay bitwise reproducible.
 
 use std::cmp::Ordering;
 use std::collections::{BTreeMap, BinaryHeap};
@@ -65,6 +71,19 @@ pub enum Event {
     Recluster,
     /// An in-flight transfer's predicted landing (id from the link layer).
     TransferDone { transfer: usize },
+    /// An edge server fails (`up == false`) or recovers (`up == true`).
+    /// Scheduled from a seeded `hfl::lifecycle::FaultPlan` — faults are
+    /// events, never ambient state, so chaos runs replay bitwise.
+    EdgeOutage { edge: usize, up: bool },
+    /// A network partition severs (`up == false`) or heals
+    /// (`up == true`) the edge↔cloud path of every edge whose
+    /// `index % 64` bit is set in `mask`.
+    Partition { mask: u64, up: bool },
+    /// A mid-round crash (`up == false`) / rejoin (`up == true`) storm:
+    /// device `d` is hit iff `hfl::lifecycle::storm_hits(seed, d,
+    /// frac_bits)` — a pure integer predicate, so the crash set and the
+    /// rejoin set are identical and worker-count invariant.
+    CrashStorm { seed: u64, frac_bits: u32, up: bool },
 }
 
 /// Storage backend selector for [`EventQueue`] (`sim.queue_backend`).

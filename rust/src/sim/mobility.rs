@@ -84,6 +84,17 @@ impl MobilityModel {
         self.active[device]
     }
 
+    /// Force `device`'s state — the injected-fault hook
+    /// (`hfl::lifecycle` crash storms). RNG-safe by construction:
+    /// [`MobilityModel::step`] draws exactly one uniform per device
+    /// regardless of state, so external toggles never desync the churn
+    /// stream (a toggled run and an untoggled one consume identical
+    /// draws). Not reported through `flipped()`/`flip_stats()` — fault
+    /// churn is accounted by the fault counters, not the mobility ones.
+    pub fn set_active(&mut self, device: usize, active: bool) {
+        self.active[device] = active;
+    }
+
     pub fn active_count(&self) -> usize {
         self.active.iter().filter(|&&a| a).count()
     }

@@ -6,6 +6,7 @@
 //! as calibrated stochastic models driving a simulated clock; the *learning*
 //! itself stays real (actual SGD through the AOT artifacts).
 
+pub mod availability;
 pub mod clock;
 pub mod cpu;
 pub mod energy;
@@ -15,6 +16,7 @@ pub mod mobility;
 pub mod network;
 pub mod shard;
 
+pub use availability::AvailabilityModel;
 pub use clock::SimClock;
 pub use cpu::CpuModel;
 pub use energy::EnergyModel;

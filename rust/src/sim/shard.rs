@@ -55,6 +55,8 @@
 
 use std::io::Write as _;
 
+use crate::config::FaultConfig;
+use crate::hfl::lifecycle::{storm_hits, FaultPlan};
 use crate::hfl::model_store::{ModelRef, ModelStore};
 use crate::obs::profiler::{
     PoolWindowProfile, ShardProfiler, ShardWindowProfile,
@@ -95,6 +97,23 @@ pub struct ShardSpec {
     /// this bound) injected before each shard window — adversarial
     /// thread interleaving that the output must not observe.
     pub adversarial_delay_us: u64,
+    /// Injected edge outages over the run (`fault.outages`; 0 disables —
+    /// and a zero-fault spec is bitwise identical to one that predates
+    /// the fault layer, the sixth no-op guarantee).
+    pub outages: usize,
+    /// Seconds a failed edge stays down (`fault.outage_duration`).
+    pub outage_duration: f64,
+    /// Injected edge↔cloud partitions over the run (`fault.partitions`).
+    pub partitions: usize,
+    /// Seconds a partition stays severed (`fault.partition_duration`).
+    pub partition_duration: f64,
+    /// Injected crash/rejoin storms over the run (`fault.crash_storms`).
+    pub crash_storms: usize,
+    /// Fraction of devices each storm crashes (`fault.crash_frac`).
+    pub crash_frac: f64,
+    /// Seconds between a storm's crash and its rejoin wave
+    /// (`fault.rejoin_delay`).
+    pub rejoin_delay: f64,
 }
 
 impl Default for ShardSpec {
@@ -112,6 +131,13 @@ impl Default for ShardSpec {
             leave_prob: 0.05,
             join_prob: 0.3,
             adversarial_delay_us: 0,
+            outages: 0,
+            outage_duration: 120.0,
+            partitions: 0,
+            partition_duration: 180.0,
+            crash_storms: 0,
+            crash_frac: 0.3,
+            rejoin_delay: 90.0,
         }
     }
 }
@@ -136,6 +162,19 @@ impl ShardSpec {
                 .unwrap_or(1)
         }
     }
+
+    /// The spec's `fault.*` view, for [`FaultPlan::build`].
+    pub fn fault_config(&self) -> FaultConfig {
+        FaultConfig {
+            outages: self.outages,
+            outage_duration: self.outage_duration,
+            partitions: self.partitions,
+            partition_duration: self.partition_duration,
+            crash_storms: self.crash_storms,
+            crash_frac: self.crash_frac,
+            rejoin_delay: self.rejoin_delay,
+        }
+    }
 }
 
 struct DevState {
@@ -150,11 +189,20 @@ struct DevState {
 }
 
 struct EdgeState {
+    /// Global edge index (for partition masks, which address global
+    /// edge bits).
+    global: usize,
     version: u64,
     model: ModelRef,
     /// Local device indices of members (canonical order).
     members: Vec<usize>,
     reports: usize,
+    /// Down by an injected [`Event::EdgeOutage`]: no dispatch, no
+    /// aggregation; landings void through the straggler path.
+    faulted: bool,
+    /// Severed from the cloud by an injected [`Event::Partition`]:
+    /// training continues, broadcasts don't land.
+    partitioned: bool,
 }
 
 /// One shard's complete private world (see module doc).
@@ -175,6 +223,9 @@ struct Shard {
     voided: u64,
     aggregates: u64,
     flips: u64,
+    outages: u64,
+    partitions: u64,
+    crashes: u64,
     loss_sum: f64,
     loss_n: u64,
     energy: f64,
@@ -191,6 +242,9 @@ pub struct WindowReport {
     pub voided: u64,
     pub aggregates: u64,
     pub flips: u64,
+    pub outages: u64,
+    pub partitions: u64,
+    pub crashes: u64,
     pub live: usize,
     pub loss_sum: f64,
     pub loss_n: u64,
@@ -212,6 +266,9 @@ pub struct WindowRow {
     pub energy: f64,
     pub aggregates: u64,
     pub cloud_version: u64,
+    /// Fault events applied this window (outage downs + severed edges +
+    /// crashed devices) — 0 on every row of a zero-fault run.
+    pub faults: u64,
     /// Fold of per-shard checksums in shard order.
     pub checksum: u64,
 }
@@ -224,6 +281,9 @@ pub struct MergedStats {
     pub voided: u64,
     pub aggregates: u64,
     pub flips: u64,
+    pub outages: u64,
+    pub partitions: u64,
+    pub crashes: u64,
     pub peak_queue_len: usize,
     pub store_live: usize,
 }
@@ -244,8 +304,9 @@ impl Shard {
     }
 
     fn on_train_done(&mut self, d: usize, e: usize, now: f64) {
-        if !self.devices[d].live {
-            // Departed mid-round: the straggler's result is void.
+        if !self.devices[d].live || self.edges[e].faulted {
+            // Departed (or crashed) mid-round, or the edge went down:
+            // the straggler's result is void.
             self.devices[d].busy = false;
             self.voided += 1;
             return;
@@ -269,7 +330,7 @@ impl Shard {
     /// Aggregate an edge once every live member has reported (the
     /// departed don't count; their in-flight results were voided).
     fn try_aggregate(&mut self, e: usize, now: f64) {
-        if self.edges[e].reports == 0 {
+        if self.edges[e].reports == 0 || self.edges[e].faulted {
             return;
         }
         let any_busy = self.edges[e].members.iter().any(|&d| {
@@ -319,13 +380,16 @@ impl Shard {
             } else if u < self.join_prob {
                 self.devices[d].live = true;
                 if !self.devices[d].busy {
-                    // Warm start from the current edge model, then train.
+                    // Warm start from the current edge model, then train
+                    // (a faulted edge re-dispatches on recovery instead).
                     let e = self.devices[d].edge;
                     self.store.repoint(
                         &mut self.devices[d].w,
                         &self.edges[e].model,
                     );
-                    self.dispatch(d, now);
+                    if !self.edges[e].faulted {
+                        self.dispatch(d, now);
+                    }
                 }
             }
         }
@@ -337,9 +401,95 @@ impl Shard {
             .schedule(now + self.flip_dt, Event::MobilityFlip);
     }
 
+    /// An injected edge failure (`up == false`) or recovery. Down: the
+    /// edge stops dispatching and aggregating; every in-flight member
+    /// result will void on landing. Up: warm-restart every live,
+    /// non-busy member so the edge resumes making progress.
+    fn on_edge_outage(&mut self, e: usize, up: bool, now: f64) {
+        if up {
+            self.edges[e].faulted = false;
+            self.edges[e].reports = 0;
+            let members = self.edges[e].members.clone();
+            for d in members {
+                let dv = &self.devices[d];
+                if dv.live && !dv.busy {
+                    self.store.repoint(
+                        &mut self.devices[d].w,
+                        &self.edges[e].model,
+                    );
+                    self.dispatch(d, now);
+                }
+            }
+        } else if !self.edges[e].faulted {
+            self.edges[e].faulted = true;
+            self.edges[e].reports = 0;
+            self.outages += 1;
+        }
+    }
+
+    /// An injected partition severs (`up == false`) / heals the
+    /// edge↔cloud path of every owned edge whose global-index bit is in
+    /// `mask`. Training under a severed edge continues; only broadcasts
+    /// stop landing.
+    fn on_partition(&mut self, mask: u64, up: bool) {
+        for e in 0..self.edges.len() {
+            if mask >> (self.edges[e].global % 64) & 1 == 1 {
+                if !up && !self.edges[e].partitioned {
+                    self.partitions += 1;
+                }
+                self.edges[e].partitioned = !up;
+            }
+        }
+    }
+
+    /// An injected crash (`up == false`) / rejoin storm. Membership is
+    /// the pure predicate `storm_hits(seed, global, frac_bits)` — the
+    /// rejoin wave recomputes exactly the crash set, on any worker.
+    fn on_crash_storm(
+        &mut self,
+        seed: u64,
+        frac_bits: u32,
+        up: bool,
+        now: f64,
+    ) {
+        for d in 0..self.devices.len() {
+            if !storm_hits(seed, self.devices[d].global, frac_bits) {
+                continue;
+            }
+            if !up {
+                if self.devices[d].live {
+                    self.devices[d].live = false;
+                    self.crashes += 1;
+                }
+            } else if !self.devices[d].live {
+                self.devices[d].live = true;
+                if !self.devices[d].busy {
+                    let e = self.devices[d].edge;
+                    self.store.repoint(
+                        &mut self.devices[d].w,
+                        &self.edges[e].model,
+                    );
+                    if !self.edges[e].faulted {
+                        self.dispatch(d, now);
+                    }
+                }
+            }
+        }
+        if !up {
+            // Crashes may have completed rounds; re-check every edge.
+            for e in 0..self.edges.len() {
+                self.try_aggregate(e, now);
+            }
+        }
+    }
+
     /// Fold the cloud broadcast into every owned edge (window start).
+    /// Partitioned edges are severed from the cloud: no broadcast lands.
     fn apply_broadcast(&mut self, b: f64) {
         for e in 0..self.edges.len() {
+            if self.edges[e].partitioned {
+                continue;
+            }
             let w = self.store.make_mut(&mut self.edges[e].model);
             w[0] += (b as f32) * 1e-3;
         }
@@ -358,6 +508,13 @@ impl Shard {
                     self.on_train_done(device, edge, t)
                 }
                 Event::MobilityFlip => self.on_flip(t),
+                Event::EdgeOutage { edge, up } => {
+                    self.on_edge_outage(edge, up, t)
+                }
+                Event::Partition { mask, up } => self.on_partition(mask, up),
+                Event::CrashStorm { seed, frac_bits, up } => {
+                    self.on_crash_storm(seed, frac_bits, up, t)
+                }
                 _ => {}
             }
             self.prof.sample_queue_depth(self.queue.len());
@@ -374,6 +531,9 @@ impl Shard {
             voided: self.voided,
             aggregates: self.aggregates,
             flips: self.flips,
+            outages: self.outages,
+            partitions: self.partitions,
+            crashes: self.crashes,
             live: self.devices.iter().filter(|d| d.live).count(),
             loss_sum: self.loss_sum,
             loss_n: self.loss_n,
@@ -386,6 +546,9 @@ impl Shard {
         self.voided = 0;
         self.aggregates = 0;
         self.flips = 0;
+        self.outages = 0;
+        self.partitions = 0;
+        self.crashes = 0;
         self.loss_sum = 0.0;
         self.loss_n = 0;
         self.energy = 0.0;
@@ -415,6 +578,9 @@ impl Shard {
             voided: rep.voided,
             aggregates: rep.aggregates,
             flips: rep.flips,
+            outages: rep.outages,
+            partitions: rep.partitions,
+            crashes: rep.crashes,
             live_devices: rep.live,
             queue_len_end: rep.queue_len,
             store_live_buffers: rep.store_live,
@@ -457,6 +623,15 @@ impl ShardedDeviceSim {
         let n_shards = spec.resolved_shards();
         let workers = spec.resolved_workers();
         let churn = spec.leave_prob + spec.join_prob > 0.0;
+        // Fault plan: expanded once from its own stream, then scheduled
+        // per shard below. Zero counts → empty plan → zero schedule
+        // calls → bitwise identical to a pre-fault-layer run.
+        let plan = FaultPlan::build(
+            &spec.fault_config(),
+            spec.edges,
+            spec.window * spec.windows as f64,
+            spec.seed,
+        );
         // Canonical serial construction: master -> shard seeds in shard
         // order, then per-shard streams in edge-major member order.
         let mut master = Rng::new(spec.seed ^ 0x5a4d);
@@ -488,6 +663,9 @@ impl ShardedDeviceSim {
                 voided: 0,
                 aggregates: 0,
                 flips: 0,
+                outages: 0,
+                partitions: 0,
+                crashes: 0,
                 loss_sum: 0.0,
                 loss_n: 0,
                 energy: 0.0,
@@ -513,10 +691,13 @@ impl ShardedDeviceSim {
                     members.push(ld);
                 }
                 shard.edges.push(EdgeState {
+                    global: ge,
                     version: 0,
                     model,
                     members,
                     reports: 0,
+                    faulted: false,
+                    partitioned: false,
                 });
             }
             // Initial dispatch wave + the churn clock.
@@ -526,6 +707,28 @@ impl ShardedDeviceSim {
             if churn {
                 let t0 = shard.flip_dt * 0.5;
                 shard.queue.schedule(t0, Event::MobilityFlip);
+            }
+            // Fault schedule, in plan order: outages route to the shard
+            // owning the edge (local index = global / n_shards);
+            // partitions and storms broadcast to every shard.
+            for &(t, ev) in plan.events() {
+                match ev {
+                    Event::EdgeOutage { edge, up } => {
+                        if edge % n_shards == s {
+                            shard.queue.schedule(
+                                t,
+                                Event::EdgeOutage {
+                                    edge: edge / n_shards,
+                                    up,
+                                },
+                            );
+                        }
+                    }
+                    Event::Partition { .. } | Event::CrashStorm { .. } => {
+                        shard.queue.schedule(t, ev);
+                    }
+                    _ => unreachable!("FaultPlan emits only fault events"),
+                }
             }
             shards.push(shard);
         }
@@ -622,6 +825,7 @@ impl ShardedDeviceSim {
             energy: 0.0,
             aggregates: 0,
             cloud_version: self.cloud_version,
+            faults: 0,
             checksum: 0,
         };
         let mut loss_sum = 0.0;
@@ -636,10 +840,14 @@ impl ShardedDeviceSim {
             loss_sum += r.loss_sum;
             loss_n += r.loss_n;
             store_live += r.store_live;
+            row.faults += r.outages + r.partitions + r.crashes;
             self.stats.events += r.events;
             self.stats.voided += r.voided;
             self.stats.aggregates += r.aggregates;
             self.stats.flips += r.flips;
+            self.stats.outages += r.outages;
+            self.stats.partitions += r.partitions;
+            self.stats.crashes += r.crashes;
             if r.queue_len > self.stats.peak_queue_len {
                 self.stats.peak_queue_len = r.queue_len;
             }
@@ -707,11 +915,11 @@ impl ShardedDeviceSim {
     pub fn csv_string(&self) -> String {
         let mut out = String::from(
             "window,sim_time,events,live,loss,energy,aggregates,\
-             cloud_version,checksum\n",
+             cloud_version,faults,checksum\n",
         );
         for r in &self.history {
             out.push_str(&format!(
-                "{},{:.6},{},{},{:.9e},{:.9e},{},{},{:016x}\n",
+                "{},{:.6},{},{},{:.9e},{:.9e},{},{},{},{:016x}\n",
                 r.window,
                 r.sim_time,
                 r.events,
@@ -720,6 +928,7 @@ impl ShardedDeviceSim {
                 r.energy,
                 r.aggregates,
                 r.cloud_version,
+                r.faults,
                 r.checksum,
             ));
         }
@@ -846,6 +1055,97 @@ mod tests {
         }
     }
 
+    fn chaos_spec() -> ShardSpec {
+        ShardSpec {
+            devices: 96,
+            edges: 8,
+            shards: 4,
+            p: 16,
+            windows: 5,
+            outages: 2,
+            outage_duration: 70.0,
+            partitions: 1,
+            partition_duration: 100.0,
+            crash_storms: 1,
+            crash_frac: 0.4,
+            rejoin_delay: 50.0,
+            ..ShardSpec::default()
+        }
+    }
+
+    /// The worker-count / queue-backend bitwise guarantee extends to
+    /// fault-injected runs: chaos is scheduled, never ambient.
+    #[test]
+    fn fault_injection_is_worker_and_backend_invariant() {
+        let base = chaos_spec();
+        let (ref_csv, ref_stats) = run_spec(&base);
+        assert!(ref_stats.outages > 0, "outages must fire");
+        assert!(ref_stats.partitions > 0, "partitions must fire");
+        assert!(ref_stats.crashes > 0, "storms must crash devices");
+        assert!(
+            ref_csv.lines().skip(1).any(|l| {
+                l.rsplit(',').nth(1).is_some_and(|f| f != "0")
+            }),
+            "faults column must be non-zero somewhere:\n{ref_csv}"
+        );
+        for (workers, backend) in [
+            (4usize, QueueBackend::Auto),
+            (1, QueueBackend::Calendar),
+            (4, QueueBackend::Calendar),
+        ] {
+            let (csv, stats) = run_spec(&ShardSpec {
+                workers,
+                backend,
+                ..base.clone()
+            });
+            assert_eq!(
+                csv, ref_csv,
+                "chaos diverged at workers={workers} {backend:?}"
+            );
+            assert_eq!(stats, ref_stats);
+        }
+    }
+
+    /// Sixth no-op guarantee, sharded flavor: a zero-count fault config
+    /// (with non-default durations — inert knobs) is bitwise identical
+    /// to the default spec.
+    #[test]
+    fn zero_fault_plan_is_bitwise_noop() {
+        let base = ShardSpec {
+            devices: 96,
+            edges: 8,
+            shards: 4,
+            p: 16,
+            windows: 4,
+            ..ShardSpec::default()
+        };
+        let armed = ShardSpec {
+            outage_duration: 33.0,
+            partition_duration: 44.0,
+            crash_frac: 0.9,
+            rejoin_delay: 5.0,
+            ..base.clone()
+        };
+        let (a, sa) = run_spec(&base);
+        let (b, sb) = run_spec(&armed);
+        assert_eq!(a, b, "disabled fault layer must be bitwise invisible");
+        assert_eq!(sa, sb);
+        assert_eq!(sa.outages + sa.partitions + sa.crashes, 0);
+    }
+
+    #[test]
+    fn faults_perturb_the_trajectory() {
+        let calm = ShardSpec { windows: 5, ..chaos_spec() };
+        let (with_faults, _) = run_spec(&calm);
+        let (without, _) = run_spec(&ShardSpec {
+            outages: 0,
+            partitions: 0,
+            crash_storms: 0,
+            ..calm
+        });
+        assert_ne!(with_faults, without, "chaos must actually bite");
+    }
+
     /// Property: the merged trajectory is independent of thread
     /// interleaving, even under seeded adversarial per-shard delays
     /// (rule 4 of the module doc).
@@ -867,6 +1167,13 @@ mod tests {
                     seed: g.usize_in(1, 1 << 20) as u64,
                     leave_prob: if g.bool() { 0.1 } else { 0.0 },
                     join_prob: 0.4,
+                    outages: g.usize_in(0, 2),
+                    partitions: g.usize_in(0, 1),
+                    crash_storms: g.usize_in(0, 1),
+                    outage_duration: 40.0,
+                    partition_duration: 50.0,
+                    crash_frac: 0.3,
+                    rejoin_delay: 25.0,
                     ..ShardSpec::default()
                 }
             },

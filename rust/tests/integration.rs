@@ -433,6 +433,59 @@ fn async_engine_sync_mode_matches_under_churn_and_mask() {
 }
 
 #[test]
+fn zero_fault_plan_is_a_bitwise_noop_under_churn() {
+    // Sixth determinism guarantee (hfl::lifecycle): a `FaultPlan` with
+    // zero event counts schedules nothing and draws nothing — a run
+    // with inert fault knobs set (non-default durations, zero counts)
+    // must be BITWISE identical to the same run with the fault config
+    // untouched, on the churn + mask + recluster workload above.
+    require_artifacts!();
+    let mut cfg = small_cfg();
+    cfg.sim.leave_prob = 0.2;
+    cfg.sim.join_prob = 0.5;
+    cfg.cluster.recluster_threshold = 0.15;
+    cfg.cluster.recluster_min_interval = 0.0;
+    let mut inert = cfg.clone();
+    inert.fault.outage_duration = 999.0;
+    inert.fault.partition_duration = 777.0;
+    inert.fault.rejoin_delay = 13.0;
+    inert.fault.crash_frac = 0.9;
+    assert_eq!(inert.fault.outages, 0, "counts stay zero");
+    // Event loop (the path that expands the FaultPlan in begin_run):
+    // churned semi-sync runs, full-history comparison.
+    cfg.hfl.threshold_time = 500.0;
+    inert.hfl.threshold_time = 500.0;
+    cfg.sync.mode = SyncModeCfg::SemiSync;
+    inert.sync.mode = SyncModeCfg::SemiSync;
+    cfg.sync.cloud_interval = 120.0;
+    inert.sync.cloud_interval = 120.0;
+    let mut base = AsyncHflEngine::new(cfg, false).unwrap();
+    let mut faulted = AsyncHflEngine::new(inert, false).unwrap();
+    let ha = base.run_to_threshold().unwrap();
+    let hb = faulted.run_to_threshold().unwrap();
+    assert_eq!(ha.rounds.len(), hb.rounds.len(), "window count diverged");
+    for (a, b) in ha.rounds.iter().zip(&hb.rounds) {
+        assert_eq!(a.accuracy, b.accuracy, "accuracy diverged at {}", a.k);
+        assert_eq!(a.round_time, b.round_time, "time diverged at {}", a.k);
+        assert_eq!(a.energy, b.energy, "energy diverged at {}", a.k);
+        assert_eq!(a.sim_now, b.sim_now);
+        assert_eq!(a.fault_events, 0);
+        assert_eq!(b.fault_events, 0, "inert plan injected an event");
+        for (ea, eb) in a.per_edge.iter().zip(&b.per_edge) {
+            assert_eq!(ea.total_time, eb.total_time);
+            assert_eq!(ea.active, eb.active);
+            assert_eq!(ea.abandoned, eb.abandoned);
+            assert_eq!(ea.availability, eb.availability);
+        }
+    }
+    assert_eq!(
+        base.eng.cloud_model(),
+        faulted.eng.cloud_model(),
+        "zero-fault plan perturbed the model"
+    );
+}
+
+#[test]
 fn semi_sync_and_async_modes_run_end_to_end() {
     require_artifacts!();
     let mut cfg = small_cfg();

@@ -33,6 +33,7 @@ fn stats(k: usize) -> RoundStats {
         live_model_buffers: 3,
         peak_model_bytes: 4096,
         sharing_ratio: 1.0,
+        fault_events: 0,
     }
 }
 
