@@ -1,0 +1,134 @@
+//! Sharded AsyncHflEngine event loop at scale — no artifacts needed.
+//!
+//! Runs the engine-shard harness (`hfl::ShardedEngineLoop`): the full
+//! `AsyncHflEngine` timer-mode event loop — per-edge event heaps on
+//! worker threads, ctrl-queue barriers for cloud windows / churn /
+//! seeded faults, semi-sync quorums with over-selection or fully-async
+//! staleness bookkeeping — minus the model math (action streams fold
+//! into per-window checksums instead of replaying against a model
+//! store). The merged trajectory — every history row, every checksum —
+//! is bitwise identical for ANY worker count and either queue backend;
+//! only the wall-clock changes. This is the workload the
+//! multithread-determinism CI job diffs at workers 1 vs 8 and the
+//! engine-level `threads_speedup` bench times.
+//!
+//! `cargo run --release --example engine_scale -- \
+//!     --devices 1000000 --edges 64 --windows 3 --workers 8 \
+//!     --backend auto --async --csv /tmp/engine.csv`
+//!
+//! Churn (`--leave-prob P --join-prob P`), over-selection
+//! (`--overselect F`, semi-sync only) and fault injection (`--outages N
+//! --outage-duration S --partitions N --partition-duration S
+//! --crash-storms N --crash-frac F --rejoin-delay S`) all ride the same
+//! seeded ctrl timeline, so the injected trajectory stays bitwise
+//! identical at any worker count.
+
+use anyhow::{bail, Result};
+use arena::hfl::{EngineLoopSpec, ShardedEngineLoop};
+use arena::sim::QueueBackend;
+
+fn main() -> Result<()> {
+    let mut spec = EngineLoopSpec {
+        devices: 200_000,
+        edges: 64,
+        windows: 4,
+        workers: 0,
+        ..EngineLoopSpec::default()
+    };
+    let mut csv: Option<String> = None;
+
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut i = 0;
+    while i < argv.len() {
+        let need = |i: usize| -> Result<&String> {
+            argv.get(i + 1)
+                .ok_or_else(|| anyhow::anyhow!("{} needs a value", argv[i]))
+        };
+        // Valueless switches first; everything below takes a value.
+        if argv[i] == "--async" {
+            spec.asynchronous = true;
+            i += 1;
+            continue;
+        }
+        match argv[i].as_str() {
+            "--devices" => spec.devices = need(i)?.parse()?,
+            "--edges" => spec.edges = need(i)?.parse()?,
+            "--shards" => spec.shards = need(i)?.parse()?,
+            "--windows" => spec.windows = need(i)?.parse()?,
+            "--workers" => spec.workers = need(i)?.parse()?,
+            "--seed" => spec.seed = need(i)?.parse()?,
+            "--backend" => spec.backend = QueueBackend::parse(need(i)?)?,
+            "--quorum" => spec.quorum = need(i)?.parse()?,
+            "--overselect" => spec.overselect = need(i)?.parse()?,
+            "--alpha" => spec.staleness_alpha = need(i)?.parse()?,
+            "--interval" => spec.interval = need(i)?.parse()?,
+            "--epochs" => spec.epochs = need(i)?.parse()?,
+            "--leave-prob" => spec.leave_prob = need(i)?.parse()?,
+            "--join-prob" => spec.join_prob = need(i)?.parse()?,
+            "--outages" => spec.fault.outages = need(i)?.parse()?,
+            "--outage-duration" => {
+                spec.fault.outage_duration = need(i)?.parse()?
+            }
+            "--partitions" => spec.fault.partitions = need(i)?.parse()?,
+            "--partition-duration" => {
+                spec.fault.partition_duration = need(i)?.parse()?
+            }
+            "--crash-storms" => spec.fault.crash_storms = need(i)?.parse()?,
+            "--crash-frac" => spec.fault.crash_frac = need(i)?.parse()?,
+            "--rejoin-delay" => spec.fault.rejoin_delay = need(i)?.parse()?,
+            "--csv" => csv = Some(need(i)?.clone()),
+            other => bail!("unknown flag {other} (see module doc)"),
+        }
+        i += 2;
+    }
+
+    println!(
+        "engine loop: {} devices / {} edges / {} shards, {} windows, \
+         mode={}, workers={} ({}), backend={}",
+        spec.devices,
+        spec.edges,
+        spec.resolved_shards(),
+        spec.windows,
+        if spec.asynchronous { "async" } else { "semi-sync" },
+        spec.workers,
+        spec.resolved_workers(),
+        spec.backend.name(),
+    );
+
+    let t0 = std::time::Instant::now();
+    let mut sim = ShardedEngineLoop::new(&spec);
+    let built = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    sim.run();
+    let ran = t1.elapsed();
+
+    for row in sim.history() {
+        println!(
+            "window {:>3}  t={:>9.1}s  events={:>9}  landings={:>6}  \
+             aggs={:>6}  flips={:>6}  faults={:>3}  checksum={:016x}",
+            row.window,
+            row.sim_time,
+            row.events,
+            row.landings,
+            row.aggregates,
+            row.flips,
+            row.faults,
+            row.checksum,
+        );
+    }
+    let total = sim.total_events();
+    let evs = total as f64 / ran.as_secs_f64().max(1e-9);
+    println!(
+        "built in {:.2}s, ran in {:.2}s ({} events, {:.0} events/s)",
+        built.as_secs_f64(),
+        ran.as_secs_f64(),
+        total,
+        evs,
+    );
+
+    if let Some(path) = csv {
+        sim.write_csv(&path)?;
+        println!("history written to {path}");
+    }
+    Ok(())
+}

@@ -16,6 +16,7 @@
 use std::collections::BTreeMap;
 
 use arena::hfl::membership::plan_recluster;
+use arena::hfl::{EngineLoopSpec, ShardedEngineLoop};
 use arena::obs::{Histogram, RunObserver};
 use arena::sim::{
     Event, EventQueue, QueueBackend, Region, ShardSpec, ShardedDeviceSim,
@@ -229,6 +230,72 @@ fn main() {
             let sp = BenchResult {
                 name: format!(
                     "event_queue/sharded_sim/threads_speedup/{w}"
+                ),
+                iters: 1,
+                mean_ns: base_ns / ns,
+                p50_ns: base_ns / ns,
+                p99_ns: base_ns / ns,
+            };
+            sp.report();
+            results.push(sp);
+        }
+    }
+
+    // The full engine-shard event loop (AsyncHflEngine's timer modes
+    // minus the model math) at 1M+ devices: semi-sync quorums with
+    // over-selection, churn flips and a seeded fault storm on the ctrl
+    // timeline — the trajectory the multithread-determinism CI job
+    // diffs. One timed run per worker count, construction excluded.
+    // `engine_loop/workers/{w}` records per-event ns;
+    // `engine_loop/threads_speedup/{w}` stores run(1)/run(w) wall ratio
+    // (dimensionless) in mean_ns — the acceptance gate wants > 1.0 at
+    // 8 workers. Byte-identical history CSVs are asserted across the
+    // sweep here too.
+    {
+        let fast = std::env::var("ARENA_BENCH_FAST").is_ok();
+        let devices = if fast { 1 << 16 } else { 1_048_576 };
+        let mut base_ns = 1.0f64;
+        let mut csv1: Option<String> = None;
+        for &w in &[1usize, 2, 4, 8] {
+            let spec = EngineLoopSpec {
+                devices,
+                edges: 64,
+                windows: 2,
+                workers: w,
+                quorum: 3,
+                overselect: 1.3,
+                leave_prob: 0.05,
+                join_prob: 0.05,
+                ..EngineLoopSpec::default()
+            };
+            let mut sim = ShardedEngineLoop::new(&spec);
+            let t0 = std::time::Instant::now();
+            sim.run();
+            let ns = (t0.elapsed().as_nanos() as f64).max(1.0);
+            let events = sim.total_events().max(1);
+            match &csv1 {
+                None => csv1 = Some(sim.csv_string()),
+                Some(base) => assert_eq!(
+                    base,
+                    &sim.csv_string(),
+                    "engine loop must be bitwise identical (workers={w})"
+                ),
+            }
+            if w == 1 {
+                base_ns = ns;
+            }
+            let r = BenchResult {
+                name: format!("event_queue/engine_loop/workers/{w}"),
+                iters: events,
+                mean_ns: ns / events as f64,
+                p50_ns: ns / events as f64,
+                p99_ns: ns / events as f64,
+            };
+            r.report();
+            results.push(r);
+            let sp = BenchResult {
+                name: format!(
+                    "event_queue/engine_loop/threads_speedup/{w}"
                 ),
                 iters: 1,
                 mean_ns: base_ns / ns,
@@ -524,6 +591,10 @@ fn write_json(results: &[BenchResult]) -> std::io::Result<()> {
              is per-event ns of the sharded 1M+-device engine (65k \
              under ARENA_BENCH_FAST) and threads_speedup/W stores the \
              run(1)/run(W) wall ratio — dimensionless — in mean_ns; \
+             engine_loop/workers/W and engine_loop/threads_speedup/W \
+             are the same pair for the full engine-shard event loop \
+             (semi-sync + over-selection + churn + fault storm, \
+             trajectory asserted byte-identical across W); \
              sharded_sim/profiled/W is the same engine with the \
              per-shard profiler + RunObserver attached, \
              profiler_overhead/W stores the profiled/bare wall ratio \

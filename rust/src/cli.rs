@@ -84,13 +84,24 @@ LIFECYCLE: production client-lifecycle knobs (event modes):
          storm at matched energy.
 
 SCALE:   --set sim.workers=W runs the simulation layers (per-device
-         time/energy draws, sharded event shards) on W threads (0 = all
-         cores); --set sim.queue_backend=auto|binary|calendar picks the
-         event-queue backend (auto switches to the calendar queue above
-         ~1M expected events). Both are execution details: any W and any
-         backend produce bitwise identical trajectories, so neither is
-         part of the run identity (config digest). The sharded 1M+
-         device path is exercised by examples/sharded_scale.rs.
+         time/energy draws, sharded event shards, AND the full
+         AsyncHflEngine event loop in the timer modes) on W threads
+         (0 = all cores); --set sim.queue_backend=auto|binary|calendar
+         picks the event-queue backend (auto switches to the calendar
+         queue above ~1M expected events). Both are execution details:
+         any W and any backend produce bitwise identical trajectories,
+         so neither is part of the run identity (config digest). The
+         engine loop itself is sharded by edge — each shard owns the
+         event heap, links, RNG streams and lifecycle state for its
+         edges and advances in parallel to the next ctrl event (cloud
+         window / churn flip / recluster / seeded fault), where shard
+         action logs replay in fixed shard order — so semi-sync and
+         async runs (arena run --set sync.mode=semi_sync, figures,
+         agent training, fault campaigns) scale with cores. The
+         sharded 1M+ device paths are exercised by
+         examples/sharded_scale.rs (synthetic device sim) and
+         examples/engine_scale.rs (engine event loop; same flags plus
+         --quorum/--overselect/--async and fault.* switches).
 
 OBSERVE: run --serve 127.0.0.1:9898 attaches a read-only observer and
          serves GET / (a self-contained live dashboard: round progress,

@@ -1,9 +1,10 @@
 //! Event-driven HFL engine: one executor, three synchronization modes,
-//! and a first-class transfer layer.
+//! a first-class transfer layer — and a **sharded event loop** that is
+//! bitwise identical at any worker count.
 //!
 //! Where [`HflEngine::run_round`] can only express lock-step rounds (every
 //! edge advances through barrier-synchronized sub-rounds), this engine is
-//! driven by the deterministic discrete-event queue of [`crate::sim::event`]
+//! driven by deterministic discrete-event queues ([`crate::sim::event`])
 //! and supports the synchronization families the paper's scheme decides
 //! *between*:
 //!
@@ -15,7 +16,8 @@
 //!   upload lands. Reproduces `HflEngine::run_round` **bit-for-bit** under
 //!   the same seed (same RNG streams consumed in the same order; equality
 //!   is enforced by an integration test), proving the event core models
-//!   the barrier semantics exactly.
+//!   the barrier semantics exactly. This mode runs serially on one queue —
+//!   it is the reference trajectory and is untouched by the sharding.
 //! * **`SyncMode::SemiSync`** — K-quorum edge aggregation: an edge
 //!   aggregates as soon as `quorum` of its members have reported (reported
 //!   devices idle until the quorum closes, then restart from the new edge
@@ -28,58 +30,131 @@
 //!   update is stale by; the cloud timer aggregates edge models weighted by
 //!   data size and per-edge freshness.
 //!
+//! # The sharded event loop
+//!
+//! The timer-driven modes no longer advance one global heap serially.
+//! The loop is split in two:
+//!
+//! * **Ctrl queue** (this struct, serial): holds only the events with
+//!   cross-edge effects — `CloudAggregate`, `MobilityFlip`, `Recluster`,
+//!   `EdgeOutage`, `Partition`, `CrashStorm`. Same seed as the historical
+//!   single queue (`seed ^ 0xa57c`), same backend.
+//! * **Shard heaps** ([`EngineShard`], one per `min(edges, 64)` shard,
+//!   edges dealt `j % n_shards`): each shard owns the event heap, RNG
+//!   streams (queue tie-break, link jitter, job seeds — forked from the
+//!   master seed and the *shard index*, never from a worker id), its
+//!   edges' uplink/downlink `Link`s, device lifecycle/availability
+//!   state, and the CPU-time models of its devices. Shard heaps hold
+//!   only `DeviceTrainDone`, `EdgeAggregate`, `TransferDone` — events
+//!   whose effects are confined to one edge.
+//!
+//! **Window bound derivation.** Shards advance in parallel to a
+//! conservative bound with no speculation and no rollback. The bound is
+//! simply the next ctrl timestamp: by construction *every* cross-shard
+//! coupling in the timer modes is a ctrl event — the cloud timer (the
+//! only reader of landed uploads and the only writer of the broadcast),
+//! churn (the mobility model steps once per window), re-clustering,
+//! and injected faults. Between two ctrl timestamps an edge's timeline
+//! is a pure function of its own state, so a shard draining every event
+//! with `t <= t_ctrl` can never miss an input from another shard. No
+//! per-shard `peek_time` minimum or link-latency margin is needed —
+//! the couplings are barrier-only, which makes the bound exact rather
+//! than heuristic.
+//!
+//! **Barrier-ordered merge.** While a shard advances, it appends every
+//! externally-visible decision to an ordered action log
+//! ([`EngineAction`]): training dispatches (with pre-drawn job seeds and
+//! pre-simulated CPU times), landings, aggregations (with pre-computed
+//! staleness betas), transfer dispositions (adopt/release decided
+//! shard-side from version mirrors). At the bound, the coordinator
+//! *replays* the logs against the real `ModelStore` **in fixed shard
+//! order 0..n** — so every model mutation, store allocation, observer
+//! call and accumulator update happens in an order chosen by the
+//! deterministic timelines, never by thread scheduling. Ctrl events then
+//! run serially with `&mut` access to all shards (quorum re-derivation,
+//! recluster migration with cross-shard device hand-off, fault fan-out,
+//! the `set_control` re-arm — all merge steps between windows). Landed
+//! payloads merge in fixed shard order for the same reason.
+//!
+//! **Worker invariance is structural.** `sim.workers` only picks how
+//! many OS threads `shard_scope` spreads the *same* per-shard
+//! computations over (shard `i` → lane `i % workers`; `workers <= 1`
+//! runs inline). Shard count is fixed by topology, per-shard RNG
+//! streams are functions of the shard index, and the merge order is
+//! fixed — so the trajectory (every `RoundStats`, CSV byte, cloud
+//! model, ctrl observation) is bitwise identical at any `sim.workers` ×
+//! `sim.queue_backend` × observer/profiler combination. This extends
+//! all six standing guarantees (sync-mode equality, zero-churn no-op,
+//! fixed-knob re-arm no-op, observer-on == off, workers×backend
+//! invisibility, zero-fault-plan no-op) to the full engine.
+//!
+//! Relative to the historical serial loop, the sharded timer modes make
+//! these *documented, deterministic* trajectory changes (the sync mode
+//! is bit-equal as ever): shard events at `t == t_ctrl` drain before
+//! the ctrl event (the old loop interleaved by heap tie-break); the
+//! cloud flush visits edges grouped by owning shard instead of globally
+//! by index; job seeds come from per-shard streams; transfer ids are
+//! shard-local (the `transfer_log` keys repeat across shards); and the
+//! per-window `T_j^ec` observables reset each window (0 when nothing
+//! landed) instead of holding the last run-wide landing.
+//!
 //! # Communication is in-flight, not a lump
 //!
-//! Edge↔cloud communication is no longer sampled as a lump at the cloud
+//! Edge↔cloud communication is never sampled as a lump at the cloud
 //! timer. In the timer-driven modes, an edge that aggregates schedules an
 //! **in-flight upload** of the fresh edge model on its uplink
-//! ([`crate::sim::link::LinkManager`]) and keeps training — upload time
-//! overlaps the next local round (pace steering à la arXiv:1902.01046).
-//! The cloud timer aggregates whatever uploads have *landed* by the tick
-//! (latest version per edge, discounted by per-edge freshness in `Async`
-//! mode), and the cloud→edge broadcast is a set of **downlink transfers**:
-//! an edge only adopts the new global model when its broadcast lands, and
-//! devices pick it up at their next edge aggregation. Overlapping
-//! transfers on one link fair-share its bandwidth when `link.contention`
-//! is on, and every landing is a `TransferDone` event, so the whole
-//! timeline stays deterministic from the experiment seed (stale
-//! re-predictions are dropped by the link layer's bit-exact timestamp
-//! match).
+//! ([`crate::sim::link::LinkManager`], shard-owned) and keeps training —
+//! upload time overlaps the next local round (pace steering à la
+//! arXiv:1902.01046). The cloud timer aggregates whatever uploads have
+//! *landed* by the tick (latest version per edge, discounted by per-edge
+//! freshness in `Async` mode), and the cloud→edge broadcast is a set of
+//! **downlink transfers**: an edge only adopts the new global model when
+//! its broadcast lands, and devices pick it up at their next edge
+//! aggregation. Overlapping transfers on one link fair-share its
+//! bandwidth when `link.contention` is on, and every landing is a
+//! `TransferDone` event, so the whole timeline stays deterministic from
+//! the experiment seed.
 //!
 //! # Membership migrates live
 //!
 //! When churn drifts the active set past `cluster.recluster_threshold`,
 //! a `MobilityFlip` schedules an [`Event::Recluster`] and the membership
 //! subsystem (`hfl::membership`) re-profiles and re-clusters the live
-//! population *without stopping the run*: migrated devices' in-flight
-//! training is voided (the stale-result protocol), their pending quorum
-//! reports are purged and semi-sync quorums re-derived against the new
-//! membership, and each destination edge's current model rides a real
-//! in-flight downlink — a migrated device resumes training only when its
-//! warm-start model lands. Synchronous mode re-clusters between cloud
-//! rounds through the same `HflEngine` path as the barrier engine
-//! (bit-for-bit equal).
+//! population *without stopping the run*. The migration is a barrier
+//! merge step: migrated devices hand their shard-side state from source
+//! to destination shard (in-flight training is voided through the
+//! stale-result tombstone protocol when the shards differ), pending
+//! quorum reports are purged and semi-sync quorums re-derived against
+//! the new membership, and each destination edge's current model rides
+//! a real in-flight downlink — a migrated device resumes training only
+//! when its warm-start model lands. Synchronous mode re-clusters
+//! between cloud rounds through the same `HflEngine` path as the
+//! barrier engine (bit-for-bit equal).
 //!
 //! In the timer-driven modes one `RoundStats` is emitted per cloud
 //! aggregation window: `round_time` is the window length, `gamma2` reports
 //! the *observed* per-edge aggregation counts of the window, `T_j^ec` is
-//! the *observed* duration of the edge's last landed transfers, and the
-//! per-edge `compute_busy`/`up_busy`/`down_busy`/`comm_overlap` fields
-//! split the window into compute vs in-flight communication time.
+//! the *observed* duration of the edge's last landed transfers within the
+//! window, and the per-edge `compute_busy`/`up_busy`/`down_busy`/
+//! `comm_overlap` fields split the window into compute vs in-flight
+//! communication time (integrated shard-side by the busy sweeper).
 //!
 //! # Model state is shared, versioned, copy-on-write
 //!
 //! Every model buffer lives in the engine's [`crate::hfl::ModelStore`];
 //! `edge_w`/`device_w`/the landed view/in-flight payloads are all
-//! version-tagged `ModelRef` handles. Broadcast landings, edge→device
-//! sync, rejoin resets and migration warm-starts are O(1) handle
-//! re-points; upload/downlink/migration payloads are rc-held snapshots
-//! kept intact by copy-on-write while in flight. The version tags *are*
-//! the staleness bookkeeping: the FedAsync device discount is the delta
-//! between the edge handle and the version the device trained from, the
-//! cloud's out-of-order landing guards compare payload tags, and
-//! `EdgeStats::staleness` is the delta between the cloud handle's
-//! version (windows) and the window of the edge's last landed upload.
+//! version-tagged `ModelRef` handles, owned by the coordinator and
+//! touched only during replay (shards carry plain `u64` version mirrors,
+//! never model values). Broadcast landings, edge→device sync, rejoin
+//! resets and migration warm-starts are O(1) handle re-points;
+//! upload/downlink/migration payloads are rc-held snapshots kept intact
+//! by copy-on-write while in flight. The version tags *are* the
+//! staleness bookkeeping: the FedAsync device discount is the delta
+//! between the shard's edge-version mirror and the version the device
+//! trained from, the cloud's out-of-order landing guards compare
+//! version mirrors shard-side (the replay applies the pre-decided
+//! adopt/release), and `EdgeStats::staleness` is the delta between the
+//! cloud version and the window of the edge's last landed upload.
 //!
 //! # Learned per-edge control
 //!
@@ -90,27 +165,34 @@
 //! local-epoch counts γ1_j (the edge-aggregation period — future
 //! dispatches pick it up) and the per-edge staleness exponents α_j
 //! (future discount computations pick them up) at the cloud-aggregation
-//! decision point. Nothing in flight is touched — no queued event,
-//! transfer, or pending training is re-timed — so re-arming with the
-//! values already in force is bitwise invisible, and every run stays a
-//! pure function of the experiment seed. The cloud decision point also
-//! stamps each edge's control observables into `EdgeStats`
-//! (`staleness`/`in_flight_up`/`quorum_fill`) — the rows the extended DRL
-//! state is built from.
+//! decision point. The re-arm propagates to every shard at the next
+//! window's knob refresh — nothing in flight is touched (no queued
+//! event, transfer, or pending training is re-timed), so re-arming with
+//! the values already in force is bitwise invisible, and every run
+//! stays a pure function of the experiment seed. The cloud decision
+//! point also stamps each edge's control observables into `EdgeStats`
+//! (`staleness`/`in_flight_up`/`quorum_fill`) — the rows the extended
+//! DRL state is built from.
 
 use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
 use crate::config::{ExperimentConfig, SyncConfig, SyncModeCfg};
+use crate::obs::profiler::{PoolWindowProfile, ShardWindowProfile};
 use crate::runtime::pool::TrainJob;
-use crate::sim::{Direction, Event, EventQueue};
+use crate::sim::shard::WindowRow;
+use crate::sim::{Event, EventQueue};
+use crate::util::threadpool::shard_scope;
 
 use super::aggregate::staleness_discount;
 use super::engine::HflEngine;
-use super::lifecycle::{
-    overselect_count, select_dispatch, storm_hits, FaultPlan,
+use super::engine_shard::{
+    DispatchJob, EngineAction, EngineShard, Landing, ShardPhysics,
+    TrainOutcome,
 };
+use super::lifecycle::FaultPlan;
 use super::metrics::{RoundAccumulator, RoundStats, RunHistory};
 use super::model_store::ModelRef;
 
@@ -204,57 +286,45 @@ fn event_variant(ev: &Event) -> &'static str {
     }
 }
 
-/// A dispatched-but-not-yet-completed local training run. The real compute
-/// happens eagerly at dispatch (results depend only on weights + seed, not
-/// on simulated time); the simulated completion is the queued event. The
-/// trained model lives IN the store while in flight (an rc-1 pooled
+/// A trained result materialized at replay time, parked until the
+/// shard's `Train` action resolves it (land / void / depart). The
+/// trained model lives IN the store while parked (an rc-1 pooled
 /// buffer, not a raw Vec) so the memory observables count it and the
-/// free-list recycles it.
-struct PendingTrain {
+/// free-list recycles it. The disposition itself is decided shard-side;
+/// this struct only carries what replay needs to apply it.
+struct Parked {
     /// The trained result, already adopted into the store, tagged with
-    /// the edge-model version the training started from (read off the
-    /// edge's `ModelRef` at dispatch) — the FedAsync staleness base.
+    /// the shard's edge-version mirror at dispatch (the FedAsync
+    /// staleness base).
     r: ModelRef,
     last_loss: Option<f64>,
     t: f64,
     energy: f64,
-    /// Set when the device flipped (left, possibly rejoined) mid-flight:
-    /// the result trained against a pre-departure model and is discarded
-    /// on completion even if the device is active again by then.
-    void: bool,
 }
 
 /// Model snapshot riding an in-flight transfer: an rc-held store handle
 /// (`ModelStore::share` — no copy; copy-on-write keeps the snapshot
-/// intact if the live line mutates mid-flight). The link layer schedules
-/// pure timing; the engine owns the payloads, keyed by transfer id. The
-/// handle's version tag doubles as the ordering guard: edge-aggregation
-/// version for uploads, cloud-window version for downlinks.
+/// intact if the live line mutates mid-flight). The shard schedules
+/// pure timing and decides the landing disposition; the coordinator
+/// owns the payloads, keyed by `(shard, shard-local transfer id)`.
 enum Payload {
     /// Edge→cloud: the edge model as of its version at upload start.
-    Upload { edge: usize, r: ModelRef },
-    /// Cloud→edge: the global model broadcast by the cloud window in
-    /// `r.version()` (one shared buffer serves every edge's downlink).
-    Downlink { edge: usize, r: ModelRef },
-    /// Warm-start delivery for a re-clustering: `edge`'s model at
-    /// migration time, bound for the devices migrated onto it. `seq`
-    /// identifies the re-clustering; a later one (or a leave+rejoin)
-    /// supersedes the pending warm-start per device.
-    Migration {
-        edge: usize,
-        r: ModelRef,
-        devices: Vec<usize>,
-        seq: u64,
-    },
+    Upload { r: ModelRef },
+    /// Cloud→edge: the global model broadcast by a cloud window (one
+    /// shared buffer serves every edge's downlink).
+    Downlink { r: ModelRef },
+    /// Warm-start delivery for a re-clustering: the destination edge's
+    /// model at migration time, bound for the devices migrated onto it.
+    Migration { r: ModelRef },
 }
 
 impl Payload {
     /// Surrender the payload's store handle (whatever the variant).
     fn into_ref(self) -> ModelRef {
         match self {
-            Payload::Upload { r, .. }
-            | Payload::Downlink { r, .. }
-            | Payload::Migration { r, .. } => r,
+            Payload::Upload { r }
+            | Payload::Downlink { r }
+            | Payload::Migration { r } => r,
         }
     }
 }
@@ -262,89 +332,64 @@ impl Payload {
 pub struct AsyncHflEngine {
     pub eng: HflEngine,
     pub mode: SyncMode,
-    queue: EventQueue,
+    /// The serial ctrl queue: cloud timers, churn, re-clustering and
+    /// injected faults — every event with cross-shard effects. Same
+    /// seed as the historical single queue (the tie-break stream is
+    /// part of the trajectory).
+    ctrl: EventQueue,
+    /// The shard fleet (built at `begin_run`; empty before the first
+    /// run). Shard count is `EngineShard::auto_shards(edges)` — a
+    /// function of topology only, never of `sim.workers`.
+    shards: Vec<EngineShard>,
     /// Per-edge local epochs for dispatched jobs (the edge-aggregation
-    /// period; re-armed by `set_control` at cloud decision points).
+    /// period; re-armed by `set_control` at cloud decision points and
+    /// pushed to shards at the next window's knob refresh).
     g1: Vec<usize>,
     /// Per-edge staleness-discount exponents α_j (`Async` mode; default
     /// `sync.staleness_alpha` everywhere, re-armed by `set_control`).
     alpha: Vec<f64>,
-    /// device -> owning edge.
+    /// device -> owning edge (coordinator mirror of the topology).
     dev_edge: Vec<usize>,
-    in_flight: Vec<Option<PendingTrain>>,
-    /// Per-edge devices reported since the edge last aggregated.
-    reported: Vec<Vec<usize>>,
-    // Per-edge model versions, the per-device start versions, the landed
-    // ordering guard and the cloud window counter all used to be parallel
-    // `Vec<u64>` counters here; they now ride the `ModelRef` handles
-    // themselves (edge_w/cloud_w tags, the in-flight result's tag,
-    // landed/payload tags) — staleness is a handle version delta.
-    /// Window index (cloud version) of the edge's last *landed* upload
-    /// (cloud freshness).
-    edge_last_update_round: Vec<u64>,
-    /// Edge aggregations inside the current cloud window.
-    window_edge_aggs: Vec<usize>,
+    /// device -> owning shard (follows re-cluster migrations).
+    dev_shard: Vec<usize>,
+    /// Trained results materialized at dispatch replay, waiting for
+    /// their `Train` action.
+    parked: Vec<Option<Parked>>,
     acc: RoundAccumulator,
     window_start: f64,
     // ---- transfer layer state ------------------------------------------
-    /// Payloads of in-flight transfers, keyed by transfer id.
-    payloads: HashMap<usize, Payload>,
+    /// Payloads of in-flight transfers, keyed by (shard, shard-local
+    /// transfer id).
+    payloads: HashMap<(usize, usize), Payload>,
     /// Latest edge model that has landed at the cloud, per edge (a share
-    /// of the initial global model until anything lands); the handle's
-    /// version is the out-of-order landing guard.
+    /// of the initial global model until anything lands). The
+    /// adopt-vs-release ordering guard lives in the shard's version
+    /// mirrors; replay applies its decision.
     landed_w: Vec<ModelRef>,
-    /// Uploads landed in the current cloud window, per edge.
-    window_landings: Vec<usize>,
-    /// Last observed transfer durations per edge (feed T_j^ec; 0 until
-    /// the first landing).
-    obs_up: Vec<f64>,
-    obs_down: Vec<f64>,
-    /// Cloud window of the broadcast each edge last adopted: a stale
-    /// broadcast landing late (contention reorder) must not revert the
-    /// edge to an older global model.
-    adopted_cloud_round: Vec<u64>,
-    /// Busy-interval sweeper: engine state is piecewise constant between
-    /// events, so integrating at every pop is exact.
-    sweep_t: f64,
-    training_count: Vec<usize>,
-    win_compute_busy: Vec<f64>,
-    win_up_busy: Vec<f64>,
-    win_down_busy: Vec<f64>,
-    win_comm_busy: Vec<f64>,
-    win_overlap: Vec<f64>,
     /// (transfer id, edge, landing time) of every completed transfer, in
-    /// landing order — the determinism witness of the transfer path.
+    /// replay order — the determinism witness of the transfer path.
+    /// Ids are shard-local, so the same id can appear for different
+    /// edges; the (id, edge, time) triple is still a worker-invariant
+    /// fingerprint of the whole transfer timeline.
     pub transfer_log: Vec<(usize, usize, f64)>,
-    /// Per-device pending warm-start: the re-clustering seq whose
-    /// migration downlink the device is waiting for (0 = none). Awaiting
-    /// devices are never dispatched.
-    migration_seq: Vec<u64>,
     /// Monotone id of executed re-clusterings within the run.
     recluster_seq: u64,
     /// (recluster seq, device, new edge) of every warm-start that landed
-    /// and was applied, in landing order.
+    /// and was applied, in replay order.
     pub migration_log: Vec<(u64, usize, usize)>,
     /// Set for the end-of-run tail flush: the event loop is over, so new
-    /// training dispatches and transfers could never complete — skip them
-    /// instead of burning real compute on dead work.
+    /// training dispatches and transfers could never complete — shards
+    /// skip them instead of burning real compute on dead work.
     draining: bool,
-    // ---- lifecycle / fault state (`hfl::lifecycle`) --------------------
-    /// Injected-outage flag per edge (`Event::EdgeOutage`): a down edge
-    /// dispatches nothing, its pending reports die with it, and its
-    /// cloud transfers are dropped until the recovery event.
-    edge_faulted: Vec<bool>,
-    /// Injected-partition flag per edge (`Event::Partition`): a
-    /// partitioned edge keeps training and aggregating locally, but its
-    /// uplink/downlink to the cloud is severed until the heal.
-    edge_partitioned: Vec<bool>,
-    /// Stragglers abandoned this window, per edge: over-selection's
-    /// first-K close plus fault-voided in-flight work. Drained into
-    /// `EdgeStats::abandoned` at each cloud decision point.
-    win_abandoned: Vec<usize>,
     /// Injected fault events handled this window (down and up edges of
     /// outages, partitions and storms); stamped into
     /// `RoundStats::fault_events`.
     win_fault_events: usize,
+    // ---- engine-shard telemetry (observer+profiler gated) --------------
+    /// Wall time spent inside `shard_scope` advances this window.
+    win_wall_ns: u64,
+    /// Per-shard busy wall-ns this window (advance calls only).
+    win_shard_busy_ns: Vec<u64>,
 }
 
 impl AsyncHflEngine {
@@ -368,42 +413,28 @@ impl AsyncHflEngine {
         Ok(AsyncHflEngine {
             // Same seed as ever (the tie-break stream is part of the
             // trajectory); capacity/backend are bitwise invisible.
-            queue: EventQueue::for_scale(
+            ctrl: EventQueue::for_scale(
                 seed ^ 0xa57c,
                 n * 4 + 64,
                 eng.cfg.sim.queue_backend,
             ),
+            shards: Vec::new(),
             g1,
             alpha,
             dev_edge,
-            in_flight: (0..n).map(|_| None).collect(),
-            reported: vec![Vec::new(); m],
-            edge_last_update_round: vec![0; m],
-            window_edge_aggs: vec![0; m],
+            dev_shard: vec![0; n],
+            parked: (0..n).map(|_| None).collect(),
             acc: RoundAccumulator::new(m),
             window_start: 0.0,
             payloads: HashMap::new(),
             landed_w,
-            window_landings: vec![0; m],
-            obs_up: vec![0.0; m],
-            obs_down: vec![0.0; m],
-            adopted_cloud_round: vec![0; m],
-            sweep_t: 0.0,
-            training_count: vec![0; m],
-            win_compute_busy: vec![0.0; m],
-            win_up_busy: vec![0.0; m],
-            win_down_busy: vec![0.0; m],
-            win_comm_busy: vec![0.0; m],
-            win_overlap: vec![0.0; m],
             transfer_log: Vec::new(),
-            migration_seq: vec![0; n],
             recluster_seq: 0,
             migration_log: Vec::new(),
             draining: false,
-            edge_faulted: vec![false; m],
-            edge_partitioned: vec![false; m],
-            win_abandoned: vec![0; m],
             win_fault_events: 0,
+            win_wall_ns: 0,
+            win_shard_busy_ns: Vec::new(),
             mode,
             eng,
         })
@@ -658,15 +689,16 @@ impl AsyncHflEngine {
     }
 
     // -----------------------------------------------------------------
-    // SemiSync / Async modes: the free-running event loop.
+    // SemiSync / Async modes: the sharded free-running event loop.
     // -----------------------------------------------------------------
 
-    /// Reset and arm a fresh timer-driven run: models, event queue, link
-    /// and window state, the initial `CloudAggregate`/`MobilityFlip`
-    /// timers, and the first dispatch of every device. The run then
-    /// advances one cloud window per [`AsyncHflEngine::run_window`] call
-    /// (with optional [`AsyncHflEngine::set_control`] swaps in between);
-    /// `run_with` is the uncontrolled convenience loop over it.
+    /// Reset and arm a fresh timer-driven run: models, the ctrl queue,
+    /// the shard fleet (heaps, links, RNG streams, lifecycle state), the
+    /// initial `CloudAggregate`/`MobilityFlip` timers, and the first
+    /// dispatch of every device. The run then advances one cloud window
+    /// per [`AsyncHflEngine::run_window`] call (with optional
+    /// [`AsyncHflEngine::set_control`] swaps in between); `run_with` is
+    /// the uncontrolled convenience loop over it.
     pub fn begin_run(&mut self, g1: &[usize]) -> Result<()> {
         anyhow::ensure!(
             !matches!(self.mode, SyncMode::Synchronous),
@@ -681,14 +713,18 @@ impl AsyncHflEngine {
         let m = self.edges();
         let n = self.eng.cfg.topology.devices;
         // Hand this engine's own store handles back before the reset
-        // rebuilds the hierarchy: stale payloads, parked in-flight
-        // results and the landed view must not keep last run's buffers
-        // alive.
-        for (_, p) in self.payloads.drain() {
-            let r = p.into_ref();
-            self.eng.store.release(r);
+        // rebuilds the hierarchy: stale payloads, parked results and the
+        // landed view must not keep last run's buffers alive. Payload
+        // keys release in sorted order — the store free-list is
+        // order-sensitive and HashMap drain order is not deterministic.
+        let mut keys: Vec<(usize, usize)> =
+            self.payloads.keys().copied().collect();
+        keys.sort_unstable();
+        for k in keys {
+            let p = self.payloads.remove(&k).expect("payload key vanished");
+            self.eng.store.release(p.into_ref());
         }
-        for slot in self.in_flight.iter_mut() {
+        for slot in self.parked.iter_mut() {
             if let Some(p) = slot.take() {
                 self.eng.store.release(p.r);
             }
@@ -699,48 +735,90 @@ impl AsyncHflEngine {
         self.eng.reset();
         self.g1 = g1.to_vec();
         self.alpha = vec![self.eng.cfg.sync.staleness_alpha; m];
-        self.queue = EventQueue::for_scale(
-            self.eng.cfg.seed ^ 0xa57c,
-            n * 4 + 64,
-            self.eng.cfg.sim.queue_backend,
-        );
-        self.in_flight = (0..n).map(|_| None).collect();
-        self.reported = vec![Vec::new(); m];
-        self.edge_last_update_round = vec![0; m];
-        self.window_edge_aggs = vec![0; m];
+        self.parked = (0..n).map(|_| None).collect();
         self.acc = RoundAccumulator::new(m);
         self.window_start = 0.0;
         self.landed_w = self.eng.share_edge_handles();
-        self.window_landings = vec![0; m];
-        self.obs_up = vec![0.0; m];
-        self.obs_down = vec![0.0; m];
-        self.adopted_cloud_round = vec![0; m];
-        self.sweep_t = 0.0;
-        self.training_count = vec![0; m];
-        self.win_compute_busy = vec![0.0; m];
-        self.win_up_busy = vec![0.0; m];
-        self.win_down_busy = vec![0.0; m];
-        self.win_comm_busy = vec![0.0; m];
-        self.win_overlap = vec![0.0; m];
         self.transfer_log.clear();
-        self.migration_seq = vec![0; n];
         self.recluster_seq = 0;
         self.migration_log.clear();
         self.refresh_dev_edge();
         self.draining = false;
-        self.edge_faulted = vec![false; m];
-        self.edge_partitioned = vec![false; m];
-        self.win_abandoned = vec![0; m];
         self.win_fault_events = 0;
+        self.win_wall_ns = 0;
 
+        // ---- the shard fleet -------------------------------------------
+        // Shard count is a function of topology only; edges deal
+        // round-robin so shard i's streams are identical at any worker
+        // count (shard_scope pins shard i → lane i % workers).
+        let n_shards = EngineShard::auto_shards(m);
+        let phys = ShardPhysics {
+            nb: self.eng.rt.manifest.config.nb,
+            pbytes: crate::sim::network::model_bytes(self.eng.p),
+            up_scale: self.eng.cfg.link.up_bandwidth_scale,
+            down_scale: self.eng.cfg.link.down_bandwidth_scale,
+            contention: self.eng.cfg.link.contention,
+            net: self.eng.net.clone(),
+            energy: self.eng.energy_model.clone(),
+            avail: self.eng.avail.clone(),
+            regions: self.eng.topo.edges.iter().map(|e| e.region).collect(),
+            data_n: Arc::new(
+                self.eng.topo.shards.iter().map(|s| s.n as f32).collect(),
+            ),
+            mode: self.mode,
+            overselect: self.eng.cfg.lifecycle.overselect,
+        };
+        let expected = n / n_shards * 4 + 64;
+        let mut shards: Vec<EngineShard> = (0..n_shards)
+            .map(|s| {
+                EngineShard::new(
+                    s,
+                    n_shards,
+                    self.eng.cfg.seed,
+                    self.eng.cfg.sim.queue_backend,
+                    expected,
+                    phys.clone(),
+                )
+            })
+            .collect();
+        for j in 0..m {
+            let s = EngineShard::shard_of(j, n_shards);
+            shards[s].install_edge(j, self.eng.topo.edges[j].members.clone());
+        }
+        let mut dev_shard = vec![0usize; n];
+        for d in 0..n {
+            let j = self.dev_edge[d];
+            let s = EngineShard::shard_of(j, n_shards);
+            dev_shard[d] = s;
+            // Each shard clones its devices' CPU models: the coordinator
+            // copies in `topo.cpus` stay untouched by the timer modes, so
+            // a later synchronous run still sees the post-reset states.
+            shards[s].install_device(
+                d,
+                j,
+                self.eng.mobility.is_active(d),
+                self.eng.device_w[d].version(),
+                self.eng.topo.cpus[d].clone(),
+            );
+        }
+        self.shards = shards;
+        self.dev_shard = dev_shard;
+        self.win_shard_busy_ns = vec![0; n_shards];
+
+        // ---- the ctrl timeline -----------------------------------------
+        self.ctrl = EventQueue::for_scale(
+            self.eng.cfg.seed ^ 0xa57c,
+            64,
+            self.eng.cfg.sim.queue_backend,
+        );
         let interval = self.mode.cloud_interval();
-        self.queue.schedule(interval, Event::CloudAggregate);
+        self.ctrl.schedule(interval, Event::CloudAggregate);
         // Mobility steps once per window, offset to avoid timer ties.
-        self.queue.schedule(0.5 * interval, Event::MobilityFlip);
+        self.ctrl.schedule(0.5 * interval, Event::MobilityFlip);
         // Injected faults are scheduled events, never ambient state
         // (`hfl::lifecycle` determinism rules): the plan expands the
         // `fault.*` knobs once from a dedicated stream and lands in the
-        // queue like any other event. A zero-count plan is empty —
+        // ctrl queue like any other event. A zero-count plan is empty —
         // no schedule calls, no tie-break draws — so a fault-free run
         // is bitwise identical to one built before faults existed.
         let plan = FaultPlan::build(
@@ -750,50 +828,27 @@ impl AsyncHflEngine {
             self.eng.cfg.seed,
         );
         for &(t, ev) in plan.events() {
-            self.queue.schedule(t, ev);
+            self.ctrl.schedule(t, ev);
         }
-        let cohort = self.initial_cohort();
-        self.dispatch(&cohort, 0.0)
-    }
 
-    /// Devices to dispatch at run start: everyone — unless semi-sync
-    /// over-selection is on, in which case each edge fields its
-    /// `ceil(K·overselect)` cohort (currently-available members first,
-    /// so pace steering shapes who leads the wave).
-    fn initial_cohort(&self) -> Vec<usize> {
-        let factor = self.eng.cfg.lifecycle.overselect;
-        match self.mode {
-            SyncMode::SemiSync { quorum, .. } if factor > 0.0 => {
-                let mut out = Vec::new();
-                for j in 0..self.edges() {
-                    out.extend(self.edge_cohort(j, quorum, factor, 0.0));
-                }
-                out
-            }
-            _ => (0..self.eng.cfg.topology.devices).collect(),
+        // First dispatch of every edge's cohort, shard-side, replayed in
+        // shard order (the order every later merge uses too).
+        let obs_on = self.eng.obs.is_some();
+        let profile = obs_on && self.eng.cfg.sim.profiler;
+        for s in 0..self.shards.len() {
+            self.shards[s].refresh_knobs(
+                &self.g1,
+                &self.alpha,
+                obs_on,
+                profile,
+                false,
+            );
+            self.shards[s].initial_dispatch(0.0);
+            let log = self.shards[s].take_actions();
+            self.replay_log(s, &log)?;
+            self.shards[s].recycle(log);
         }
-    }
-
-    /// Edge `j`'s over-selected dispatch cohort at time `t`:
-    /// `ceil(K·factor)` of its live members where K is the effective
-    /// quorum, preferring members inside their availability window
-    /// (`lifecycle::select_dispatch` — deterministic, draw-free).
-    fn edge_cohort(
-        &self,
-        j: usize,
-        quorum: usize,
-        factor: f64,
-        t: f64,
-    ) -> Vec<usize> {
-        let live: Vec<usize> = self.eng.topo.edges[j]
-            .members
-            .iter()
-            .copied()
-            .filter(|&d| self.eng.mobility.is_active(d))
-            .collect();
-        let k = effective_quorum(quorum, live.len());
-        let n = overselect_count(k, factor, live.len());
-        select_dispatch(&live, n, self.eng.avail.as_ref(), t)
+        Ok(())
     }
 
     /// Advance the armed run to its next cloud-aggregation decision point
@@ -803,10 +858,15 @@ impl AsyncHflEngine {
     /// control*, never the simulated timeline.
     pub fn run_window(&mut self) -> Result<Option<RoundStats>> {
         let threshold = self.eng.cfg.hfl.threshold_time;
-        while let Some(t_next) = self.queue.peek_time() {
-            if t_next > threshold {
+        while let Some(t_ctrl) = self.ctrl.peek_time() {
+            if t_ctrl > threshold {
                 break;
             }
+            // Conservative window: every cross-shard coupling is a ctrl
+            // event (module doc), so the shards advance in parallel to
+            // exactly the next ctrl timestamp — no speculation, no
+            // rollback — and their action logs replay in shard order.
+            self.advance_to(t_ctrl)?;
             // Wall-clock reads are gated on an attached observer: with
             // none, this path performs no `Instant` syscalls. Either way
             // wall time only flows into observer records, never into the
@@ -817,32 +877,27 @@ impl AsyncHflEngine {
                 .obs
                 .as_ref()
                 .map(|_| std::time::Instant::now());
-            let (t, ev) = self.queue.pop().expect("peeked event vanished");
+            let (t, ev) = self.ctrl.pop().expect("peeked event vanished");
             let t_handle = t_pop.map(|_| std::time::Instant::now());
             let variant = event_variant(&ev);
-            self.sweep(t);
             let mut window = None;
             match ev {
-                Event::DeviceTrainDone { device, edge } => {
-                    self.on_train_done(device, edge, t)?;
-                }
-                Event::EdgeAggregate { edge } => {
-                    self.on_edge_aggregate(edge, t)?;
-                }
                 Event::CloudAggregate => {
-                    window = Some(self.on_cloud_aggregate(t)?);
+                    window = Some(self.cloud_barrier(t)?);
                 }
-                Event::MobilityFlip => self.on_mobility_flip(t)?,
-                Event::Recluster => self.on_recluster(t)?,
-                Event::TransferDone { transfer } => {
-                    self.on_transfer_done(transfer, t)?;
-                }
+                Event::MobilityFlip => self.flip_barrier(t)?,
+                Event::Recluster => self.recluster_barrier(t)?,
                 Event::EdgeOutage { edge, up } => {
-                    self.on_edge_outage(edge, up, t)?;
+                    self.outage_barrier(edge, up, t)?;
                 }
-                Event::Partition { mask, up } => self.on_partition(mask, up),
+                Event::Partition { mask, up } => {
+                    self.partition_barrier(mask, up);
+                }
                 Event::CrashStorm { seed, frac_bits, up } => {
-                    self.on_crash_storm(seed, frac_bits, up, t)?;
+                    self.storm_barrier(seed, frac_bits, up, t)?;
+                }
+                other => {
+                    unreachable!("shard event {other:?} in ctrl queue")
                 }
             }
             if let Some(o) = self.eng.obs.as_mut() {
@@ -859,446 +914,311 @@ impl AsyncHflEngine {
                 return Ok(Some(stats));
             }
         }
-        // Flush the tail: training completed after the last timer tick
-        // (or a cloud_interval longer than the whole run) would otherwise
-        // drop its energy/accuracy from the history entirely. Draining
+        // Run the shard timelines out to the threshold, then flush the
+        // tail: training completed after the last timer tick (or a
+        // cloud_interval longer than the whole run) would otherwise drop
+        // its energy/accuracy from the history entirely. Draining
         // suppresses new dispatches/transfers — they could never finish.
+        self.advance_to(threshold)?;
         if self.acc.per_edge.iter().any(|e| e.active > 0) {
             self.draining = true;
-            let stats = self.on_cloud_aggregate(threshold)?;
+            let stats = self.cloud_barrier(threshold)?;
             self.draining = false;
             return Ok(Some(stats));
         }
         Ok(None)
     }
 
-    /// Integrate the per-edge busy intervals up to `t`. Every state change
-    /// happens at an event, so the (training, transferring) indicator pair
-    /// is constant over the gap since the previous event.
-    fn sweep(&mut self, t: f64) {
-        let dt = t - self.sweep_t;
-        if dt <= 0.0 {
-            return;
+    /// Push the current knobs to every shard and advance them all to
+    /// `bound` in parallel, then replay their action logs in fixed shard
+    /// order. The only wall-clock reads are profiler-gated and flow only
+    /// into observer records.
+    fn advance_to(&mut self, bound: f64) -> Result<()> {
+        let obs_on = self.eng.obs.is_some();
+        let profile = obs_on && self.eng.cfg.sim.profiler;
+        for sh in self.shards.iter_mut() {
+            sh.refresh_knobs(
+                &self.g1,
+                &self.alpha,
+                obs_on,
+                profile,
+                self.draining,
+            );
         }
-        for j in 0..self.edges() {
-            let c = self.training_count[j] > 0;
-            let u = self.eng.links.active_count(j, Direction::Up) > 0;
-            let d = self.eng.links.active_count(j, Direction::Down) > 0;
-            if c {
-                self.win_compute_busy[j] += dt;
-            }
-            if u {
-                self.win_up_busy[j] += dt;
-            }
-            if d {
-                self.win_down_busy[j] += dt;
-            }
-            if u || d {
-                self.win_comm_busy[j] += dt;
-            }
-            if c && (u || d) {
-                self.win_overlap[j] += dt;
-            }
+        let workers = self.eng.sim_workers();
+        let w0 = if profile {
+            Some(std::time::Instant::now())
+        } else {
+            None
+        };
+        let logs = shard_scope(workers, &mut self.shards, |_idx, sh| {
+            let b0 = if profile {
+                Some(std::time::Instant::now())
+            } else {
+                None
+            };
+            sh.advance(bound);
+            let busy =
+                b0.map(|p| p.elapsed().as_nanos() as u64).unwrap_or(0);
+            (sh.take_actions(), busy)
+        });
+        if let Some(p) = w0 {
+            self.win_wall_ns += p.elapsed().as_nanos() as u64;
         }
-        self.sweep_t = t;
+        for (s, (log, busy)) in logs.into_iter().enumerate() {
+            self.win_shard_busy_ns[s] += busy;
+            self.replay_log(s, &log)?;
+            self.shards[s].recycle(log);
+        }
+        Ok(())
     }
 
-    /// Start local training on every listed device that is active and
-    /// idle: run the real compute now, schedule the simulated completion.
-    fn dispatch(&mut self, devs: &[usize], now: f64) -> Result<()> {
-        if self.draining {
-            return Ok(());
-        }
-        let mut jobs = Vec::new();
-        for &d in devs {
-            // Devices awaiting a migration warm-start idle until their new
-            // edge's model lands.
-            if !self.eng.mobility.is_active(d)
-                || self.in_flight[d].is_some()
-                || self.migration_seq[d] != 0
-            {
-                continue;
+    /// Apply one shard's window log to the coordinator state: the real
+    /// training, every model movement, the accumulators and the observer
+    /// stream — in exactly the order the shard's timeline decided them.
+    /// Reads the actions by reference so the log's inner buffers can go
+    /// back to the shard's spare pools afterwards (`EngineShard::recycle`).
+    fn replay_log(&mut self, s: usize, acts: &[EngineAction]) -> Result<()> {
+        for a in acts {
+            match a {
+                EngineAction::Obs {
+                    variant,
+                    t,
+                    lag_ns,
+                    handler_ns,
+                } => {
+                    if let Some(o) = self.eng.obs.as_mut() {
+                        o.on_event_handled(variant, *t, *lag_ns, *handler_ns);
+                    }
+                }
+                EngineAction::Dispatch {
+                    t,
+                    jobs,
+                    sim_wall_ns,
+                } => {
+                    self.replay_dispatch(*t, jobs, *sim_wall_ns)?;
+                }
+                EngineAction::Train {
+                    edge,
+                    device,
+                    outcome,
+                } => {
+                    let p = self.parked[*device]
+                        .take()
+                        .expect("train done without a parked result");
+                    // Energy was spent even if the result is discarded.
+                    self.acc.record_train(
+                        *edge, *device, p.t, p.energy, p.last_loss,
+                    );
+                    match outcome {
+                        TrainOutcome::Landed => {
+                            // The device line takes over the parked handle
+                            // (already version-tagged with its staleness
+                            // base at dispatch).
+                            self.eng
+                                .store
+                                .adopt(&mut self.eng.device_w[*device], p.r);
+                        }
+                        TrainOutcome::Voided | TrainOutcome::Departed => {
+                            self.eng.store.release(p.r);
+                        }
+                    }
+                }
+                EngineAction::EdgeAgg { edge, devs, mixes } => {
+                    if mixes.is_empty() {
+                        // Semi-sync quorum close: a small synchronous edge
+                        // round (the edge version advances inside).
+                        self.eng.edge_aggregate_devices(*edge, devs)?;
+                    } else {
+                        // Async staleness-discounted blend: betas were
+                        // computed shard-side from version mirrors and
+                        // data shares — replay only applies them.
+                        for &(d, beta) in mixes {
+                            self.eng.mix_device_into_edge(*edge, d, beta);
+                        }
+                        self.eng.edge_w[*edge].bump_version();
+                        for &d in devs {
+                            // O(1) re-point: reporting devices pick up the
+                            // fresh edge model by reference.
+                            self.eng.store.repoint(
+                                &mut self.eng.device_w[d],
+                                &self.eng.edge_w[*edge],
+                            );
+                        }
+                    }
+                }
+                EngineAction::UploadStart { edge, id } => {
+                    // Snapshot the edge model (rc-share — CoW keeps it
+                    // intact while in flight) as the uplink payload.
+                    let r = self.eng.store.share(&self.eng.edge_w[*edge]);
+                    self.payloads.insert((s, *id), Payload::Upload { r });
+                }
+                EngineAction::Rejoin { edge, devices } => {
+                    // Rejoining devices start from their edge's current
+                    // model. O(1) re-points.
+                    for &d in devices {
+                        self.eng.store.repoint(
+                            &mut self.eng.device_w[d],
+                            &self.eng.edge_w[*edge],
+                        );
+                    }
+                }
+                EngineAction::Transfer {
+                    id,
+                    edge,
+                    t,
+                    dir,
+                    bytes,
+                    start,
+                    finish,
+                    landing,
+                } => {
+                    let payload = self
+                        .payloads
+                        .remove(&(s, *id))
+                        .expect("live transfer without payload");
+                    self.transfer_log.push((*id, *edge, *t));
+                    if let Some(o) = self.eng.obs.as_mut() {
+                        o.on_transfer(*edge, dir, *bytes, *start, *finish);
+                    }
+                    let r = payload.into_ref();
+                    match landing {
+                        // The adopt/release decision was made shard-side
+                        // against the version mirrors (latest version
+                        // wins; contention can land older snapshots
+                        // late) — replay just applies it.
+                        Landing::Upload { adopt } => {
+                            if *adopt {
+                                self.eng
+                                    .store
+                                    .adopt(&mut self.landed_w[*edge], r);
+                            } else {
+                                self.eng.store.release(r);
+                            }
+                        }
+                        Landing::Downlink { adopt } => {
+                            // Adopting a broadcast is not an edge
+                            // aggregation: the edge keeps its own
+                            // version tag.
+                            if *adopt {
+                                self.eng.store.adopt_keep_version(
+                                    &mut self.eng.edge_w[*edge],
+                                    r,
+                                );
+                            } else {
+                                self.eng.store.release(r);
+                            }
+                        }
+                        Landing::Migration { devices, seq } => {
+                            // Warm start by reference: every still-pending
+                            // migrant (filtered shard-side) shares the
+                            // delivered snapshot.
+                            for &d in devices {
+                                self.eng.store.repoint(
+                                    &mut self.eng.device_w[d],
+                                    &r,
+                                );
+                                self.migration_log.push((*seq, d, *edge));
+                            }
+                            self.eng.store.release(r);
+                        }
+                    }
+                }
             }
-            let j = self.dev_edge[d];
-            // A downed aggregator has nobody to report to; its members
-            // idle until the recovery event re-dispatches them.
-            if self.edge_faulted[j] {
-                continue;
-            }
-            jobs.push(TrainJob {
-                device: d,
-                // The one materialization point: the worker pool needs an
-                // owned buffer (Send).
-                w: self.eng.store.slice(&self.eng.device_w[d]).to_vec(),
-                epochs: self.g1[j],
-                seed: self.eng.fork_job_seed(d),
-            });
         }
-        if jobs.is_empty() {
-            return Ok(());
-        }
-        let results = self.eng.train_batch(jobs)?;
-        // Batched simulated time/energy (parallel across sim.workers,
-        // bit-identical to per-device serial calls).
-        let reqs: Vec<(usize, usize)> = results
+        Ok(())
+    }
+
+    /// Run the real compute for a shard-dispatched training burst. The
+    /// shard already drew the job seeds, simulated the CPU times and
+    /// scheduled the completions — replay materializes the input weights
+    /// (the one copy point: the worker pool needs owned buffers), trains,
+    /// and parks the results for their `Train` actions.
+    fn replay_dispatch(
+        &mut self,
+        t: f64,
+        jobs: &[DispatchJob],
+        sim_wall_ns: u64,
+    ) -> Result<()> {
+        let batch: Vec<TrainJob> = jobs
             .iter()
-            .map(|res| (res.device, res.losses.len()))
+            .map(|jb| TrainJob {
+                device: jb.device,
+                w: self
+                    .eng
+                    .store
+                    .slice(&self.eng.device_w[jb.device])
+                    .to_vec(),
+                epochs: jb.epochs,
+                seed: jb.seed,
+            })
             .collect();
-        let sims = self.eng.simulate_train_batch(&reqs);
-        for (res, &(t_dev, e_dev)) in results.into_iter().zip(&sims) {
-            let d = res.device;
-            let j = self.dev_edge[d];
+        let results = self.eng.train_batch(batch)?;
+        for (res, jb) in results.into_iter().zip(jobs) {
+            debug_assert_eq!(res.device, jb.device, "train batch reordered");
             // Adopt the trained result into the store immediately, tagged
-            // with the edge version it started from (the staleness base):
-            // the in-flight model recycles a pooled buffer and is counted
-            // by the memory observables instead of hiding in a raw Vec.
-            let version = self.eng.edge_w[j].version();
-            let r = self.eng.store.insert(res.w, version);
-            self.in_flight[d] = Some(PendingTrain {
+            // with the edge version it started from (the staleness base).
+            let r = self.eng.store.insert(res.w, jb.start_version);
+            self.parked[jb.device] = Some(Parked {
                 r,
                 last_loss: res.losses.last().copied(),
-                t: t_dev,
-                energy: e_dev,
-                void: false,
+                t: jb.t_dev,
+                energy: jb.e_dev,
             });
-            self.training_count[j] += 1;
-            // Pace steering: a device outside its availability window
-            // *defers* its start to the window's edge (never skips —
-            // a skipped device could stall its edge forever, since no
-            // future event would close the round). The lag is pure
-            // arithmetic from the seeded diurnal model, so it is
-            // identical at any worker count; with pace steering off the
-            // lag is exactly 0.0 and the timeline is unchanged.
-            let lag = self
-                .eng
-                .avail
-                .as_ref()
-                .map(|a| a.delay_until(d, now))
-                .unwrap_or(0.0);
-            self.queue.schedule(
-                now + lag + t_dev,
-                Event::DeviceTrainDone { device: d, edge: j },
-            );
             if let Some(o) = self.eng.obs.as_mut() {
                 // Training burst on the edge's trace track; both span
                 // endpoints are simulated times, so the trace is
                 // deterministic under a fixed seed.
                 o.on_span(crate::obs::Span {
-                    track: format!("edge/{j}"),
-                    name: format!("train d{d}"),
-                    t0_sim: now,
-                    t1_sim: now + lag + t_dev,
+                    track: format!("edge/{}", jb.edge),
+                    name: format!("train d{}", jb.device),
+                    t0_sim: t,
+                    t1_sim: t + jb.lag + jb.t_dev,
                     wall_ns: 0,
                 });
             }
         }
-        Ok(())
-    }
-
-    fn on_train_done(
-        &mut self,
-        device: usize,
-        edge: usize,
-        t: f64,
-    ) -> Result<()> {
-        let Some(p) = self.in_flight[device].take() else {
-            return Ok(());
-        };
-        self.training_count[edge] =
-            self.training_count[edge].saturating_sub(1);
-        // Energy was spent even if the device has since left.
-        self.acc.record_train(edge, device, p.t, p.energy, p.last_loss);
-        if p.void {
-            // Flipped mid-flight: the pre-departure result is stale even
-            // if the device rejoined. It restarts from the model the
-            // rejoin handed it (no-op if it is still departed).
-            self.eng.store.release(p.r);
-            return self.dispatch(&[device], t);
-        }
-        if !self.eng.mobility.is_active(device) {
-            self.eng.store.release(p.r);
-            return Ok(()); // departed mid-flight: result discarded
-        }
-        // The device line takes over the in-flight handle (already
-        // version-tagged with its staleness base at dispatch).
-        self.eng.store.adopt(&mut self.eng.device_w[device], p.r);
-        self.reported[edge].push(device);
-        match self.mode {
-            SyncMode::SemiSync { quorum, .. } => {
-                if quorum_satisfied(
-                    self.reported[edge].len(),
-                    quorum,
-                    self.live_members(edge),
-                ) {
-                    self.queue
-                        .schedule(t, Event::EdgeAggregate { edge });
-                }
-            }
-            SyncMode::Async { .. } => {
-                self.queue.schedule(t, Event::EdgeAggregate { edge });
-            }
-            SyncMode::Synchronous => {
-                unreachable!("sync mode does not use the free-running loop")
+        // The shard's wall cost of the CPU simulation (profiler-gated,
+        // 0 otherwise); the sim ran shard-side on one thread.
+        if sim_wall_ns > 0 && !jobs.is_empty() {
+            if let Some(o) = self.eng.obs.as_mut() {
+                o.on_sim_batch(jobs.len(), 1, sim_wall_ns);
             }
         }
         Ok(())
     }
 
-    /// Currently active members of `edge`.
-    fn live_members(&self, edge: usize) -> usize {
-        self.eng.topo.edges[edge]
-            .members
-            .iter()
-            .filter(|&&d| self.eng.mobility.is_active(d))
-            .count()
-    }
+    // -----------------------------------------------------------------
+    // Barrier merge steps (serial, fixed shard order).
+    // -----------------------------------------------------------------
 
-    fn on_edge_aggregate(&mut self, edge: usize, t: f64) -> Result<()> {
-        let devs = std::mem::take(&mut self.reported[edge]);
-        if devs.is_empty() {
-            return Ok(()); // already flushed (duplicate trigger)
-        }
-        // Over-selection's first-K close: the quorum landed, so every
-        // cohort member still in flight is abandoned through the
-        // stale-result void path — its completion discards the result
-        // (energy already spent) and re-enters dispatch selection.
-        if matches!(self.mode, SyncMode::SemiSync { .. })
-            && self.eng.cfg.lifecycle.overselect > 0.0
-        {
-            self.abandon_stragglers(edge);
-        }
-        match self.mode {
-            SyncMode::SemiSync { .. } => {
-                // Quorum closes like a small synchronous edge round (the
-                // edge version advances inside).
-                self.eng.edge_aggregate_devices(edge, &devs)?;
-            }
-            SyncMode::Async { .. } => {
-                let edge_data = self.eng.edge_data_weight(edge);
-                // Per-edge α_j: default sync.staleness_alpha, possibly
-                // re-armed by the learned controller (`set_control`).
-                let alpha_j = self.alpha[edge];
-                for &d in &devs {
-                    // Staleness = version delta between the live edge
-                    // handle and the version the device trained from.
-                    let s = self.eng.edge_w[edge].version()
-                        - self.eng.device_w[d].version();
-                    let share = self.eng.topo.shards[d].n as f32 / edge_data;
-                    let beta = share * staleness_discount(s, alpha_j);
-                    self.eng.mix_device_into_edge(edge, d, beta);
-                }
-                self.eng.edge_w[edge].bump_version();
-                for &d in &devs {
-                    // O(1) re-point: reporting devices pick up the fresh
-                    // edge model by reference (was: one clone each).
-                    self.eng.store.repoint(
-                        &mut self.eng.device_w[d],
-                        &self.eng.edge_w[edge],
-                    );
-                }
-            }
-            SyncMode::Synchronous => unreachable!(),
-        }
-        self.window_edge_aggs[edge] += 1;
-        // The fresh edge model goes up as an in-flight transfer while the
-        // reporting devices restart training — the overlap the lump model
-        // could never express.
-        self.start_upload(edge, t);
-        // Over-selection fields a fresh ceil(K·factor) cohort for the
-        // next edge round (abandoned stragglers are still busy and are
-        // filtered by dispatch; they re-enter selection once their void
-        // completion lands). Off, the reporters restart — the
-        // historical path, byte for byte.
-        let next = match self.mode {
-            SyncMode::SemiSync { quorum, .. }
-                if self.eng.cfg.lifecycle.overselect > 0.0 =>
-            {
-                self.edge_cohort(
-                    edge,
-                    quorum,
-                    self.eng.cfg.lifecycle.overselect,
-                    t,
-                )
-            }
-            _ => devs,
-        };
-        self.dispatch(&next, t)
-    }
-
-    /// Void every in-flight training run of `edge`'s members and count
-    /// the newly-abandoned ones into the window's lifecycle observables
-    /// (first-K close and edge-outage both route through here).
-    fn abandon_stragglers(&mut self, edge: usize) {
-        let mut dropped = 0usize;
-        for idx in 0..self.eng.topo.edges[edge].members.len() {
-            let d = self.eng.topo.edges[edge].members[idx];
-            if let Some(p) = self.in_flight[d].as_mut() {
-                if !p.void {
-                    p.void = true;
-                    dropped += 1;
-                }
-            }
-        }
-        self.win_abandoned[edge] += dropped;
-    }
-
-    /// Snapshot `edge`'s model (an rc-share — CoW keeps it intact while
-    /// in flight) and put it on the uplink at time `t`.
-    fn start_upload(&mut self, edge: usize, t: f64) {
-        if self.draining {
-            return;
-        }
-        // A downed or partitioned edge cannot reach the cloud: the
-        // upload is dropped (the cloud aggregates without this edge,
-        // and its staleness observable grows until the heal).
-        if self.edge_faulted[edge] || self.edge_partitioned[edge] {
-            return;
-        }
-        let region = self.eng.topo.edges[edge].region;
-        let work = self.eng.sample_one_way(region, Direction::Up);
-        let bytes = crate::sim::network::model_bytes(self.eng.p);
-        let (id, resched) =
-            self.eng.links.start(edge, Direction::Up, bytes, work, t);
-        let r = self.eng.store.share(&self.eng.edge_w[edge]);
-        self.payloads.insert(id, Payload::Upload { edge, r });
-        for (tid, finish) in resched {
-            self.queue
-                .schedule(finish, Event::TransferDone { transfer: tid });
-        }
-    }
-
-    /// Put the cloud model on `edge`'s downlink at time `t`: one shared
-    /// buffer serves every edge's transfer, and the handle's version (the
-    /// broadcasting cloud window) is the out-of-order landing guard.
-    fn start_downlink(&mut self, edge: usize, t: f64) {
-        if self.draining {
-            return;
-        }
-        // No broadcast reaches a downed or partitioned edge; it keeps
-        // its older global model until a post-heal window's downlink.
-        if self.edge_faulted[edge] || self.edge_partitioned[edge] {
-            return;
-        }
-        let region = self.eng.topo.edges[edge].region;
-        let work = self.eng.sample_one_way(region, Direction::Down);
-        let bytes = crate::sim::network::model_bytes(self.eng.p);
-        let (id, resched) =
-            self.eng.links.start(edge, Direction::Down, bytes, work, t);
-        let r = self.eng.store.share(&self.eng.cloud_w);
-        self.payloads.insert(id, Payload::Downlink { edge, r });
-        for (tid, finish) in resched {
-            self.queue
-                .schedule(finish, Event::TransferDone { transfer: tid });
-        }
-    }
-
-    /// A `TransferDone` popped: stale predictions are dropped; a live one
-    /// lands its payload (upload → cloud's view, downlink → edge model).
-    fn on_transfer_done(&mut self, id: usize, t: f64) -> Result<()> {
-        let Some((tr, resched)) = self.eng.links.poll(id, t) else {
-            return Ok(()); // superseded prediction
-        };
-        // Remaining sharers speed up; chase their new predictions.
-        for (tid, finish) in resched {
-            self.queue
-                .schedule(finish, Event::TransferDone { transfer: tid });
-        }
-        let payload = self
-            .payloads
-            .remove(&tr.id)
-            .expect("live transfer without payload");
-        self.transfer_log.push((tr.id, tr.edge, t));
-        if let Some(o) = self.eng.obs.as_mut() {
-            o.on_transfer(
-                tr.edge,
-                tr.dir.name(),
-                tr.bytes as f64,
-                tr.start,
-                tr.finish,
-            );
-        }
-        match payload {
-            Payload::Upload { edge, r } => {
-                self.obs_up[edge] = tr.finish - tr.start;
-                self.window_landings[edge] += 1;
-                self.edge_last_update_round[edge] =
-                    self.eng.cloud_w.version();
-                // Latest *version* wins at the cloud: contention can land
-                // an older snapshot after a newer one. The guard is the
-                // version delta between the payload and landed handles.
-                if r.version() > self.landed_w[edge].version() {
-                    self.eng.store.adopt(&mut self.landed_w[edge], r);
-                } else {
-                    self.eng.store.release(r);
-                }
-            }
-            Payload::Downlink { edge, r } => {
-                self.obs_down[edge] = tr.finish - tr.start;
-                // The edge adopts the global model only now that the
-                // broadcast landed; devices pick it up at their next edge
-                // aggregation. Contention can land broadcasts out of
-                // order — never revert to an older window's model. The
-                // edge keeps its own version tag: adopting a broadcast
-                // is not an edge aggregation.
-                if r.version() > self.adopted_cloud_round[edge] {
-                    self.adopted_cloud_round[edge] = r.version();
-                    self.eng.store.adopt_keep_version(
-                        &mut self.eng.edge_w[edge],
-                        r,
-                    );
-                } else {
-                    self.eng.store.release(r);
-                }
-            }
-            Payload::Migration { edge, r, devices, seq } => {
-                self.obs_down[edge] = tr.finish - tr.start;
-                let mut resume = Vec::new();
-                for d in devices {
-                    // A later re-clustering or a leave(+rejoin) supersedes
-                    // this warm-start for the device.
-                    if self.migration_seq[d] != seq {
-                        continue;
-                    }
-                    debug_assert_eq!(
-                        self.dev_edge[d], edge,
-                        "pending warm-start on the wrong edge"
-                    );
-                    self.migration_seq[d] = 0;
-                    // Warm start by reference: every migrant shares the
-                    // delivered snapshot (O(1) per device).
-                    self.eng.store.repoint(&mut self.eng.device_w[d], &r);
-                    self.migration_log.push((seq, d, edge));
-                    resume.push(d);
-                }
-                self.eng.store.release(r);
-                // Migrants resume training from the delivered model
-                // (dispatch skips any that have since departed).
-                self.dispatch(&resume, t)?;
-            }
-        }
-        Ok(())
-    }
-
-    fn on_cloud_aggregate(&mut self, t: f64) -> Result<RoundStats> {
-        self.sweep(t); // a tail flush arrives outside the event loop
+    /// The cloud-aggregation barrier: flush pending quorums, aggregate
+    /// the landed views, broadcast over per-edge downlinks, and close the
+    /// window's `RoundStats` — all against `&mut` shard access, merged
+    /// in fixed shard order.
+    fn cloud_barrier(&mut self, t: f64) -> Result<RoundStats> {
         let m = self.edges();
+        let n_shards = self.shards.len();
+        for sh in self.shards.iter_mut() {
+            sh.draining = self.draining;
+            sh.barrier_sweep(t);
+        }
         // Control observables at the decision point, captured before the
         // quorum flush perturbs them: staleness of each edge's last
         // landed upload (in windows), uploads still in flight, and the
         // semi-sync quorum fill of the outstanding reports. These become
         // the `EdgeStats` rows the extended DRL state reads.
-        let ctrl: Vec<(f64, usize, f64)> = (0..m)
+        let cloud_v = self.eng.cloud_w.version();
+        let ctrl_obs: Vec<(f64, usize, f64)> = (0..m)
             .map(|j| {
-                // Staleness in windows: version delta between the cloud
-                // handle and the window the edge's last upload landed in.
-                let staleness = (self.eng.cloud_w.version()
-                    - self.edge_last_update_round[j])
-                    as f64;
-                let in_flight = self.eng.links.active_count(j, Direction::Up);
+                let sh = &self.shards[EngineShard::shard_of(j, n_shards)];
+                let staleness =
+                    (cloud_v - sh.edge_last_update[j]) as f64;
+                let in_flight = sh.uplink_in_flight(j);
                 let fill = match self.mode {
                     SyncMode::SemiSync { quorum, .. } => {
-                        self.reported[j].len() as f64
-                            / effective_quorum(quorum, self.live_members(j))
+                        sh.reported_len(j) as f64
+                            / effective_quorum(quorum, sh.live_members(j))
                                 as f64
                     }
                     _ => 0.0,
@@ -1308,10 +1228,16 @@ impl AsyncHflEngine {
             .collect();
         // Flush partial quorums so no edge (or idle-waiting device) can
         // starve across windows; their uploads start now and land later.
-        for j in 0..m {
-            if !self.reported[j].is_empty() {
-                self.on_edge_aggregate(j, t)?;
+        // Grouped by owning shard (the fixed merge order), edges in
+        // shard-local order within each.
+        for s in 0..n_shards {
+            for i in 0..self.shards[s].edges.len() {
+                let j = self.shards[s].edges[i];
+                self.shards[s].flush_edge(j, t);
             }
+            let log = self.shards[s].take_actions();
+            self.replay_log(s, &log)?;
+            self.shards[s].recycle(log);
         }
         // The cloud aggregates what has LANDED by its timer — not the
         // live edge models, which may still be in flight. The landed
@@ -1321,7 +1247,10 @@ impl AsyncHflEngine {
         let contributors: Vec<usize> = match self.mode {
             SyncMode::Async { .. } => (0..m).collect(),
             SyncMode::SemiSync { .. } => (0..m)
-                .filter(|&j| self.window_landings[j] > 0)
+                .filter(|&j| {
+                    let s = EngineShard::shard_of(j, n_shards);
+                    self.shards[s].window_landings[j] > 0
+                })
                 .collect(),
             SyncMode::Synchronous => unreachable!(),
         };
@@ -1333,9 +1262,9 @@ impl AsyncHflEngine {
                 contributors
                     .iter()
                     .map(|&j| {
+                        let s = EngineShard::shard_of(j, n_shards);
                         staleness_discount(
-                            self.eng.cloud_w.version()
-                                - self.edge_last_update_round[j],
+                            cloud_v - self.shards[s].edge_last_update[j],
                             self.alpha[j],
                         )
                     })
@@ -1357,53 +1286,64 @@ impl AsyncHflEngine {
             };
             self.eng.commit_cloud(agg);
         }
-        // Broadcast as in-flight downlink transfers (was: instantaneous
-        // broadcast_cloud); each edge adopts the model when it lands.
-        // One shared buffer (rc-shared, not cloned) serves all m
-        // downlinks, tagged with the new cloud version.
+        // Every shard's cloud-version mirror moves at the barrier (the
+        // staleness bookkeeping and the downlink ordering guard).
+        let v = self.eng.cloud_w.version();
+        for sh in self.shards.iter_mut() {
+            sh.set_cloud_version(v);
+        }
+        // Broadcast as in-flight downlink transfers; each edge adopts
+        // the model when it lands. One shared buffer (rc-shared, not
+        // cloned) serves all m downlinks, tagged with the new cloud
+        // version. Timing draws come from the owning shard's link
+        // stream, payload keys from its shard-local transfer ids.
         for j in 0..m {
-            self.start_downlink(j, t);
+            let s = EngineShard::shard_of(j, n_shards);
+            if let Some(id) = self.shards[s].start_downlink(j, t) {
+                let r = self.eng.store.share(&self.eng.cloud_w);
+                self.payloads.insert((s, id), Payload::Downlink { r });
+            }
         }
 
-        // Close the window's stats from observed transfers + busy sweep.
+        // Close the window's stats from observed transfers + busy sweep,
+        // per edge in index order (the CSV row order).
+        let mut g2_observed = vec![0usize; m];
         for j in 0..m {
-            self.acc.record_window(
-                j,
-                self.obs_up[j],
-                self.obs_down[j],
-                self.win_compute_busy[j],
-                self.win_up_busy[j],
-                self.win_down_busy[j],
-                self.win_comm_busy[j],
-                self.win_overlap[j],
-            );
-            let (staleness, in_flight, fill) = ctrl[j];
+            let s = EngineShard::shard_of(j, n_shards);
+            let (ou, od, wc, wu, wd, wcm, wo) = {
+                let sh = &self.shards[s];
+                (
+                    sh.obs_up[j],
+                    sh.obs_down[j],
+                    sh.win_compute[j],
+                    sh.win_up[j],
+                    sh.win_down[j],
+                    sh.win_comm[j],
+                    sh.win_overlap[j],
+                )
+            };
+            self.acc.record_window(j, ou, od, wc, wu, wd, wcm, wo);
+            let (staleness, in_flight, fill) = ctrl_obs[j];
             self.acc.record_ctrl(j, staleness, in_flight, fill);
             // Lifecycle observables at the decision point: stragglers
             // abandoned this window (first-K close + fault voids) and
             // the edge's membership availability right now. Recorded
             // unconditionally — lifecycle-off yields the (0, 1.0)
             // baseline — so schema-v2 rows are uniform across runs.
-            let dropped = std::mem::take(&mut self.win_abandoned[j]);
+            let dropped =
+                std::mem::take(&mut self.shards[s].win_abandoned[j]);
             let avail_j = self.eng.edge_availability(j, t);
             self.acc.record_lifecycle(j, dropped, avail_j);
+            g2_observed[j] =
+                std::mem::take(&mut self.shards[s].window_edge_aggs[j]);
+            self.shards[s].window_reset_edge(j);
         }
-        self.window_landings = vec![0; m];
-        self.win_compute_busy = vec![0.0; m];
-        self.win_up_busy = vec![0.0; m];
-        self.win_down_busy = vec![0.0; m];
-        self.win_comm_busy = vec![0.0; m];
-        self.win_overlap = vec![0.0; m];
 
         let round_time = t - self.window_start;
         self.eng.clock.advance(round_time);
         self.eng.round += 1;
         self.eng.total_energy += self.acc.round_energy;
         let (accuracy, test_loss) = self.eng.evaluate()?;
-        let g2_observed = std::mem::replace(
-            &mut self.window_edge_aggs,
-            vec![0; m],
-        );
         let acc = std::mem::replace(&mut self.acc, RoundAccumulator::new(m));
         let mut stats = acc.finish(
             self.eng.round,
@@ -1419,9 +1359,10 @@ impl AsyncHflEngine {
         stats.fault_events = std::mem::take(&mut self.win_fault_events);
         self.eng.emit_round_observation(&stats);
         self.eng.last_round = Some(stats.clone());
+        self.emit_shard_barrier(&stats, t);
         self.window_start = t;
         if !self.draining {
-            self.queue.schedule(
+            self.ctrl.schedule(
                 t + self.mode.cloud_interval(),
                 Event::CloudAggregate,
             );
@@ -1429,58 +1370,133 @@ impl AsyncHflEngine {
         Ok(stats)
     }
 
-    fn on_mobility_flip(&mut self, t: f64) -> Result<()> {
+    /// Telemetry follow-through for `arena run --serve`: per-shard
+    /// profile rows and the pool balance of this window, through the
+    /// same `on_shard_barrier` path `ShardedDeviceSim` uses — so the
+    /// dashboard's `arena_shard_*` series and sparklines show the real
+    /// engine shard imbalance. Profiler-gated; drains the per-window
+    /// wall counters either way so they never leak across windows.
+    fn emit_shard_barrier(&mut self, stats: &RoundStats, t: f64) {
+        let profile = self.eng.obs.is_some() && self.eng.cfg.sim.profiler;
+        let wall = std::mem::take(&mut self.win_wall_ns);
+        let n_shards = self.shards.len();
+        if !profile {
+            for b in self.win_shard_busy_ns.iter_mut() {
+                *b = 0;
+            }
+            return;
+        }
+        let workers = self.eng.sim_workers().max(1).min(n_shards.max(1));
+        let mut rows: Vec<ShardWindowProfile> =
+            Vec::with_capacity(n_shards);
+        let mut busy = vec![0u64; workers];
+        let mut events = 0u64;
+        let mut aggregates = 0u64;
+        let mut faults = 0u64;
+        let mut live = 0usize;
+        for s in 0..n_shards {
+            let mut p = self.shards[s].drain_profile();
+            p.advance_wall_ns =
+                std::mem::take(&mut self.win_shard_busy_ns[s]);
+            // shard_scope pins shard s → lane s % workers.
+            busy[s % workers] += p.advance_wall_ns;
+            events += p.events;
+            aggregates += p.aggregates;
+            faults += p.outages + p.partitions + p.crashes;
+            live += p.live_devices;
+            rows.push(p);
+        }
+        fn mix(h: &mut u64, x: u64) {
+            *h ^= x;
+            *h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        mix(&mut h, stats.round as u64);
+        mix(&mut h, t.to_bits());
+        mix(&mut h, events);
+        mix(&mut h, aggregates);
+        mix(&mut h, faults);
+        mix(&mut h, live as u64);
+        let row = WindowRow {
+            window: stats.round,
+            sim_time: t,
+            events,
+            live,
+            loss: stats.train_loss,
+            energy: stats.energy,
+            aggregates,
+            cloud_version: self.eng.cloud_w.version(),
+            faults,
+            checksum: h,
+        };
+        let pool = PoolWindowProfile {
+            window: stats.round,
+            t0_sim: self.window_start,
+            t1_sim: t,
+            workers,
+            n_shards,
+            window_wall_ns: wall,
+            worker_busy_ns: busy,
+        };
+        if let Some(o) = self.eng.obs.as_mut() {
+            o.on_shard_barrier(&row, &rows, &pool);
+        }
+    }
+
+    /// The churn barrier: step the mobility model once, fan the flips
+    /// out to their owning shards in parallel (purge reports, void
+    /// in-flight work, rejoin + re-dispatch), re-derive semi-sync
+    /// quorums, then replay in shard order. Zero churn ⇒ no flips, no
+    /// actions, no draws — bitwise a no-op, as ever.
+    fn flip_barrier(&mut self, t: f64) -> Result<()> {
         let flips = self.eng.mobility.step();
         self.eng.membership.observe(flips);
         // The model reports who flipped — no full active-vector re-scan.
+        // The coordinator's mobility model stays the authority for
+        // active state; shards hold per-device mirrors.
         let flipped: Vec<usize> = self.eng.mobility.flipped().to_vec();
-        // A flipped device's pending report is void either way: a leaver
-        // took its update with it, and a rejoiner restarts from the edge
-        // model — without this purge a report-leave-rejoin sequence would
-        // enter reported[] twice and double-weight the device.
+        let n_shards = self.shards.len();
+        let mut parts: Vec<Vec<(usize, bool)>> = vec![Vec::new(); n_shards];
+        let mut rejoins: Vec<Vec<usize>> = vec![Vec::new(); n_shards];
         for &d in &flipped {
-            self.reported[self.dev_edge[d]].retain(|&x| x != d);
-            // A run already in flight trained against a pre-departure
-            // model: void it so a leave(+rejoin) can never land a stale
-            // update at full weight.
-            if let Some(p) = self.in_flight[d].as_mut() {
-                p.void = true;
+            let s = self.dev_shard[d];
+            let active = self.eng.mobility.is_active(d);
+            parts[s].push((d, active));
+            if active {
+                rejoins[s].push(d);
             }
-            // Any pending migration warm-start is moot either way: a
-            // leaver is re-parked by later re-clusterings (its delivery
-            // must not apply), and a rejoiner takes the current edge
-            // model below. Without this clear, a departed migrant kept
-            // its seq and a late landing could warm-start it onto the
-            // wrong edge.
-            self.migration_seq[d] = 0;
         }
-        // Quorum liveness: a departure can shrink an edge's live set to
-        // (or below) the reports already outstanding; without this
-        // re-check the edge round could only close at the next timer
-        // flush, because no further DeviceTrainDone will fire for it.
-        self.recheck_quorums(
-            flipped.iter().map(|&d| self.dev_edge[d]).collect(),
-            t,
-        );
-        let rejoined: Vec<usize> = flipped
-            .iter()
-            .copied()
-            .filter(|&d| self.eng.mobility.is_active(d))
-            .collect();
-        // Rejoining devices start from their edge's current model (at
-        // least as fresh as any migration snapshot; the pending-warm-start
-        // flag was cleared in the purge loop above). O(1) re-points.
-        for &d in &rejoined {
-            let j = self.dev_edge[d];
-            self.eng.store.repoint(
-                &mut self.eng.device_w[d],
-                &self.eng.edge_w[j],
-            );
+        let workers = self.eng.sim_workers();
+        let logs = shard_scope(workers, &mut self.shards, |idx, sh| {
+            sh.barrier_sweep(t);
+            // A flipped device's pending report is void either way: a
+            // leaver took its update with it, and a rejoiner restarts
+            // from the edge model.
+            for &(d, active) in &parts[idx] {
+                sh.apply_flip(d, active);
+            }
+            if !rejoins[idx].is_empty() {
+                sh.rejoin_devices(&rejoins[idx], t);
+            }
+            // Quorum liveness: a departure can shrink an edge's live set
+            // to (or below) the reports already outstanding; without
+            // this re-check the edge round could only close at the next
+            // timer flush. Safe on every owned edge: a quorum that was
+            // already satisfiable scheduled its close during the
+            // advance, so only membership changes can newly satisfy one.
+            for i in 0..sh.edges.len() {
+                let j = sh.edges[i];
+                sh.recheck_quorum(j, t);
+            }
+            sh.take_actions()
+        });
+        for (s, log) in logs.into_iter().enumerate() {
+            self.replay_log(s, &log)?;
+            self.shards[s].recycle(log);
         }
-        self.dispatch(&rejoined, t)?;
-        // Membership drift check: re-cluster as a scheduled event when the
-        // churn pushed drift past the threshold (O(1) gate before the
-        // O(n) imbalance scan).
+        // Membership drift check: re-cluster as a scheduled ctrl event
+        // when the churn pushed drift past the threshold (O(1) gate
+        // before the O(n) imbalance scan).
         if self.eng.membership.wants_check(t)
             && self.eng.membership.should_recluster(
                 t,
@@ -1488,20 +1504,22 @@ impl AsyncHflEngine {
                 self.eng.membership_imbalance(),
             )
         {
-            self.queue.schedule(t, Event::Recluster);
+            self.ctrl.schedule(t, Event::Recluster);
         }
-        self.queue
+        self.ctrl
             .schedule(t + self.mode.cloud_interval(), Event::MobilityFlip);
         Ok(())
     }
 
-    /// Execute a churn-driven re-clustering live: re-profile + re-cluster
-    /// the active population (`HflEngine::recluster_core`), then migrate
-    /// the running topology — void in-flight work of migrated devices,
-    /// purge their pending reports, re-derive semi-sync quorums, and ship
-    /// each destination edge's model to its migrants as an in-flight
-    /// downlink transfer.
-    fn on_recluster(&mut self, t: f64) -> Result<()> {
+    /// The re-clustering barrier: re-profile + re-cluster the live
+    /// population (`HflEngine::recluster_core`), then migrate the
+    /// running topology across shards — devices hand their shard state
+    /// from source to destination shard (in-flight training absorbed by
+    /// the tombstone protocol when the shards differ, voided in place
+    /// when they don't), member lists refresh everywhere, semi-sync
+    /// quorums re-derive, and each destination edge's model ships to
+    /// its migrants as an in-flight downlink.
+    fn recluster_barrier(&mut self, t: f64) -> Result<()> {
         let n = self.eng.cfg.topology.devices;
         // Re-check: the drift that scheduled this event may have been
         // handled already (duplicate trigger), or may no longer qualify.
@@ -1525,36 +1543,66 @@ impl AsyncHflEngine {
         self.refresh_dev_edge();
         self.recluster_seq += 1;
         let seq = self.recluster_seq;
+        let n_shards = self.shards.len();
+        for sh in self.shards.iter_mut() {
+            sh.barrier_sweep(t);
+        }
         let mut by_dest: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
-        for &(d, old, new) in &out.migrated {
-            // Stale-result protocol (as for leavers): the device's pending
-            // report and in-flight training were computed against its old
-            // edge's model — void them.
-            self.reported[old].retain(|&x| x != d);
-            if let Some(p) = self.in_flight[d].as_mut() {
-                p.void = true;
+        for &(d, _old, new) in &out.migrated {
+            let src = self.dev_shard[d];
+            let dst = EngineShard::shard_of(new, n_shards);
+            if src == dst {
+                // Same owner: the device entry moves edges in place (no
+                // tombstone — the pending DeviceTrainDone still resolves
+                // against the same heap).
+                self.shards[src].migrate_local(d, new, seq);
+            } else if let Some((active, version, cpu)) =
+                self.shards[src].migrate_out(d, new, seq)
+            {
+                self.shards[dst].migrate_in(d, new, active, version, seq, cpu);
             }
-            self.migration_seq[d] = seq;
+            self.dev_shard[d] = dst;
             by_dest.entry(new).or_default().push(d);
         }
-        // Warm-start delivery: one downlink per destination edge, carrying
-        // its model snapshot for all its migrants. The snapshot is an
-        // rc-share — copy-on-write preserves it if the edge aggregates
-        // while the downlink is in flight.
-        for (edge, devices) in by_dest {
-            let r = self.eng.store.share(&self.eng.edge_w[edge]);
-            self.start_migration_downlink(edge, r, devices, seq, t);
+        // Refresh every edge's member list from the re-clustered
+        // topology (cohort selection and quorum denominators read it).
+        for j in 0..self.edges() {
+            let s = EngineShard::shard_of(j, n_shards);
+            self.shards[s]
+                .install_edge(j, self.eng.topo.edges[j].members.clone());
         }
-        // Re-derive semi-sync quorums against the new membership: an edge
-        // that lost members may now satisfy its (live-clamped) quorum
-        // with the reports it already holds.
-        self.recheck_quorums(
-            out.migrated
-                .iter()
-                .flat_map(|&(_, old, new)| [old, new])
-                .collect(),
-            t,
-        );
+        // Warm-start delivery: one downlink per destination edge,
+        // carrying its model snapshot for all its migrants. The snapshot
+        // is an rc-share — copy-on-write preserves it if the edge
+        // aggregates while the downlink is in flight.
+        for (edge, devices) in by_dest {
+            let s = EngineShard::shard_of(edge, n_shards);
+            if let Some(id) =
+                self.shards[s].start_migration(edge, devices, seq, t)
+            {
+                let r = self.eng.store.share(&self.eng.edge_w[edge]);
+                self.payloads.insert((s, id), Payload::Migration { r });
+            }
+        }
+        // Re-derive semi-sync quorums against the new membership: an
+        // edge that lost members may now satisfy its (live-clamped)
+        // quorum with the reports it already holds.
+        let mut hit: Vec<usize> = out
+            .migrated
+            .iter()
+            .flat_map(|&(_, old, new)| [old, new])
+            .collect();
+        hit.sort_unstable();
+        hit.dedup();
+        for j in hit {
+            let s = EngineShard::shard_of(j, n_shards);
+            self.shards[s].recheck_quorum(j, t);
+        }
+        for s in 0..n_shards {
+            let log = self.shards[s].take_actions();
+            self.replay_log(s, &log)?;
+            self.shards[s].recycle(log);
+        }
         if let Some(o) = self.eng.obs.as_mut() {
             let wall_ns = t_wall
                 .map(|i| i.elapsed().as_nanos() as u64)
@@ -1565,106 +1613,40 @@ impl AsyncHflEngine {
         Ok(())
     }
 
-    /// Semi-sync only: re-check the K-quorum of the listed edges against
-    /// their current live membership and close any edge round that the
-    /// outstanding reports now satisfy (shared by the churn and
-    /// re-clustering paths — both shrink live sets out from under
-    /// pending reports).
-    fn recheck_quorums(&mut self, mut hit: Vec<usize>, t: f64) {
-        let SyncMode::SemiSync { quorum, .. } = self.mode else {
-            return;
-        };
-        hit.sort_unstable();
-        hit.dedup();
-        for j in hit {
-            if !self.reported[j].is_empty()
-                && quorum_satisfied(
-                    self.reported[j].len(),
-                    quorum,
-                    self.live_members(j),
-                )
-            {
-                self.queue.schedule(t, Event::EdgeAggregate { edge: j });
-            }
-        }
-    }
-
     /// `Event::EdgeOutage`: sever (down) or restore (up) one edge
-    /// aggregator. Down, the edge's pending reports die with it and all
-    /// in-flight member work is voided (stale-result protocol — the
-    /// edge model those runs trained against is lost); members idle
-    /// until recovery. Up, live idle members warm-restart from the
-    /// edge's current model, exactly like a churn rejoin.
-    fn on_edge_outage(
-        &mut self,
-        edge: usize,
-        up: bool,
-        t: f64,
-    ) -> Result<()> {
+    /// aggregator — a single-shard barrier. Down, the edge's pending
+    /// reports die with it and all in-flight member work is voided
+    /// (stale-result protocol); members idle until recovery. Up, live
+    /// idle members warm-restart from the edge's current model.
+    fn outage_barrier(&mut self, edge: usize, up: bool, t: f64) -> Result<()> {
         self.win_fault_events += 1;
-        if !up {
-            if !self.edge_faulted[edge] {
-                self.edge_faulted[edge] = true;
-                self.reported[edge].clear();
-                self.abandon_stragglers(edge);
-                if let Some(o) = self.eng.obs.as_mut() {
-                    o.on_fault("outage");
-                }
-            }
-            return Ok(());
-        }
-        if !self.edge_faulted[edge] {
-            return Ok(()); // overlapping plans: already recovered
-        }
-        self.edge_faulted[edge] = false;
-        if let Some(o) = self.eng.obs.as_mut() {
-            o.on_fault("recovery");
-        }
-        let mut idle = Vec::new();
-        for idx in 0..self.eng.topo.edges[edge].members.len() {
-            let d = self.eng.topo.edges[edge].members[idx];
-            if self.eng.mobility.is_active(d) && self.in_flight[d].is_none()
-            {
-                // O(1) re-point: the pre-outage device line is stale.
-                self.eng.store.repoint(
-                    &mut self.eng.device_w[d],
-                    &self.eng.edge_w[edge],
-                );
-                idle.push(d);
+        let s = EngineShard::shard_of(edge, self.shards.len());
+        self.shards[s].barrier_sweep(t);
+        let changed = self.shards[s].apply_outage(edge, up, t);
+        if changed {
+            if let Some(o) = self.eng.obs.as_mut() {
+                o.on_fault(if up { "recovery" } else { "outage" });
             }
         }
-        let resume = match self.mode {
-            SyncMode::SemiSync { quorum, .. }
-                if self.eng.cfg.lifecycle.overselect > 0.0 =>
-            {
-                self.edge_cohort(
-                    edge,
-                    quorum,
-                    self.eng.cfg.lifecycle.overselect,
-                    t,
-                )
-            }
-            _ => idle,
-        };
-        self.dispatch(&resume, t)
+        let log = self.shards[s].take_actions();
+        self.replay_log(s, &log)?;
+        self.shards[s].recycle(log);
+        Ok(())
     }
 
     /// `Event::Partition`: sever (down) or heal (up) the cloud links of
     /// every edge whose bit is set in `mask` (edge `j` maps to bit
     /// `j % 64`). Partitioned edges keep training and aggregating
-    /// locally — only their uplink/downlink transfers are dropped, so
-    /// the cloud ages them (staleness grows) until the heal.
-    fn on_partition(&mut self, mask: u64, up: bool) {
+    /// locally — only their uplink/downlink to the cloud is blocked, so
+    /// the cloud ages them (staleness grows) until the heal. Pure flag
+    /// flips; no shard emits actions.
+    fn partition_barrier(&mut self, mask: u64, up: bool) {
         self.win_fault_events += 1;
-        let mut touched = false;
-        for j in 0..self.edges() {
-            if (mask >> (j % 64)) & 1 == 0 {
-                continue;
-            }
-            touched = touched || self.edge_partitioned[j] == up;
-            self.edge_partitioned[j] = !up;
+        let mut touched = 0usize;
+        for sh in self.shards.iter_mut() {
+            touched += sh.apply_partition(mask, up);
         }
-        if touched {
+        if touched > 0 {
             if let Some(o) = self.eng.obs.as_mut() {
                 o.on_fault(if up { "recovery" } else { "partition" });
             }
@@ -1674,11 +1656,12 @@ impl AsyncHflEngine {
     /// `Event::CrashStorm`: crash the storm's device set, or revive it
     /// `fault.rejoin_delay` later. Membership is the pure predicate
     /// `lifecycle::storm_hits(seed, device, frac_bits)` — no draws, so
-    /// the crash and rejoin events recompute exactly the same set and
-    /// the storm is identical at any worker count. Crashing routes
-    /// through the churn machinery: reports purged, in-flight work
-    /// voided, pending warm-starts cleared, quorum liveness re-checked.
-    fn on_crash_storm(
+    /// every shard recomputes exactly the same subset of its own devices
+    /// in parallel and the storm is identical at any worker count. The
+    /// changed lists sync the coordinator's mobility model back at the
+    /// merge (fixed shard order), keeping it the single authority that
+    /// `edge_availability` and the next re-cluster read.
+    fn storm_barrier(
         &mut self,
         storm: u64,
         frac_bits: u32,
@@ -1686,85 +1669,27 @@ impl AsyncHflEngine {
         t: f64,
     ) -> Result<()> {
         self.win_fault_events += 1;
-        let n = self.eng.cfg.topology.devices;
-        if !up {
-            let mut hit_edges = Vec::new();
-            let mut crashed = false;
-            for d in 0..n {
-                if !storm_hits(storm, d, frac_bits)
-                    || !self.eng.mobility.is_active(d)
-                {
-                    continue;
-                }
-                self.eng.mobility.set_active(d, false);
-                crashed = true;
-                let j = self.dev_edge[d];
-                self.reported[j].retain(|&x| x != d);
-                if let Some(p) = self.in_flight[d].as_mut() {
-                    if !p.void {
-                        p.void = true;
-                        self.win_abandoned[j] += 1;
-                    }
-                }
-                self.migration_seq[d] = 0;
-                hit_edges.push(j);
+        let workers = self.eng.sim_workers();
+        let results = shard_scope(workers, &mut self.shards, |_idx, sh| {
+            sh.barrier_sweep(t);
+            let changed = sh.apply_crash_storm(storm, frac_bits, up, t);
+            (sh.take_actions(), changed)
+        });
+        let mut any = false;
+        for (s, (log, changed)) in results.into_iter().enumerate() {
+            for &d in &changed {
+                self.eng.mobility.set_active(d, up);
             }
-            if crashed {
-                if let Some(o) = self.eng.obs.as_mut() {
-                    o.on_fault("crash");
-                }
-            }
-            // A storm can shrink an edge's live set to (or below) its
-            // outstanding reports — same liveness re-check as churn.
-            self.recheck_quorums(hit_edges, t);
-            return Ok(());
+            any = any || !changed.is_empty();
+            self.replay_log(s, &log)?;
+            self.shards[s].recycle(log);
         }
-        let mut revived = Vec::new();
-        for d in 0..n {
-            if storm_hits(storm, d, frac_bits)
-                && !self.eng.mobility.is_active(d)
-            {
-                self.eng.mobility.set_active(d, true);
-                let j = self.dev_edge[d];
-                self.eng.store.repoint(
-                    &mut self.eng.device_w[d],
-                    &self.eng.edge_w[j],
-                );
-                revived.push(d);
-            }
-        }
-        if !revived.is_empty() {
+        if any {
             if let Some(o) = self.eng.obs.as_mut() {
-                o.on_fault("recovery");
+                o.on_fault(if up { "recovery" } else { "crash" });
             }
         }
-        self.dispatch(&revived, t)
-    }
-
-    /// Put `edge`'s warm-start snapshot on its downlink for its migrants.
-    fn start_migration_downlink(
-        &mut self,
-        edge: usize,
-        r: ModelRef,
-        devices: Vec<usize>,
-        seq: u64,
-        t: f64,
-    ) {
-        if self.draining {
-            self.eng.store.release(r);
-            return;
-        }
-        let region = self.eng.topo.edges[edge].region;
-        let work = self.eng.sample_one_way(region, Direction::Down);
-        let bytes = crate::sim::network::model_bytes(self.eng.p);
-        let (id, resched) =
-            self.eng.links.start(edge, Direction::Down, bytes, work, t);
-        self.payloads
-            .insert(id, Payload::Migration { edge, r, devices, seq });
-        for (tid, finish) in resched {
-            self.queue
-                .schedule(finish, Event::TransferDone { transfer: tid });
-        }
+        Ok(())
     }
 }
 

@@ -1167,7 +1167,7 @@ impl HflEngine {
 /// path: advance one device's CPU state through `epochs` local epochs of
 /// `nb` batches, returning the simulated (time, energy). All randomness
 /// comes from the device's own `CpuModel` stream.
-fn simulate_device(
+pub(crate) fn simulate_device(
     cpu: &mut CpuModel,
     energy: &EnergyModel,
     nb: usize,

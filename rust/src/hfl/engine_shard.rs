@@ -1,0 +1,2110 @@
+//! Per-edge engine shards: the parallel half of `AsyncHflEngine`.
+//!
+//! The event engine's timeline is **edge-partitioned**: between cloud
+//! decision points, a `DeviceTrainDone` / `EdgeAggregate` /
+//! `TransferDone` event on edge `j` can read and write only edge-`j`
+//! state (its members, its uplink/downlink, its version counters).
+//! Every cross-edge coupling — cloud aggregation, mobility flips,
+//! re-clustering, fault storms, `set_control` re-arms — is a *ctrl
+//! event*, and ctrl events are only ever scheduled at barriers. So the
+//! conservative window bound of the sharded engine collapses from the
+//! generic `min_s(peek_time_s) + min_link_latency` to simply **the next
+//! ctrl event's timestamp**: no shard can be affected by another shard
+//! before the next barrier, no speculation, no rollback.
+//!
+//! # Two-phase windows: advance, then replay
+//!
+//! An [`EngineShard`] owns, for its edges, everything the *timeline*
+//! needs: the event heap, the link pair, the RNG streams (link jitter +
+//! job seeds), per-device CPU/lifecycle/availability state, and mirrors
+//! of every version counter the handlers branch on. What it does *not*
+//! own is model values — those live in the coordinator's `ModelStore`.
+//! The timeline never reads a model value (it branches on version
+//! counters, data sizes and RNG draws only), which is the invariant
+//! that makes the split exact:
+//!
+//! 1. **Advance** (parallel, `util::threadpool::shard_scope` /
+//!    [`ShardPool`]): each shard drains its heap up to the window bound,
+//!    appending an ordered [`EngineAction`] log — "train these jobs",
+//!    "aggregate these devices with these betas", "this upload landed,
+//!    adopt it".
+//! 2. **Replay** (serial, fixed shard order): the coordinator applies
+//!    the logs — real training, store mutation, accumulator and
+//!    observer effects — shard 0 first, then shard 1, … Because model
+//!    state is edge-partitioned too, in-order-within-shard is the only
+//!    ordering that matters, and shard-major replay reproduces the
+//!    single-threaded trajectory bit for bit (f64 accumulation order
+//!    included).
+//!
+//! Shard count is fixed by the topology (`edge % n_shards`, auto
+//! `min(edges, 64)`), never by `sim.workers`; a single worker runs the
+//! identical structure inline, so worker-count invariance is
+//! structural, not tested-for luck. Wall-clock is read only with an
+//! observer attached and flows only into observer records.
+//!
+//! # The training-free timeline harness
+//!
+//! [`ShardedEngineLoop`] drives the same `EngineShard` machinery with a
+//! synthetic population and **no replay phase** (no artifacts, no
+//! model store): the action stream is folded into per-window checksums
+//! instead of being applied. This is what CI diffs across worker
+//! counts and what `benches/event_queue.rs` times at 1M devices — the
+//! advance phase is training-free by construction, so the harness
+//! exercises exactly the code the real engine parallelizes.
+
+use std::collections::HashMap;
+use std::io::Write as _;
+use std::sync::Arc;
+
+use crate::config::FaultConfig;
+use crate::hfl::aggregate::staleness_discount;
+use crate::hfl::async_engine::{
+    effective_quorum, quorum_satisfied, SyncMode,
+};
+use crate::hfl::engine::simulate_device;
+use crate::hfl::lifecycle::{
+    overselect_count, select_dispatch, storm_hits, FaultPlan,
+};
+use crate::obs::profiler::ShardProfiler;
+use crate::sim::{
+    AvailabilityModel, CpuModel, Direction, EnergyModel, Event, EventQueue,
+    LinkManager, MobilityModel, NetworkModel, QueueBackend, Region,
+};
+use crate::util::rng::Rng;
+use crate::util::threadpool::ShardPool;
+
+/// Sentinel `mig_seq` of a tombstone: a device that migrated away while
+/// a training result was still in flight. The stale `DeviceTrainDone`
+/// lands here (voided), then the tombstone is removed.
+const TOMBSTONE: u64 = u64::MAX;
+
+/// One training job's timeline-side record. Replay turns it into a real
+/// `TrainJob` (slicing the device's current model) and parks the result
+/// in the store at `start_version`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DispatchJob {
+    pub device: usize,
+    pub edge: usize,
+    /// Worker-pool job seed (drawn from the shard's job stream).
+    pub seed: u64,
+    pub epochs: usize,
+    /// Edge model version at dispatch — the result's staleness anchor.
+    pub start_version: u64,
+    /// Simulated compute seconds (device CPU stream).
+    pub t_dev: f64,
+    /// Simulated compute energy, mAh.
+    pub e_dev: f64,
+    /// Availability lag before compute starts.
+    pub lag: f64,
+}
+
+/// How a `DeviceTrainDone` resolved.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TrainOutcome {
+    /// Adopt the parked result into the device line.
+    Landed,
+    /// Stale (abandoned / churned / migrated) — energy was spent, the
+    /// result is dropped.
+    Voided,
+    /// The device left the population mid-flight.
+    Departed,
+}
+
+/// What a landed transfer does to the coordinator's model state. The
+/// adopt/release decision is made shard-side from version mirrors, so
+/// replay applies it without re-deriving anything.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Landing {
+    Upload { adopt: bool },
+    Downlink { adopt: bool },
+    Migration { devices: Vec<usize>, seq: u64 },
+}
+
+/// The shard→coordinator action protocol: everything a window's
+/// timeline decided, in the exact order it decided it. Replay applies
+/// these logs in fixed shard order; the harness folds them into
+/// checksums instead.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EngineAction {
+    /// One event popped and handled (emitted only while an observer is
+    /// attached; wall values flow only into observer records).
+    Obs {
+        variant: &'static str,
+        t: f64,
+        lag_ns: u64,
+        handler_ns: u64,
+    },
+    /// A training burst left at `t`: replay runs the real jobs through
+    /// the worker pool. `sim_wall_ns` is the shard-side wall cost of
+    /// the per-device CPU simulation (profiler-gated, else 0).
+    Dispatch {
+        t: f64,
+        jobs: Vec<DispatchJob>,
+        sim_wall_ns: u64,
+    },
+    /// A `DeviceTrainDone` resolved on `edge`.
+    Train {
+        edge: usize,
+        device: usize,
+        outcome: TrainOutcome,
+    },
+    /// An edge aggregation: empty `mixes` is the semi-sync full
+    /// aggregate over `devs`; otherwise the async staleness-discounted
+    /// blend, one `(device, beta)` per reporter in order.
+    EdgeAgg {
+        edge: usize,
+        devs: Vec<usize>,
+        mixes: Vec<(usize, f32)>,
+    },
+    /// An upload departed: replay snapshots the edge model as the
+    /// payload of shard-local transfer `id`.
+    UploadStart { edge: usize, id: usize },
+    /// Idle devices re-synced to their edge model (outage recovery,
+    /// crash rejoin, churn rejoin).
+    Rejoin { edge: usize, devices: Vec<usize> },
+    /// A transfer landed; `landing` carries the shard-decided payload
+    /// disposition.
+    Transfer {
+        id: usize,
+        edge: usize,
+        t: f64,
+        dir: &'static str,
+        bytes: f64,
+        start: f64,
+        finish: f64,
+        landing: Landing,
+    },
+}
+
+/// Fold an action slice into a running FNV-1a checksum. Stable across
+/// worker counts and queue backends by construction (the action stream
+/// is); the harness's per-window CSV checksum and the tests both use it.
+pub fn fold_actions(h: &mut u64, acts: &[EngineAction]) {
+    #[inline]
+    fn mix(h: &mut u64, x: u64) {
+        *h ^= x;
+        *h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    for a in acts {
+        match a {
+            // Wall-clock values never enter a checksum.
+            EngineAction::Obs { t, .. } => {
+                mix(h, 1);
+                mix(h, t.to_bits());
+            }
+            EngineAction::Dispatch { t, jobs, .. } => {
+                mix(h, 2);
+                mix(h, t.to_bits());
+                for j in jobs {
+                    mix(h, j.device as u64);
+                    mix(h, j.edge as u64);
+                    mix(h, j.seed);
+                    mix(h, j.epochs as u64);
+                    mix(h, j.start_version);
+                    mix(h, j.t_dev.to_bits());
+                    mix(h, j.e_dev.to_bits());
+                    mix(h, j.lag.to_bits());
+                }
+            }
+            EngineAction::Train {
+                edge,
+                device,
+                outcome,
+            } => {
+                mix(h, 3);
+                mix(h, *edge as u64);
+                mix(h, *device as u64);
+                mix(h, *outcome as u64);
+            }
+            EngineAction::EdgeAgg { edge, devs, mixes } => {
+                mix(h, 4);
+                mix(h, *edge as u64);
+                for &d in devs {
+                    mix(h, d as u64);
+                }
+                for &(d, b) in mixes {
+                    mix(h, d as u64);
+                    mix(h, b.to_bits() as u64);
+                }
+            }
+            EngineAction::UploadStart { edge, id } => {
+                mix(h, 5);
+                mix(h, *edge as u64);
+                mix(h, *id as u64);
+            }
+            EngineAction::Rejoin { edge, devices } => {
+                mix(h, 6);
+                mix(h, *edge as u64);
+                for &d in devices {
+                    mix(h, d as u64);
+                }
+            }
+            EngineAction::Transfer {
+                id,
+                edge,
+                t,
+                dir,
+                bytes,
+                start,
+                finish,
+                landing,
+            } => {
+                mix(h, 7);
+                mix(h, *id as u64);
+                mix(h, *edge as u64);
+                mix(h, t.to_bits());
+                mix(h, dir.len() as u64);
+                mix(h, *bytes as u64);
+                mix(h, start.to_bits());
+                mix(h, finish.to_bits());
+                match landing {
+                    Landing::Upload { adopt } => mix(h, 10 + *adopt as u64),
+                    Landing::Downlink { adopt } => {
+                        mix(h, 20 + *adopt as u64)
+                    }
+                    Landing::Migration { devices, seq } => {
+                        mix(h, 30);
+                        mix(h, *seq);
+                        for &d in devices {
+                            mix(h, d as u64);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The physics and policy every shard needs a private copy of. Cheap to
+/// clone at `begin_run` (availability windows are the only O(n) part,
+/// and only when pace steering is on).
+#[derive(Clone)]
+pub struct ShardPhysics {
+    /// Minibatches per local epoch (drives the CPU simulation).
+    pub nb: usize,
+    /// Model bytes on the wire.
+    pub pbytes: usize,
+    pub up_scale: f64,
+    pub down_scale: f64,
+    pub contention: bool,
+    pub net: NetworkModel,
+    pub energy: EnergyModel,
+    pub avail: Option<AvailabilityModel>,
+    /// Per global edge.
+    pub regions: Vec<Region>,
+    /// Per global device: training-data size (aggregation share).
+    pub data_n: Arc<Vec<f32>>,
+    pub mode: SyncMode,
+    pub overselect: f64,
+}
+
+#[derive(Clone, Debug)]
+struct PendMeta {
+    void: bool,
+    start_version: u64,
+}
+
+#[derive(Clone, Debug)]
+struct DevState {
+    edge: usize,
+    active: bool,
+    /// Device model version mirror (tracks every repoint/adopt replay
+    /// will perform).
+    version: u64,
+    mig_seq: u64,
+    pend: Option<PendMeta>,
+}
+
+#[derive(Clone, Debug)]
+enum TrKind {
+    Upload { version: u64 },
+    Downlink { version: u64 },
+    Migration { version: u64, devices: Vec<usize>, seq: u64 },
+}
+
+/// One shard of the engine timeline: the event heap, links, RNG
+/// streams, lifecycle state and version mirrors of its edges' world.
+/// See the module doc for what it may and may not own.
+pub struct EngineShard {
+    pub id: usize,
+    /// Own edges, ascending global ids (`edge % n_shards == id`).
+    pub edges: Vec<usize>,
+    queue: EventQueue,
+    /// Global-edge-indexed; only own edges' links are ever touched, so
+    /// transfer ids are *shard-local* (payloads key on `(shard, id)`).
+    links: LinkManager,
+    link_rng: Rng,
+    job_rng: Rng,
+    // Policy knobs, refreshed by the coordinator at window starts.
+    mode: SyncMode,
+    overselect: f64,
+    g1: Vec<usize>,
+    alpha: Vec<f64>,
+    obs_attached: bool,
+    profile: bool,
+    pub(crate) draining: bool,
+    phys: ShardPhysics,
+    // Membership + device state, own edges only.
+    members: Vec<Vec<usize>>,
+    devs: HashMap<usize, DevState>,
+    cpus: HashMap<usize, CpuModel>,
+    // Timeline mirrors (global-edge-indexed; own entries meaningful).
+    cloud_version: u64,
+    edge_version: Vec<u64>,
+    landed_version: Vec<u64>,
+    adopted_cloud: Vec<u64>,
+    pub(crate) edge_last_update: Vec<u64>,
+    pub(crate) reported: Vec<Vec<usize>>,
+    training_count: Vec<usize>,
+    pub(crate) window_landings: Vec<usize>,
+    pub(crate) window_edge_aggs: Vec<usize>,
+    pub(crate) obs_up: Vec<f64>,
+    pub(crate) obs_down: Vec<f64>,
+    pub(crate) edge_faulted: Vec<bool>,
+    pub(crate) edge_partitioned: Vec<bool>,
+    pub(crate) win_abandoned: Vec<usize>,
+    pub(crate) win_compute: Vec<f64>,
+    pub(crate) win_up: Vec<f64>,
+    pub(crate) win_down: Vec<f64>,
+    pub(crate) win_comm: Vec<f64>,
+    pub(crate) win_overlap: Vec<f64>,
+    sweep_t: f64,
+    tr_meta: HashMap<usize, TrKind>,
+    // The window's action log plus the reusable-buffer pools that keep
+    // the steady state allocation-free (the calendar queue's spare-Vec
+    // pattern): `recycle` drains replayed actions back into them.
+    actions: Vec<EngineAction>,
+    scratch: Vec<usize>,
+    spare: Vec<Vec<usize>>,
+    spare_jobs: Vec<Vec<DispatchJob>>,
+    spare_mixes: Vec<Vec<(usize, f32)>>,
+    // Read-only profiling (barrier-drained).
+    pub(crate) prof: ShardProfiler,
+    pub(crate) win_events: u64,
+    pub(crate) win_voided: u64,
+    pub(crate) win_flips: u64,
+    pub(crate) win_outages: u64,
+    pub(crate) win_partitions: u64,
+    pub(crate) win_crashes: u64,
+    pub(crate) queue_peak: usize,
+    pub(crate) events_handled: u64,
+}
+
+impl EngineShard {
+    /// Topology-fixed shard count: `min(edges, 64)`, never derived from
+    /// the worker count.
+    pub fn auto_shards(edges: usize) -> usize {
+        edges.clamp(1, 64)
+    }
+
+    /// The shard that owns `edge`.
+    pub fn shard_of(edge: usize, n_shards: usize) -> usize {
+        edge % n_shards
+    }
+
+    pub(crate) fn new(
+        id: usize,
+        n_shards: usize,
+        seed: u64,
+        backend: QueueBackend,
+        expected_events: usize,
+        phys: ShardPhysics,
+    ) -> Self {
+        let m = phys.regions.len();
+        // Canonical per-shard streams: a function of the master seed and
+        // the shard index only — identical for any worker count.
+        let mut master = Rng::new(seed ^ 0xe551_7a0d ^ ((id as u64) << 20));
+        EngineShard {
+            id,
+            edges: (id..m).step_by(n_shards.max(1)).collect(),
+            queue: EventQueue::for_scale(
+                master.fork(1).next_u64(),
+                expected_events,
+                backend,
+            ),
+            links: LinkManager::new(m, phys.contention),
+            link_rng: master.fork(2),
+            job_rng: master.fork(3),
+            mode: phys.mode,
+            overselect: phys.overselect,
+            g1: vec![1; m],
+            alpha: vec![0.0; m],
+            obs_attached: false,
+            profile: false,
+            draining: false,
+            members: vec![Vec::new(); m],
+            devs: HashMap::new(),
+            cpus: HashMap::new(),
+            cloud_version: 0,
+            edge_version: vec![0; m],
+            landed_version: vec![0; m],
+            adopted_cloud: vec![0; m],
+            edge_last_update: vec![0; m],
+            reported: vec![Vec::new(); m],
+            training_count: vec![0; m],
+            window_landings: vec![0; m],
+            window_edge_aggs: vec![0; m],
+            obs_up: vec![0.0; m],
+            obs_down: vec![0.0; m],
+            edge_faulted: vec![false; m],
+            edge_partitioned: vec![false; m],
+            win_abandoned: vec![0; m],
+            win_compute: vec![0.0; m],
+            win_up: vec![0.0; m],
+            win_down: vec![0.0; m],
+            win_comm: vec![0.0; m],
+            win_overlap: vec![0.0; m],
+            sweep_t: 0.0,
+            tr_meta: HashMap::new(),
+            actions: Vec::new(),
+            scratch: Vec::new(),
+            spare: Vec::new(),
+            spare_jobs: Vec::new(),
+            spare_mixes: Vec::new(),
+            prof: ShardProfiler::default(),
+            win_events: 0,
+            win_voided: 0,
+            win_flips: 0,
+            win_outages: 0,
+            win_partitions: 0,
+            win_crashes: 0,
+            queue_peak: 0,
+            events_handled: 0,
+            phys,
+        }
+    }
+
+    /// Install (or refresh, after a re-cluster) edge `j`'s member list.
+    pub(crate) fn install_edge(&mut self, j: usize, members: Vec<usize>) {
+        self.members[j] = members;
+    }
+
+    /// Register a device this shard owns.
+    pub(crate) fn install_device(
+        &mut self,
+        d: usize,
+        edge: usize,
+        active: bool,
+        version: u64,
+        cpu: CpuModel,
+    ) {
+        self.devs.insert(
+            d,
+            DevState {
+                edge,
+                active,
+                version,
+                mig_seq: 0,
+                pend: None,
+            },
+        );
+        self.cpus.insert(d, cpu);
+    }
+
+    /// Refresh the coordinator-owned knobs at a window start (the
+    /// `set_control` re-arm path and the observer/profiler flags).
+    pub(crate) fn refresh_knobs(
+        &mut self,
+        g1: &[usize],
+        alpha: &[f64],
+        obs_attached: bool,
+        profile: bool,
+        draining: bool,
+    ) {
+        self.g1.copy_from_slice(g1);
+        self.alpha.copy_from_slice(alpha);
+        self.obs_attached = obs_attached;
+        self.profile = profile;
+        self.prof.set_enabled(profile);
+        self.draining = draining;
+    }
+
+    /// Take the window's action log (replay side), leaving the buffer
+    /// behind for reuse.
+    pub(crate) fn take_actions(&mut self) -> Vec<EngineAction> {
+        std::mem::take(&mut self.actions)
+    }
+
+    /// Hand a replayed action log back: inner buffers return to the
+    /// spare pools, the log itself becomes the next window's (cleared)
+    /// action buffer. This is what keeps the dispatch / landed-view
+    /// paths allocation-free in steady state.
+    pub(crate) fn recycle(&mut self, mut acts: Vec<EngineAction>) {
+        let cap = 2 * self.edges.len() + 4;
+        for a in acts.drain(..) {
+            match a {
+                EngineAction::Dispatch { mut jobs, .. } => {
+                    if self.spare_jobs.len() < cap {
+                        jobs.clear();
+                        self.spare_jobs.push(jobs);
+                    }
+                }
+                EngineAction::EdgeAgg {
+                    mut devs,
+                    mut mixes,
+                    ..
+                } => {
+                    if self.spare.len() < cap {
+                        devs.clear();
+                        self.spare.push(devs);
+                    }
+                    if self.spare_mixes.len() < cap {
+                        mixes.clear();
+                        self.spare_mixes.push(mixes);
+                    }
+                }
+                EngineAction::Rejoin { devices, .. }
+                | EngineAction::Transfer {
+                    landing: Landing::Migration { devices, .. },
+                    ..
+                } => {
+                    let mut v = devices;
+                    if self.spare.len() < cap {
+                        v.clear();
+                        self.spare.push(v);
+                    }
+                }
+                _ => {}
+            }
+        }
+        if self.actions.capacity() < acts.capacity() {
+            self.actions = acts;
+        }
+    }
+
+    fn variant(ev: &Event) -> &'static str {
+        match ev {
+            Event::DeviceTrainDone { .. } => "train_done",
+            Event::EdgeAggregate { .. } => "edge_aggregate",
+            Event::TransferDone { .. } => "transfer_done",
+            _ => "ctrl",
+        }
+    }
+
+    /// Drain every event with `time <= bound`. Ctrl events never live in
+    /// a shard heap, so within the bound this shard's timeline is
+    /// completely independent of every other shard (module doc).
+    pub(crate) fn advance(&mut self, bound: f64) {
+        while let Some(tp) = self.queue.peek_time() {
+            if tp > bound {
+                break;
+            }
+            let w0 = if self.obs_attached {
+                Some(std::time::Instant::now())
+            } else {
+                None
+            };
+            let (t, ev) = self.queue.pop().expect("peeked event vanished");
+            if self.prof.enabled() {
+                self.prof.sample_queue_depth(self.queue.len());
+            }
+            self.queue_peak = self.queue_peak.max(self.queue.len() + 1);
+            self.sweep(t);
+            let w1 = w0.map(|p| (p, std::time::Instant::now()));
+            match ev {
+                Event::DeviceTrainDone { device, edge } => {
+                    self.on_train_done(device, edge, t)
+                }
+                Event::EdgeAggregate { edge } => {
+                    self.on_edge_aggregate(edge, t)
+                }
+                Event::TransferDone { transfer } => {
+                    self.on_transfer_done(transfer, t)
+                }
+                other => unreachable!("ctrl event {other:?} in shard heap"),
+            }
+            self.win_events += 1;
+            self.events_handled += 1;
+            if let Some((p0, p1)) = w1 {
+                self.actions.push(EngineAction::Obs {
+                    variant: Self::variant(&ev),
+                    t,
+                    lag_ns: (p1 - p0).as_nanos() as u64,
+                    handler_ns: p1.elapsed().as_nanos() as u64,
+                });
+            }
+        }
+    }
+
+    /// Busy-time integration since the last sweep (per own edge).
+    fn sweep(&mut self, t: f64) {
+        let dt = t - self.sweep_t;
+        if dt <= 0.0 {
+            return;
+        }
+        for i in 0..self.edges.len() {
+            let j = self.edges[i];
+            let c = self.training_count[j] > 0;
+            let u = self.links.active_count(j, Direction::Up) > 0;
+            let d = self.links.active_count(j, Direction::Down) > 0;
+            if c {
+                self.win_compute[j] += dt;
+            }
+            if u {
+                self.win_up[j] += dt;
+            }
+            if d {
+                self.win_down[j] += dt;
+            }
+            if u || d {
+                self.win_comm[j] += dt;
+            }
+            if c && (u || d) {
+                self.win_overlap[j] += dt;
+            }
+        }
+        self.sweep_t = t;
+    }
+
+    /// Barrier entry: integrate busy time up to the barrier instant.
+    pub(crate) fn barrier_sweep(&mut self, t: f64) {
+        self.sweep(t);
+    }
+
+    /// Live member count of an owned edge (quorum denominator; also a
+    /// barrier-side ctrl observable).
+    pub(crate) fn live_members(&self, j: usize) -> usize {
+        self.members[j]
+            .iter()
+            .filter(|d| self.devs.get(d).map(|s| s.active).unwrap_or(false))
+            .count()
+    }
+
+    /// Dispatch whatever `scratch` holds, consuming it. Filters mirror
+    /// the pre-shard engine: active, idle, not migrating, edge up.
+    fn dispatch_scratch(&mut self, now: f64) {
+        if self.draining || self.scratch.is_empty() {
+            self.scratch.clear();
+            return;
+        }
+        let devs = std::mem::take(&mut self.scratch);
+        let mut jobs = self.spare_jobs.pop().unwrap_or_default();
+        let w0 = if self.obs_attached && self.profile {
+            Some(std::time::Instant::now())
+        } else {
+            None
+        };
+        for &d in &devs {
+            let (j, ok) = match self.devs.get(&d) {
+                Some(st) => (
+                    st.edge,
+                    st.active && st.pend.is_none() && st.mig_seq == 0,
+                ),
+                None => (0, false),
+            };
+            if !ok || self.edge_faulted[j] {
+                continue;
+            }
+            let epochs = self.g1[j];
+            let (t_dev, e_dev) = simulate_device(
+                self.cpus.get_mut(&d).expect("dispatch without cpu"),
+                &self.phys.energy,
+                self.phys.nb,
+                epochs,
+            );
+            let seed = self.job_rng.fork(d as u64).next_u64();
+            let lag = self
+                .phys
+                .avail
+                .as_ref()
+                .map(|a| a.delay_until(d, now))
+                .unwrap_or(0.0);
+            let start_version = self.edge_version[j];
+            let st = self.devs.get_mut(&d).expect("dispatch without state");
+            st.pend = Some(PendMeta {
+                void: false,
+                start_version,
+            });
+            self.training_count[j] += 1;
+            self.queue.schedule(
+                now + lag + t_dev,
+                Event::DeviceTrainDone { device: d, edge: j },
+            );
+            jobs.push(DispatchJob {
+                device: d,
+                edge: j,
+                seed,
+                epochs,
+                start_version,
+                t_dev,
+                e_dev,
+                lag,
+            });
+        }
+        self.scratch = devs;
+        self.scratch.clear();
+        if jobs.is_empty() {
+            self.spare_jobs.push(jobs);
+            return;
+        }
+        let sim_wall_ns = w0
+            .map(|p| p.elapsed().as_nanos() as u64)
+            .unwrap_or(0);
+        self.actions.push(EngineAction::Dispatch {
+            t: now,
+            jobs,
+            sim_wall_ns,
+        });
+    }
+
+    /// Fill `scratch` with the edge's over-selected cohort (semi-sync
+    /// lifecycle path).
+    fn cohort_into_scratch(&mut self, j: usize, t: f64) {
+        let mut live = self.spare.pop().unwrap_or_default();
+        live.clear();
+        for i in 0..self.members[j].len() {
+            let m = self.members[j][i];
+            if self.devs.get(&m).map(|s| s.active).unwrap_or(false) {
+                live.push(m);
+            }
+        }
+        let quorum = match self.mode {
+            SyncMode::SemiSync { quorum, .. } => quorum,
+            _ => 0,
+        };
+        let k = effective_quorum(quorum, live.len());
+        let n = overselect_count(k, self.overselect, live.len());
+        let sel = select_dispatch(&live, n, self.phys.avail.as_ref(), t);
+        self.scratch.clear();
+        self.scratch.extend_from_slice(&sel);
+        live.clear();
+        self.spare.push(live);
+    }
+
+    /// First-window cohort: over-selected per edge in semi-sync with
+    /// lifecycle on, every member otherwise.
+    pub(crate) fn initial_dispatch(&mut self, t: f64) {
+        let overselect = matches!(self.mode, SyncMode::SemiSync { .. })
+            && self.overselect > 0.0;
+        for i in 0..self.edges.len() {
+            let j = self.edges[i];
+            if overselect {
+                self.cohort_into_scratch(j, t);
+            } else {
+                self.scratch.clear();
+                for k in 0..self.members[j].len() {
+                    let m = self.members[j][k];
+                    self.scratch.push(m);
+                }
+            }
+            self.dispatch_scratch(t);
+        }
+    }
+
+    fn on_train_done(&mut self, d: usize, j: usize, t: f64) {
+        let Some(st) = self.devs.get_mut(&d) else { return };
+        let Some(pend) = st.pend.take() else { return };
+        let tombstone = st.mig_seq == TOMBSTONE;
+        let active = st.active;
+        self.training_count[j] = self.training_count[j].saturating_sub(1);
+        if pend.void {
+            self.win_voided += 1;
+            self.actions.push(EngineAction::Train {
+                edge: j,
+                device: d,
+                outcome: TrainOutcome::Voided,
+            });
+            if tombstone {
+                self.devs.remove(&d);
+                return;
+            }
+            self.scratch.clear();
+            self.scratch.push(d);
+            self.dispatch_scratch(t);
+            return;
+        }
+        if !active {
+            self.actions.push(EngineAction::Train {
+                edge: j,
+                device: d,
+                outcome: TrainOutcome::Departed,
+            });
+            return;
+        }
+        self.devs.get_mut(&d).expect("landed device").version =
+            pend.start_version;
+        self.actions.push(EngineAction::Train {
+            edge: j,
+            device: d,
+            outcome: TrainOutcome::Landed,
+        });
+        self.reported[j].push(d);
+        match self.mode {
+            SyncMode::SemiSync { quorum, .. } => {
+                if quorum_satisfied(
+                    self.reported[j].len(),
+                    quorum,
+                    self.live_members(j),
+                ) {
+                    self.queue.schedule(t, Event::EdgeAggregate { edge: j });
+                }
+            }
+            SyncMode::Async { .. } => {
+                self.queue.schedule(t, Event::EdgeAggregate { edge: j });
+            }
+            SyncMode::Synchronous => {
+                unreachable!("sync mode never runs on shards")
+            }
+        }
+    }
+
+    /// Void every in-flight member of `j` not already voided (the
+    /// over-selection "close at K, cut the stragglers loose" rule).
+    fn abandon_stragglers(&mut self, j: usize) {
+        let mut dropped = 0;
+        for i in 0..self.members[j].len() {
+            let m = self.members[j][i];
+            if let Some(st) = self.devs.get_mut(&m) {
+                if let Some(p) = st.pend.as_mut() {
+                    if !p.void {
+                        p.void = true;
+                        dropped += 1;
+                    }
+                }
+            }
+        }
+        self.win_abandoned[j] += dropped;
+    }
+
+    fn on_edge_aggregate(&mut self, j: usize, t: f64) {
+        if self.reported[j].is_empty() {
+            return;
+        }
+        let devs = std::mem::replace(
+            &mut self.reported[j],
+            self.spare.pop().unwrap_or_default(),
+        );
+        let overselect = matches!(self.mode, SyncMode::SemiSync { .. })
+            && self.overselect > 0.0;
+        if overselect {
+            self.abandon_stragglers(j);
+        }
+        let mut mixes = self.spare_mixes.pop().unwrap_or_default();
+        match self.mode {
+            SyncMode::SemiSync { .. } => {
+                // Full aggregate: edge version +1, every member handle
+                // re-points to the edge buffer at replay.
+                self.edge_version[j] += 1;
+                let v = self.edge_version[j];
+                for i in 0..self.members[j].len() {
+                    let m = self.members[j][i];
+                    if let Some(st) = self.devs.get_mut(&m) {
+                        st.version = v;
+                    }
+                }
+            }
+            SyncMode::Async { .. } => {
+                // Staleness-discounted blend: betas are a pure function
+                // of data sizes and version mirrors, so the shard can
+                // compute them without model values.
+                let mut edge_data = 0.0f32;
+                for i in 0..self.members[j].len() {
+                    edge_data += self.phys.data_n[self.members[j][i]];
+                }
+                let aj = self.alpha[j];
+                for &d in &devs {
+                    let s = self.edge_version[j]
+                        .saturating_sub(self.devs[&d].version);
+                    let share = self.phys.data_n[d] / edge_data;
+                    mixes.push((d, share * staleness_discount(s, aj)));
+                }
+                self.edge_version[j] += 1;
+                let v = self.edge_version[j];
+                for &d in &devs {
+                    self.devs.get_mut(&d).expect("reporter state").version =
+                        v;
+                }
+            }
+            SyncMode::Synchronous => {
+                unreachable!("sync mode never runs on shards")
+            }
+        }
+        self.window_edge_aggs[j] += 1;
+        // Next cohort before `devs` moves into the action.
+        if overselect {
+            self.cohort_into_scratch(j, t);
+        } else {
+            self.scratch.clear();
+            self.scratch.extend_from_slice(&devs);
+        }
+        self.actions.push(EngineAction::EdgeAgg {
+            edge: j,
+            devs,
+            mixes,
+        });
+        self.start_upload(j, t);
+        self.dispatch_scratch(t);
+    }
+
+    fn start_upload(&mut self, j: usize, t: f64) {
+        if self.draining
+            || self.edge_faulted[j]
+            || self.edge_partitioned[j]
+        {
+            return;
+        }
+        let work = self.phys.net.one_way_time(
+            self.phys.regions[j],
+            self.phys.pbytes,
+            self.phys.up_scale,
+            &mut self.link_rng,
+        );
+        let (id, resched) =
+            self.links.start(j, Direction::Up, self.phys.pbytes, work, t);
+        self.tr_meta.insert(
+            id,
+            TrKind::Upload {
+                version: self.edge_version[j],
+            },
+        );
+        self.actions.push(EngineAction::UploadStart { edge: j, id });
+        for (rid, ft) in resched {
+            self.queue.schedule(ft, Event::TransferDone { transfer: rid });
+        }
+    }
+
+    /// Barrier-side downlink start. Returns the shard-local transfer id
+    /// so the coordinator can key the cloud-snapshot payload, or `None`
+    /// when the edge can't receive (draining / faulted / partitioned).
+    pub(crate) fn start_downlink(&mut self, j: usize, t: f64) -> Option<usize> {
+        if self.draining
+            || self.edge_faulted[j]
+            || self.edge_partitioned[j]
+        {
+            return None;
+        }
+        let work = self.phys.net.one_way_time(
+            self.phys.regions[j],
+            self.phys.pbytes,
+            self.phys.down_scale,
+            &mut self.link_rng,
+        );
+        let (id, resched) =
+            self.links.start(j, Direction::Down, self.phys.pbytes, work, t);
+        self.tr_meta.insert(
+            id,
+            TrKind::Downlink {
+                version: self.cloud_version,
+            },
+        );
+        for (rid, ft) in resched {
+            self.queue.schedule(ft, Event::TransferDone { transfer: rid });
+        }
+        Some(id)
+    }
+
+    /// Barrier-side migration warm-start downlink on the *destination*
+    /// edge. Payload snapshot (the dest edge's model) is taken by the
+    /// coordinator against the returned id.
+    pub(crate) fn start_migration(
+        &mut self,
+        j: usize,
+        devices: Vec<usize>,
+        seq: u64,
+        t: f64,
+    ) -> Option<usize> {
+        if self.draining {
+            return None;
+        }
+        let work = self.phys.net.one_way_time(
+            self.phys.regions[j],
+            self.phys.pbytes,
+            self.phys.down_scale,
+            &mut self.link_rng,
+        );
+        let (id, resched) =
+            self.links.start(j, Direction::Down, self.phys.pbytes, work, t);
+        self.tr_meta.insert(
+            id,
+            TrKind::Migration {
+                version: self.edge_version[j],
+                devices,
+                seq,
+            },
+        );
+        for (rid, ft) in resched {
+            self.queue.schedule(ft, Event::TransferDone { transfer: rid });
+        }
+        Some(id)
+    }
+
+    fn on_transfer_done(&mut self, id: usize, t: f64) {
+        // Stale prediction → the event is dead (link layer re-predicted).
+        let Some((tr, resched)) = self.links.poll(id, t) else {
+            return;
+        };
+        for (rid, ft) in resched {
+            self.queue.schedule(ft, Event::TransferDone { transfer: rid });
+        }
+        let meta = self
+            .tr_meta
+            .remove(&id)
+            .expect("live transfer without meta");
+        let j = tr.edge;
+        let mut migrated = false;
+        let landing = match meta {
+            TrKind::Upload { version } => {
+                self.obs_up[j] = tr.finish - tr.start;
+                self.window_landings[j] += 1;
+                self.edge_last_update[j] = self.cloud_version;
+                let adopt = version > self.landed_version[j];
+                if adopt {
+                    self.landed_version[j] = version;
+                }
+                Landing::Upload { adopt }
+            }
+            TrKind::Downlink { version } => {
+                self.obs_down[j] = tr.finish - tr.start;
+                let adopt = version > self.adopted_cloud[j];
+                if adopt {
+                    self.adopted_cloud[j] = version;
+                }
+                Landing::Downlink { adopt }
+            }
+            TrKind::Migration {
+                version,
+                devices,
+                seq,
+            } => {
+                self.obs_down[j] = tr.finish - tr.start;
+                migrated = true;
+                self.scratch.clear();
+                for &d in &devices {
+                    if let Some(st) = self.devs.get_mut(&d) {
+                        if st.mig_seq == seq {
+                            st.mig_seq = 0;
+                            st.version = version;
+                            self.scratch.push(d);
+                        }
+                    }
+                }
+                let mut applied = self.spare.pop().unwrap_or_default();
+                applied.clear();
+                applied.extend_from_slice(&self.scratch);
+                Landing::Migration {
+                    devices: applied,
+                    seq,
+                }
+            }
+        };
+        self.actions.push(EngineAction::Transfer {
+            id,
+            edge: j,
+            t,
+            dir: tr.dir.name(),
+            bytes: tr.bytes as f64,
+            start: tr.start,
+            finish: tr.finish,
+            landing,
+        });
+        if migrated {
+            // `scratch` still holds the applied devices: resume them.
+            self.dispatch_scratch(t);
+        }
+    }
+
+    /// Flush a pending quorum at a cloud barrier (partial-progress
+    /// aggregation). No-op when nothing reported.
+    pub(crate) fn flush_edge(&mut self, j: usize, t: f64) {
+        if !self.reported[j].is_empty() {
+            self.on_edge_aggregate(j, t);
+        }
+    }
+
+    /// Re-check a semi-sync quorum after membership shrank (flip, crash,
+    /// outage): a smaller live set can satisfy a pending quorum.
+    pub(crate) fn recheck_quorum(&mut self, j: usize, t: f64) {
+        let SyncMode::SemiSync { quorum, .. } = self.mode else {
+            return;
+        };
+        if !self.reported[j].is_empty()
+            && quorum_satisfied(
+                self.reported[j].len(),
+                quorum,
+                self.live_members(j),
+            )
+        {
+            self.queue.schedule(t, Event::EdgeAggregate { edge: j });
+        }
+    }
+
+    /// Apply one mobility flip to an owned device: purge its report,
+    /// void any in-flight result, cancel a pending migration, set the
+    /// new active state. Rejoin effects (re-point + re-dispatch) go
+    /// through [`Self::rejoin_devices`].
+    pub(crate) fn apply_flip(&mut self, d: usize, active_now: bool) {
+        let Some(st) = self.devs.get_mut(&d) else { return };
+        let j = st.edge;
+        st.active = active_now;
+        if st.mig_seq != TOMBSTONE {
+            st.mig_seq = 0;
+        }
+        if let Some(p) = st.pend.as_mut() {
+            p.void = true;
+        }
+        self.win_flips += 1;
+        self.reported[j].retain(|&x| x != d);
+    }
+
+    /// Re-sync rejoining devices to their edge model and re-dispatch
+    /// them (churn rejoin, crash recovery). Emits one `Rejoin` action
+    /// per own edge in edge order.
+    pub(crate) fn rejoin_devices(&mut self, devs: &[usize], t: f64) {
+        for i in 0..self.edges.len() {
+            let j = self.edges[i];
+            let mut group = self.spare.pop().unwrap_or_default();
+            group.clear();
+            for &d in devs {
+                let Some(st) = self.devs.get_mut(&d) else { continue };
+                if st.edge == j {
+                    st.version = self.edge_version[j];
+                    group.push(d);
+                }
+            }
+            if group.is_empty() {
+                self.spare.push(group);
+            } else {
+                self.actions.push(EngineAction::Rejoin {
+                    edge: j,
+                    devices: group,
+                });
+            }
+        }
+        let overselect = matches!(self.mode, SyncMode::SemiSync { .. })
+            && self.overselect > 0.0;
+        if overselect {
+            // Lifecycle path: fresh cohorts for the touched edges.
+            let mut touched = self.spare.pop().unwrap_or_default();
+            touched.clear();
+            for &d in devs {
+                if let Some(st) = self.devs.get(&d) {
+                    if !touched.contains(&st.edge) {
+                        touched.push(st.edge);
+                    }
+                }
+            }
+            touched.sort_unstable();
+            for i in 0..touched.len() {
+                let j = touched[i];
+                self.cohort_into_scratch(j, t);
+                self.dispatch_scratch(t);
+            }
+            touched.clear();
+            self.spare.push(touched);
+        } else {
+            self.scratch.clear();
+            self.scratch.extend_from_slice(devs);
+            self.dispatch_scratch(t);
+        }
+    }
+
+    /// An edge-server outage (`up == false`) or recovery. Returns
+    /// whether the event changed state (for fault accounting).
+    pub(crate) fn apply_outage(&mut self, j: usize, up: bool, t: f64) -> bool {
+        if !up {
+            if self.edge_faulted[j] {
+                return false;
+            }
+            self.edge_faulted[j] = true;
+            self.win_outages += 1;
+            self.reported[j].clear();
+            self.abandon_stragglers(j);
+            true
+        } else {
+            if !self.edge_faulted[j] {
+                return false;
+            }
+            self.edge_faulted[j] = false;
+            let mut idle = self.spare.pop().unwrap_or_default();
+            idle.clear();
+            for i in 0..self.members[j].len() {
+                let m = self.members[j][i];
+                if let Some(st) = self.devs.get(&m) {
+                    if st.active && st.pend.is_none() && st.mig_seq == 0 {
+                        idle.push(m);
+                    }
+                }
+            }
+            self.scratch.clear();
+            self.scratch.extend_from_slice(&idle);
+            let resume = std::mem::take(&mut self.scratch);
+            self.rejoin_devices(&resume, t);
+            self.scratch = resume;
+            idle.clear();
+            self.spare.push(idle);
+            true
+        }
+    }
+
+    /// Sever (`up == false`) or heal the edge↔cloud path of every owned
+    /// edge whose bit is set. Returns how many owned edges changed.
+    pub(crate) fn apply_partition(&mut self, mask: u64, up: bool) -> usize {
+        let mut touched = 0;
+        for i in 0..self.edges.len() {
+            let j = self.edges[i];
+            if (mask >> (j % 64)) & 1 == 1 {
+                let sever = !up;
+                if self.edge_partitioned[j] != sever {
+                    self.edge_partitioned[j] = sever;
+                    touched += 1;
+                    if sever {
+                        self.win_partitions += 1;
+                    }
+                }
+            }
+        }
+        touched
+    }
+
+    /// Crash (`up == false`) or rejoin the storm's deterministic device
+    /// subset among owned devices. Returns the devices whose active
+    /// state changed, so the coordinator can sync its mobility model.
+    pub(crate) fn apply_crash_storm(
+        &mut self,
+        storm: u64,
+        frac_bits: u32,
+        up: bool,
+        t: f64,
+    ) -> Vec<usize> {
+        let mut changed = Vec::new();
+        if !up {
+            for i in 0..self.edges.len() {
+                let j = self.edges[i];
+                let mut hit_edge = false;
+                for k in 0..self.members[j].len() {
+                    let m = self.members[j][k];
+                    if !storm_hits(storm, m, frac_bits) {
+                        continue;
+                    }
+                    let Some(st) = self.devs.get_mut(&m) else { continue };
+                    if !st.active {
+                        continue;
+                    }
+                    st.active = false;
+                    if st.mig_seq != TOMBSTONE {
+                        st.mig_seq = 0;
+                    }
+                    if let Some(p) = st.pend.as_mut() {
+                        if !p.void {
+                            p.void = true;
+                            self.win_abandoned[j] += 1;
+                        }
+                    }
+                    self.reported[j].retain(|&x| x != m);
+                    changed.push(m);
+                    hit_edge = true;
+                    self.win_crashes += 1;
+                }
+                if hit_edge {
+                    self.recheck_quorum(j, t);
+                }
+            }
+        } else {
+            for i in 0..self.edges.len() {
+                let j = self.edges[i];
+                for k in 0..self.members[j].len() {
+                    let m = self.members[j][k];
+                    if !storm_hits(storm, m, frac_bits) {
+                        continue;
+                    }
+                    let Some(st) = self.devs.get_mut(&m) else { continue };
+                    if st.active {
+                        continue;
+                    }
+                    st.active = true;
+                    changed.push(m);
+                }
+            }
+            if !changed.is_empty() {
+                let rejoined = std::mem::take(&mut changed);
+                self.rejoin_devices(&rejoined, t);
+                changed = rejoined;
+            }
+        }
+        changed
+    }
+
+    /// Move a device out (re-cluster migration). If a training result
+    /// is still in flight, a voided tombstone stays behind to absorb
+    /// the stale `DeviceTrainDone`.
+    pub(crate) fn migrate_out(
+        &mut self,
+        d: usize,
+        new_edge: usize,
+        seq: u64,
+    ) -> Option<(bool, u64, CpuModel)> {
+        let st = self.devs.get_mut(&d)?;
+        let old_edge = st.edge;
+        let active = st.active;
+        let version = st.version;
+        self.reported[old_edge].retain(|&x| x != d);
+        if let Some(p) = st.pend.as_mut() {
+            p.void = true;
+            // Tombstone: the pending DeviceTrainDone still targets this
+            // shard's heap.
+            st.active = false;
+            st.mig_seq = TOMBSTONE;
+        } else {
+            self.devs.remove(&d);
+        }
+        let cpu = self.cpus.remove(&d).expect("device without cpu");
+        let _ = new_edge;
+        Some((active, version, cpu))
+    }
+
+    /// Re-cluster migration within one shard (source and destination
+    /// edge share the owner): no tombstone needed — the device entry
+    /// moves edges in place, any in-flight result is voided, and the
+    /// device parks until warm-start `seq` lands.
+    pub(crate) fn migrate_local(
+        &mut self,
+        d: usize,
+        new_edge: usize,
+        seq: u64,
+    ) -> Option<(bool, u64)> {
+        let old_edge = self.devs.get(&d)?.edge;
+        self.reported[old_edge].retain(|&x| x != d);
+        let st = self.devs.get_mut(&d)?;
+        if let Some(p) = st.pend.as_mut() {
+            p.void = true;
+        }
+        st.edge = new_edge;
+        st.mig_seq = seq;
+        Some((st.active, st.version))
+    }
+
+    /// Receive a migrating device; it resumes when the warm-start
+    /// downlink tagged `seq` lands.
+    pub(crate) fn migrate_in(
+        &mut self,
+        d: usize,
+        edge: usize,
+        active: bool,
+        version: u64,
+        seq: u64,
+        cpu: CpuModel,
+    ) {
+        self.devs.insert(
+            d,
+            DevState {
+                edge,
+                active,
+                version,
+                mig_seq: seq,
+                pend: None,
+            },
+        );
+        self.cpus.insert(d, cpu);
+    }
+
+    /// Update the cloud-version mirror after a barrier aggregation.
+    pub(crate) fn set_cloud_version(&mut self, v: u64) {
+        self.cloud_version = v;
+    }
+
+    /// Per-edge window observables consumed by the coordinator's
+    /// barrier, then reset for the next window.
+    pub(crate) fn window_reset_edge(&mut self, j: usize) {
+        self.window_landings[j] = 0;
+        self.obs_up[j] = 0.0;
+        self.obs_down[j] = 0.0;
+        self.win_compute[j] = 0.0;
+        self.win_up[j] = 0.0;
+        self.win_down[j] = 0.0;
+        self.win_comm[j] = 0.0;
+        self.win_overlap[j] = 0.0;
+    }
+
+    /// In-flight uplink count of an owned edge (barrier-side ctrl
+    /// observable).
+    pub(crate) fn uplink_in_flight(&self, j: usize) -> usize {
+        self.links.active_count(j, Direction::Up)
+    }
+
+    /// Reported-quorum fill of an owned edge (barrier-side ctrl
+    /// observable).
+    pub(crate) fn reported_len(&self, j: usize) -> usize {
+        self.reported[j].len()
+    }
+
+    /// Drain the window's profiler counters into a profile row.
+    pub(crate) fn drain_profile(
+        &mut self,
+    ) -> crate::obs::profiler::ShardWindowProfile {
+        let mut p = crate::obs::profiler::ShardWindowProfile {
+            shard: self.id,
+            events: self.win_events,
+            voided: self.win_voided,
+            aggregates: self
+                .edges
+                .iter()
+                .map(|&j| self.window_edge_aggs[j] as u64)
+                .sum(),
+            flips: self.win_flips,
+            live_devices: self.devs.values().filter(|s| s.active).count(),
+            queue_depth_peak: self.queue_peak,
+            queue_len_end: self.queue.len(),
+            outages: self.win_outages,
+            partitions: self.win_partitions,
+            crashes: self.win_crashes,
+            ..Default::default()
+        };
+        self.prof.drain_into(&mut p);
+        self.win_events = 0;
+        self.win_voided = 0;
+        self.win_flips = 0;
+        self.win_outages = 0;
+        self.win_partitions = 0;
+        self.win_crashes = 0;
+        self.queue_peak = 0;
+        p
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Training-free engine-timeline harness
+// ---------------------------------------------------------------------------
+
+/// Spec of a [`ShardedEngineLoop`] run. Everything here is part of the
+/// deterministic trajectory **except** `workers` and `backend`, whose
+/// invisibility is the point (CI diffs the CSV across both).
+#[derive(Clone, Debug)]
+pub struct EngineLoopSpec {
+    pub devices: usize,
+    pub edges: usize,
+    /// Cloud windows to run.
+    pub windows: usize,
+    /// Shard-advance worker threads (0 = all cores).
+    pub workers: usize,
+    /// 0 = auto (`min(edges, 64)`).
+    pub shards: usize,
+    pub seed: u64,
+    pub backend: QueueBackend,
+    /// `false` = semi-sync (quorum below), `true` = fully async.
+    pub asynchronous: bool,
+    /// Semi-sync quorum (0 = all live members).
+    pub quorum: usize,
+    pub overselect: f64,
+    pub staleness_alpha: f64,
+    /// Cloud interval, simulated seconds.
+    pub interval: f64,
+    /// Local epochs per dispatch (uniform γ1).
+    pub epochs: usize,
+    /// Minibatches per epoch in the CPU simulation.
+    pub nb: usize,
+    pub leave_prob: f64,
+    pub join_prob: f64,
+    pub fault: FaultConfig,
+}
+
+impl Default for EngineLoopSpec {
+    fn default() -> Self {
+        EngineLoopSpec {
+            devices: 10_000,
+            edges: 64,
+            windows: 4,
+            workers: 1,
+            shards: 0,
+            seed: 7,
+            backend: QueueBackend::Auto,
+            asynchronous: false,
+            quorum: 4,
+            overselect: 0.0,
+            staleness_alpha: 0.5,
+            interval: 60.0,
+            epochs: 2,
+            nb: 4,
+            leave_prob: 0.0,
+            join_prob: 0.0,
+            fault: FaultConfig {
+                outages: 0,
+                outage_duration: 30.0,
+                partitions: 0,
+                partition_duration: 30.0,
+                crash_storms: 0,
+                crash_frac: 0.0,
+                rejoin_delay: 30.0,
+            },
+        }
+    }
+}
+
+impl EngineLoopSpec {
+    pub fn resolved_shards(&self) -> usize {
+        if self.shards == 0 {
+            EngineShard::auto_shards(self.edges)
+        } else {
+            self.shards.clamp(1, self.edges.max(1))
+        }
+    }
+
+    pub fn resolved_workers(&self) -> usize {
+        let w = match self.workers {
+            0 => std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+            w => w,
+        };
+        w.min(self.resolved_shards())
+    }
+}
+
+/// One cloud window of the harness trajectory.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EngineWindowRow {
+    pub window: usize,
+    pub sim_time: f64,
+    /// Events handled this window (all shards).
+    pub events: u64,
+    /// Upload landings this window.
+    pub landings: u64,
+    /// Edge aggregations this window.
+    pub aggregates: u64,
+    /// Mobility flips applied this window.
+    pub flips: u64,
+    /// Fault events applied this window.
+    pub faults: u64,
+    /// Fold of the full action stream, fixed shard order.
+    pub checksum: u64,
+}
+
+#[derive(Default)]
+struct ShardReport {
+    actions: Vec<EngineAction>,
+    changed: Vec<usize>,
+    events: u64,
+}
+
+/// The full `AsyncHflEngine` event loop minus the model math: per-edge
+/// [`EngineShard`]s on a [`ShardPool`], barrier-ordered ctrl events
+/// (cloud windows, churn flips, seeded faults), and per-window action
+/// checksums in fixed shard order instead of a replay phase. No
+/// artifacts, no model store — this is what CI diffs across worker
+/// counts and the engine-level `threads_speedup` bench times.
+pub struct ShardedEngineLoop {
+    spec: EngineLoopSpec,
+    pool: ShardPool<EngineShard, ShardReport>,
+    ctrl: EventQueue,
+    mobility: MobilityModel,
+    dev_shard: Vec<usize>,
+    cloud_version: u64,
+    now: f64,
+    g1: Vec<usize>,
+    alpha: Vec<f64>,
+    win_flips: u64,
+    win_faults: u64,
+    win_events: u64,
+    win_landings: u64,
+    win_aggs: u64,
+    checksum: u64,
+    history: Vec<EngineWindowRow>,
+    windows_done: usize,
+}
+
+impl ShardedEngineLoop {
+    pub fn new(spec: &EngineLoopSpec) -> Self {
+        let n = spec.devices;
+        let m = spec.edges;
+        let n_shards = spec.resolved_shards();
+        let workers = spec.resolved_workers();
+        let sim_cfg = crate::config::ExperimentConfig::mnist().sim;
+        let mode = if spec.asynchronous {
+            SyncMode::Async {
+                staleness_alpha: spec.staleness_alpha,
+                cloud_interval: spec.interval,
+            }
+        } else {
+            SyncMode::SemiSync {
+                quorum: spec.quorum,
+                cloud_interval: spec.interval,
+            }
+        };
+        let regions: Vec<Region> = (0..m)
+            .map(|j| if j % 2 == 0 { Region::Us } else { Region::Cn })
+            .collect();
+        let phys = ShardPhysics {
+            nb: spec.nb,
+            pbytes: crate::sim::network::model_bytes(7850),
+            up_scale: 1.0,
+            down_scale: 1.0,
+            contention: true,
+            net: NetworkModel::from_config(&sim_cfg),
+            energy: EnergyModel::new(sim_cfg.power_idle, sim_cfg.power_max),
+            avail: None,
+            regions,
+            data_n: Arc::new(vec![1.0; n]),
+            mode,
+            overselect: spec.overselect,
+        };
+        let expected = (n / n_shards.max(1)) * 4 + 64;
+        let mut shards: Vec<EngineShard> = (0..n_shards)
+            .map(|s| {
+                EngineShard::new(
+                    s,
+                    n_shards,
+                    spec.seed,
+                    spec.backend,
+                    expected,
+                    phys.clone(),
+                )
+            })
+            .collect();
+        // Canonical population: device d on edge d % m, CPU streams
+        // forked in device order from one master stream.
+        let mut cpu_rng = Rng::new(spec.seed ^ 0xc4_9u64);
+        let mut dev_shard = Vec::with_capacity(n);
+        let mut members: Vec<Vec<usize>> = vec![Vec::new(); m];
+        for d in 0..n {
+            let j = d % m;
+            members[j].push(d);
+            let s = EngineShard::shard_of(j, n_shards);
+            dev_shard.push(s);
+            let cpu = CpuModel::new(
+                CpuModel::paper_class(d % 5),
+                0.05,
+                2.0,
+                0.1,
+                cpu_rng.fork(d as u64),
+            );
+            shards[s].install_device(d, j, true, 0, cpu);
+        }
+        for (j, mem) in members.into_iter().enumerate() {
+            let s = EngineShard::shard_of(j, n_shards);
+            shards[s].install_edge(j, mem);
+        }
+        let g1 = vec![spec.epochs.max(1); m];
+        let alpha = vec![spec.staleness_alpha; m];
+        for sh in shards.iter_mut() {
+            sh.refresh_knobs(&g1, &alpha, false, false, false);
+            sh.initial_dispatch(0.0);
+        }
+        let mut ctrl =
+            EventQueue::for_scale(spec.seed ^ 0xa57c, 64, spec.backend);
+        ctrl.schedule(spec.interval, Event::CloudAggregate);
+        if spec.leave_prob > 0.0 || spec.join_prob > 0.0 {
+            ctrl.schedule(0.5 * spec.interval, Event::MobilityFlip);
+        }
+        let horizon = spec.windows as f64 * spec.interval;
+        let plan = FaultPlan::build(&spec.fault, m, horizon, spec.seed);
+        for &(t, ev) in plan.events() {
+            ctrl.schedule(t, ev);
+        }
+        let mut this = ShardedEngineLoop {
+            spec: spec.clone(),
+            pool: ShardPool::new(workers, shards),
+            ctrl,
+            mobility: MobilityModel::new(
+                n,
+                spec.leave_prob,
+                spec.join_prob,
+                Rng::new(spec.seed ^ 0x0b17),
+            ),
+            dev_shard,
+            cloud_version: 0,
+            now: 0.0,
+            g1,
+            alpha,
+            win_flips: 0,
+            win_faults: 0,
+            win_events: 0,
+            win_landings: 0,
+            win_aggs: 0,
+            checksum: 0xcbf2_9ce4_8422_2325,
+            history: Vec::new(),
+            windows_done: 0,
+        };
+        // Fold the initial dispatch burst into window 0's checksum.
+        this.collect(this.pool_take_actions());
+        this
+    }
+
+    fn pool_take_actions(&mut self) -> Vec<ShardReport> {
+        self.pool.run(|_, sh| ShardReport {
+            actions: sh.take_actions(),
+            changed: Vec::new(),
+            events: 0,
+        })
+    }
+
+    /// Fold per-shard reports (already in fixed shard order) into the
+    /// window counters and checksum.
+    fn collect(&mut self, reports: Vec<ShardReport>) {
+        for r in &reports {
+            fold_actions(&mut self.checksum, &r.actions);
+            self.win_events += r.events;
+            for a in &r.actions {
+                match a {
+                    EngineAction::EdgeAgg { .. } => self.win_aggs += 1,
+                    EngineAction::Transfer {
+                        landing: Landing::Upload { .. },
+                        ..
+                    } => self.win_landings += 1,
+                    _ => {}
+                }
+            }
+        }
+    }
+
+    /// Advance every shard to `bound` (parallel) and fold the action
+    /// streams in shard order.
+    fn advance_all(&mut self, bound: f64) {
+        let reports = self.pool.run(move |_, sh| {
+            let before = sh.events_handled;
+            sh.advance(bound);
+            ShardReport {
+                actions: sh.take_actions(),
+                changed: Vec::new(),
+                events: sh.events_handled - before,
+            }
+        });
+        self.collect(reports);
+    }
+
+    /// Run to completion (all configured windows).
+    pub fn run(&mut self) {
+        while self.windows_done < self.spec.windows {
+            let Some(t_ctrl) = self.ctrl.peek_time() else {
+                // Ctrl queue drained (no more cloud events): done.
+                break;
+            };
+            self.advance_all(t_ctrl);
+            let (t, ev) = self.ctrl.pop().expect("peeked ctrl vanished");
+            self.now = t;
+            match ev {
+                Event::CloudAggregate => self.cloud_barrier(t),
+                Event::MobilityFlip => self.flip_barrier(t),
+                Event::EdgeOutage { edge, up } => {
+                    let reports = self.pool.run(move |_, sh| {
+                        let mut rep = ShardReport::default();
+                        if sh.edges.contains(&edge)
+                            && sh.apply_outage(edge, up, t)
+                        {
+                            rep.events = 1;
+                        }
+                        rep.actions = sh.take_actions();
+                        rep
+                    });
+                    self.win_faults +=
+                        reports.iter().map(|r| r.events).sum::<u64>();
+                    self.collect(reports);
+                }
+                Event::Partition { mask, up } => {
+                    let reports = self.pool.run(move |_, sh| {
+                        let touched = sh.apply_partition(mask, up);
+                        ShardReport {
+                            actions: sh.take_actions(),
+                            changed: Vec::new(),
+                            events: touched as u64,
+                        }
+                    });
+                    self.win_faults +=
+                        reports.iter().map(|r| r.events).sum::<u64>();
+                    self.collect(reports);
+                }
+                Event::CrashStorm {
+                    seed,
+                    frac_bits,
+                    up,
+                } => {
+                    let reports = self.pool.run(move |_, sh| {
+                        let changed =
+                            sh.apply_crash_storm(seed, frac_bits, up, t);
+                        ShardReport {
+                            actions: sh.take_actions(),
+                            events: changed.len() as u64,
+                            changed,
+                        }
+                    });
+                    for r in &reports {
+                        for &d in &r.changed {
+                            self.mobility.set_active(d, up);
+                        }
+                    }
+                    self.win_faults +=
+                        reports.iter().map(|r| r.events).sum::<u64>();
+                    self.collect(reports);
+                }
+                other => {
+                    unreachable!("unexpected ctrl event {other:?}")
+                }
+            }
+        }
+    }
+
+    fn cloud_barrier(&mut self, t: f64) {
+        self.cloud_version += 1;
+        let v = self.cloud_version;
+        let reports = self.pool.run(move |_, sh| {
+            sh.barrier_sweep(t);
+            let mut rep = ShardReport::default();
+            for i in 0..sh.edges.len() {
+                let j = sh.edges[i];
+                sh.flush_edge(j, t);
+            }
+            sh.set_cloud_version(v);
+            for i in 0..sh.edges.len() {
+                let j = sh.edges[i];
+                let _ = sh.start_downlink(j, t);
+                sh.window_edge_aggs[j] = 0;
+                sh.window_reset_edge(j);
+            }
+            rep.actions = sh.take_actions();
+            rep
+        });
+        self.collect(reports);
+        self.history.push(EngineWindowRow {
+            window: self.windows_done,
+            sim_time: t,
+            events: std::mem::take(&mut self.win_events),
+            landings: std::mem::take(&mut self.win_landings),
+            aggregates: std::mem::take(&mut self.win_aggs),
+            flips: std::mem::take(&mut self.win_flips),
+            faults: std::mem::take(&mut self.win_faults),
+            checksum: self.checksum,
+        });
+        self.windows_done += 1;
+        if self.windows_done < self.spec.windows {
+            self.ctrl
+                .schedule(t + self.spec.interval, Event::CloudAggregate);
+        }
+    }
+
+    fn flip_barrier(&mut self, t: f64) {
+        let flips = self.mobility.step();
+        self.win_flips += flips.total() as u64;
+        let flipped = self.mobility.flipped().to_vec();
+        let n_shards = self.pool.n_shards();
+        // Partition flips by owning shard (fixed mapping).
+        let mut parts: Vec<Vec<(usize, bool)>> =
+            (0..n_shards).map(|_| Vec::new()).collect();
+        let mut rejoins: Vec<Vec<usize>> =
+            (0..n_shards).map(|_| Vec::new()).collect();
+        for &d in &flipped {
+            let s = self.dev_shard[d];
+            let active = self.mobility.is_active(d);
+            parts[s].push((d, active));
+            if active {
+                rejoins[s].push(d);
+            }
+        }
+        let parts = Arc::new(parts);
+        let rejoins = Arc::new(rejoins);
+        let reports = self.pool.run(move |idx, sh| {
+            for &(d, active) in &parts[idx] {
+                sh.apply_flip(d, active);
+            }
+            if !rejoins[idx].is_empty() {
+                sh.rejoin_devices(&rejoins[idx], t);
+            }
+            // Shrunken quorums may now be satisfiable.
+            for i in 0..sh.edges.len() {
+                let j = sh.edges[i];
+                sh.recheck_quorum(j, t);
+            }
+            ShardReport {
+                actions: sh.take_actions(),
+                changed: Vec::new(),
+                events: 0,
+            }
+        });
+        self.collect(reports);
+        self.ctrl
+            .schedule(t + self.spec.interval, Event::MobilityFlip);
+    }
+
+    pub fn history(&self) -> &[EngineWindowRow] {
+        &self.history
+    }
+
+    /// The trajectory as CSV — the exact bytes CI diffs across
+    /// `workers` × `backend`.
+    pub fn csv_string(&self) -> String {
+        let mut out = String::from(
+            "window,sim_time,events,landings,aggregates,flips,faults,\
+             checksum\n",
+        );
+        for r in &self.history {
+            out.push_str(&format!(
+                "{},{:.6},{},{},{},{},{},{:016x}\n",
+                r.window,
+                r.sim_time,
+                r.events,
+                r.landings,
+                r.aggregates,
+                r.flips,
+                r.faults,
+                r.checksum,
+            ));
+        }
+        out
+    }
+
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.csv_string().as_bytes())
+    }
+
+    /// Total events handled across all shards (post-run; tears nothing
+    /// down — the pool stays usable).
+    pub fn total_events(&self) -> u64 {
+        self.history.iter().map(|r| r.events).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hfl::lifecycle::frac_to_bits;
+
+    fn stress_spec(workers: usize, backend: QueueBackend) -> EngineLoopSpec {
+        EngineLoopSpec {
+            devices: 600,
+            edges: 24,
+            windows: 4,
+            workers,
+            seed: 42,
+            backend,
+            asynchronous: false,
+            quorum: 3,
+            overselect: 1.5,
+            interval: 40.0,
+            leave_prob: 0.2,
+            join_prob: 0.3,
+            fault: FaultConfig {
+                outages: 2,
+                outage_duration: 15.0,
+                partitions: 1,
+                partition_duration: 10.0,
+                crash_storms: 2,
+                crash_frac: 0.2,
+                rejoin_delay: 12.0,
+            },
+            ..EngineLoopSpec::default()
+        }
+    }
+
+    #[test]
+    fn engine_loop_is_bitwise_identical_across_workers_and_backends() {
+        let reference = {
+            let mut sim =
+                ShardedEngineLoop::new(&stress_spec(1, QueueBackend::Binary));
+            sim.run();
+            sim.csv_string()
+        };
+        assert!(reference.lines().count() > 4, "no windows ran");
+        for workers in [2usize, 3, 8] {
+            for backend in [QueueBackend::Binary, QueueBackend::Calendar] {
+                let mut sim =
+                    ShardedEngineLoop::new(&stress_spec(workers, backend));
+                sim.run();
+                assert_eq!(
+                    sim.csv_string(),
+                    reference,
+                    "workers={workers} backend={}",
+                    backend.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn engine_loop_async_mode_is_deterministic_too() {
+        let spec = EngineLoopSpec {
+            asynchronous: true,
+            overselect: 0.0,
+            ..stress_spec(1, QueueBackend::Binary)
+        };
+        let reference = {
+            let mut sim = ShardedEngineLoop::new(&spec);
+            sim.run();
+            sim.csv_string()
+        };
+        let mut par = ShardedEngineLoop::new(&EngineLoopSpec {
+            workers: 8,
+            backend: QueueBackend::Calendar,
+            ..spec
+        });
+        par.run();
+        assert_eq!(par.csv_string(), reference);
+    }
+
+    #[test]
+    fn engine_loop_faults_actually_fire() {
+        let mut sim =
+            ShardedEngineLoop::new(&stress_spec(2, QueueBackend::Binary));
+        sim.run();
+        let faults: u64 = sim.history().iter().map(|r| r.faults).sum();
+        assert!(faults > 0, "fault plan injected nothing");
+        let flips: u64 = sim.history().iter().map(|r| r.flips).sum();
+        assert!(flips > 0, "churn injected nothing");
+        assert!(sim.total_events() > 1000);
+    }
+
+    #[test]
+    fn fold_actions_distinguishes_streams() {
+        let a = vec![EngineAction::Train {
+            edge: 1,
+            device: 2,
+            outcome: TrainOutcome::Landed,
+        }];
+        let b = vec![EngineAction::Train {
+            edge: 1,
+            device: 2,
+            outcome: TrainOutcome::Voided,
+        }];
+        let (mut ha, mut hb) = (0u64, 0u64);
+        fold_actions(&mut ha, &a);
+        fold_actions(&mut hb, &b);
+        assert_ne!(ha, hb);
+        // Wall-clock fields never perturb a checksum.
+        let o1 = vec![EngineAction::Obs {
+            variant: "train_done",
+            t: 1.0,
+            lag_ns: 5,
+            handler_ns: 9,
+        }];
+        let o2 = vec![EngineAction::Obs {
+            variant: "train_done",
+            t: 1.0,
+            lag_ns: 77,
+            handler_ns: 1,
+        }];
+        let (mut h1, mut h2) = (0u64, 0u64);
+        fold_actions(&mut h1, &o1);
+        fold_actions(&mut h2, &o2);
+        assert_eq!(h1, h2);
+    }
+
+    #[test]
+    fn spec_resolves_shard_and_worker_counts() {
+        let spec = EngineLoopSpec {
+            edges: 100,
+            shards: 0,
+            workers: 8,
+            ..EngineLoopSpec::default()
+        };
+        assert_eq!(spec.resolved_shards(), 64);
+        assert_eq!(spec.resolved_workers(), 8);
+        let tiny = EngineLoopSpec {
+            edges: 3,
+            shards: 0,
+            workers: 16,
+            ..EngineLoopSpec::default()
+        };
+        assert_eq!(tiny.resolved_shards(), 3);
+        // Workers clamp to the shard count — shards define the
+        // trajectory, workers only the speed.
+        assert_eq!(tiny.resolved_workers(), 3);
+    }
+
+    #[test]
+    fn frac_bits_roundtrip_used_by_storms() {
+        // Guards the storm predicate the shards rely on.
+        let bits = frac_to_bits(0.25);
+        let hits = (0..10_000usize)
+            .filter(|&d| storm_hits(99, d, bits))
+            .count();
+        let frac = hits as f64 / 10_000.0;
+        assert!((frac - 0.25).abs() < 0.05, "storm fraction {frac}");
+    }
+}

@@ -38,6 +38,13 @@
 //! [`AvailabilityModel::delay_until`](crate::sim::AvailabilityModel);
 //! it never filters a device out entirely — a fully-skipped member
 //! would leave its edge with no future event to close the round.
+//!
+//! Under the sharded engine loop (`hfl::engine_shard`) fault events
+//! ride the serial ctrl queue and are handled as shard barriers: an
+//! outage/partition touches exactly one shard's edges, while a crash
+//! storm fans out across all shards in parallel — sound precisely
+//! because [`storm_hits`] is a pure predicate of `(seed, device,
+//! frac)`, independent of which shard evaluates it.
 
 use crate::config::FaultConfig;
 use crate::sim::event::Event;

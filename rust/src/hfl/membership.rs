@@ -43,6 +43,15 @@
 //! subsystem is inert and runs are bit-for-bit identical to the
 //! pre-subsystem behavior ([`MembershipTracker::should_recluster`] hard
 //! short-circuits on zero observed flips).
+//!
+//! In the sharded engine loop (`hfl::engine_shard`) `Recluster` is a
+//! ctrl-queue barrier: all shards sweep to the barrier time, the plan
+//! runs serially on the merged live set, and migrations move device
+//! state between shards through the explicit `migrate_out` /
+//! `migrate_in` handoff (same-shard moves stay local), with quorum
+//! re-derivation and warm-start downlinks replayed in fixed shard
+//! order — so a re-clustering run stays bitwise identical at any
+//! `sim.workers`.
 
 use crate::cluster::profiling::{cluster_by_region, zscore};
 use crate::config::ClusterConfig;

@@ -71,6 +71,7 @@
 pub mod aggregate;
 pub mod async_engine;
 pub mod engine;
+pub mod engine_shard;
 pub mod lifecycle;
 pub mod membership;
 pub mod metrics;
@@ -79,6 +80,9 @@ pub mod topology;
 
 pub use async_engine::{AsyncHflEngine, SyncMode};
 pub use engine::HflEngine;
+pub use engine_shard::{
+    EngineLoopSpec, EngineShard, EngineWindowRow, ShardedEngineLoop,
+};
 pub use lifecycle::{
     frac_to_bits, overselect_count, select_dispatch, storm_hits, FaultPlan,
 };

@@ -40,6 +40,18 @@
 //!
 //! Everything is deterministic and RNG-free: slab ids depend only on the
 //! call sequence, and no observable value ever depends on an id.
+//!
+//! # The sharded engine keeps the store serial
+//!
+//! The sharded `AsyncHflEngine` loop (`hfl::engine_shard`) never hands
+//! a [`ModelRef`] to a worker thread: shards simulate timing/energy and
+//! emit ordered action logs, and every store effect (train adopt,
+//! aggregation mix, payload share/release, migration repoint) is
+//! applied during the serial barrier replay, in fixed shard order.
+//! Slab-id and free-list order therefore remain a pure function of the
+//! trajectory — the same at any `sim.workers` — without the store
+//! needing any synchronization. (`ShardedModelStore` below serves the
+//! synthetic `sim::shard` harness, which does put slabs on threads.)
 
 /// Handle to one model buffer in a [`ModelStore`]: slab id + version tag.
 ///

@@ -49,6 +49,19 @@
 //!    edges, and a mid-round device crash/rejoin wave selected by a
 //!    pure integer predicate. Faults are scheduled events, never
 //!    ambient state, so chaos runs stay bitwise reproducible.
+//!
+//! # The engine's ctrl/shard queue split
+//!
+//! The sharded `AsyncHflEngine` loop (`hfl::engine_shard`) partitions
+//! these kinds across queues: `CloudAggregate`, `MobilityFlip`,
+//! `Recluster` and the three fault kinds live on one serial **ctrl**
+//! queue (they are the only cross-shard couplings, handled as
+//! barriers), while `DeviceTrainDone` / `EdgeAggregate` /
+//! `TransferDone` live on per-shard queues seeded per shard. Each
+//! queue's pop order is still a pure function of its own seed and
+//! schedule sequence, so the split trajectory is deterministic — and
+//! the backend invisibility above holds per queue, letting
+//! `sim.queue_backend` apply to ctrl and shard heaps alike.
 
 use std::cmp::Ordering;
 use std::collections::{BTreeMap, BinaryHeap};

@@ -36,6 +36,16 @@
 //! state — so two runs issuing the same calls observe bit-identical
 //! transfer timelines. That is what makes the asynchronous engines'
 //! overlapped-communication runs reproducible from the experiment seed.
+//!
+//! # Sharding
+//!
+//! Links are strictly per-edge (an edge's uplink contends only with
+//! itself), so the manager partitions cleanly: the sharded engine loop
+//! (`hfl::engine_shard`) gives every shard its own `LinkManager` over
+//! just that shard's edges, with shard-local transfer ids. Because the
+//! timeline is a pure function of the per-link call sequence and no
+//! call ever crosses an edge boundary, the per-shard managers replay
+//! the serial manager's predictions bit-for-bit at any worker count.
 
 use std::collections::HashMap;
 

@@ -52,6 +52,24 @@
 //! `aggregate_native_par` — a fixed work grid with order-independent
 //! pieces and a deterministic fold — promoted from one kernel to the
 //! whole event loop.
+//!
+//! # Relationship to the engine shards
+//!
+//! This module simulates *synthetic* devices (no model math) and is the
+//! scale harness for benches and CI. The production counterpart is
+//! [`crate::hfl::engine_shard`]: [`EngineShard`] applies the identical
+//! shard-by-edge / window-barrier / fixed-order-merge discipline to the
+//! real `AsyncHflEngine` timer loop, except that shards there emit
+//! ordered *action logs* (dispatch, train, aggregate, transfer
+//! landings) which the engine replays serially against the model store
+//! at each barrier — the model math never runs inside a worker thread.
+//! The window bound is exact rather than conservative: every
+//! cross-shard coupling in the engine is a ctrl-queue event (cloud
+//! window, mobility flip, recluster, seeded fault), so shards may
+//! always advance to the next ctrl timestamp. Changes to the barrier
+//! rules here should be mirrored there, and vice versa.
+//!
+//! [`EngineShard`]: crate::hfl::engine_shard::EngineShard
 
 use std::io::Write as _;
 

@@ -129,6 +129,62 @@ where
     });
 }
 
+/// Advance a slice of borrowed shards through one window and return the
+/// per-shard reports **in shard order** — the scoped sibling of
+/// [`ShardPool::run`] for engines whose shards cannot be `'static`
+/// (e.g. `hfl::engine_shard::EngineShard` inside `AsyncHflEngine`,
+/// whose windows interleave with `&mut` barrier access to the same
+/// shards). Pinning is identical to `ShardPool` (shard `i` → lane
+/// `i % workers`), lanes run on `std::thread::scope` threads, and
+/// `workers <= 1` runs inline in shard order with no threads at all —
+/// so the single-worker path is the definition of the trajectory and
+/// every other worker count must reproduce it exactly.
+pub fn shard_scope<S, R, F>(workers: usize, shards: &mut [S], f: F) -> Vec<R>
+where
+    S: Send,
+    R: Send,
+    F: Fn(usize, &mut S) -> R + Sync,
+{
+    let n = shards.len();
+    let w = workers.max(1).min(n.max(1));
+    if w <= 1 {
+        return shards
+            .iter_mut()
+            .enumerate()
+            .map(|(i, s)| f(i, s))
+            .collect();
+    }
+    let mut lanes: Vec<Vec<(usize, &mut S)>> =
+        (0..w).map(|_| Vec::new()).collect();
+    for (i, s) in shards.iter_mut().enumerate() {
+        lanes[i % w].push((i, s));
+    }
+    let mut slots: Vec<Option<R>> =
+        std::iter::repeat_with(|| None).take(n).collect();
+    std::thread::scope(|scope| {
+        let f = &f;
+        let handles: Vec<_> = lanes
+            .into_iter()
+            .map(|lane| {
+                scope.spawn(move || {
+                    lane.into_iter()
+                        .map(|(i, s)| (i, f(i, s)))
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, r) in h.join().expect("shard_scope worker panicked") {
+                slots[i] = Some(r);
+            }
+        }
+    });
+    slots
+        .into_iter()
+        .map(|r| r.expect("shard_scope lost a shard report"))
+        .collect()
+}
+
 /// A shard-advance job: runs against one shard's owned state, returns
 /// that shard's report for the window.
 pub type ShardJob<S, R> = Arc<dyn Fn(usize, &mut S) -> R + Send + Sync>;
@@ -477,6 +533,37 @@ mod tests {
         let mut p3: ShardPool<u32, u32> = ShardPool::new(4, vec![]);
         assert!(p3.run(|_, s| *s).is_empty());
         assert!(p3.into_shards().is_empty());
+    }
+
+    #[test]
+    fn shard_scope_merges_in_shard_order_for_any_worker_count() {
+        // Same contract as ShardPool::run, with borrowed shards: the
+        // report stream comes back [shard 0, shard 1, ...] for every
+        // worker count and state persists across calls.
+        let mut reference = vec![0u64; 7];
+        let want: Vec<Vec<u64>> = (0..3u64)
+            .map(|w| {
+                shard_scope(1, &mut reference, |idx, c| {
+                    *c += (idx as u64 + 1) * (w + 1);
+                    *c
+                })
+            })
+            .collect();
+        for workers in [2usize, 3, 8, 16] {
+            let mut shards = vec![0u64; 7];
+            for (w, expect) in want.iter().enumerate() {
+                let w = w as u64;
+                let got = shard_scope(workers, &mut shards, |idx, c| {
+                    *c += (idx as u64 + 1) * (w + 1);
+                    *c
+                });
+                assert_eq!(&got, expect, "workers={workers} window={w}");
+            }
+            assert_eq!(&shards, &reference, "workers={workers}");
+        }
+        // Empty shard list and oversized worker counts are fine.
+        let mut none: Vec<u64> = Vec::new();
+        assert!(shard_scope(4, &mut none, |_, c| *c).is_empty());
     }
 
     #[test]

@@ -1230,6 +1230,99 @@ fn rearm_noop_holds_at_any_sim_workers() {
 }
 
 #[test]
+fn fault_storm_worker_sweep_is_bitwise_identical() {
+    // The sharded engine loop's full-stack stress matrix: a churn-heavy
+    // semi-sync run with over-selection, a seeded fault storm (outages +
+    // a partition + a crash storm), and a *learned* controller that
+    // re-arms changed knobs at every window boundary, swept over
+    // sim.workers ∈ {1, 2, 8} × queue backend {binary, calendar} ×
+    // profiler on/off. Every cell must reproduce the reference cell's
+    // transfer timeline, migration landings, history CSV bytes, and
+    // final cloud model exactly — faults, migrations, and mid-run
+    // control changes all cross shard barriers, so this pins the
+    // action-replay merge order end to end.
+    require_artifacts!();
+    let base_alpha = small_cfg().sync.staleness_alpha;
+    let run = |workers: usize, backend: QueueBackend, profiled: bool| {
+        let mut cfg = small_cfg();
+        cfg.hfl.threshold_time = 700.0;
+        cfg.sync.mode = SyncModeCfg::SemiSync;
+        cfg.sync.quorum = 1;
+        cfg.sync.cloud_interval = 100.0;
+        cfg.link.contention = true;
+        cfg.sim.leave_prob = 0.25;
+        cfg.sim.join_prob = 0.5;
+        cfg.cluster.recluster_threshold = 0.1;
+        cfg.cluster.recluster_min_interval = 0.0;
+        cfg.lifecycle.overselect = 1.5;
+        cfg.fault.outages = 2;
+        cfg.fault.outage_duration = 80.0;
+        cfg.fault.partitions = 1;
+        cfg.fault.partition_duration = 120.0;
+        cfg.fault.crash_storms = 1;
+        cfg.fault.crash_frac = 0.4;
+        cfg.fault.rejoin_delay = 60.0;
+        cfg.sim.workers = workers;
+        cfg.sim.queue_backend = backend;
+        cfg.sim.profiler = profiled;
+        let m = cfg.topology.edges;
+        let mut e = AsyncHflEngine::new(cfg, false).unwrap();
+        if profiled {
+            e.attach_observer(Box::new(arena::obs::RunObserver::new()));
+        }
+        // Window-varying control schedule, identical in every cell: the
+        // "learned" knobs change at each barrier, so re-arming is NOT a
+        // no-op here — the sweep checks that knob changes land at the
+        // same window boundary regardless of worker count.
+        e.begin_run(&vec![2; m]).unwrap();
+        let mut hist = arena::hfl::RunHistory::default();
+        let mut w = 0usize;
+        while let Some(stats) = e.run_window().unwrap() {
+            hist.push(stats);
+            w += 1;
+            let g1: Vec<usize> = (0..m).map(|j| 1 + (w + j) % 3).collect();
+            let alpha: Vec<f64> = (0..m)
+                .map(|j| base_alpha * (1.0 + 0.25 * ((w + j) % 2) as f64))
+                .collect();
+            e.set_control(&g1, &alpha).unwrap();
+        }
+        let path = std::env::temp_dir().join(format!(
+            "arena_storm_w{workers}_{}_{profiled}.csv",
+            backend.name()
+        ));
+        hist.write_csv(path.to_str().unwrap(), "storm").unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        (
+            e.transfer_log.clone(),
+            e.migration_log.clone(),
+            bytes,
+            e.eng.cloud_model().to_vec(),
+            hist.rounds.iter().map(|r| r.fault_events).sum::<usize>(),
+        )
+    };
+    let reference = run(1, QueueBackend::Binary, false);
+    assert!(!reference.2.is_empty(), "empty history CSV");
+    assert!(
+        reference.4 > 0,
+        "vacuous storm: no fault events reached the history"
+    );
+    for workers in [1usize, 2, 8] {
+        for backend in [QueueBackend::Binary, QueueBackend::Calendar] {
+            for profiled in [false, true] {
+                assert_eq!(
+                    run(workers, backend, profiled),
+                    reference,
+                    "trajectory diverged at workers={workers} \
+                     backend={} profiler={profiled}",
+                    backend.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn pca_scores_via_artifact_match_cpu() {
     require_artifacts!();
     let cfg = small_cfg();
